@@ -1,0 +1,68 @@
+//! Cluster sweep: scaling study across DP/TP sizes and the model family
+//! (the workloads behind paper Figs. 8 and 9), on the simulator.
+//!
+//! ```bash
+//! cargo run --release --example cluster_sweep
+//! ```
+
+use canzona::cost::optim::OptimKind;
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::{simulate_iteration, Scenario};
+use canzona::util::stats::load_balance_ratio;
+use canzona::util::table::Table;
+
+fn main() {
+    // DP scaling at fixed TP (paper Fig. 8a).
+    let mut t = Table::new("DP scaling — Qwen3-32B, TP=4, Muon",
+                           &["DP", "GPUs", "ASC opt", "LB-ASC opt", "LB ratio (ASC)", "LB ratio (ours)"]);
+    for dp in [8, 16, 32, 64, 128] {
+        let asc = simulate_iteration(
+            &Scenario::new(Qwen3Size::S32B, dp, 4, 1, OptimKind::Muon, DpStrategy::Asc));
+        let lb = simulate_iteration(
+            &Scenario::new(Qwen3Size::S32B, dp, 4, 1, OptimKind::Muon, DpStrategy::LbAsc));
+        t.row(vec![
+            dp.to_string(),
+            (dp * 4).to_string(),
+            format!("{:.3}s", asc.optimizer_s),
+            format!("{:.3}s", lb.optimizer_s),
+            format!("{:.2}x", load_balance_ratio(&asc.dp_loads_flops)),
+            format!("{:.2}x", load_balance_ratio(&lb.dp_loads_flops)),
+        ]);
+    }
+    t.print();
+
+    // Model-size scaling at fixed grid (paper Fig. 9).
+    let mut t2 = Table::new("Model scaling — DP=16, TP=4, Muon",
+                            &["model", "ASC LB ratio", "ours LB ratio", "ours opt"]);
+    for size in Qwen3Size::all() {
+        let asc = simulate_iteration(
+            &Scenario::new(size, 16, 4, 1, OptimKind::Muon, DpStrategy::Asc));
+        let lb = simulate_iteration(
+            &Scenario::new(size, 16, 4, 1, OptimKind::Muon, DpStrategy::LbAsc));
+        t2.row(vec![
+            size.label().into(),
+            format!("{:.2}x", load_balance_ratio(&asc.dp_loads_flops)),
+            format!("{:.2}x", load_balance_ratio(&lb.dp_loads_flops)),
+            format!("{:.3}s", lb.optimizer_s),
+        ]);
+    }
+    t2.print();
+
+    // Optimizer generality (paper Figs. 10-12 flavour).
+    let mut t3 = Table::new("Optimizer generality — Qwen3-14B, DP=32, TP=4, PP=2",
+                            &["optimizer", "SC opt", "LB-ASC opt", "speedup"]);
+    for opt in [OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap] {
+        let sc = simulate_iteration(
+            &Scenario::new(Qwen3Size::S14B, 32, 4, 2, opt, DpStrategy::Sc));
+        let lb = simulate_iteration(
+            &Scenario::new(Qwen3Size::S14B, 32, 4, 2, opt, DpStrategy::LbAsc));
+        t3.row(vec![
+            opt.label().into(),
+            format!("{:.3}s", sc.optimizer_s),
+            format!("{:.3}s", lb.optimizer_s),
+            format!("{:.1}x", sc.optimizer_s / lb.optimizer_s),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,179 @@
+"""AOT pipeline: lower L2/L1 to HLO **text** artifacts + manifest.
+
+Python runs exactly once (`make artifacts`); the Rust coordinator is
+self-contained afterwards. Interchange is HLO text — NOT a serialized
+HloModuleProto — because jax >= 0.5 emits protos with 64-bit instruction
+ids that xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Emitted per preset:
+  fwd_bwd__<preset>.hlo.txt          loss + flat grads for the LM
+  muon_<m>x<n>.hlo.txt               one per distinct 2-D matrix shape
+  adamw_<numel>.hlo.txt              one per distinct AdamW tensor size
+  shampoo_<m>x<n>.hlo.txt            (tiny always; larger presets opt-in)
+  manifest__<preset>.json            parameter census, artifact map, hypers
+"""
+
+import argparse
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim as O
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+    return name
+
+
+def lower_fwd_bwd(cfg: M.ModelConfig, out_dir: str) -> str:
+    spec = M.param_spec(cfg)
+    args = [_f32(shape) for _, shape, _ in spec]
+    args += [_i32((cfg.batch, cfg.seq_len)), _i32((cfg.batch, cfg.seq_len))]
+    lowered = jax.jit(M.flat_fwd_bwd(cfg)).lower(*args)
+    return _write(out_dir, f"fwd_bwd__{cfg.name}.hlo.txt", to_hlo_text(lowered))
+
+
+def lower_muon(shape, out_dir: str) -> str:
+    m, n = shape
+    h = O.HYPERS["muon"]
+
+    def fn(w, g, mom, lr, beta):
+        return O.muon_update(w, g, mom, lr, beta,
+                             weight_decay=h["weight_decay"],
+                             steps=h["ns_steps"])
+
+    lowered = jax.jit(fn).lower(_f32(shape), _f32(shape), _f32(shape),
+                                _f32(()), _f32(()))
+    return _write(out_dir, f"muon_{m}x{n}.hlo.txt", to_hlo_text(lowered))
+
+
+def lower_adamw(numel: int, out_dir: str) -> str:
+    h = O.HYPERS["adamw"]
+
+    def fn(w, g, m, v, t, lr):
+        return O.adamw_update(w, g, m, v, t, lr, beta1=h["beta1"],
+                              beta2=h["beta2"], eps=h["eps"],
+                              weight_decay=h["weight_decay"])
+
+    s = _f32((numel,))
+    lowered = jax.jit(fn).lower(s, s, s, s, _f32(()), _f32(()))
+    return _write(out_dir, f"adamw_{numel}.hlo.txt", to_hlo_text(lowered))
+
+
+def lower_shampoo(shape, out_dir: str) -> str:
+    m, n = shape
+    h = O.HYPERS["shampoo"]
+
+    def fn(w, g, l_stat, r_stat, lr):
+        return O.shampoo_update(w, g, l_stat, r_stat, lr, beta=h["beta"],
+                                eps=h["eps"], root_iters=h["root_iters"])
+
+    lowered = jax.jit(fn).lower(_f32(shape), _f32(shape), _f32((m, m)),
+                                _f32((n, n)), _f32(()))
+    return _write(out_dir, f"shampoo_{m}x{n}.hlo.txt", to_hlo_text(lowered))
+
+
+def build_manifest(cfg: M.ModelConfig, artifacts: Dict[str, str],
+                   with_shampoo: bool) -> dict:
+    params = []
+    for name, shape, kind in M.param_spec(cfg):
+        numel = 1
+        for d in shape:
+            numel *= d
+        if kind == M.KIND_MATRIX:
+            optim, artifact = "muon", f"muon_{shape[0]}x{shape[1]}"
+        else:
+            optim, artifact = "adamw", f"adamw_{numel}"
+        params.append({
+            "name": name,
+            "shape": list(shape),
+            "kind": kind,
+            "numel": numel,
+            "optim": optim,
+            "artifact": artifact,
+            "init_std": M.init_std(name, shape, kind, cfg),
+        })
+    return {
+        "preset": cfg.name,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len, "batch": cfg.batch,
+        },
+        "params": params,
+        "artifacts": artifacts,
+        "hypers": O.HYPERS,
+        "with_shampoo": with_shampoo,
+    }
+
+
+def build(preset: str, out_dir: str, with_shampoo: bool) -> None:
+    cfg = M.PRESETS[preset]
+    print(f"[aot] preset={preset} ({cfg})")
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts: Dict[str, str] = {}
+    artifacts["fwd_bwd"] = lower_fwd_bwd(cfg, out_dir)
+
+    matrix_shapes = sorted({shape for _, shape, kind in M.param_spec(cfg)
+                            if kind == M.KIND_MATRIX})
+    adamw_sizes = sorted({
+        int(jnp.prod(jnp.array(shape))) for _, shape, kind in M.param_spec(cfg)
+        if kind != M.KIND_MATRIX})
+    for shape in matrix_shapes:
+        artifacts[f"muon_{shape[0]}x{shape[1]}"] = lower_muon(shape, out_dir)
+    for numel in adamw_sizes:
+        artifacts[f"adamw_{numel}"] = lower_adamw(numel, out_dir)
+    if with_shampoo:
+        for shape in matrix_shapes:
+            artifacts[f"shampoo_{shape[0]}x{shape[1]}"] = lower_shampoo(shape, out_dir)
+
+    manifest = build_manifest(cfg, artifacts, with_shampoo)
+    path = os.path.join(out_dir, f"manifest__{preset}.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest__{preset}.json "
+          f"({sum(p['numel'] for p in manifest['params']) / 1e6:.1f}M params)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="e2e", choices=sorted(M.PRESETS))
+    ap.add_argument("--with-shampoo", action="store_true",
+                    help="also lower Shampoo executables for this preset")
+    args = ap.parse_args()
+    # tiny always ships (fast tests depend on it), with Shampoo included.
+    build("tiny", args.out_dir, with_shampoo=True)
+    if args.preset != "tiny":
+        build(args.preset, args.out_dir, with_shampoo=args.with_shampoo)
+
+
+if __name__ == "__main__":
+    main()

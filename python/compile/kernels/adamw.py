@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: element-wise AdamW update.
+
+AdamW is the element-wise baseline in the paper (and the optimizer Muon
+delegates 1-D parameters — embeddings, norms, biases — to). The kernel is a
+1-D blocked element-wise pipeline: each grid step streams a VMEM-sized
+chunk of (w, g, m, v) through the update math. `interpret=True` as always
+on this CPU-PJRT environment.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 64k f32 elements = 256 KiB per operand chunk; 4 inputs + 3 outputs keeps
+# the VMEM working set < 2 MiB with pipeline double-buffering.
+DEFAULT_CHUNK = 65536
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _adamw_kernel(beta1, beta2, eps, weight_decay,
+                  w_ref, g_ref, m_ref, v_ref, t_ref, lr_ref,
+                  ow_ref, om_ref, ov_ref):
+    w, g, m, v = w_ref[...], g_ref[...], m_ref[...], v_ref[...]
+    t, lr = t_ref[0], lr_ref[0]
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1 ** t)
+    v_hat = v_new / (1.0 - beta2 ** t)
+    ow_ref[...] = w * (1.0 - lr * weight_decay) - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    om_ref[...] = m_new
+    ov_ref[...] = v_new
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "weight_decay", "chunk"))
+def adamw_update(w, g, m, v, t, lr, *, beta1=0.9, beta2=0.95, eps=1e-8,
+                 weight_decay=0.0, chunk=DEFAULT_CHUNK):
+    """One AdamW step on a 1-D tensor. Returns (new_w, new_m, new_v).
+
+    `t` (step, f32) and `lr` are traced scalars so a single lowered HLO
+    serves the whole training run.
+    """
+    (n,) = w.shape
+    c = min(chunk, n) or 1
+    npad = _cdiv(n, c) * c
+    pad = lambda a: jnp.pad(a, (0, npad - n)) if npad != n else a
+    w_, g_, m_, v_ = pad(w), pad(g), pad(m), pad(v)
+    # v is padded with zeros => sqrt(0)+eps in the pad region is fine.
+    t_arr = jnp.reshape(t.astype(jnp.float32), (1,))
+    lr_arr = jnp.reshape(lr.astype(jnp.float32), (1,))
+    kernel = functools.partial(_adamw_kernel, beta1, beta2, eps, weight_decay)
+    shape = jax.ShapeDtypeStruct((npad,), w.dtype)
+    ow, om, ov = pl.pallas_call(
+        kernel,
+        grid=(npad // c,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_shape=[shape, shape, shape],
+        interpret=True,
+    )(w_, g_, m_, v_, t_arr, lr_arr)
+    if npad != n:
+        ow, om, ov = ow[:n], om[:n], ov[:n]
+    return ow, om, ov

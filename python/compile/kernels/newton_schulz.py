@@ -1,0 +1,124 @@
+"""L1 Pallas kernels: blocked matmul + Newton-Schulz-5 orthogonalization.
+
+This is the compute hot-spot of the Muon optimizer the Canzona paper
+schedules. The GPU reference implementations stage tiles through shared
+memory with threadblocks; here the same insight is expressed for the
+TPU memory hierarchy:
+
+  * `BlockSpec` describes the HBM->VMEM schedule: (bm, bk) x (bk, bn)
+    tiles stream into VMEM, the MXU-shaped (128, 128) output tile is
+    accumulated in-place across the K grid dimension (the innermost,
+    sequential grid axis), so each output tile is resident in VMEM for
+    the whole K loop — the double-buffering of the input tiles is done
+    by the Pallas pipeline itself.
+  * f32 accumulation with `preferred_element_type` targets the MXU's
+    native accumulation width.
+
+`interpret=True` is mandatory in this environment: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute. The
+BlockSpec structure is unchanged between the two paths, so the VMEM /
+MXU-utilization analysis in DESIGN.md applies to the real-TPU build.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NS_COEFFS, NS_EPS, NS_STEPS
+
+# MXU-aligned default tile. 128x128 f32 = 64 KiB per tile; the working set
+# (x-tile + y-tile + out-tile + pipeline double buffers) stays well under
+# the ~16 MiB VMEM budget of a TPU core (see DESIGN.md "Hardware adaptation").
+DEFAULT_BLOCK = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = DEFAULT_BLOCK,
+           bn: int = DEFAULT_BLOCK, bk: int = DEFAULT_BLOCK) -> jax.Array:
+    """Blocked Pallas matmul: (m, k) @ (k, n) -> (m, n).
+
+    Shapes need not be multiples of the block sizes; inputs are zero-padded
+    (zeros are absorbing for matmul accumulation) and the result is sliced
+    back. Padding happens at trace time so the AOT-lowered HLO carries the
+    padded grid only when needed.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = min(bm, m) or 1, min(bn, n) or 1, min(bk, k) or 1
+    mp, np_, kp = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn, _cdiv(k, bk) * bk
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else y
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n] if (mp, np_) != (m, n) else out
+
+
+def newton_schulz(g: jax.Array, steps: int = NS_STEPS) -> jax.Array:
+    """Quintic Newton-Schulz orthogonalization with Pallas matmuls.
+
+    Mirrors `ref.newton_schulz_ref` exactly; the three matmuls per
+    iteration (gram, gram^2, poly @ x) run through the blocked kernel.
+    """
+    assert g.ndim == 2
+    a, b, c = NS_COEFFS
+    x = g.astype(jnp.float32)
+    transposed = x.shape[0] > x.shape[1]
+    if transposed:
+        x = x.T
+    x = x / (jnp.linalg.norm(x) + NS_EPS)
+    for _ in range(steps):
+        gram = matmul(x, x.T)
+        poly = b * gram + c * matmul(gram, gram)
+        x = a * x + matmul(poly, x)
+    if transposed:
+        x = x.T
+    return x.astype(g.dtype)
+
+
+def muon_update(w, g, mom, lr, beta, weight_decay=0.0, steps: int = NS_STEPS):
+    """One Muon step (Pallas NS core). Returns (new_w, new_mom).
+
+    Matches `ref.muon_update_ref`; this is the function `aot.py` lowers to
+    one HLO artifact per distinct 2-D parameter shape.
+    """
+    mom_new = beta * mom + g
+    upd = g + beta * mom_new
+    ortho = newton_schulz(upd, steps=steps)
+    m, n = w.shape
+    scale = jnp.sqrt(jnp.maximum(1.0, m / n))
+    w_new = w * (1.0 - lr * weight_decay) - lr * scale * ortho
+    return w_new, mom_new
+
+
+def gram(g: jax.Array, side: str) -> jax.Array:
+    """Shampoo statistic G G^T / G^T G through the Pallas matmul."""
+    g32 = g.astype(jnp.float32)
+    return matmul(g32, g32.T) if side == "l" else matmul(g32.T, g32)

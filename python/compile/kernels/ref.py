@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here.
+The pytest suite (python/tests/) sweeps shapes/dtypes with hypothesis and
+asserts `assert_allclose(kernel(...), ref(...))`.
+
+The math follows the optimizers the Canzona paper schedules:
+  * Muon       — momentum + Newton-Schulz-5 orthogonalization (Jordan et al.)
+  * Shampoo    — Kronecker preconditioners L, R with inverse 4th roots
+  * SOAP       — Adam in the eigenbasis of the Shampoo preconditioners
+  * AdamW      — element-wise baseline (Loshchilov & Hutter)
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Quintic Newton-Schulz coefficients used by Muon (Jordan et al., 2024).
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_STEPS = 5
+NS_EPS = 1e-7
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain matmul oracle (f32 accumulation)."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def newton_schulz_ref(g: jax.Array, steps: int = NS_STEPS) -> jax.Array:
+    """Quintic Newton-Schulz orthogonalization of a 2-D gradient.
+
+    Returns an approximation of U V^T where g = U S V^T — the "zeroth power"
+    of g. Operates on the smaller Gram side (transposes when m > n) exactly
+    like the reference Muon implementation.
+    """
+    assert g.ndim == 2
+    a, b, c = NS_COEFFS
+    x = g.astype(jnp.float32)
+    transposed = x.shape[0] > x.shape[1]
+    if transposed:
+        x = x.T
+    x = x / (jnp.linalg.norm(x) + NS_EPS)
+    for _ in range(steps):
+        gram = x @ x.T
+        poly = b * gram + c * (gram @ gram)
+        x = a * x + poly @ x
+    if transposed:
+        x = x.T
+    return x.astype(g.dtype)
+
+
+def muon_update_ref(w, g, mom, lr, beta, weight_decay=0.0, steps: int = NS_STEPS):
+    """One Muon step: nesterov momentum -> NS5 -> scaled orthogonal update.
+
+    Returns (new_w, new_mom). `lr`/`beta` are scalars (static or traced).
+    """
+    mom_new = beta * mom + g
+    upd = g + beta * mom_new  # nesterov
+    ortho = newton_schulz_ref(upd, steps=steps)
+    m, n = w.shape
+    scale = jnp.sqrt(jnp.maximum(1.0, m / n))
+    w_new = w * (1.0 - lr * weight_decay) - lr * scale * ortho
+    return w_new, mom_new
+
+
+def adamw_update_ref(w, g, m, v, t, lr, beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.0):
+    """One AdamW step on a flat tensor. Returns (new_w, new_m, new_v)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1 ** t)
+    v_hat = v_new / (1.0 - beta2 ** t)
+    w_new = w * (1.0 - lr * weight_decay) - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return w_new, m_new, v_new
+
+
+def gram_ref(g: jax.Array, side: str) -> jax.Array:
+    """Shampoo statistic: G G^T (side='l') or G^T G (side='r')."""
+    g = g.astype(jnp.float32)
+    return g @ g.T if side == "l" else g.T @ g
+
+
+def matrix_inv_pth_root_ref(a: jax.Array, p: int, eps: float = 1e-6) -> jax.Array:
+    """A^{-1/p} for a symmetric PSD matrix via eigendecomposition."""
+    a = a.astype(jnp.float32)
+    ridge = eps * jnp.trace(a) / a.shape[0] + 1e-30
+    vals, vecs = jnp.linalg.eigh(a + ridge * jnp.eye(a.shape[0], dtype=a.dtype))
+    vals = jnp.maximum(vals, eps * jnp.max(vals))
+    return (vecs * (vals ** (-1.0 / p))) @ vecs.T
+
+
+def shampoo_update_ref(w, g, l_stat, r_stat, lr, beta=0.95, eps=1e-6):
+    """One (full-matrix, exact) Shampoo step.
+
+    Returns (new_w, new_l, new_r). Preconditioned grad = L^{-1/4} G R^{-1/4}.
+    """
+    l_new = beta * l_stat + (1.0 - beta) * gram_ref(g, "l")
+    r_new = beta * r_stat + (1.0 - beta) * gram_ref(g, "r")
+    pl_ = matrix_inv_pth_root_ref(l_new, 4, eps)
+    pr_ = matrix_inv_pth_root_ref(r_new, 4, eps)
+    precond = pl_ @ g.astype(jnp.float32) @ pr_
+    # Grafting to the gradient norm keeps step sizes sane (standard practice).
+    gn = jnp.linalg.norm(g) / (jnp.linalg.norm(precond) + 1e-12)
+    w_new = w - lr * gn * precond.astype(w.dtype)
+    return w_new, l_new, r_new
+
+
+def soap_update_ref(w, g, l_stat, r_stat, m, v, t, lr, beta=0.95,
+                    beta1=0.9, beta2=0.95, eps=1e-8):
+    """One SOAP step: Adam in the eigenbasis of the Shampoo preconditioners.
+
+    Returns (new_w, new_l, new_r, new_m, new_v). m/v live in the rotated
+    basis (as in Vyas et al., 2024, with per-step eigendecomposition —
+    the paper amortizes it; exactness is what Canzona preserves).
+    """
+    g32 = g.astype(jnp.float32)
+    l_new = beta * l_stat + (1.0 - beta) * gram_ref(g, "l")
+    r_new = beta * r_stat + (1.0 - beta) * gram_ref(g, "r")
+    _, ql = jnp.linalg.eigh(l_new)
+    _, qr = jnp.linalg.eigh(r_new)
+    g_rot = ql.T @ g32 @ qr
+    m_new = beta1 * m + (1.0 - beta1) * g_rot
+    v_new = beta2 * v + (1.0 - beta2) * g_rot * g_rot
+    m_hat = m_new / (1.0 - beta1 ** t)
+    v_hat = v_new / (1.0 - beta2 ** t)
+    upd_rot = m_hat / (jnp.sqrt(v_hat) + eps)
+    upd = ql @ upd_rot @ qr.T
+    w_new = w - lr * upd.astype(w.dtype)
+    return w_new, l_new, r_new, m_new, v_new

@@ -1,0 +1,168 @@
+"""L2: JAX transformer LM (fwd/bwd) — the compute graph Canzona trains.
+
+A Qwen3-flavoured decoder-only LM (RMSNorm, SwiGLU MLP, causal MHA,
+untied LM head). The parameter inventory deliberately mirrors the shape
+census in `rust/src/model/qwen3.rs`: the same mix of large 2-D matrices
+(Muon-updated) and 1-D norms / embedding-class tensors (AdamW-updated)
+that drives the paper's load-balancing problem.
+
+Only build-time code lives here: `aot.py` lowers `fwd_bwd` to HLO text
+once, and the Rust coordinator executes the artifact on the request path.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Presets. `tiny` drives fast tests, `e2e` is the recorded end-to-end run,
+# `m100` is the ~100M-parameter configuration (same code path, heavier).
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                        d_ff=128, seq_len=32, batch=2),
+    "e2e": ModelConfig("e2e", vocab=8192, d_model=384, n_layers=6, n_heads=6,
+                       d_ff=1152, seq_len=128, batch=4),
+    "m100": ModelConfig("m100", vocab=32000, d_model=640, n_layers=10,
+                        n_heads=10, d_ff=1920, seq_len=256, batch=2),
+}
+
+# Parameter kinds: decide optimizer routing + init scale.
+KIND_MATRIX = "matrix"  # 2-D, Muon
+KIND_EMBED = "embed"    # 2-D but embedding-class -> AdamW (standard Muon practice)
+KIND_VECTOR = "vector"  # 1-D -> AdamW
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Ordered (name, shape, kind) inventory. The order is the canonical
+    flattening order shared with the Rust side via the manifest."""
+    spec: List[Tuple[str, Tuple[int, ...], str]] = []
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    spec.append(("embed.weight", (v, d), KIND_EMBED))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        spec.append((p + "attn_norm.weight", (d,), KIND_VECTOR))
+        spec.append((p + "attn.wq", (d, d), KIND_MATRIX))
+        spec.append((p + "attn.wk", (d, d), KIND_MATRIX))
+        spec.append((p + "attn.wv", (d, d), KIND_MATRIX))
+        spec.append((p + "attn.wo", (d, d), KIND_MATRIX))
+        spec.append((p + "mlp_norm.weight", (d,), KIND_VECTOR))
+        spec.append((p + "mlp.gate", (d, ff), KIND_MATRIX))
+        spec.append((p + "mlp.up", (d, ff), KIND_MATRIX))
+        spec.append((p + "mlp.down", (ff, d), KIND_MATRIX))
+    spec.append(("final_norm.weight", (d,), KIND_VECTOR))
+    spec.append(("lm_head.weight", (v, d), KIND_EMBED))
+    return spec
+
+
+def init_std(name: str, shape: Tuple[int, ...], kind: str, cfg: ModelConfig) -> float:
+    """Init scale per parameter (norm vectors start at exactly 1.0)."""
+    if kind == KIND_VECTOR:
+        return 0.0
+    if kind == KIND_EMBED:
+        return 0.02
+    fan_in, fan_out = shape[0], shape[1]
+    std = (2.0 / (fan_in + fan_out)) ** 0.5
+    if name.endswith(("attn.wo", "mlp.down")):
+        std /= (2.0 * cfg.n_layers) ** 0.5  # GPT-2-style residual scaling
+    return std
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    params = {}
+    for name, shape, kind in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if kind == KIND_VECTOR:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = init_std(name, shape, kind, cfg)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def attention(x: jax.Array, p: Dict[str, jax.Array], prefix: str,
+              cfg: ModelConfig) -> jax.Array:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p[prefix + "attn.wq"]).reshape(b, s, h, hd)
+    k = (x @ p[prefix + "attn.wk"]).reshape(b, s, h, hd)
+    v = (x @ p[prefix + "attn.wv"]).reshape(b, s, h, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+    return out @ p[prefix + "attn.wo"]
+
+
+def mlp(x: jax.Array, p: Dict[str, jax.Array], prefix: str) -> jax.Array:
+    gate = jax.nn.silu(x @ p[prefix + "mlp.gate"])
+    up = x @ p[prefix + "mlp.up"]
+    return (gate * up) @ p[prefix + "mlp.down"]
+
+
+def forward(params: Dict[str, jax.Array], tokens: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    """tokens i32[B, S] -> logits f32[B, S, V]."""
+    x = params["embed.weight"][tokens]
+    for i in range(cfg.n_layers):
+        prefix = f"layers.{i}."
+        x = x + attention(rmsnorm(x, params[prefix + "attn_norm.weight"]), params, prefix, cfg)
+        x = x + mlp(rmsnorm(x, params[prefix + "mlp_norm.weight"]), params, prefix)
+    x = rmsnorm(x, params["final_norm.weight"])
+    return x @ params["lm_head.weight"].T
+
+
+def loss_fn(params: Dict[str, jax.Array], tokens: jax.Array,
+            targets: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Mean next-token cross-entropy."""
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def fwd_bwd(params: Dict[str, jax.Array], tokens: jax.Array,
+            targets: jax.Array, cfg: ModelConfig):
+    """(loss, grads-dict) — the function AOT-lowered for the Rust trainer."""
+    return jax.value_and_grad(lambda p: loss_fn(p, tokens, targets, cfg))(params)
+
+
+def flat_fwd_bwd(cfg: ModelConfig):
+    """Return fn(*flat_params, tokens, targets) -> (loss, *flat_grads)
+    with the canonical `param_spec` ordering — the AOT entry point."""
+    spec = param_spec(cfg)
+    names = [n for n, _, _ in spec]
+
+    def fn(*args):
+        flat, tokens, targets = args[:-2], args[-2], args[-1]
+        params = dict(zip(names, flat))
+        loss, grads = fwd_bwd(params, tokens, targets, cfg)
+        return (loss, *[grads[n] for n in names])
+
+    return fn

@@ -1,0 +1,144 @@
+"""L2: optimizer steps lowered to per-shape HLO artifacts.
+
+Each function here is an *atomic optimizer task* in the Canzona sense:
+it consumes a whole (unfragmented) gradient matrix plus locally-resident
+states and produces the new weight/states. `aot.py` lowers one executable
+per distinct parameter shape; the Rust coordinator schedules these tasks
+onto rank threads according to the α-balanced / micro-group plans.
+
+Matrix roots: the exact Shampoo step needs A^{-1/4}. `jnp.linalg.eigh`
+lowers to a LAPACK custom-call that a bare PJRT-CPU client cannot execute,
+so the artifact path uses the *coupled Newton iteration* (as in Anil et
+al.'s distributed Shampoo) — pure matmuls, verified against the eigh
+oracle in pytest. SOAP fundamentally requires the eigen*basis*, so its
+artifact path keeps eigh; pytest covers its math and the cluster
+simulator covers its scheduling (see DESIGN.md substitution table).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import newton_schulz as ns
+from .kernels import ref
+from .kernels.adamw import adamw_update  # re-export: the 1-D artifact  # noqa: F401
+from .kernels.newton_schulz import muon_update  # re-export: the 2-D artifact  # noqa: F401
+
+
+def inv_pth_root_newton(a: jax.Array, p: int, iters: int = 25,
+                        ridge: float = 1e-6) -> jax.Array:
+    """A^{-1/p} for symmetric PSD A via the coupled Newton iteration.
+
+    M_0 = z*A, X_0 = z^{1/p} I with z = (1+p)/(2*||A||_F);
+    T_k = ((1+1/p) I - (1/p) M_k); X_{k+1} = X_k T_k; M_{k+1} = T_k^p M_k.
+    Matmul-only, hence lowerable to any PJRT backend.
+    """
+    n = a.shape[0]
+    eye = jnp.eye(n, dtype=jnp.float32)
+    a = a.astype(jnp.float32)
+    a = a + (ridge * jnp.trace(a) / n + 1e-30) * eye
+    z = (1.0 + p) / (2.0 * jnp.linalg.norm(a))
+    m = z * a
+    x = (z ** (1.0 / p)) * eye
+    alpha = 1.0 / p
+
+    def body(_, carry):
+        x, m = carry
+        t = (1.0 + alpha) * eye - alpha * m
+        x = ns.matmul(x, t)
+        t2 = ns.matmul(t, t)
+        tp = ns.matmul(t2, t2) if p == 4 else (t2 if p == 2 else ns.matmul(t2, t))
+        m = ns.matmul(tp, m)
+        return x, m
+
+    # Unrolled python loop: `iters` is static at lowering time.
+    for i in range(iters):
+        x, m = body(i, (x, m))
+    return x
+
+
+def shampoo_update(w, g, l_stat, r_stat, lr, beta=0.95, eps=1e-6,
+                   root_iters: int = 25):
+    """One exact Shampoo step (Newton roots, Pallas gram kernels).
+
+    Returns (new_w, new_l, new_r). Matches `ref.shampoo_update_ref` up to
+    the root-solver tolerance (checked in pytest).
+    """
+    g32 = g.astype(jnp.float32)
+    l_new = beta * l_stat + (1.0 - beta) * ns.gram(g, "l")
+    r_new = beta * r_stat + (1.0 - beta) * ns.gram(g, "r")
+    pl_ = inv_pth_root_newton(l_new, 4, iters=root_iters, ridge=eps)
+    pr_ = inv_pth_root_newton(r_new, 4, iters=root_iters, ridge=eps)
+    precond = ns.matmul(ns.matmul(pl_, g32), pr_)
+    gn = jnp.linalg.norm(g32) / (jnp.linalg.norm(precond) + 1e-12)
+    w_new = w - lr * gn * precond.astype(w.dtype)
+    return w_new, l_new, r_new
+
+
+def soap_update(w, g, l_stat, r_stat, m, v, t, lr, beta=0.95,
+                beta1=0.9, beta2=0.95, eps=1e-8):
+    """One SOAP step (eigh-based; identical math to the ref oracle)."""
+    return ref.soap_update_ref(w, g, l_stat, r_stat, m, v, t, lr,
+                               beta=beta, beta1=beta1, beta2=beta2, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# Default hyper-parameters shared with the Rust side through the manifest.
+# ---------------------------------------------------------------------------
+HYPERS = {
+    "muon": {"lr": 0.02, "beta": 0.95, "weight_decay": 0.0, "ns_steps": 5},
+    "adamw": {"lr": 3e-3, "beta1": 0.9, "beta2": 0.95, "eps": 1e-8,
+              "weight_decay": 0.0},
+    "shampoo": {"lr": 0.05, "beta": 0.95, "eps": 1e-6, "root_iters": 25},
+    "soap": {"lr": 3e-3, "beta": 0.95, "beta1": 0.9, "beta2": 0.95,
+             "eps": 1e-8},
+}
+
+
+def reference_train_step(params, tokens, targets, states, step, cfg,
+                         hypers=None):
+    """Single-process Muon+AdamW training step in pure JAX.
+
+    Used by pytest to validate that the distributed Rust execution of the
+    same artifacts reproduces identical loss trajectories (paper Fig. 5).
+    """
+    from . import model as M
+
+    hypers = hypers or HYPERS
+    loss, grads = M.fwd_bwd(params, tokens, targets, cfg)
+    new_params, new_states = {}, {}
+    for name, shape, kind in M.param_spec(cfg):
+        w, g = params[name], grads[name]
+        if kind == M.KIND_MATRIX:
+            mom = states[name]["mom"]
+            h = hypers["muon"]
+            w_new, mom_new = ref.muon_update_ref(
+                w, g, mom, h["lr"], h["beta"], h["weight_decay"], h["ns_steps"])
+            new_params[name] = w_new
+            new_states[name] = {"mom": mom_new}
+        else:
+            st = states[name]
+            h = hypers["adamw"]
+            wf, gf = w.reshape(-1), g.reshape(-1)
+            w_new, m_new, v_new = ref.adamw_update_ref(
+                wf, gf, st["m"], st["v"], jnp.float32(step), h["lr"],
+                h["beta1"], h["beta2"], h["eps"], h["weight_decay"])
+            new_params[name] = w_new.reshape(w.shape)
+            new_states[name] = {"m": m_new, "v": v_new}
+    return loss, new_params, new_states
+
+
+def init_states(params, cfg):
+    """Zero-initialized optimizer states matching `reference_train_step`."""
+    from . import model as M
+
+    states = {}
+    for name, shape, kind in M.param_spec(cfg):
+        if kind == M.KIND_MATRIX:
+            states[name] = {"mom": jnp.zeros(shape, jnp.float32)}
+        else:
+            n = int(functools.reduce(lambda a, b: a * b, shape, 1))
+            states[name] = {"m": jnp.zeros(n, jnp.float32),
+                            "v": jnp.zeros(n, jnp.float32)}
+    return states

@@ -1,0 +1,78 @@
+"""AOT pipeline tests: HLO text well-formedness + manifest integrity.
+
+Requires `make artifacts` (the tiny preset) to have run; skips otherwise.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest__tiny.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _manifest():
+    with open(os.path.join(ART, "manifest__tiny.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_parses():
+    m = _manifest()
+    assert m["preset"] == "tiny"
+    assert m["model"]["vocab"] == 256
+    assert len(m["params"]) == 3 + m["model"]["n_layers"] * 9
+
+
+def test_all_artifacts_exist_and_are_hlo():
+    m = _manifest()
+    for key, fname in m["artifacts"].items():
+        path = os.path.join(ART, fname)
+        assert os.path.exists(path), fname
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{fname} is not HLO text"
+        assert "ENTRY" in open(path).read(), fname
+
+
+def test_param_artifact_mapping_complete():
+    m = _manifest()
+    for p in m["params"]:
+        assert p["artifact"] in m["artifacts"], p["name"]
+        if p["optim"] == "muon":
+            assert p["kind"] == "matrix"
+            assert p["artifact"] == f"muon_{p['shape'][0]}x{p['shape'][1]}"
+        else:
+            assert p["artifact"] == f"adamw_{p['numel']}"
+
+
+def test_numel_consistent():
+    m = _manifest()
+    for p in m["params"]:
+        n = 1
+        for d in p["shape"]:
+            n *= d
+        assert n == p["numel"]
+
+
+def test_fwd_bwd_parameter_count():
+    """fwd_bwd must expose P+2 parameters and 1+P tuple outputs."""
+    m = _manifest()
+    path = os.path.join(ART, m["artifacts"]["fwd_bwd"])
+    text = open(path).read()
+    # Nested fusion computations also contain parameter instructions;
+    # only the ENTRY computation reflects the artifact's call signature.
+    entry = text[text.index("ENTRY"):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(m["params"]) + 2, n_params
+
+
+def test_hypers_present():
+    m = _manifest()
+    for opt in ("muon", "adamw", "shampoo", "soap"):
+        assert opt in m["hypers"]
+    assert 0.0 < m["hypers"]["muon"]["lr"] < 1.0

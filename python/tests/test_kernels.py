@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-block-multiple and degenerate
+sizes) and block configurations; every case asserts allclose against
+`kernels.ref`. This is the core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adamw as AW
+from compile.kernels import newton_schulz as NS
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+dims = st.integers(min_value=1, max_value=200)
+small_dims = st.integers(min_value=1, max_value=96)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- matmul ---
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    got = NS.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@given(m=small_dims, k=small_dims, n=small_dims,
+       bm=st.sampled_from([8, 32, 128]), bn=st.sampled_from([8, 32, 128]),
+       bk=st.sampled_from([8, 32, 128]))
+def test_matmul_block_invariance(m, k, n, bm, bn, bk):
+    """Result must not depend on the BlockSpec tiling."""
+    x = _rand(7, (m, k))
+    y = _rand(8, (k, n))
+    got = NS.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_identity():
+    x = _rand(3, (64, 64))
+    np.testing.assert_allclose(NS.matmul(x, jnp.eye(64)), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zeros():
+    x = jnp.zeros((33, 45), jnp.float32)
+    y = _rand(4, (45, 17))
+    assert float(jnp.abs(NS.matmul(x, y)).max()) == 0.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand(5, (40, 50)).astype(dtype)
+    y = _rand(6, (50, 30)).astype(dtype)
+    got = NS.matmul(x, y)
+    assert got.dtype == dtype
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               ref.matmul_ref(x, y).astype(jnp.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------- newton-schulz ---
+@given(m=st.integers(2, 150), n=st.integers(2, 150),
+       seed=st.integers(0, 2**31 - 1))
+def test_newton_schulz_matches_ref(m, n, seed):
+    g = _rand(seed, (m, n))
+    got = NS.newton_schulz(g)
+    want = ref.newton_schulz_ref(g)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_newton_schulz_orthogonalizes():
+    """Singular values of NS5(G) must concentrate near 1 (Muon property)."""
+    g = _rand(11, (64, 96))
+    o = np.asarray(NS.newton_schulz(g))
+    s = np.linalg.svd(o, compute_uv=False)
+    assert s.max() < 1.6 and s.min() > 0.4
+
+
+def test_newton_schulz_transpose_consistency():
+    """Tall and wide inputs take the transposed path; both must be valid."""
+    g = _rand(12, (96, 48))
+    o_tall = np.asarray(NS.newton_schulz(g))
+    o_wide = np.asarray(NS.newton_schulz(g.T))
+    # NS(G)^T approximates NS(G^T) exactly (same iteration, transposed).
+    np.testing.assert_allclose(o_tall.T, o_wide, rtol=1e-5, atol=1e-5)
+
+
+def test_newton_schulz_scale_invariance():
+    """NS orthogonalization is invariant to positive scaling of G."""
+    g = _rand(13, (32, 64))
+    o1 = NS.newton_schulz(g)
+    o2 = NS.newton_schulz(17.0 * g)
+    np.testing.assert_allclose(o1, o2, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------ muon ---
+@given(m=st.integers(2, 100), n=st.integers(2, 100),
+       seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(1e-4, 0.1), beta=st.floats(0.0, 0.99))
+def test_muon_update_matches_ref(m, n, seed, lr, beta):
+    w = _rand(seed, (m, n))
+    g = _rand(seed + 1, (m, n))
+    mom = _rand(seed + 2, (m, n)) * 0.1
+    got_w, got_m = NS.muon_update(w, g, mom, jnp.float32(lr), jnp.float32(beta))
+    want_w, want_m = ref.muon_update_ref(w, g, mom, lr, beta)
+    np.testing.assert_allclose(got_w, want_w, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+
+
+def test_muon_momentum_accumulates():
+    w = _rand(1, (16, 16))
+    g = _rand(2, (16, 16))
+    _, m1 = NS.muon_update(w, g, jnp.zeros_like(w), jnp.float32(0.01), jnp.float32(0.9))
+    np.testing.assert_allclose(m1, g, rtol=1e-6, atol=1e-7)
+
+
+# ----------------------------------------------------------------- adamw ---
+@given(n=st.integers(1, 300_000), seed=st.integers(0, 2**31 - 1),
+       t=st.integers(1, 1000))
+def test_adamw_matches_ref(n, seed, t):
+    w = _rand(seed, (n,))
+    g = _rand(seed + 1, (n,))
+    m = _rand(seed + 2, (n,)) * 0.01
+    v = jnp.abs(_rand(seed + 3, (n,))) * 0.01
+    got = AW.adamw_update(w, g, m, v, jnp.float32(t), jnp.float32(1e-3))
+    want = ref.adamw_update_ref(w, g, m, v, float(t), 1e-3)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_adamw_chunk_invariance():
+    """Result must not depend on the pipeline chunk size."""
+    n = 10_001
+    w, g = _rand(20, (n,)), _rand(21, (n,))
+    m, v = jnp.zeros(n), jnp.zeros(n)
+    a = AW.adamw_update(w, g, m, v, jnp.float32(1), jnp.float32(1e-3), chunk=256)
+    b = AW.adamw_update(w, g, m, v, jnp.float32(1), jnp.float32(1e-3), chunk=65536)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=0, atol=0)
+
+
+def test_adamw_descends_quadratic():
+    """AdamW on f(w)=||w||^2/2 must shrink the iterate."""
+    w = _rand(22, (512,))
+    m = v = jnp.zeros(512)
+    for t in range(1, 30):
+        w2, m, v = AW.adamw_update(w, w, m, v, jnp.float32(t), jnp.float32(0.05))
+        w = w2
+    assert float(jnp.linalg.norm(w)) < float(jnp.linalg.norm(_rand(22, (512,))))

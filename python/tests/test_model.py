@@ -1,0 +1,103 @@
+"""L2 model tests: shapes, grads, spec/manifest consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+
+def _data(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tok = jax.random.randint(key, (cfg.batch, cfg.seq_len), 0, cfg.vocab,
+                             dtype=jnp.int32)
+    tgt = jnp.roll(tok, -1, axis=1)
+    return tok, tgt
+
+
+def test_param_spec_counts():
+    cfg = M.PRESETS["tiny"]
+    spec = M.param_spec(cfg)
+    # embed + head + final norm + per-layer (2 norms + 7 matrices)
+    assert len(spec) == 3 + cfg.n_layers * 9
+    names = [n for n, _, _ in spec]
+    assert len(set(names)) == len(names), "duplicate parameter names"
+
+
+def test_param_spec_kinds():
+    cfg = M.PRESETS["tiny"]
+    for name, shape, kind in M.param_spec(cfg):
+        if kind == M.KIND_VECTOR:
+            assert len(shape) == 1
+        else:
+            assert len(shape) == 2
+        if kind == M.KIND_MATRIX:
+            assert "embed" not in name and "lm_head" not in name
+
+
+def test_forward_shapes():
+    cfg = M.PRESETS["tiny"]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tok, _ = _data(cfg)
+    logits = M.forward(params, tok, cfg)
+    assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    """Fresh model => loss ~ ln(vocab)."""
+    cfg = M.PRESETS["tiny"]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tok, tgt = _data(cfg)
+    loss = float(M.loss_fn(params, tok, tgt, cfg))
+    assert abs(loss - np.log(cfg.vocab)) < 0.5, loss
+
+
+def test_grads_finite_and_complete():
+    cfg = M.PRESETS["tiny"]
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    tok, tgt = _data(cfg, 1)
+    loss, grads = M.fwd_bwd(params, tok, tgt, cfg)
+    assert jnp.isfinite(loss)
+    assert set(grads) == set(params)
+    for name, g in grads.items():
+        assert g.shape == params[name].shape
+        assert bool(jnp.all(jnp.isfinite(g))), name
+
+
+def test_causality():
+    """Future tokens must not influence current logits."""
+    cfg = M.PRESETS["tiny"]
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    tok, _ = _data(cfg, 2)
+    logits1 = M.forward(params, tok, cfg)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % cfg.vocab)
+    logits2 = M.forward(params, tok2, cfg)
+    np.testing.assert_allclose(logits1[:, :-1], logits2[:, :-1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flat_fwd_bwd_order_matches_spec():
+    cfg = M.PRESETS["tiny"]
+    spec = M.param_spec(cfg)
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    flat = [params[n] for n, _, _ in spec]
+    tok, tgt = _data(cfg, 3)
+    out = M.flat_fwd_bwd(cfg)(*flat, tok, tgt)
+    assert len(out) == 1 + len(spec)
+    loss, grads_dict = M.fwd_bwd(params, tok, tgt, cfg)
+    np.testing.assert_allclose(out[0], loss, rtol=0, atol=0)
+    for (name, _, _), g in zip(spec, out[1:]):
+        np.testing.assert_allclose(g, grads_dict[name], rtol=0, atol=0)
+
+
+def test_init_std_values():
+    cfg = M.PRESETS["tiny"]
+    for name, shape, kind in M.param_spec(cfg):
+        std = M.init_std(name, shape, kind, cfg)
+        if kind == M.KIND_VECTOR:
+            assert std == 0.0
+        elif kind == M.KIND_EMBED:
+            assert std == 0.02
+        else:
+            assert 0.0 < std < 0.25

@@ -1,0 +1,124 @@
+"""L2 optimizer math: Shampoo/SOAP vs oracles, Newton root solver."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import optim as O
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _psd(key, n):
+    a = _rand(key, (n, n))
+    return a @ a.T + 0.1 * jnp.eye(n)
+
+
+# --------------------------------------------------- newton inverse root ---
+@given(n=st.integers(2, 48), seed=st.integers(0, 2**31 - 1),
+       p=st.sampled_from([2, 4]))
+def test_inv_pth_root_matches_eigh(n, seed, p):
+    a = _psd(seed, n)
+    got = O.inv_pth_root_newton(a, p, iters=40)
+    want = ref.matrix_inv_pth_root_ref(a, p)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_inv_4th_root_defining_property():
+    """(A^{-1/4})^4 A ~ I."""
+    a = _psd(5, 24)
+    x = O.inv_pth_root_newton(a, 4, iters=40)
+    x4 = x @ x @ x @ x
+    np.testing.assert_allclose(x4 @ a, jnp.eye(24), rtol=0.05, atol=0.05)
+
+
+def test_inv_root_identity():
+    eye = jnp.eye(16)
+    got = O.inv_pth_root_newton(eye, 4, iters=30)
+    np.testing.assert_allclose(got, eye, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------- shampoo ---
+@given(m=st.integers(2, 40), n=st.integers(2, 40),
+       seed=st.integers(0, 2**31 - 1))
+def test_shampoo_matches_ref(m, n, seed):
+    w = _rand(seed, (m, n))
+    g = _rand(seed + 1, (m, n))
+    l_stat = _psd(seed + 2, m) * 0.1
+    r_stat = _psd(seed + 3, n) * 0.1
+    got = O.shampoo_update(w, g, l_stat, r_stat, jnp.float32(0.01), root_iters=40)
+    want = ref.shampoo_update_ref(w, g, l_stat, r_stat, 0.01)
+    # Statistics must match tightly; preconditioned weight loosely
+    # (Newton root vs eigh root tolerance).
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got[2], want[2], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got[0], want[0], rtol=0.1, atol=0.1)
+
+
+def test_shampoo_descends_quadratic():
+    """Shampoo on f(W)=||W||_F^2/2 must decrease the objective."""
+    w = _rand(7, (16, 12))
+    l_stat = jnp.zeros((16, 16))
+    r_stat = jnp.zeros((12, 12))
+    f0 = float(jnp.sum(w * w))
+    for _ in range(15):
+        w, l_stat, r_stat = O.shampoo_update(w, w, l_stat, r_stat, jnp.float32(0.05))
+    assert float(jnp.sum(w * w)) < f0
+
+
+# ------------------------------------------------------------------ soap ---
+def test_soap_matches_ref():
+    w = _rand(9, (12, 20))
+    g = _rand(10, (12, 20))
+    l_stat = _psd(11, 12) * 0.1
+    r_stat = _psd(12, 20) * 0.1
+    m = jnp.zeros((12, 20))
+    v = jnp.zeros((12, 20))
+    got = O.soap_update(w, g, l_stat, r_stat, m, v, jnp.float32(1), jnp.float32(1e-3))
+    # Traced f32 scalars vs python-float bias correction differ in the
+    # last ulp; everything else is the identical code path.
+    want = ref.soap_update_ref(w, g, l_stat, r_stat, m, v, 1.0, 1e-3)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_soap_descends_quadratic():
+    w = _rand(13, (10, 14))
+    l_stat = jnp.zeros((10, 10))
+    r_stat = jnp.zeros((14, 14))
+    m = jnp.zeros((10, 14))
+    v = jnp.zeros((10, 14))
+    f0 = float(jnp.sum(w * w))
+    for t in range(1, 20):
+        w, l_stat, r_stat, m, v = O.soap_update(
+            w, w, l_stat, r_stat, m, v, jnp.float32(t), jnp.float32(0.05))
+    assert float(jnp.sum(w * w)) < f0
+
+
+# ------------------------------------------------------- reference steps ---
+def test_reference_train_step_decreases_loss():
+    """The pure-jax Muon+AdamW step must learn a trivial corpus."""
+    from compile import model as M
+
+    cfg = M.PRESETS["tiny"]
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    states = O.init_states(params, cfg)
+    tok = jnp.tile(jnp.arange(cfg.seq_len, dtype=jnp.int32) % 17,
+                   (cfg.batch, 1))
+    tgt = jnp.roll(tok, -1, axis=1)
+    first = None
+    for step in range(1, 26):
+        loss, params, states = O.reference_train_step(
+            params, tok, tgt, states, step, cfg)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))

@@ -1,0 +1,95 @@
+//! Hot-path microbenchmarks: the L3 pieces that execute per training
+//! step (collectives, simulator playback, minheap solver) plus — when
+//! artifacts are present — the PJRT execution path itself.
+
+use std::sync::Arc;
+
+use canzona::collectives::{Communicator, Group};
+use canzona::schedule::minheap::min_heap_balance;
+use canzona::sim::{simulate_iteration, Scenario};
+use canzona::util::bench::{bench, black_box};
+
+fn bench_collectives() {
+    println!("## in-memory collectives (4 thread ranks)\n");
+    for n in [1_000usize, 1_000_000] {
+        // Persistent rank threads driven through channels would be ideal;
+        // here each sample spawns fresh threads, so results include the
+        // spawn cost — dominated by the 1M-element payloads anyway.
+        bench(&format!("all_reduce {n} f32 x4 ranks (incl. spawn)"), 10, || {
+            let group = Group::new(4);
+            let handles: Vec<_> = (0..4)
+                .map(|r| {
+                    let c = Communicator::new(group.clone(), r);
+                    std::thread::spawn(move || {
+                        let data = vec![1.0f32; n];
+                        black_box(c.all_reduce(&data));
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+    println!();
+}
+
+fn bench_simulator() {
+    println!("## simulator playback\n");
+    let s = Scenario::paper_default();
+    bench("simulate_iteration 32B DP32 TP8 LB-ASC", 10, || {
+        black_box(simulate_iteration(&s));
+    });
+    println!();
+}
+
+fn bench_minheap() {
+    println!("## minheap solver\n");
+    let costs: Vec<f64> = (0..448).map(|i| ((i * 37) % 97) as f64 + 1.0).collect();
+    bench("min_heap_balance 448 tasks x 8 ranks", 20, || {
+        black_box(min_heap_balance(&costs, 8));
+    });
+    println!();
+}
+
+fn bench_runtime() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest__tiny.json").exists() {
+        println!("## PJRT runtime: skipped (run `make artifacts`)\n");
+        return;
+    }
+    println!("## PJRT runtime (tiny preset)\n");
+    use canzona::runtime::{literal_f32, literal_scalar, Manifest, Runtime};
+    let m = Manifest::load(&dir, "tiny").unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let p = m.params.iter().find(|p| p.optim == "muon").unwrap().clone();
+    let file = m.artifact_file(&p.artifact).unwrap().to_string();
+    let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+    let w = vec![0.01f32; p.numel];
+    // Warm the compilation cache before timing execution.
+    rt.load(&file).unwrap();
+    bench(&format!("muon update exec {}x{}", p.shape[0], p.shape[1]), 10, || {
+        let outs = rt
+            .execute(&file, &[
+                literal_f32(&w, &dims).unwrap(),
+                literal_f32(&w, &dims).unwrap(),
+                literal_f32(&w, &dims).unwrap(),
+                literal_scalar(0.02),
+                literal_scalar(0.95),
+            ])
+            .unwrap();
+        black_box(outs);
+    });
+
+    let group = Arc::new(());
+    let _ = group;
+    println!();
+}
+
+fn main() {
+    println!("# Hot-path microbenchmarks\n");
+    bench_minheap();
+    bench_simulator();
+    bench_collectives();
+    bench_runtime();
+}

@@ -1,0 +1,43 @@
+//! Offline planning latency (paper Appendix D.1: "completes in
+//! milliseconds"). Benchmarks the α-balanced DP partitioner, the naive
+//! stride rule, the layerwise LPT and the TP micro-group scheduler on
+//! every Qwen3 family member.
+
+use canzona::buffer::FlatBuffer;
+use canzona::cost::optim::{CostMetric, OptimCost, OptimKind};
+use canzona::model::qwen3::{qwen3, Qwen3Size};
+use canzona::model::tp::{fragmented_matrix_params, tp_split};
+use canzona::partition::{alpha_balanced, layerwise, naive_atomic};
+use canzona::schedule::microgroup::{build_micro_groups, tasks_from_shards};
+use canzona::util::bench::{bench, black_box};
+
+fn main() {
+    println!("# Planning latency benchmarks (Appendix D.1 target: ms-scale)\n");
+    for size in Qwen3Size::all() {
+        let census = qwen3(size);
+        let fb = FlatBuffer::build(&census, 40_000_000);
+        let w = |p: &canzona::buffer::PlacedParam| p.numel() as f64;
+
+        bench(&format!("{} buffer build", size.label()), 10, || {
+            black_box(FlatBuffer::build(&census, 40_000_000));
+        });
+        bench(&format!("{} alpha_balanced DP=32", size.label()), 10, || {
+            black_box(alpha_balanced(&fb, 32, 1.0, true, w));
+        });
+        bench(&format!("{} naive_atomic DP=32", size.label()), 10, || {
+            black_box(naive_atomic(&fb, 32));
+        });
+        bench(&format!("{} layerwise DP=32", size.label()), 10, || {
+            black_box(layerwise(&fb, 32, w));
+        });
+
+        let shards = tp_split(&census, 8);
+        let frag = fragmented_matrix_params(&shards, 8);
+        let optim = OptimCost::new(OptimKind::Muon);
+        bench(&format!("{} micro_groups TP=8", size.label()), 10, || {
+            let tasks = tasks_from_shards(&frag, &optim, CostMetric::Numel);
+            black_box(build_micro_groups(tasks, 8, 256e6));
+        });
+        println!();
+    }
+}

@@ -1,0 +1,23 @@
+//! `cargo bench` driver that regenerates every paper table and figure.
+//!
+//! Each experiment harness is also timed (the simulator itself must stay
+//! fast enough for interactive sweeps). Output is the same Markdown that
+//! EXPERIMENTS.md records.
+
+use std::time::Instant;
+
+fn main() {
+    println!("# Canzona — paper experiment reproduction (cargo bench)\n");
+    let mut total = 0.0;
+    for (id, desc) in canzona::experiments::list() {
+        let t0 = Instant::now();
+        let tables = canzona::experiments::run(id).expect(id);
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("\n---\n## {id} — {desc}  (generated in {dt:.2}s)");
+        for t in tables {
+            t.print();
+        }
+    }
+    println!("\n---\nall experiments regenerated in {total:.2}s");
+}

@@ -1,0 +1,234 @@
+//! Megatron-style `param_and_grad_buffer` (Appendix B of the paper).
+//!
+//! All parameters are flattened, in registration order, into one
+//! contiguous buffer that is logically divided into *buckets* to pipeline
+//! communication with computation. ZeRO-1's "equal chunk" rule slices
+//! each bucket into `R` uniform segments agnostic to parameter
+//! boundaries — the geometry the paper's static partitioning must respect
+//! while moving slice boundaries to parameter edges.
+
+use crate::model::shapes::Param;
+
+/// A parameter's placement in the flat buffer.
+#[derive(Clone, Debug)]
+pub struct PlacedParam {
+    pub param: Param,
+    /// Index of the parameter in the census (stable id).
+    pub index: usize,
+    /// Start offset in the flat buffer (elements).
+    pub start: usize,
+    /// End offset (exclusive).
+    pub end: usize,
+    /// Bucket this parameter belongs to.
+    pub bucket: usize,
+}
+
+impl PlacedParam {
+    pub fn numel(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// One logical bucket: a contiguous range of the flat buffer holding a
+/// whole number of parameters.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    pub index: usize,
+    pub start: usize,
+    pub end: usize,
+    /// Indices (into `FlatBuffer::params`) of the members, in order.
+    pub members: Vec<usize>,
+}
+
+impl Bucket {
+    pub fn size(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// The flattened parameter/gradient buffer with bucket structure.
+#[derive(Clone, Debug)]
+pub struct FlatBuffer {
+    pub params: Vec<PlacedParam>,
+    pub buckets: Vec<Bucket>,
+    pub total: usize,
+}
+
+impl FlatBuffer {
+    /// Pack `params` in order; start a new bucket whenever the current one
+    /// reaches `bucket_size` elements (Megatron's default is 40M elements;
+    /// parameters are never split across buckets).
+    pub fn build(params: &[Param], bucket_size: usize) -> FlatBuffer {
+        assert!(bucket_size > 0);
+        let mut placed = Vec::with_capacity(params.len());
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut offset = 0usize;
+        for (index, p) in params.iter().enumerate() {
+            let need_new = match buckets.last() {
+                None => true,
+                Some(b) => b.end - b.start >= bucket_size,
+            };
+            if need_new {
+                buckets.push(Bucket {
+                    index: buckets.len(),
+                    start: offset,
+                    end: offset,
+                    members: Vec::new(),
+                });
+            }
+            let b = buckets.last_mut().unwrap();
+            let numel = p.numel();
+            placed.push(PlacedParam {
+                param: p.clone(),
+                index,
+                start: offset,
+                end: offset + numel,
+                bucket: b.index,
+            });
+            b.members.push(index);
+            offset += numel;
+            b.end = offset;
+        }
+        FlatBuffer { params: placed, buckets, total: offset }
+    }
+
+    /// ZeRO-1 "equal chunk" boundaries for a bucket: R+1 cut points that
+    /// slice `[start, end)` into R uniform segments (the last absorbs the
+    /// remainder). This is the geometric rule Reduce-Scatter assumes.
+    pub fn equal_chunk_cuts(&self, bucket: usize, ranks: usize) -> Vec<usize> {
+        let b = &self.buckets[bucket];
+        let size = b.size();
+        let stride = size / ranks;
+        let mut cuts = Vec::with_capacity(ranks + 1);
+        for r in 0..ranks {
+            cuts.push(b.start + r * stride);
+        }
+        cuts.push(b.end);
+        cuts
+    }
+
+    /// Feasible atomic cut points of a bucket: offsets at parameter
+    /// boundaries (the set `U_i` in the paper), including both ends.
+    pub fn atomic_cuts(&self, bucket: usize) -> Vec<usize> {
+        let b = &self.buckets[bucket];
+        let mut cuts: Vec<usize> = b.members.iter().map(|&i| self.params[i].start).collect();
+        cuts.push(b.end);
+        cuts
+    }
+
+    /// Cumulative load `Φ_i(u)` of a bucket up to cut point `u` under a
+    /// per-parameter weight function.
+    pub fn cumulative_load<F: Fn(&PlacedParam) -> f64>(
+        &self,
+        bucket: usize,
+        upto: usize,
+        w: &F,
+    ) -> f64 {
+        self.buckets[bucket]
+            .members
+            .iter()
+            .map(|&i| &self.params[i])
+            .filter(|p| p.end <= upto)
+            .map(w)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::qwen3::{qwen3, Qwen3Size};
+    use crate::model::shapes::{Param, ParamKind, TensorShape};
+
+    fn toy_params(sizes: &[usize]) -> Vec<Param> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                Param::new(&format!("p{i}"), TensorShape::vector(n), ParamKind::Vector, None)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn contiguous_and_complete() {
+        let params = toy_params(&[10, 20, 30, 40]);
+        let fb = FlatBuffer::build(&params, 35);
+        assert_eq!(fb.total, 100);
+        let mut prev_end = 0;
+        for p in &fb.params {
+            assert_eq!(p.start, prev_end);
+            prev_end = p.end;
+        }
+        assert_eq!(prev_end, fb.total);
+    }
+
+    #[test]
+    fn bucket_boundaries_respect_params() {
+        let params = toy_params(&[10, 20, 30, 40]);
+        let fb = FlatBuffer::build(&params, 35);
+        // bucket 0: p0+p1+p2 would be 60 > 35 after p1 (10+20=30 < 35, add p2 -> 60)
+        // rule: open new bucket when current >= bucket_size
+        for b in &fb.buckets {
+            assert!(!b.members.is_empty());
+            assert_eq!(fb.params[b.members[0]].start, b.start);
+            assert_eq!(fb.params[*b.members.last().unwrap()].end, b.end);
+        }
+        // buckets tile the buffer
+        let mut prev = 0;
+        for b in &fb.buckets {
+            assert_eq!(b.start, prev);
+            prev = b.end;
+        }
+        assert_eq!(prev, fb.total);
+    }
+
+    #[test]
+    fn equal_chunk_cuts_uniform() {
+        let params = toy_params(&[100]);
+        let fb = FlatBuffer::build(&params, 1000);
+        let cuts = fb.equal_chunk_cuts(0, 4);
+        assert_eq!(cuts, vec![0, 25, 50, 75, 100]);
+    }
+
+    #[test]
+    fn equal_chunk_violates_atomicity_on_real_census() {
+        // The motivating observation: uniform cuts land inside tensors.
+        let params = qwen3(Qwen3Size::S1_7B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        let cuts = fb.equal_chunk_cuts(0, 8);
+        let atomic = fb.atomic_cuts(0);
+        let violations = cuts[1..cuts.len() - 1]
+            .iter()
+            .filter(|c| !atomic.contains(c))
+            .count();
+        assert!(violations > 0, "expected equal-chunk cuts inside tensors");
+    }
+
+    #[test]
+    fn atomic_cuts_are_param_starts() {
+        let params = toy_params(&[5, 7, 9]);
+        let fb = FlatBuffer::build(&params, 1000);
+        assert_eq!(fb.atomic_cuts(0), vec![0, 5, 12, 21]);
+    }
+
+    #[test]
+    fn cumulative_load_counts_whole_params() {
+        let params = toy_params(&[5, 7, 9]);
+        let fb = FlatBuffer::build(&params, 1000);
+        let w = |p: &PlacedParam| p.numel() as f64;
+        assert_eq!(fb.cumulative_load(0, 0, &w), 0.0);
+        assert_eq!(fb.cumulative_load(0, 5, &w), 5.0);
+        assert_eq!(fb.cumulative_load(0, 12, &w), 12.0);
+        assert_eq!(fb.cumulative_load(0, 11, &w), 5.0); // p1 not fully included
+        assert_eq!(fb.cumulative_load(0, 21, &w), 21.0);
+    }
+
+    #[test]
+    fn qwen_buffer_buckets_nonempty() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        assert!(fb.buckets.len() > 10);
+        assert_eq!(fb.total, crate::model::qwen3::total_params(&params));
+    }
+}

@@ -1,0 +1,77 @@
+//! Run configuration: a typed view over JSON config files.
+//!
+//! `canzona` commands accept flags directly; long-lived setups can store
+//! them in a JSON file loaded here (`--config run.json` semantics are
+//! provided by merging file values under CLI overrides).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+/// A loosely-typed configuration bag backed by JSON.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    root: Option<Value>,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Config { root: Some(Value::parse(&text)?) })
+    }
+
+    pub fn empty() -> Config {
+        Config { root: None }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.root
+            .as_ref()
+            .and_then(|r| r.opt(key))
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.root
+            .as_ref()
+            .and_then(|r| r.opt(key))
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.root
+            .as_ref()
+            .and_then(|r| r.opt(key))
+            .and_then(|v| v.as_usize().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_on_empty() {
+        let c = Config::empty();
+        assert_eq!(c.get_str("x", "d"), "d");
+        assert_eq!(c.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn loads_json() {
+        let dir = std::env::temp_dir().join("canzona_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"preset": "e2e", "ranks": 8, "alpha": 0.5}"#).unwrap();
+        let c = Config::load(&path).unwrap();
+        assert_eq!(c.get_str("preset", ""), "e2e");
+        assert_eq!(c.get_usize("ranks", 0), 8);
+        assert_eq!(c.get_f64("alpha", 0.0), 0.5);
+    }
+}

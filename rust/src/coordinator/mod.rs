@@ -1,0 +1,170 @@
+//! Coordinator: configuration + the `canzona` CLI.
+//!
+//! Subcommands:
+//! * `plan`       — compute + report a partition plan for a model/grid.
+//! * `simulate`   — run the cluster simulator for one scenario.
+//! * `experiment` — reproduce a paper figure (`fig4`, `fig13`, … or `all`).
+//! * `train`      — run the real distributed trainer on AOT artifacts.
+//! * `list`       — list registered experiments.
+
+pub mod config;
+
+use anyhow::{bail, Result};
+
+use crate::cost::optim::OptimKind;
+use crate::experiments;
+use crate::model::qwen3::Qwen3Size;
+use crate::partition::DpStrategy;
+use crate::sim::{simulate_iteration, Scenario};
+use crate::train::{train, TrainConfig};
+use crate::util::cli::Args;
+use crate::util::stats::load_balance_ratio;
+use crate::util::table::Table;
+
+pub use config::Config;
+
+const USAGE: &str = "\
+canzona — unified, asynchronous, load-balanced distributed matrix-based optimizers
+
+USAGE:
+  canzona plan       --model 32b --dp 32 --tp 8 [--alpha 1.0] [--strategy lb-asc]
+  canzona simulate   --model 32b --dp 32 --tp 8 [--pp 1] [--optim muon] [--strategy lb-asc]
+  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|planning|all>
+  canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
+                     [--seed 42] [--artifacts artifacts] [--log-every 10]
+  canzona list
+";
+
+/// CLI entry point.
+pub fn run_cli(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv, &["verbose", "csv"])?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "plan" => cmd_plan(&args),
+        "simulate" => cmd_simulate(&args),
+        "experiment" => cmd_experiment(&args),
+        "train" => cmd_train(&args),
+        "list" => {
+            for (id, desc) in experiments::list() {
+                println!("{id:<12} {desc}");
+            }
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn parse_scenario(args: &Args) -> Result<Scenario> {
+    let model = args.get_or("model", "32b");
+    let size = Qwen3Size::parse(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (1.7b/4b/8b/14b/32b)"))?;
+    let strategy = DpStrategy::parse(args.get_or("strategy", "lb-asc"))
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy (sc/nv-layerwise/asc/lb-asc)"))?;
+    let optim = OptimKind::parse(args.get_or("optim", "muon"))
+        .ok_or_else(|| anyhow::anyhow!("unknown optimizer (muon/shampoo/soap/adamw)"))?;
+    let mut s = Scenario::new(
+        size,
+        args.get_usize("dp", 32)?,
+        args.get_usize("tp", 8)?,
+        args.get_usize("pp", 1)?,
+        optim,
+        strategy,
+    );
+    s.alpha = args.get_f64("alpha", 1.0)?;
+    if let Some(cb) = args.get("c-max-mb") {
+        let mb: f64 = cb.parse()?;
+        s.c_max_bytes = if mb <= 0.0 { None } else { Some(mb * 1e6) };
+    }
+    Ok(s)
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let s = parse_scenario(args)?;
+    let b = simulate_iteration(&s);
+    let mut t = Table::new(
+        &format!("Partition plan — {} DP{} TP{} PP{} {} ({})",
+                 s.label, s.dp, s.tp, s.pp, s.optim.label(), s.strategy.label()),
+        &["metric", "value"],
+    );
+    t.row(vec!["DP FLOPs LB ratio".into(),
+               format!("{:.3}", load_balance_ratio(&b.dp_loads_flops))]);
+    t.row(vec!["DP state LB ratio".into(),
+               format!("{:.3}", load_balance_ratio(&b.dp_loads_state))]);
+    t.row(vec!["TP FLOPs LB ratio".into(),
+               format!("{:.3}", load_balance_ratio(&b.tp_loads_flops))]);
+    t.row(vec!["micro groups".into(), b.n_micro_groups.to_string()]);
+    t.row(vec!["planning time".into(), format!("{:.2} ms", b.planning_s * 1e3)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let s = parse_scenario(args)?;
+    let b = simulate_iteration(&s);
+    let mut t = Table::new(
+        &format!("Simulated iteration — {} DP{} TP{} PP{} {} ({})",
+                 s.label, s.dp, s.tp, s.pp, s.optim.label(), s.strategy.label()),
+        &["phase", "time"],
+    );
+    t.row(vec!["fwd-bwd".into(), format!("{:.4}s", b.fwd_bwd_s)]);
+    t.row(vec!["optimizer".into(), format!("{:.4}s", b.optimizer_s)]);
+    t.row(vec!["total".into(), format!("{:.4}s", b.total_s)]);
+    t.row(vec!["exposed comm".into(), format!("{:.4}s", b.exposed_comm_s)]);
+    t.row(vec!["AdamW reference".into(), format!("{:.4}s", b.adamw_ref_s)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let Some(id) = args.positional.get(1) else {
+        bail!("experiment id required; see `canzona list`");
+    };
+    for table in experiments::run(id)? {
+        if args.flag("csv") {
+            print!("{}", table.to_csv());
+        } else {
+            table.print();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::new(args.get_or("preset", "e2e"));
+    cfg.artifacts_dir = args.get_or("artifacts", "artifacts").into();
+    cfg.ranks = args.get_usize("ranks", 4)?;
+    cfg.steps = args.get_usize("steps", 100)?;
+    cfg.alpha = args.get_f64("alpha", 1.0)?;
+    cfg.seed = args.get_usize("seed", 42)? as u64;
+    cfg.log_every = args.get_usize("log-every", 10)?;
+    cfg.strategy = DpStrategy::parse(args.get_or("strategy", "lb-asc"))
+        .ok_or_else(|| anyhow::anyhow!("trainer strategies: sc/asc/lb-asc"))?;
+    println!(
+        "training preset={} ranks={} steps={} strategy={}",
+        cfg.preset, cfg.ranks, cfg.steps, cfg.strategy.label()
+    );
+    let r = train(&cfg)?;
+    let n = r.losses.len();
+    println!(
+        "done: loss {:.4} -> {:.4} | mean step {:.3}s (opt {:.3}s) | comm {:.1} MB | params hash {:016x}",
+        r.losses.first().copied().unwrap_or(f32::NAN),
+        r.losses.last().copied().unwrap_or(f32::NAN),
+        crate::util::stats::mean(&r.step_times.iter().map(|&x| x).collect::<Vec<_>>()),
+        crate::util::stats::mean(&r.opt_times.iter().map(|&x| x).collect::<Vec<_>>()),
+        r.comm_bytes as f64 / 1e6,
+        r.params_hash,
+    );
+    // Loss curve CSV for EXPERIMENTS.md / plotting.
+    if let Some(path) = args.get("loss-out") {
+        let mut csv = String::from("step,loss\n");
+        for (i, l) in r.losses.iter().enumerate() {
+            csv += &format!("{},{}\n", i + 1, l);
+        }
+        std::fs::write(path, csv)?;
+        println!("wrote loss curve to {path} ({n} steps)");
+    }
+    Ok(())
+}

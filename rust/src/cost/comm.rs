@@ -1,0 +1,189 @@
+//! α-β collective communication model.
+//!
+//! Ring-algorithm volume formulas (what NCCL uses at these sizes):
+//!
+//! | collective        | per-GPU traffic        | steps  |
+//! |-------------------|------------------------|--------|
+//! | All-Reduce        | 2·B·(R-1)/R            | 2(R-1) |
+//! | Reduce-Scatter    | B·(R-1)/R              | R-1    |
+//! | All-Gather        | B·(R-1)/R              | R-1    |
+//! | All-to-All        | B·(R-1)/R              | R-1    |
+//! | Broadcast (tree)  | B                      | log2 R |
+//!
+//! The *variable-size* variants model the paper's non-uniform shards: a
+//! ring step is paced by the largest shard it moves, so imbalanced cuts
+//! cost `(R-1)·max_shard` instead of `(R-1)·B/R` — exactly the
+//! J_Comm penalty the α-parameter trades off (paper Eq. 3, App. C.5).
+
+use super::hardware::{Hardware, LinkKind};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    AllReduce,
+    ReduceScatter,
+    AllGather,
+    AllToAll,
+    Broadcast,
+}
+
+/// Collective timing under a hardware profile.
+#[derive(Clone, Debug)]
+pub struct CommModel {
+    pub hw: Hardware,
+}
+
+impl CommModel {
+    pub fn new(hw: Hardware) -> CommModel {
+        CommModel { hw }
+    }
+
+    /// Time for a uniform collective over `bytes` total buffer across `r`
+    /// ranks on `link`.
+    pub fn collective(&self, kind: CollectiveKind, bytes: f64, r: usize, link: LinkKind) -> f64 {
+        if r <= 1 {
+            return 0.0;
+        }
+        let bw = self.hw.bandwidth(link);
+        let lat = self.hw.latency(link);
+        let rf = r as f64;
+        match kind {
+            CollectiveKind::AllReduce => {
+                2.0 * bytes * (rf - 1.0) / rf / bw + 2.0 * (rf - 1.0) * lat
+            }
+            CollectiveKind::ReduceScatter | CollectiveKind::AllGather | CollectiveKind::AllToAll => {
+                bytes * (rf - 1.0) / rf / bw + (rf - 1.0) * lat
+            }
+            CollectiveKind::Broadcast => bytes / bw + (rf as f64).log2().ceil() * lat,
+        }
+    }
+
+    /// Variable-size Reduce-Scatter / All-Gather / All-to-All.
+    ///
+    /// With chunk pipelining (NCCL-style), a ring collective over
+    /// non-uniform shards is paced by the busiest link: every link
+    /// carries every shard except the one terminating at it, i.e.
+    /// `total - min_shard` bytes. For uniform shards this reduces to the
+    /// classic `B (R-1)/R`. Skew therefore costs `(total - min) -
+    /// (total (R-1)/R)` extra — small, which is exactly why the paper can
+    /// hide α=1's communication imbalance under compute (App. C.5).
+    pub fn collective_v(
+        &self,
+        kind: CollectiveKind,
+        shard_bytes: &[f64],
+        link: LinkKind,
+    ) -> f64 {
+        let r = shard_bytes.len();
+        if r <= 1 {
+            return 0.0;
+        }
+        let bw = self.hw.bandwidth(link);
+        let lat = self.hw.latency(link);
+        let total: f64 = shard_bytes.iter().sum();
+        let min_shard = shard_bytes.iter().cloned().fold(f64::INFINITY, f64::min);
+        let steps = (r - 1) as f64;
+        match kind {
+            CollectiveKind::ReduceScatter
+            | CollectiveKind::AllGather
+            | CollectiveKind::AllToAll => (total - min_shard) / bw + steps * lat,
+            _ => self.collective(kind, total, r, link),
+        }
+    }
+
+    /// Per-parameter (non-coalesced) communication: the paper's "Option B"
+    /// latency penalty. `sizes` are per-message byte counts; every message
+    /// pays the kernel-launch overhead.
+    pub fn per_message(&self, sizes: &[f64], r: usize, link: LinkKind,
+                       kind: CollectiveKind) -> f64 {
+        sizes
+            .iter()
+            .map(|&b| self.hw.launch_overhead + self.collective(kind, b, r, link))
+            .sum()
+    }
+
+    /// Communication volume in bytes actually crossing the wire per GPU.
+    pub fn volume(&self, kind: CollectiveKind, bytes: f64, r: usize) -> f64 {
+        if r <= 1 {
+            return 0.0;
+        }
+        let rf = r as f64;
+        match kind {
+            CollectiveKind::AllReduce => 2.0 * bytes * (rf - 1.0) / rf,
+            CollectiveKind::ReduceScatter
+            | CollectiveKind::AllGather
+            | CollectiveKind::AllToAll => bytes * (rf - 1.0) / rf,
+            CollectiveKind::Broadcast => bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CommModel {
+        CommModel::new(Hardware::h800())
+    }
+
+    #[test]
+    fn all_reduce_is_2x_reduce_scatter() {
+        // The core claim behind the paper's fwd-bwd speedup (Fig. 7).
+        let m = model();
+        let b = 1e9;
+        let ar = m.volume(CollectiveKind::AllReduce, b, 32);
+        let rs = m.volume(CollectiveKind::ReduceScatter, b, 32);
+        assert!((ar / rs - 2.0).abs() < 1e-9);
+        let t_ar = m.collective(CollectiveKind::AllReduce, b, 32, LinkKind::InterNode);
+        let t_rs = m.collective(CollectiveKind::ReduceScatter, b, 32, LinkKind::InterNode);
+        assert!(t_ar > 1.9 * t_rs && t_ar < 2.1 * t_rs);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = model();
+        assert_eq!(m.collective(CollectiveKind::AllReduce, 1e9, 1, LinkKind::InterNode), 0.0);
+        assert_eq!(m.collective_v(CollectiveKind::AllGather, &[1e9], LinkKind::IntraNode), 0.0);
+    }
+
+    #[test]
+    fn variable_size_skew_penalty_is_bounded() {
+        let m = model();
+        let uniform = m.collective_v(CollectiveKind::ReduceScatter,
+                                     &[1e6; 4], LinkKind::InterNode);
+        let skewed = m.collective_v(CollectiveKind::ReduceScatter,
+                                    &[4e6, 0.0, 0.0, 0.0], LinkKind::InterNode);
+        // Skew costs more, but bounded by total/bw (busiest link).
+        assert!(skewed > uniform, "{skewed} vs {uniform}");
+        assert!(skewed < uniform * 1.5, "{skewed} vs {uniform}");
+        // Equal totals, equal shards => matches uniform formula exactly.
+        let total_uniform = m.collective(CollectiveKind::ReduceScatter, 4e6, 4,
+                                         LinkKind::InterNode);
+        assert!((uniform - total_uniform).abs() / total_uniform < 0.05);
+    }
+
+    #[test]
+    fn per_message_launch_overhead_dominates_small() {
+        // 1000 tiny messages must cost >> one fused message of equal volume.
+        let m = model();
+        let sizes = vec![1e3; 1000];
+        let fused = m.collective(CollectiveKind::AllToAll, 1e6, 8, LinkKind::IntraNode);
+        let scattered = m.per_message(&sizes, 8, LinkKind::IntraNode,
+                                      CollectiveKind::AllToAll);
+        assert!(scattered > 10.0 * fused, "{scattered} vs {fused}");
+    }
+
+    #[test]
+    fn internode_slower_than_intranode() {
+        let m = model();
+        let t_ib = m.collective(CollectiveKind::AllGather, 1e8, 8, LinkKind::InterNode);
+        let t_nv = m.collective(CollectiveKind::AllGather, 1e8, 8, LinkKind::IntraNode);
+        assert!(t_ib > 3.0 * t_nv);
+    }
+
+    #[test]
+    fn bandwidth_term_scales_linearly() {
+        let m = model();
+        let t1 = m.collective(CollectiveKind::ReduceScatter, 1e9, 16, LinkKind::InterNode);
+        let t2 = m.collective(CollectiveKind::ReduceScatter, 2e9, 16, LinkKind::InterNode);
+        assert!(t2 / t1 > 1.9 && t2 / t1 < 2.1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Cluster hardware profiles (the α-β model's constants).
+//!
+//! The paper's testbed is 256-512 H800-class GPUs: NVLink inside a node
+//! (TP domain), InfiniBand between nodes (DP domain). Absolute numbers do
+//! not need to match the authors' cluster — only the *ratios* (NVLink >>
+//! IB bandwidth, launch overhead >> per-byte cost for tiny messages)
+//! matter for reproducing the result shapes, and those are physical.
+
+/// Which fabric a collective crosses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Intra-node (NVLink/NVSwitch) — the TP domain.
+    IntraNode,
+    /// Inter-node (InfiniBand/RoCE) — the DP domain.
+    InterNode,
+}
+
+/// One cluster profile.
+#[derive(Clone, Debug)]
+pub struct Hardware {
+    pub name: &'static str,
+    /// Effective dense-matmul throughput per GPU (FLOP/s).
+    pub gpu_flops: f64,
+    /// HBM bandwidth per GPU (bytes/s) — bounds element-wise ops.
+    pub hbm_bw: f64,
+    /// NVLink algorithm bandwidth per GPU (bytes/s).
+    pub nvlink_bw: f64,
+    /// InfiniBand algorithm bandwidth per GPU (bytes/s).
+    pub ib_bw: f64,
+    /// Per-collective base latency, intra-node (s).
+    pub nvlink_lat: f64,
+    /// Per-collective base latency, inter-node (s).
+    pub ib_lat: f64,
+    /// Kernel-launch / per-message fixed overhead (s) — dominates the
+    /// per-parameter communication paths the paper's Option B suffers.
+    pub launch_overhead: f64,
+    /// GPUs per node (the TP domain size ceiling).
+    pub gpus_per_node: usize,
+}
+
+impl Hardware {
+    /// H800-class default (the paper's testbed flavour).
+    pub fn h800() -> Hardware {
+        Hardware {
+            name: "h800",
+            gpu_flops: 400e12, // achievable bf16 matmul throughput
+            hbm_bw: 3.0e12,
+            nvlink_bw: 200e9,
+            ib_bw: 40e9,
+            nvlink_lat: 6e-6,
+            ib_lat: 18e-6,
+            launch_overhead: 12e-6,
+            gpus_per_node: 8,
+        }
+    }
+
+    /// A100-class alternative profile.
+    pub fn a100() -> Hardware {
+        Hardware {
+            name: "a100",
+            gpu_flops: 250e12,
+            hbm_bw: 1.9e12,
+            nvlink_bw: 150e9,
+            ib_bw: 25e9,
+            nvlink_lat: 8e-6,
+            ib_lat: 20e-6,
+            launch_overhead: 12e-6,
+            gpus_per_node: 8,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Hardware> {
+        match name {
+            "h800" => Some(Hardware::h800()),
+            "a100" => Some(Hardware::a100()),
+            _ => None,
+        }
+    }
+
+    pub fn bandwidth(&self, link: LinkKind) -> f64 {
+        match link {
+            LinkKind::IntraNode => self.nvlink_bw,
+            LinkKind::InterNode => self.ib_bw,
+        }
+    }
+
+    pub fn latency(&self, link: LinkKind) -> f64 {
+        match link {
+            LinkKind::IntraNode => self.nvlink_lat,
+            LinkKind::InterNode => self.ib_lat,
+        }
+    }
+
+    /// Time to execute `flops` of dense matmul work on one GPU.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.gpu_flops
+    }
+
+    /// Time for a memory-bound elementwise pass over `bytes`.
+    pub fn memory_time(&self, bytes: f64) -> f64 {
+        bytes / self.hbm_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_sane() {
+        for hw in [Hardware::h800(), Hardware::a100()] {
+            assert!(hw.nvlink_bw > hw.ib_bw * 3.0, "{}", hw.name);
+            assert!(hw.ib_lat >= hw.nvlink_lat);
+            assert!(hw.gpus_per_node >= 2);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(Hardware::by_name("h800").is_some());
+        assert!(Hardware::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn time_helpers() {
+        let hw = Hardware::h800();
+        assert!((hw.compute_time(400e12) - 1.0).abs() < 1e-9);
+        assert!(hw.memory_time(3.0e12) > 0.9);
+        assert!(hw.bandwidth(LinkKind::IntraNode) > hw.bandwidth(LinkKind::InterNode));
+    }
+}

@@ -1,0 +1,15 @@
+//! Cost models driving the load-balancing algorithms and the simulator.
+//!
+//! * [`optim`] — per-parameter FLOPs / state-memory of the matrix-based
+//!   optimizers (the non-linear, cubic costs of Appendix D.5).
+//! * [`comm`] — α-β interconnect model with collective-specific volume
+//!   formulas (NVLink intra-node vs InfiniBand inter-node).
+//! * [`hardware`] — cluster profiles (per-GPU throughput, link speeds).
+
+pub mod comm;
+pub mod hardware;
+pub mod optim;
+
+pub use comm::{CollectiveKind, CommModel};
+pub use hardware::{Hardware, LinkKind};
+pub use optim::{CostMetric, OptimKind, OptimCost};

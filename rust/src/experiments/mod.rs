@@ -1,0 +1,13 @@
+//! Paper-figure reproduction harnesses.
+//!
+//! One function per table/figure in the paper's evaluation. Each returns
+//! rendered Markdown tables (via [`crate::util::table::Table`]) whose rows
+//! mirror what the paper reports; `canzona experiment <id>` prints them
+//! and `benches/paper_experiments.rs` regenerates them under `cargo
+//! bench`. Expected *shapes* (who wins, by roughly what factor) are
+//! documented per harness and recorded in EXPERIMENTS.md.
+
+pub mod figures;
+pub mod registry;
+
+pub use registry::{list, run};

@@ -1,0 +1,77 @@
+//! Experiment registry: id -> harness, for the CLI and the bench driver.
+
+use anyhow::{bail, Result};
+
+use crate::util::table::Table;
+
+use super::figures;
+
+/// All registered experiments: (id, description, harness).
+pub fn catalog() -> Vec<(&'static str, &'static str, fn() -> Vec<Table>)> {
+    vec![
+        ("fig3a", "Optimizer makespan: SC vs ASC vs LB-ASC", figures::fig3a),
+        ("fig3bc", "DP/TP load-balance ratios with and without balancing", figures::fig3bc),
+        ("fig4", "End-to-end iteration vs NV-layerwise", figures::fig4),
+        ("fig6", "Family sweep vs NV-layerwise", figures::fig6),
+        ("fig7", "Fwd-bwd comm efficiency vs AdamW anchors", figures::fig7),
+        ("fig8", "DP / TP parallelism scaling", figures::fig8),
+        ("fig9", "Model-size scaling of LB ratios", figures::fig9),
+        ("fig10-11", "Shampoo & SOAP generality (efficiency)", figures::fig10_11),
+        ("fig12", "Shampoo/SOAP load-balance ratios", figures::fig12),
+        ("fig13", "Alpha ablation", figures::fig13),
+        ("fig14", "C_max micro-group fusion ablation", figures::fig14),
+        ("fig16", "Cost metric ablation (numel vs FLOPs)", figures::fig16),
+        ("planning", "Appendix D.1 offline planning latency", figures::planning_latency),
+    ]
+}
+
+/// List experiment ids + descriptions.
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    catalog().into_iter().map(|(id, d, _)| (id, d)).collect()
+}
+
+/// Run one experiment (or "all") and return the rendered tables.
+pub fn run(id: &str) -> Result<Vec<Table>> {
+    if id == "all" {
+        let mut out = Vec::new();
+        for (_, _, f) in catalog() {
+            out.extend(f());
+        }
+        return Ok(out);
+    }
+    for (eid, _, f) in catalog() {
+        if eid == id {
+            return Ok(f());
+        }
+    }
+    bail!("unknown experiment {id:?}; known: {:?}",
+          list().iter().map(|(i, _)| *i).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete() {
+        // Every table and figure in the paper's evaluation has a harness.
+        let ids: Vec<&str> = list().iter().map(|(i, _)| *i).collect();
+        for required in ["fig3a", "fig3bc", "fig4", "fig6", "fig7", "fig8",
+                         "fig9", "fig10-11", "fig12", "fig13", "fig14",
+                         "fig16", "planning"] {
+            assert!(ids.contains(&required), "{required} missing");
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99").is_err());
+    }
+
+    #[test]
+    fn fig3a_runs() {
+        let tables = run("fig3a").unwrap();
+        assert!(!tables.is_empty());
+        assert!(tables[0].render().contains("LB-ASC"));
+    }
+}

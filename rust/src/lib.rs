@@ -1,0 +1,48 @@
+//! # Canzona
+//!
+//! A reproduction of *"Canzona: A Unified, Asynchronous, and Load-Balanced
+//! Framework for Distributed Matrix-based Optimizers"* (CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — offline-environment substrates (JSON, PRNG, CLI, stats,
+//!   a miniature property-testing harness, a bench timer).
+//! * [`model`] — the Qwen3 parameter-shape census and tensor-parallel
+//!   splitting rules that define the paper's workloads.
+//! * [`buffer`] — Megatron-style `param_and_grad_buffer` (flattening,
+//!   bucketing, start offsets — the ZeRO-1 geometry).
+//! * [`cost`] — optimizer FLOPs/state models (Muon, Shampoo, SOAP, AdamW)
+//!   and the α-β interconnect model (NVLink / InfiniBand collectives).
+//! * [`partition`] — the DP plane: equal-chunk ZeRO-1, naive atomic (ASC),
+//!   **α-balanced greedy LPT** (paper Alg. 1), and the NV-layerwise
+//!   baseline.
+//! * [`schedule`] — the TP plane: **micro-group construction with greedy
+//!   rollback** (paper Algs. 2/3) over the min-heap LPT solver (Alg. 4),
+//!   plus the TP-SC baseline.
+//! * [`sim`] — a discrete-event cluster simulator that plays out full
+//!   training iterations (bucket-overlapped fwd/bwd communication,
+//!   per-rank optimizer timelines) and produces the paper's metrics.
+//! * [`collectives`] — real in-memory collectives over thread "ranks"
+//!   (variable-size reduce-scatter / all-gather, fused all-to-all) for the
+//!   numeric training path.
+//! * [`runtime`] — PJRT: load AOT-compiled HLO-text artifacts and execute
+//!   them on the request path (python is build-time only).
+//! * [`train`] — the distributed numeric trainer (paper Fig. 5 parity).
+//! * [`experiments`] — one harness per paper figure/table.
+//! * [`coordinator`] — configuration + CLI entry points.
+
+pub mod buffer;
+pub mod collectives;
+pub mod coordinator;
+pub mod cost;
+pub mod experiments;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+pub use coordinator::config::Config;

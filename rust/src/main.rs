@@ -1,0 +1,3 @@
+fn main() -> anyhow::Result<()> {
+    canzona::coordinator::run_cli(std::env::args().skip(1).collect())
+}

@@ -1,0 +1,14 @@
+//! Model catalog: parameter shape census + tensor-parallel splitting.
+//!
+//! The paper's load-balancing problem is entirely determined by the
+//! *shape inventory* of the trained model (Appendix D.5: cost metrics are
+//! functions of tensor shapes). This module reproduces the Qwen3 family's
+//! inventory and Megatron's column/row TP split rules.
+
+pub mod qwen3;
+pub mod shapes;
+pub mod tp;
+
+pub use qwen3::{qwen3, Qwen3Size};
+pub use shapes::{Param, ParamKind, TensorShape};
+pub use tp::{tp_split, TpShard, TpSplit};

@@ -1,0 +1,194 @@
+//! Qwen3 family architecture census (1.7B … 32B).
+//!
+//! Dimensions follow the published Qwen3 technical report configurations
+//! (GQA with 8 KV heads, head_dim 128, untied heads for the larger
+//! models, QK-norm vectors). Minor details (e.g. tie-embedding on the
+//! smallest models) are noted inline; the load-balance experiments only
+//! depend on the shape census, which these match.
+
+use super::shapes::{Param, ParamKind, TensorShape};
+
+/// The model sizes evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Qwen3Size {
+    S1_7B,
+    S4B,
+    S8B,
+    S14B,
+    S32B,
+}
+
+impl Qwen3Size {
+    pub fn all() -> [Qwen3Size; 5] {
+        [Qwen3Size::S1_7B, Qwen3Size::S4B, Qwen3Size::S8B, Qwen3Size::S14B, Qwen3Size::S32B]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Qwen3Size::S1_7B => "Qwen3-1.7B",
+            Qwen3Size::S4B => "Qwen3-4B",
+            Qwen3Size::S8B => "Qwen3-8B",
+            Qwen3Size::S14B => "Qwen3-14B",
+            Qwen3Size::S32B => "Qwen3-32B",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Qwen3Size> {
+        match s.to_ascii_lowercase().as_str() {
+            "1.7b" | "qwen3-1.7b" => Some(Qwen3Size::S1_7B),
+            "4b" | "qwen3-4b" => Some(Qwen3Size::S4B),
+            "8b" | "qwen3-8b" => Some(Qwen3Size::S8B),
+            "14b" | "qwen3-14b" => Some(Qwen3Size::S14B),
+            "32b" | "qwen3-32b" => Some(Qwen3Size::S32B),
+            _ => None,
+        }
+    }
+}
+
+/// Architecture hyper-parameters of one family member.
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+}
+
+pub fn arch(size: Qwen3Size) -> Arch {
+    // Qwen3 technical report, Table 1 (dense models).
+    match size {
+        Qwen3Size::S1_7B => Arch { name: "Qwen3-1.7B", vocab: 151_936, hidden: 2048,
+            layers: 28, heads: 16, kv_heads: 8, head_dim: 128, intermediate: 6144 },
+        Qwen3Size::S4B => Arch { name: "Qwen3-4B", vocab: 151_936, hidden: 2560,
+            layers: 36, heads: 32, kv_heads: 8, head_dim: 128, intermediate: 9728 },
+        Qwen3Size::S8B => Arch { name: "Qwen3-8B", vocab: 151_936, hidden: 4096,
+            layers: 36, heads: 32, kv_heads: 8, head_dim: 128, intermediate: 12_288 },
+        Qwen3Size::S14B => Arch { name: "Qwen3-14B", vocab: 151_936, hidden: 5120,
+            layers: 40, heads: 40, kv_heads: 8, head_dim: 128, intermediate: 17_408 },
+        Qwen3Size::S32B => Arch { name: "Qwen3-32B", vocab: 151_936, hidden: 5120,
+            layers: 64, heads: 64, kv_heads: 8, head_dim: 128, intermediate: 25_600 },
+    }
+}
+
+/// Full ordered parameter census for one family member, in registration
+/// order (the order Megatron packs them into the flat buffer).
+pub fn qwen3(size: Qwen3Size) -> Vec<Param> {
+    let a = arch(size);
+    let mut params = Vec::new();
+    let d = a.hidden;
+    let q_out = a.heads * a.head_dim;
+    let kv_out = a.kv_heads * a.head_dim;
+
+    params.push(Param::new("embed.weight", TensorShape::matrix(a.vocab, d),
+                           ParamKind::Embed, None));
+    for i in 0..a.layers {
+        let p = |suffix: &str| format!("layers.{i}.{suffix}");
+        let mat = |name: String, m: usize, n: usize| {
+            Param::new(&name, TensorShape::matrix(m, n), ParamKind::Matrix, Some(i))
+        };
+        let vec_ = |name: String, n: usize| {
+            Param::new(&name, TensorShape::vector(n), ParamKind::Vector, Some(i))
+        };
+        params.push(vec_(p("attn_norm.weight"), d));
+        params.push(mat(p("attn.wq"), d, q_out));
+        params.push(mat(p("attn.wk"), d, kv_out));
+        params.push(mat(p("attn.wv"), d, kv_out));
+        // Qwen3 QK-norm: per-head-dim RMSNorm weights.
+        params.push(vec_(p("attn.q_norm"), a.head_dim));
+        params.push(vec_(p("attn.k_norm"), a.head_dim));
+        params.push(mat(p("attn.wo"), q_out, d));
+        params.push(vec_(p("mlp_norm.weight"), d));
+        params.push(mat(p("mlp.gate"), d, a.intermediate));
+        params.push(mat(p("mlp.up"), d, a.intermediate));
+        params.push(mat(p("mlp.down"), a.intermediate, d));
+    }
+    params.push(Param::new("final_norm.weight", TensorShape::vector(d),
+                           ParamKind::Vector, None));
+    params.push(Param::new("lm_head.weight", TensorShape::matrix(a.vocab, d),
+                           ParamKind::Embed, None));
+    params
+}
+
+/// Total parameter count of a census.
+pub fn total_params(params: &[Param]) -> usize {
+    params.iter().map(|p| p.numel()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_sizes_roughly_match_names() {
+        // Untied lm_head inflates the nominal size; require ballpark match.
+        let cases = [
+            (Qwen3Size::S1_7B, 1.7e9, 2.6e9),
+            (Qwen3Size::S4B, 3.5e9, 5.2e9),
+            (Qwen3Size::S8B, 7.0e9, 9.6e9),
+            (Qwen3Size::S14B, 13.0e9, 16.5e9),
+            (Qwen3Size::S32B, 30.0e9, 35.0e9),
+        ];
+        for (size, lo, hi) in cases {
+            let n = total_params(&qwen3(size)) as f64;
+            assert!(n > lo && n < hi, "{}: {n:.3e} not in [{lo:.1e}, {hi:.1e}]",
+                    size.label());
+        }
+    }
+
+    #[test]
+    fn census_structure() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        let a = arch(Qwen3Size::S1_7B);
+        // embed + head + final norm + 11 per layer
+        assert_eq!(params.len(), 3 + a.layers * 11);
+        // unique names
+        let mut names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), params.len());
+    }
+
+    #[test]
+    fn kind_classification() {
+        for p in qwen3(Qwen3Size::S4B) {
+            match p.kind {
+                ParamKind::Matrix => {
+                    assert!(p.shape.is_matrix());
+                    assert!(p.layer.is_some());
+                }
+                ParamKind::Embed => assert!(p.name.contains("embed") || p.name.contains("lm_head")),
+                ParamKind::Vector => assert_eq!(p.shape.0.len(), 1),
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_shapes() {
+        let params = qwen3(Qwen3Size::S32B);
+        let wq = params.iter().find(|p| p.name == "layers.0.attn.wq").unwrap();
+        let wk = params.iter().find(|p| p.name == "layers.0.attn.wk").unwrap();
+        assert_eq!(wq.shape.cols(), 64 * 128);
+        assert_eq!(wk.shape.cols(), 8 * 128); // 8 KV heads
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(Qwen3Size::parse("32b"), Some(Qwen3Size::S32B));
+        assert_eq!(Qwen3Size::parse("Qwen3-1.7B"), Some(Qwen3Size::S1_7B));
+        assert_eq!(Qwen3Size::parse("70b"), None);
+    }
+
+    #[test]
+    fn heterogeneity_exists() {
+        // The paper's premise: parameter sizes vary widely (embedding vs
+        // norm vectors) => naive atomic assignment imbalances.
+        let params = qwen3(Qwen3Size::S1_7B);
+        let max = params.iter().map(|p| p.numel()).max().unwrap();
+        let min = params.iter().map(|p| p.numel()).min().unwrap();
+        assert!(max / min > 1000, "max {max} min {min}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Core tensor / parameter descriptors.
+
+use std::fmt;
+
+/// A (possibly 1-D) tensor shape. Matrix-based optimizers act on 2-D
+/// shapes; 1-D shapes route to the element-wise optimizer.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct TensorShape(pub Vec<usize>);
+
+impl TensorShape {
+    pub fn matrix(m: usize, n: usize) -> TensorShape {
+        TensorShape(vec![m, n])
+    }
+
+    pub fn vector(n: usize) -> TensorShape {
+        TensorShape(vec![n])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn is_matrix(&self) -> bool {
+        self.0.len() == 2
+    }
+
+    /// Rows of a 2-D shape (panics on 1-D).
+    pub fn rows(&self) -> usize {
+        assert!(self.is_matrix());
+        self.0[0]
+    }
+
+    /// Cols of a 2-D shape (panics on 1-D).
+    pub fn cols(&self) -> usize {
+        assert!(self.is_matrix());
+        self.0[1]
+    }
+}
+
+impl fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.0.iter().map(|d| d.to_string()).collect();
+        write!(f, "[{}]", dims.join("x"))
+    }
+}
+
+/// Parameter classification — decides optimizer routing (standard Muon
+/// practice: embeddings/head/norms go to AdamW, hidden matrices to the
+/// matrix-based optimizer) and init scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ParamKind {
+    /// 2-D hidden matrix — updated by the matrix-based optimizer.
+    Matrix,
+    /// Embedding-class 2-D tensor (embed / lm_head) — AdamW.
+    Embed,
+    /// 1-D tensor (norm weights, biases) — AdamW.
+    Vector,
+}
+
+/// One named parameter in the census. `start` is its offset in the
+/// flattened `param_and_grad_buffer` (filled by `buffer::FlatBuffer`).
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub shape: TensorShape,
+    pub kind: ParamKind,
+    /// Layer index (None for embed/head/final-norm) — used by the
+    /// layerwise baseline partitioner.
+    pub layer: Option<usize>,
+}
+
+impl Param {
+    pub fn new(name: &str, shape: TensorShape, kind: ParamKind, layer: Option<usize>) -> Param {
+        Param { name: name.to_string(), shape, kind, layer }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+
+    /// Whether the matrix-based optimizer (Muon/Shampoo/SOAP) owns this
+    /// parameter's update.
+    pub fn is_matrix_opt(&self) -> bool {
+        self.kind == ParamKind::Matrix
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_accessors() {
+        let s = TensorShape::matrix(4, 6);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.rows(), 4);
+        assert_eq!(s.cols(), 6);
+        assert!(s.is_matrix());
+        assert!(!TensorShape::vector(5).is_matrix());
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(TensorShape::matrix(2, 3).to_string(), "[2x3]");
+        assert_eq!(TensorShape::vector(7).to_string(), "[7]");
+    }
+
+    #[test]
+    fn kind_routing() {
+        let p = Param::new("w", TensorShape::matrix(8, 8), ParamKind::Matrix, Some(0));
+        assert!(p.is_matrix_opt());
+        let e = Param::new("e", TensorShape::matrix(100, 8), ParamKind::Embed, None);
+        assert!(!e.is_matrix_opt());
+    }
+}

@@ -1,0 +1,143 @@
+//! Megatron tensor-parallel splitting rules.
+//!
+//! Column parallelism splits the *output* dimension (wq/wk/wv, mlp
+//! gate/up); row parallelism splits the *input* dimension (wo, mlp down);
+//! the vocabulary dimension of embedding/head is split across ranks.
+//! Norm vectors are replicated. Each TP shard of a matrix parameter is the
+//! fragment the paper's TP-ASC pipeline must reassemble (via fused
+//! All-to-All) before the matrix-based optimizer can update it.
+
+use super::shapes::{Param, ParamKind, TensorShape};
+
+/// How a parameter is laid out across the TP group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TpSplit {
+    /// Output-dim split: shard shape = (rows, cols / tp).
+    Column,
+    /// Input-dim split: shard shape = (rows / tp, cols).
+    Row,
+    /// Vocab-dim split (embedding / lm_head): (rows / tp, cols).
+    Vocab,
+    /// Replicated on every TP rank (norms, small vectors).
+    Replicated,
+}
+
+/// One parameter's TP placement: the split rule and the per-rank shard.
+#[derive(Clone, Debug)]
+pub struct TpShard {
+    pub param: Param,
+    pub split: TpSplit,
+    /// Shape of the local shard on one TP rank.
+    pub shard_shape: TensorShape,
+    /// numel of the local shard.
+    pub shard_numel: usize,
+}
+
+/// Classify a parameter under Megatron's split rules.
+pub fn split_rule(p: &Param) -> TpSplit {
+    match p.kind {
+        ParamKind::Vector => TpSplit::Replicated,
+        ParamKind::Embed => TpSplit::Vocab,
+        ParamKind::Matrix => {
+            if p.name.ends_with("attn.wo") || p.name.ends_with("mlp.down") {
+                TpSplit::Row
+            } else {
+                TpSplit::Column
+            }
+        }
+    }
+}
+
+/// Split a census across `tp` ranks. Panics if a split dimension is not
+/// divisible by `tp` (Megatron requires divisibility; the Qwen3 dims are
+/// chosen so tp in {1, 2, 4, 8} divides everything).
+pub fn tp_split(params: &[Param], tp: usize) -> Vec<TpShard> {
+    assert!(tp >= 1);
+    params
+        .iter()
+        .map(|p| {
+            let split = split_rule(p);
+            let shard_shape = match split {
+                TpSplit::Replicated => p.shape.clone(),
+                TpSplit::Column => {
+                    assert_eq!(p.shape.cols() % tp, 0,
+                               "{}: cols {} not divisible by tp {tp}", p.name, p.shape.cols());
+                    TensorShape::matrix(p.shape.rows(), p.shape.cols() / tp)
+                }
+                TpSplit::Row | TpSplit::Vocab => {
+                    assert_eq!(p.shape.rows() % tp, 0,
+                               "{}: rows {} not divisible by tp {tp}", p.name, p.shape.rows());
+                    TensorShape::matrix(p.shape.rows() / tp, p.shape.cols())
+                }
+            };
+            let shard_numel = shard_shape.numel();
+            TpShard { param: p.clone(), split, shard_shape, shard_numel }
+        })
+        .collect()
+}
+
+/// The TP-plane optimizer tasks: matrix parameters that are fragmented
+/// (i.e. actually split) and therefore need reconstruction before a
+/// holistic update. Replicated params and tp=1 shards are excluded.
+pub fn fragmented_matrix_params(shards: &[TpShard], tp: usize) -> Vec<TpShard> {
+    shards
+        .iter()
+        .filter(|s| {
+            s.param.is_matrix_opt() && tp > 1 && s.split != TpSplit::Replicated
+        })
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::qwen3::{qwen3, Qwen3Size};
+
+    #[test]
+    fn shard_numel_sums_to_full() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        for tp in [1, 2, 4, 8] {
+            let shards = tp_split(&params, tp);
+            for s in &shards {
+                match s.split {
+                    TpSplit::Replicated => assert_eq!(s.shard_numel, s.param.numel()),
+                    _ => assert_eq!(s.shard_numel * tp, s.param.numel(), "{}", s.param.name),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_rules() {
+        let params = qwen3(Qwen3Size::S4B);
+        let shards = tp_split(&params, 4);
+        let find = |n: &str| shards.iter().find(|s| s.param.name.ends_with(n)).unwrap();
+        assert_eq!(find("attn.wq").split, TpSplit::Column);
+        assert_eq!(find("attn.wo").split, TpSplit::Row);
+        assert_eq!(find("mlp.gate").split, TpSplit::Column);
+        assert_eq!(find("mlp.down").split, TpSplit::Row);
+        assert_eq!(find("embed.weight").split, TpSplit::Vocab);
+        assert_eq!(find("attn_norm.weight").split, TpSplit::Replicated);
+    }
+
+    #[test]
+    fn column_split_shapes() {
+        let params = qwen3(Qwen3Size::S8B);
+        let shards = tp_split(&params, 8);
+        let wq = shards.iter().find(|s| s.param.name == "layers.0.attn.wq").unwrap();
+        assert_eq!(wq.shard_shape.rows(), wq.param.shape.rows());
+        assert_eq!(wq.shard_shape.cols() * 8, wq.param.shape.cols());
+    }
+
+    #[test]
+    fn fragmented_excludes_replicated_and_tp1() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        let shards1 = tp_split(&params, 1);
+        assert!(fragmented_matrix_params(&shards1, 1).is_empty());
+        let shards4 = tp_split(&params, 4);
+        let frag = fragmented_matrix_params(&shards4, 4);
+        assert!(!frag.is_empty());
+        assert!(frag.iter().all(|s| s.param.is_matrix_opt()));
+    }
+}

@@ -1,0 +1,47 @@
+//! Standard ZeRO-1 "Equal Chunk" partitioning (paper Fig. 1, gray path).
+//!
+//! Uniform |B|/R slices per bucket, agnostic to parameter boundaries.
+//! Perfect communication balance, zero atomicity: the baseline geometry
+//! that element-wise optimizers use and matrix-based optimizers cannot.
+
+use crate::buffer::FlatBuffer;
+
+use super::plan::{Atomicity, DpPlan};
+
+pub fn equal_chunk(fb: &FlatBuffer, ranks: usize) -> DpPlan {
+    assert!(ranks >= 1);
+    let cuts = (0..fb.buckets.len())
+        .map(|i| fb.equal_chunk_cuts(i, ranks))
+        .collect();
+    DpPlan { ranks, cuts, atomicity: Atomicity::None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::qwen3::{qwen3, Qwen3Size};
+    use crate::model::shapes::{Param, ParamKind, TensorShape};
+
+    #[test]
+    fn uniform_shards() {
+        let params: Vec<Param> = (0..4)
+            .map(|i| Param::new(&format!("p{i}"), TensorShape::vector(25), ParamKind::Vector, None))
+            .collect();
+        let fb = FlatBuffer::build(&params, 1000);
+        let plan = equal_chunk(&fb, 4);
+        plan.validate(&fb).unwrap();
+        assert_eq!(plan.shard_sizes(0), vec![25; 4]);
+        assert_eq!(plan.j_comm(&fb), 0.0);
+    }
+
+    #[test]
+    fn real_census_valid_but_not_atomic() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        let plan = equal_chunk(&fb, 16);
+        plan.validate(&fb).unwrap();
+        // Force-checking atomicity must fail on a real census.
+        let strict = DpPlan { atomicity: super::super::plan::Atomicity::Strict, ..plan };
+        assert!(strict.validate(&fb).is_err());
+    }
+}

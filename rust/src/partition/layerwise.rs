@@ -1,0 +1,183 @@
+//! NV-layerwise baseline (paper Paradigm 2 / Appendix D.2).
+//!
+//! Assigns optimizer ownership at *layer* granularity via global LPT,
+//! ignoring the physical bucket geometry. Mathematically exact, but the
+//! resulting Data-Task Mismatch breaks bucket coalescing: the simulator
+//! must time its gradient path as All-Reduce (2x volume) and add an
+//! explicit Broadcast/All-Gather of updated parameters during the
+//! optimizer step (the paper's "lose-lose dilemma", Option A).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::buffer::{FlatBuffer, PlacedParam};
+
+/// Layerwise ownership: one owner rank per layer group.
+#[derive(Clone, Debug)]
+pub struct LayerwisePlan {
+    pub ranks: usize,
+    /// Owner rank per parameter index.
+    pub owner: Vec<usize>,
+    /// Load per rank under the weight used for assignment.
+    pub rank_loads: Vec<f64>,
+}
+
+/// Ordered float for the min-heap.
+#[derive(PartialEq, PartialOrd)]
+struct F(f64);
+impl Eq for F {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for F {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Global LPT over layer groups: sort groups by descending load, assign
+/// each to the currently least-loaded rank.
+pub fn layerwise<F2: Fn(&PlacedParam) -> f64>(
+    fb: &FlatBuffer,
+    ranks: usize,
+    w: F2,
+) -> LayerwisePlan {
+    assert!(ranks >= 1);
+    // Group parameters by layer id; non-layer params (embed/head/final
+    // norm) each form their own group (NVIDIA's implementation treats
+    // them as standalone "layers").
+    let mut groups: Vec<(u64, Vec<usize>, f64)> = Vec::new();
+    let mut layer_slot: std::collections::BTreeMap<usize, usize> = Default::default();
+    for p in &fb.params {
+        match p.param.layer {
+            Some(l) => {
+                let slot = *layer_slot.entry(l).or_insert_with(|| {
+                    groups.push((l as u64, Vec::new(), 0.0));
+                    groups.len() - 1
+                });
+                groups[slot].1.push(p.index);
+                groups[slot].2 += w(p);
+            }
+            None => {
+                groups.push((1_000_000 + p.index as u64, vec![p.index], w(p)));
+            }
+        }
+    }
+    // LPT: heaviest group first, deterministic tie-break on group id.
+    groups.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+
+    let mut heap: BinaryHeap<Reverse<(F, usize)>> =
+        (0..ranks).map(|r| Reverse((F(0.0), r))).collect();
+    let mut owner = vec![0usize; fb.params.len()];
+    let mut rank_loads = vec![0.0; ranks];
+    for (_, members, load) in &groups {
+        let Reverse((F(l), r)) = heap.pop().unwrap();
+        for &pi in members {
+            owner[pi] = r;
+        }
+        rank_loads[r] = l + load;
+        heap.push(Reverse((F(rank_loads[r]), r)));
+    }
+    LayerwisePlan { ranks, owner, rank_loads }
+}
+
+impl LayerwisePlan {
+    /// Does the assignment violate the ZeRO-1 geometric constraint in any
+    /// bucket? True iff some bucket's owner sequence (in physical order)
+    /// is not monotonically non-decreasing — the condition under which
+    /// bucket-coalesced Reduce-Scatter is impossible (paper Fig. 15).
+    pub fn violates_geometry(&self, fb: &FlatBuffer) -> bool {
+        for b in &fb.buckets {
+            let mut prev = 0usize;
+            for (i, &pi) in b.members.iter().enumerate() {
+                let o = self.owner[pi];
+                if i > 0 && o < prev {
+                    return true;
+                }
+                prev = o;
+            }
+        }
+        false
+    }
+
+    pub fn rank_params(&self, fb: &FlatBuffer) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.ranks];
+        for p in &fb.params {
+            out[self.owner[p.index]].push(p.index);
+        }
+        out
+    }
+
+    pub fn rank_loads_with<F2: Fn(&PlacedParam) -> f64>(
+        &self,
+        fb: &FlatBuffer,
+        w: F2,
+    ) -> Vec<f64> {
+        let mut loads = vec![0.0; self.ranks];
+        for p in &fb.params {
+            loads[self.owner[p.index]] += w(p);
+        }
+        loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::qwen3::{qwen3, Qwen3Size};
+    use crate::util::stats::load_balance_ratio;
+
+    fn numel(p: &PlacedParam) -> f64 {
+        p.numel() as f64
+    }
+
+    #[test]
+    fn balances_load_well() {
+        // Layerwise LPT *is* a good load balancer — that's not its flaw.
+        let params = qwen3(Qwen3Size::S1_7B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        let plan = layerwise(&fb, 16, numel);
+        let r = load_balance_ratio(&plan.rank_loads_with(&fb, numel));
+        assert!(r < 6.0, "{r}");
+    }
+
+    #[test]
+    fn breaks_zero1_geometry() {
+        // ...its flaw is geometric: owners interleave inside buckets.
+        let params = qwen3(Qwen3Size::S1_7B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        let plan = layerwise(&fb, 16, numel);
+        assert!(plan.violates_geometry(&fb),
+                "expected interleaved owners inside buckets");
+    }
+
+    #[test]
+    fn whole_layers_colocated() {
+        let params = qwen3(Qwen3Size::S4B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        let plan = layerwise(&fb, 8, numel);
+        for l in 0..4 {
+            let owners: Vec<usize> = fb
+                .params
+                .iter()
+                .filter(|p| p.param.layer == Some(l))
+                .map(|p| plan.owner[p.index])
+                .collect();
+            assert!(owners.windows(2).all(|w| w[0] == w[1]), "layer {l} split");
+        }
+    }
+
+    #[test]
+    fn all_params_assigned() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        let plan = layerwise(&fb, 4, numel);
+        let total: f64 = plan.rank_loads_with(&fb, numel).iter().sum();
+        assert_eq!(total as usize, fb.total);
+    }
+
+    #[test]
+    fn deterministic() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        let fb = FlatBuffer::build(&params, 40_000_000);
+        assert_eq!(layerwise(&fb, 8, numel).owner, layerwise(&fb, 8, numel).owner);
+    }
+}

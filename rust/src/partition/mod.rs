@@ -1,0 +1,59 @@
+//! DP-plane partitioners (paper Section 3).
+//!
+//! Four strategies over the same `FlatBuffer` geometry:
+//!
+//! * [`equal_chunk`] — standard ZeRO-1 uniform slicing (violates
+//!   atomicity; only valid for element-wise optimizers).
+//! * [`naive_atomic`] — the stride rule of paper Eq. (1): atomic, zero
+//!   extra communication, but load-imbalanced (the ASC ablation).
+//! * [`alpha_balanced`] — **α-Balanced Greedy LPT** (paper Alg. 1): atomic
+//!   *and* load-balanced by shifting slice boundaries within buckets.
+//! * [`layerwise`] — the NV-layerwise baseline: global LPT over layers,
+//!   which breaks the ZeRO-1 geometric constraint and forces the
+//!   All-Reduce + Broadcast communication path (paper Appendix D.2).
+
+pub mod alpha_balanced;
+pub mod equal_chunk;
+pub mod layerwise;
+pub mod naive_atomic;
+pub mod plan;
+
+pub use alpha_balanced::alpha_balanced;
+pub use equal_chunk::equal_chunk;
+pub use layerwise::{layerwise, LayerwisePlan};
+pub use naive_atomic::{naive_atomic, naive_atomic_per_bucket};
+pub use plan::{Atomicity, DpPlan};
+
+/// The DP strategies the experiments compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DpStrategy {
+    /// Synchronous/redundant compute (DDP — every rank updates everything).
+    Sc,
+    /// NVIDIA layerwise_optimizer baseline.
+    NvLayerwise,
+    /// Atomic static partition without load balancing.
+    Asc,
+    /// α-balanced atomic static partition (Canzona).
+    LbAsc,
+}
+
+impl DpStrategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DpStrategy::Sc => "SC",
+            DpStrategy::NvLayerwise => "NV-layerwise",
+            DpStrategy::Asc => "ASC",
+            DpStrategy::LbAsc => "LB-ASC",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DpStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "sc" => Some(DpStrategy::Sc),
+            "nv-layerwise" | "layerwise" | "nv" => Some(DpStrategy::NvLayerwise),
+            "asc" => Some(DpStrategy::Asc),
+            "lb-asc" | "lbasc" | "canzona" => Some(DpStrategy::LbAsc),
+            _ => None,
+        }
+    }
+}

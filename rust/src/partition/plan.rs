@@ -1,0 +1,214 @@
+//! The DP partition plan (the Global Partition Map Π of Section 3.3).
+
+use anyhow::{bail, Result};
+
+use crate::buffer::{FlatBuffer, PlacedParam};
+
+/// Per-bucket slicing vectors: `cuts[i]` holds R+1 monotone absolute
+/// offsets, `[s_{i,0} .. s_{i,R}]`, with `s_{i,0} = bucket.start` and
+/// `s_{i,R} = bucket.end`. Rank r owns `[s_{i,r}, s_{i,r+1})` of bucket i.
+///
+/// Atomicity applies to *matrix-based* parameters only: element-wise
+/// (AdamW-routed) tensors such as embeddings are mathematically splittable
+/// at any offset, and exploiting that is what keeps the balanced plans
+/// near ratio 1.0 despite a 300M-element embedding in the census.
+#[derive(Clone, Debug)]
+pub struct DpPlan {
+    pub ranks: usize,
+    pub cuts: Vec<Vec<usize>>,
+    /// Atomicity discipline of interior cuts:
+    /// `Strict` — every interior cut on a parameter boundary;
+    /// `MatrixOnly` — cuts may fall inside element-wise parameters;
+    /// `None` — cuts anywhere (ZeRO-1 equal chunk).
+    pub atomicity: Atomicity,
+}
+
+/// See [`DpPlan::atomicity`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Atomicity {
+    Strict,
+    MatrixOnly,
+    None,
+}
+
+impl DpPlan {
+    /// The shard sizes `S_{i,r}` of bucket `i` (elements).
+    pub fn shard_sizes(&self, bucket: usize) -> Vec<usize> {
+        let c = &self.cuts[bucket];
+        (0..self.ranks).map(|r| c[r + 1] - c[r]).collect()
+    }
+
+    /// Owner rank of a placed parameter (by its start offset — paper
+    /// Eq. (1) anchoring). Only meaningful for atomic plans.
+    pub fn owner_of(&self, p: &PlacedParam) -> usize {
+        let c = &self.cuts[p.bucket];
+        // Find r with c[r] <= start < c[r+1]; cuts are monotone.
+        match c.binary_search(&p.start) {
+            Ok(r) => r.min(self.ranks - 1),
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// Parameter indices owned by each rank (atomic ownership by start
+    /// index — exact for `Strict` plans; for `MatrixOnly` plans a split
+    /// element-wise param is attributed to the rank holding its start).
+    pub fn rank_params(&self, fb: &FlatBuffer) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.ranks];
+        for p in &fb.params {
+            out[self.owner_of(p)].push(p.index);
+        }
+        out
+    }
+
+    /// Aggregate per-rank load under a weight function, prorating
+    /// parameters that straddle a cut by element overlap (exact for
+    /// element-wise costs, which are linear in elements; matrix params
+    /// never straddle cuts in valid plans).
+    pub fn rank_loads<F: Fn(&PlacedParam) -> f64>(&self, fb: &FlatBuffer, w: F) -> Vec<f64> {
+        let mut loads = vec![0.0; self.ranks];
+        for p in &fb.params {
+            let c = &self.cuts[p.bucket];
+            let wp = w(p);
+            let numel = p.numel().max(1) as f64;
+            // Ranks whose interval intersects [p.start, p.end).
+            let first = match c.binary_search(&p.start) {
+                Ok(r) => r.min(self.ranks - 1),
+                Err(ins) => ins - 1,
+            };
+            for r in first..self.ranks {
+                let lo = c[r].max(p.start);
+                let hi = c[r + 1].min(p.end);
+                if hi <= lo {
+                    if c[r] >= p.end {
+                        break;
+                    }
+                    continue;
+                }
+                loads[r] += wp * (hi - lo) as f64 / numel;
+            }
+        }
+        loads
+    }
+
+    /// Validate the plan's structural invariants against the buffer:
+    /// monotone cuts covering each bucket exactly, plus the atomicity
+    /// discipline (`Strict`: all interior cuts on parameter boundaries;
+    /// `MatrixOnly`: cuts inside matrix-based parameters are forbidden).
+    pub fn validate(&self, fb: &FlatBuffer) -> Result<()> {
+        if self.cuts.len() != fb.buckets.len() {
+            bail!("plan has {} buckets, buffer has {}", self.cuts.len(), fb.buckets.len());
+        }
+        for (i, b) in fb.buckets.iter().enumerate() {
+            let c = &self.cuts[i];
+            if c.len() != self.ranks + 1 {
+                bail!("bucket {i}: {} cuts for {} ranks", c.len(), self.ranks);
+            }
+            if c[0] != b.start || c[self.ranks] != b.end {
+                bail!("bucket {i}: cuts do not span [{}, {})", b.start, b.end);
+            }
+            for r in 0..self.ranks {
+                if c[r + 1] < c[r] {
+                    bail!("bucket {i}: cuts not monotone at rank {r}");
+                }
+            }
+            if self.atomicity == Atomicity::None {
+                continue;
+            }
+            let atomic_cuts = fb.atomic_cuts(i);
+            for (r, cut) in c[1..self.ranks].iter().enumerate() {
+                if atomic_cuts.contains(cut) {
+                    continue;
+                }
+                if self.atomicity == Atomicity::Strict {
+                    bail!("bucket {i}: cut {cut} (rank {}) inside a tensor", r + 1);
+                }
+                // MatrixOnly: the enclosing parameter must be splittable.
+                let host = b
+                    .members
+                    .iter()
+                    .map(|&pi| &fb.params[pi])
+                    .find(|p| p.start < *cut && *cut < p.end);
+                match host {
+                    Some(p) if p.param.is_matrix_opt() => {
+                        bail!("bucket {i}: cut {cut} inside matrix param {}", p.param.name)
+                    }
+                    Some(_) => {}
+                    None => bail!("bucket {i}: cut {cut} outside bucket"),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// J_DP (paper Eq. 2): max deviation of per-rank load from the mean.
+    pub fn j_dp<F: Fn(&PlacedParam) -> f64>(&self, fb: &FlatBuffer, w: F) -> f64 {
+        let loads = self.rank_loads(fb, w);
+        let mu = loads.iter().sum::<f64>() / self.ranks as f64;
+        loads.iter().map(|l| (l - mu).abs()).fold(0.0, f64::max)
+    }
+
+    /// J_Comm (paper Eq. 3): total deviation of shard sizes from |B|/R.
+    pub fn j_comm(&self, fb: &FlatBuffer) -> f64 {
+        let mut total = 0.0;
+        for (i, b) in fb.buckets.iter().enumerate() {
+            let ideal = b.size() as f64 / self.ranks as f64;
+            for s in self.shard_sizes(i) {
+                total += (s as f64 - ideal).abs();
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::shapes::{Param, ParamKind, TensorShape};
+
+    fn fb(sizes: &[usize], bucket: usize) -> FlatBuffer {
+        let params: Vec<Param> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                Param::new(&format!("p{i}"), TensorShape::vector(n), ParamKind::Vector, None)
+            })
+            .collect();
+        FlatBuffer::build(&params, bucket)
+    }
+
+    #[test]
+    fn owner_by_start_index() {
+        let fb = fb(&[10, 10, 10, 10], 1000);
+        let plan = DpPlan { ranks: 2, cuts: vec![vec![0, 20, 40]], atomicity: Atomicity::Strict };
+        assert_eq!(plan.owner_of(&fb.params[0]), 0);
+        assert_eq!(plan.owner_of(&fb.params[1]), 0);
+        assert_eq!(plan.owner_of(&fb.params[2]), 1);
+        assert_eq!(plan.owner_of(&fb.params[3]), 1);
+    }
+
+    #[test]
+    fn validate_catches_bad_span() {
+        let fb = fb(&[10, 10], 1000);
+        let plan = DpPlan { ranks: 2, cuts: vec![vec![0, 10, 19]], atomicity: Atomicity::Strict };
+        assert!(plan.validate(&fb).is_err());
+    }
+
+    #[test]
+    fn validate_catches_non_atomic() {
+        let fb = fb(&[10, 10], 1000);
+        let plan = DpPlan { ranks: 2, cuts: vec![vec![0, 5, 20]], atomicity: Atomicity::Strict };
+        assert!(plan.validate(&fb).is_err());
+        let plan2 = DpPlan { ranks: 2, cuts: vec![vec![0, 5, 20]], atomicity: Atomicity::None };
+        assert!(plan2.validate(&fb).is_ok());
+    }
+
+    #[test]
+    fn objectives() {
+        let fb = fb(&[30, 10], 1000);
+        let plan = DpPlan { ranks: 2, cuts: vec![vec![0, 30, 40]], atomicity: Atomicity::Strict };
+        let loads = plan.rank_loads(&fb, |p| p.numel() as f64);
+        assert_eq!(loads, vec![30.0, 10.0]);
+        assert_eq!(plan.j_dp(&fb, |p| p.numel() as f64), 10.0);
+        assert_eq!(plan.j_comm(&fb), 20.0); // |30-20| + |10-20|
+    }
+}

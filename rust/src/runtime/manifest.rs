@@ -1,0 +1,130 @@
+//! Artifact manifest (emitted by `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::shapes::{Param, ParamKind, TensorShape};
+use crate::util::json::Value;
+
+/// One parameter entry of the manifest.
+#[derive(Clone, Debug)]
+pub struct ManifestParam {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+    pub numel: usize,
+    /// "muon" or "adamw".
+    pub optim: String,
+    /// Artifact key of this parameter's update executable.
+    pub artifact: String,
+    pub init_std: f64,
+}
+
+impl ManifestParam {
+    /// Convert to the census `Param` type (layer parsed from the name).
+    pub fn to_param(&self) -> Param {
+        let layer = self
+            .name
+            .strip_prefix("layers.")
+            .and_then(|rest| rest.split('.').next())
+            .and_then(|s| s.parse().ok());
+        Param::new(&self.name, TensorShape(self.shape.clone()), self.kind, layer)
+    }
+}
+
+/// Model dims recorded in the manifest.
+#[derive(Clone, Debug)]
+pub struct ManifestModel {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+/// The full manifest of one preset.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub model: ManifestModel,
+    pub params: Vec<ManifestParam>,
+    /// artifact key -> file name.
+    pub artifacts: Vec<(String, String)>,
+    pub muon_lr: f64,
+    pub muon_beta: f64,
+    pub adamw_lr: f64,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Manifest> {
+        let path = artifacts_dir.join(format!("manifest__{preset}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = Value::parse(&text)?;
+
+        let m = v.get("model")?;
+        let model = ManifestModel {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+            batch: m.get("batch")?.as_usize()?,
+        };
+
+        let mut params = Vec::new();
+        for p in v.get("params")?.as_arr()? {
+            let kind = match p.get("kind")?.as_str()? {
+                "matrix" => ParamKind::Matrix,
+                "embed" => ParamKind::Embed,
+                _ => ParamKind::Vector,
+            };
+            params.push(ManifestParam {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p.get("shape")?.as_arr()?.iter()
+                    .map(|d| d.as_usize()).collect::<Result<_>>()?,
+                kind,
+                numel: p.get("numel")?.as_usize()?,
+                optim: p.get("optim")?.as_str()?.to_string(),
+                artifact: p.get("artifact")?.as_str()?.to_string(),
+                init_std: p.get("init_std")?.as_f64()?,
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        if let Value::Obj(map) = v.get("artifacts")? {
+            for (k, file) in map {
+                artifacts.push((k.clone(), file.as_str()?.to_string()));
+            }
+        }
+
+        let hy = v.get("hypers")?;
+        Ok(Manifest {
+            preset: v.get("preset")?.as_str()?.to_string(),
+            model,
+            params,
+            artifacts,
+            muon_lr: hy.get("muon")?.get("lr")?.as_f64()?,
+            muon_beta: hy.get("muon")?.get("beta")?.as_f64()?,
+            adamw_lr: hy.get("adamw")?.get("lr")?.as_f64()?,
+        })
+    }
+
+    /// File name of an artifact key.
+    pub fn artifact_file(&self, key: &str) -> Result<&str> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, f)| f.as_str())
+            .ok_or_else(|| anyhow::anyhow!("artifact {key:?} not in manifest"))
+    }
+
+    /// The census as `Param`s, in canonical flattening order.
+    pub fn census(&self) -> Vec<Param> {
+        self.params.iter().map(|p| p.to_param()).collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel).sum()
+    }
+}

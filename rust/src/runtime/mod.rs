@@ -1,0 +1,96 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path bridge: `HloModuleProto::from_text_file` →
+//! `PjRtClient::compile` → `execute`. HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so every rank thread owns its
+//! own [`Runtime`]; compiled executables are cached per thread.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{Manifest, ManifestParam};
+
+/// Per-thread PJRT execution context.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at the artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn load(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(file) {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?;
+            self.cache.insert(file.to_string(), exe);
+        }
+        Ok(&self.cache[file])
+    }
+
+    /// Execute an artifact on literal inputs; the jax lowering uses
+    /// `return_tuple=True`, so the single tuple output is decomposed here.
+    pub fn execute(&mut self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(file)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Number of artifacts compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an f32 literal of the given logical dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(),
+                    "shape {dims:?} != data len {}", data.len());
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given logical dims.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(numel as usize == data.len(),
+                    "shape {dims:?} != data len {}", data.len());
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract the f32 payload of a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

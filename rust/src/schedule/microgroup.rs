@@ -1,0 +1,274 @@
+//! Micro-Group construction with Greedy Rollback — paper Algorithms 2/3.
+//!
+//! TP fragments every matrix parameter; its holistic update is an atomic
+//! "Compute Task" that must run on one Host Rank after a fused All-to-All
+//! reconstructs its gradient. This module packs the task stream into
+//! micro-groups: each group is one fused All-to-All + one balanced
+//! compute phase. Packing is greedy under a capacity `C_max` on the
+//! per-rank load, with the exact `MinHeapSolver` simulated at every step
+//! (not a `ΣCost/R` estimate) and a rollback when the candidate overflows.
+
+use crate::cost::optim::{CostMetric, OptimCost};
+use crate::model::tp::TpShard;
+
+use super::minheap::{min_heap_balance, HeapAssignment};
+
+/// One TP-plane optimizer task: a fragmented matrix parameter.
+#[derive(Clone, Debug)]
+pub struct TpTask {
+    /// Stable id (index in the fragmented-param census).
+    pub id: usize,
+    pub name: String,
+    /// Balancing cost W(p) (paper default: numel of the full tensor).
+    pub cost: f64,
+    /// Bytes of gradient moved through the All-to-All for this tensor.
+    pub comm_bytes: f64,
+    /// Full-tensor update FLOPs (for the simulator's exact timing).
+    pub flops: f64,
+    /// Optimizer state bytes resident on the host rank.
+    pub state_bytes: f64,
+}
+
+/// One micro-group: tasks + their host-rank assignment.
+#[derive(Clone, Debug)]
+pub struct MicroGroup {
+    /// (task index into `TpPlan::tasks`, host rank).
+    pub assignments: Vec<(usize, usize)>,
+    /// Per-rank load (under the balancing cost) inside this group.
+    pub rank_loads: Vec<f64>,
+    /// Makespan of the group.
+    pub max_load: f64,
+    /// Total gradient bytes the fused All-to-All moves.
+    pub comm_bytes: f64,
+}
+
+/// The full TP execution plan (the sequence M of Section 4.2).
+#[derive(Clone, Debug)]
+pub struct TpPlan {
+    pub ranks: usize,
+    pub c_max: f64,
+    pub tasks: Vec<TpTask>,
+    pub groups: Vec<MicroGroup>,
+}
+
+/// Build the TP task census from fragmented shards.
+pub fn tasks_from_shards(shards: &[TpShard], optim: &OptimCost, metric: CostMetric) -> Vec<TpTask> {
+    shards
+        .iter()
+        .enumerate()
+        .map(|(id, s)| TpTask {
+            id,
+            name: s.param.name.clone(),
+            cost: optim.cost(&s.param.shape, metric),
+            comm_bytes: 2.0 * s.param.numel() as f64, // bf16 gradients
+            flops: optim.flops(&s.param.shape),
+            state_bytes: optim.state_bytes(&s.param.shape),
+        })
+        .collect()
+}
+
+/// Paper Algorithm 3 (the detailed form of Algorithm 2).
+///
+/// `c_max` caps the per-rank load of a group, in the same units as
+/// `TpTask::cost`. Panics if a single task exceeds `c_max` (the paper's
+/// explicit error case, Alg. 3 line 21).
+pub fn build_micro_groups(tasks: Vec<TpTask>, ranks: usize, c_max: f64) -> TpPlan {
+    assert!(ranks >= 1);
+    // Phase 1: deterministic global LPT sort on (cost, id).
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&a, &b| {
+        tasks[b]
+            .cost
+            .partial_cmp(&tasks[a].cost)
+            .unwrap()
+            .then(tasks[a].id.cmp(&tasks[b].id))
+    });
+
+    let solve = |members: &[usize]| -> HeapAssignment {
+        let costs: Vec<f64> = members.iter().map(|&i| tasks[i].cost).collect();
+        min_heap_balance(&costs, ranks)
+    };
+
+    let finalize = |members: &[usize], groups: &mut Vec<MicroGroup>| {
+        if members.is_empty() {
+            return;
+        }
+        let a = solve(members);
+        let mut assignments = Vec::with_capacity(members.len());
+        for (r, items) in a.items_per_rank.iter().enumerate() {
+            for &local in items {
+                assignments.push((members[local], r));
+            }
+        }
+        assignments.sort_by_key(|&(t, _)| t);
+        let comm_bytes = members.iter().map(|&i| tasks[i].comm_bytes).sum();
+        groups.push(MicroGroup {
+            assignments,
+            rank_loads: a.loads,
+            max_load: a.max_load,
+            comm_bytes,
+        });
+    };
+
+    // Phase 2: greedy packing with rollback.
+    let mut groups: Vec<MicroGroup> = Vec::new();
+    let mut current: Vec<usize> = Vec::new();
+    let mut idx = 0usize;
+    while idx < order.len() {
+        let cand = order[idx];
+        current.push(cand);
+        let a = solve(&current);
+        if a.max_load <= c_max {
+            // Valid: accept and continue accumulating.
+            idx += 1;
+        } else {
+            // Rollback: remove the overflowing item, finalize, reseed.
+            current.pop();
+            if current.is_empty() {
+                panic!(
+                    "task {:?} (cost {}) alone exceeds C_max {}",
+                    tasks[cand].name, tasks[cand].cost, c_max
+                );
+            }
+            finalize(&current, &mut groups);
+            current.clear();
+            // Do not advance idx: the item seeds the next group.
+        }
+    }
+    finalize(&current, &mut groups);
+
+    TpPlan { ranks, c_max, tasks, groups }
+}
+
+impl TpPlan {
+    /// Every task appears exactly once across all groups?
+    pub fn is_complete(&self) -> bool {
+        let mut seen = vec![false; self.tasks.len()];
+        for g in &self.groups {
+            for &(t, _) in &g.assignments {
+                if seen[t] {
+                    return false;
+                }
+                seen[t] = true;
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+
+    /// Aggregate per-rank load over the whole plan, under a cost
+    /// extractor (e.g. FLOPs for the simulator, state bytes for memory).
+    pub fn rank_totals<F: Fn(&TpTask) -> f64>(&self, f: F) -> Vec<f64> {
+        let mut loads = vec![0.0; self.ranks];
+        for g in &self.groups {
+            for &(t, r) in &g.assignments {
+                loads[r] += f(&self.tasks[t]);
+            }
+        }
+        loads
+    }
+
+    /// Sum of per-group makespans — the compute part of the TP optimizer
+    /// step's critical path.
+    pub fn total_makespan(&self) -> f64 {
+        self.groups.iter().map(|g| g.max_load).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optim::{CostMetric, OptimCost, OptimKind};
+    use crate::model::qwen3::{qwen3, Qwen3Size};
+    use crate::model::tp::{fragmented_matrix_params, tp_split};
+
+    fn toy_tasks(costs: &[f64]) -> Vec<TpTask> {
+        costs
+            .iter()
+            .enumerate()
+            .map(|(id, &c)| TpTask {
+                id,
+                name: format!("t{id}"),
+                cost: c,
+                comm_bytes: c * 2.0,
+                flops: c * 10.0,
+                state_bytes: c * 4.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn completeness_and_capacity() {
+        let plan = build_micro_groups(toy_tasks(&[9.0, 7.0, 5.0, 3.0, 3.0, 2.0, 1.0]), 2, 10.0);
+        assert!(plan.is_complete());
+        for g in &plan.groups {
+            assert!(g.max_load <= 10.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn rollback_creates_multiple_groups() {
+        // Capacity 10 with per-rank loads: must split.
+        let plan = build_micro_groups(toy_tasks(&[9.0, 9.0, 9.0, 9.0]), 2, 10.0);
+        assert!(plan.groups.len() >= 2, "groups: {}", plan.groups.len());
+        assert!(plan.is_complete());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds C_max")]
+    fn oversized_task_panics() {
+        build_micro_groups(toy_tasks(&[100.0]), 2, 10.0);
+    }
+
+    #[test]
+    fn saturation_prefers_fewer_groups() {
+        // Generous capacity => one group.
+        let plan = build_micro_groups(toy_tasks(&[1.0; 20]), 4, 1e9);
+        assert_eq!(plan.groups.len(), 1);
+    }
+
+    #[test]
+    fn group_loads_balanced() {
+        let plan = build_micro_groups(toy_tasks(&[5.0, 5.0, 5.0, 5.0]), 2, 10.0);
+        for g in &plan.groups {
+            let max = g.rank_loads.iter().cloned().fold(0.0, f64::max);
+            let min = g.rank_loads.iter().cloned().fold(f64::MAX, f64::min);
+            assert!(max - min <= 5.0);
+        }
+    }
+
+    #[test]
+    fn real_census_plan() {
+        let params = qwen3(Qwen3Size::S1_7B);
+        let shards = tp_split(&params, 8);
+        let frag = fragmented_matrix_params(&shards, 8);
+        let optim = OptimCost::new(OptimKind::Muon);
+        let tasks = tasks_from_shards(&frag, &optim, CostMetric::Numel);
+        // C_max = 64 MB of gradient bytes => 32M numel per-rank cap.
+        let c_max = 64e6 / 2.0;
+        let plan = build_micro_groups(tasks, 8, c_max);
+        assert!(plan.is_complete());
+        assert!(plan.groups.len() > 1);
+        // Balanced within every group.
+        for g in &plan.groups {
+            assert!(g.max_load <= c_max + 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = || toy_tasks(&[3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]);
+        let a = build_micro_groups(t(), 3, 10.0);
+        let b = build_micro_groups(t(), 3, 10.0);
+        let flat = |p: &TpPlan| -> Vec<(usize, usize)> {
+            p.groups.iter().flat_map(|g| g.assignments.clone()).collect()
+        };
+        assert_eq!(flat(&a), flat(&b));
+    }
+
+    #[test]
+    fn empty_tasks() {
+        let plan = build_micro_groups(vec![], 4, 10.0);
+        assert!(plan.groups.is_empty());
+        assert!(plan.is_complete());
+    }
+}

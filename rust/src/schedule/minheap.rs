@@ -1,0 +1,118 @@
+//! MinHeapSolver — paper Algorithm 4.
+//!
+//! Classic LPT multiprocessor scheduling: sort items by descending cost,
+//! repeatedly assign to the least-loaded rank (min-heap). Deterministic
+//! tie-breaking on (load, rank) keeps every rank computing the identical
+//! plan offline, which the paper relies on (no plan exchange needed).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Result of balancing a set of items over R ranks.
+#[derive(Clone, Debug)]
+pub struct HeapAssignment {
+    /// `items_per_rank[r]` = indices (into the input slice) on rank r.
+    pub items_per_rank: Vec<Vec<usize>>,
+    /// Final load per rank.
+    pub loads: Vec<f64>,
+    /// max_r load (the makespan L_max of Alg. 4).
+    pub max_load: f64,
+}
+
+#[derive(PartialEq, PartialOrd)]
+struct F(f64);
+impl Eq for F {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for F {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// LPT-balance `costs` over `ranks` ranks.
+pub fn min_heap_balance(costs: &[f64], ranks: usize) -> HeapAssignment {
+    assert!(ranks >= 1);
+    // Local LPT sort (descending cost, stable on index).
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap().then(a.cmp(&b)));
+
+    let mut heap: BinaryHeap<Reverse<(F, usize)>> =
+        (0..ranks).map(|r| Reverse((F(0.0), r))).collect();
+    let mut items_per_rank = vec![Vec::new(); ranks];
+    let mut loads = vec![0.0; ranks];
+    for idx in order {
+        let Reverse((F(l), r)) = heap.pop().unwrap();
+        items_per_rank[r].push(idx);
+        loads[r] = l + costs[idx];
+        heap.push(Reverse((F(loads[r]), r)));
+    }
+    let max_load = loads.iter().cloned().fold(0.0, f64::max);
+    HeapAssignment { items_per_rank, loads, max_load }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_items_assigned_once() {
+        let costs = [5.0, 3.0, 8.0, 1.0, 2.0];
+        let a = min_heap_balance(&costs, 2);
+        let mut seen: Vec<usize> = a.items_per_rank.concat();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn loads_consistent() {
+        let costs = [5.0, 3.0, 8.0, 1.0, 2.0];
+        let a = min_heap_balance(&costs, 3);
+        for r in 0..3 {
+            let sum: f64 = a.items_per_rank[r].iter().map(|&i| costs[i]).sum();
+            assert!((sum - a.loads[r]).abs() < 1e-12);
+        }
+        assert_eq!(a.max_load, a.loads.iter().cloned().fold(0.0, f64::max));
+    }
+
+    #[test]
+    fn lpt_guarantee() {
+        // Graham's bound: LPT makespan <= (4/3 - 1/(3R)) * OPT, and OPT >=
+        // max(total/R, max_item). Check the bound on random instances.
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let n = 2 + rng.index(40);
+            let r = 1 + rng.index(8);
+            let costs: Vec<f64> = (0..n).map(|_| 1.0 + rng.next_f64() * 99.0).collect();
+            let a = min_heap_balance(&costs, r);
+            let total: f64 = costs.iter().sum();
+            let max_item = costs.iter().cloned().fold(0.0, f64::max);
+            let opt_lb = (total / r as f64).max(max_item);
+            let bound = (4.0 / 3.0 - 1.0 / (3.0 * r as f64)) * opt_lb;
+            assert!(a.max_load <= bound + 1e-9,
+                    "makespan {} > bound {}", a.max_load, bound);
+        }
+    }
+
+    #[test]
+    fn perfect_split_when_possible() {
+        let costs = [4.0, 4.0, 4.0, 4.0];
+        let a = min_heap_balance(&costs, 4);
+        assert_eq!(a.max_load, 4.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let costs: Vec<f64> = (0..100).map(|i| ((i * 37) % 13) as f64 + 1.0).collect();
+        let a = min_heap_balance(&costs, 7);
+        let b = min_heap_balance(&costs, 7);
+        assert_eq!(a.items_per_rank, b.items_per_rank);
+    }
+
+    #[test]
+    fn empty_input() {
+        let a = min_heap_balance(&[], 4);
+        assert_eq!(a.max_load, 0.0);
+        assert!(a.items_per_rank.iter().all(|v| v.is_empty()));
+    }
+}

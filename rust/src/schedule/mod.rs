@@ -1,0 +1,16 @@
+//! TP-plane scheduling (paper Section 4).
+//!
+//! * [`minheap`] — the `MinHeapSolver` LPT subroutine (paper Alg. 4).
+//! * [`microgroup`] — Micro-Group construction with greedy rollback
+//!   (paper Algs. 2/3): packs TP-fragmented optimizer tasks into fused
+//!   All-to-All groups under a capacity `C_max`, balancing host-rank
+//!   loads inside each group.
+//! * [`tp_sc`] — the synchronous baseline: every rank all-gathers and
+//!   redundantly updates every tensor.
+
+pub mod microgroup;
+pub mod minheap;
+pub mod tp_sc;
+
+pub use microgroup::{build_micro_groups, MicroGroup, TpPlan, TpTask};
+pub use minheap::{min_heap_balance, HeapAssignment};

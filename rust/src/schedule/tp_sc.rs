@@ -1,0 +1,56 @@
+//! TP Synchronous Compute baseline (paper Fig. 2, left).
+//!
+//! Every TP rank all-gathers every fragmented tensor and performs the
+//! identical full-tensor update — redundant compute, blocking collectives,
+//! no load balancing. Used by the simulator as the SC reference point.
+
+use crate::schedule::microgroup::TpTask;
+
+/// Cost summary of the synchronous baseline.
+#[derive(Clone, Debug)]
+pub struct TpScCost {
+    /// Per-rank compute (identical on every rank): the FULL task list.
+    pub compute_flops_per_rank: f64,
+    /// Per-tensor All-Gather message sizes (bytes) — not fused.
+    pub gather_sizes: Vec<f64>,
+    /// Redundancy factor vs. a perfectly-partitioned execution.
+    pub redundancy: f64,
+}
+
+pub fn tp_sc_cost(tasks: &[TpTask], ranks: usize) -> TpScCost {
+    let total: f64 = tasks.iter().map(|t| t.flops).sum();
+    TpScCost {
+        compute_flops_per_rank: total,
+        gather_sizes: tasks.iter().map(|t| t.comm_bytes).collect(),
+        redundancy: ranks as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(costs: &[f64]) -> Vec<TpTask> {
+        costs
+            .iter()
+            .enumerate()
+            .map(|(id, &c)| TpTask {
+                id,
+                name: format!("t{id}"),
+                cost: c,
+                comm_bytes: c,
+                flops: c,
+                state_bytes: c,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_rank_does_everything() {
+        let tasks = toy(&[1.0, 2.0, 3.0]);
+        let sc = tp_sc_cost(&tasks, 8);
+        assert_eq!(sc.compute_flops_per_rank, 6.0);
+        assert_eq!(sc.redundancy, 8.0);
+        assert_eq!(sc.gather_sizes.len(), 3);
+    }
+}

@@ -1,0 +1,20 @@
+//! Discrete-event cluster simulator.
+//!
+//! Plays out one training iteration on a modelled GPU cluster and
+//! produces the paper's metrics (makespan, per-rank load distributions,
+//! step-time breakdowns). Timing-only: the *numeric* path lives in
+//! [`crate::train`] on real thread ranks.
+//!
+//! * [`stream`] — per-resource (compute / communication stream) event
+//!   scheduling primitives.
+//! * [`scenario`] — the experiment configuration (model, DP/TP/PP grid,
+//!   optimizer, strategy, hardware).
+//! * [`iteration`] — the iteration playback: bucket-overlapped fwd/bwd
+//!   gradient communication + the per-strategy optimizer step.
+
+pub mod iteration;
+pub mod scenario;
+pub mod stream;
+
+pub use iteration::{simulate_iteration, Breakdown};
+pub use scenario::Scenario;

@@ -1,0 +1,120 @@
+//! Simulation scenario: everything a paper experiment varies.
+
+use crate::cost::hardware::Hardware;
+use crate::cost::optim::{CostMetric, OptimKind};
+use crate::model::qwen3::{qwen3, Qwen3Size};
+use crate::model::shapes::Param;
+use crate::partition::DpStrategy;
+
+/// One simulated configuration (a single bar/point in a paper figure).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Full model census (unsharded).
+    pub census: Vec<Param>,
+    pub label: String,
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub optim: OptimKind,
+    pub strategy: DpStrategy,
+    /// α of Algorithm 1 (LB-ASC only).
+    pub alpha: f64,
+    /// Micro-group capacity C_max in *bytes* of fused gradient buffer
+    /// (per host rank). `None` disables fusion (the Fig. 14 "No-Fuse").
+    pub c_max_bytes: Option<f64>,
+    /// Balancing metric (paper default Numel; Fig. 16 ablates Flops).
+    pub metric: CostMetric,
+    pub hw: Hardware,
+    pub seq_len: usize,
+    pub batch_per_dp: usize,
+    /// Bucket size of the flat buffer, in elements (Megatron default 40M).
+    pub bucket_elems: usize,
+}
+
+impl Scenario {
+    /// The paper's default main-results configuration:
+    /// Qwen3-32B, 256 GPUs as DP=32 x TP=8, Muon, seq 4096, mbs 1.
+    pub fn paper_default() -> Scenario {
+        Scenario::new(Qwen3Size::S32B, 32, 8, 1, OptimKind::Muon, DpStrategy::LbAsc)
+    }
+
+    pub fn new(size: Qwen3Size, dp: usize, tp: usize, pp: usize,
+               optim: OptimKind, strategy: DpStrategy) -> Scenario {
+        Scenario {
+            census: qwen3(size),
+            label: size.label().to_string(),
+            dp,
+            tp,
+            pp,
+            optim,
+            strategy,
+            alpha: 1.0,
+            c_max_bytes: Some(512e6),
+            metric: CostMetric::Numel,
+            hw: Hardware::h800(),
+            seq_len: 4096,
+            batch_per_dp: 1,
+            bucket_elems: 40_000_000,
+        }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+
+    /// Tokens processed per DP rank per iteration.
+    pub fn tokens(&self) -> usize {
+        self.seq_len * self.batch_per_dp
+    }
+
+    pub fn with_strategy(mut self, s: DpStrategy) -> Scenario {
+        self.strategy = s;
+        self
+    }
+
+    pub fn with_alpha(mut self, a: f64) -> Scenario {
+        self.alpha = a;
+        self
+    }
+
+    pub fn with_optim(mut self, o: OptimKind) -> Scenario {
+        self.optim = o;
+        self
+    }
+
+    pub fn with_c_max(mut self, c: Option<f64>) -> Scenario {
+        self.c_max_bytes = c;
+        self
+    }
+
+    pub fn with_metric(mut self, m: CostMetric) -> Scenario {
+        self.metric = m;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_grid() {
+        let s = Scenario::paper_default();
+        assert_eq!(s.gpus(), 256);
+        assert_eq!(s.tokens(), 4096);
+        assert_eq!(s.strategy, DpStrategy::LbAsc);
+    }
+
+    #[test]
+    fn builders() {
+        let s = Scenario::paper_default()
+            .with_strategy(DpStrategy::Sc)
+            .with_alpha(0.5)
+            .with_optim(OptimKind::Shampoo)
+            .with_c_max(None);
+        assert_eq!(s.strategy, DpStrategy::Sc);
+        assert_eq!(s.alpha, 0.5);
+        assert_eq!(s.optim, OptimKind::Shampoo);
+        assert!(s.c_max_bytes.is_none());
+    }
+}

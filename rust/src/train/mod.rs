@@ -1,0 +1,13 @@
+//! Distributed numeric trainer (the paper's Fig. 5 precision path).
+//!
+//! Real DP training over thread ranks: every rank executes the AOT
+//! fwd/bwd artifact on its own batch shard, gradients flow through the
+//! in-memory collectives according to the partition plan, and optimizer
+//! updates run through the per-shape Muon/AdamW executables. The SC and
+//! LB-ASC strategies must produce **bitwise identical** loss curves —
+//! asserted by `rust/tests/parity_tests.rs`.
+
+pub mod data;
+pub mod trainer;
+
+pub use trainer::{train, TrainConfig, TrainResult};

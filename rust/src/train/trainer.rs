@@ -1,0 +1,317 @@
+//! The distributed training loop (thread ranks + PJRT artifacts).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::buffer::FlatBuffer;
+use crate::collectives::{Communicator, Group};
+use crate::partition::{alpha_balanced, naive_atomic, Atomicity, DpPlan, DpStrategy};
+use crate::runtime::{literal_f32, literal_i32, literal_scalar, to_f32_vec, Manifest, Runtime};
+use crate::train::data;
+use crate::util::rng::Rng;
+
+/// Training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    pub preset: String,
+    pub ranks: usize,
+    pub steps: usize,
+    pub strategy: DpStrategy,
+    pub alpha: f64,
+    pub seed: u64,
+    /// Flat-buffer bucket size in elements.
+    pub bucket_elems: usize,
+    /// Print a loss line every N steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn new(preset: &str) -> TrainConfig {
+        TrainConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            preset: preset.to_string(),
+            ranks: 4,
+            steps: 50,
+            strategy: DpStrategy::LbAsc,
+            alpha: 1.0,
+            seed: 42,
+            bucket_elems: 4_000_000,
+            log_every: 10,
+        }
+    }
+}
+
+/// Result of a training run (collected on rank 0).
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    /// Mean cross-entropy per step (DP-averaged).
+    pub losses: Vec<f32>,
+    /// Wall time per step (s).
+    pub step_times: Vec<f64>,
+    /// Optimizer-phase time per step (s).
+    pub opt_times: Vec<f64>,
+    /// Total collective bytes (per-GPU wire estimate).
+    pub comm_bytes: u64,
+    /// FNV hash of the final flat parameter buffer (parity checks).
+    pub params_hash: u64,
+}
+
+fn fnv1a(data: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in data {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Deterministic parameter init shared by all ranks: per-parameter
+/// forked stream, `N(0, init_std)` (norm vectors start at exactly 1.0).
+fn init_flat(manifest: &Manifest, fb: &FlatBuffer, seed: u64) -> Vec<f32> {
+    let mut flat = vec![0.0f32; fb.total];
+    let mut root = Rng::new(seed);
+    for (i, mp) in manifest.params.iter().enumerate() {
+        let placed = &fb.params[i];
+        let dst = &mut flat[placed.start..placed.end];
+        if mp.init_std == 0.0 {
+            dst.fill(1.0);
+        } else {
+            let mut rng = root.fork(i as u64);
+            rng.fill_normal_f32(dst, mp.init_std as f32);
+        }
+    }
+    flat
+}
+
+/// Run distributed training; returns rank 0's log.
+pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
+    let manifest = Manifest::load(&cfg.artifacts_dir, &cfg.preset)?;
+    let census = manifest.census();
+    let fb = Arc::new(FlatBuffer::build(&census, cfg.bucket_elems));
+
+    // Plan: strict atomicity — the per-shape update executables operate
+    // on whole tensors (element-wise splitting is a timing-plane
+    // optimization; see DESIGN.md).
+    let plan: Option<Arc<DpPlan>> = match cfg.strategy {
+        DpStrategy::Sc => None,
+        DpStrategy::Asc => Some(Arc::new(naive_atomic(&fb, cfg.ranks))),
+        DpStrategy::LbAsc => Some(Arc::new(alpha_balanced(
+            &fb, cfg.ranks, cfg.alpha, false, |p| p.numel() as f64))),
+        DpStrategy::NvLayerwise => {
+            return Err(anyhow!("numeric trainer supports sc/asc/lb-asc strategies"))
+        }
+    };
+    if let Some(p) = &plan {
+        assert_eq!(p.atomicity, Atomicity::Strict);
+        p.validate(&fb).expect("invalid plan");
+    }
+
+    let group = Group::new(cfg.ranks);
+    let manifest = Arc::new(manifest);
+    let cfg = Arc::new(cfg.clone());
+
+    let mut handles = Vec::new();
+    for rank in 0..cfg.ranks {
+        let comm = Communicator::new(group.clone(), rank);
+        let manifest = manifest.clone();
+        let fb = fb.clone();
+        let plan = plan.clone();
+        let cfg = cfg.clone();
+        handles.push(thread::spawn(move || -> Result<TrainResult> {
+            rank_main(rank, comm, &cfg, &manifest, &fb, plan.as_deref())
+        }));
+    }
+    let mut result = None;
+    for (rank, h) in handles.into_iter().enumerate() {
+        let r = h.join().map_err(|_| anyhow!("rank {rank} panicked"))??;
+        if rank == 0 {
+            result = Some(r);
+        }
+    }
+    let mut result = result.unwrap();
+    result.comm_bytes = group.total_bytes();
+    Ok(result)
+}
+
+/// Per-rank training loop.
+fn rank_main(
+    rank: usize,
+    comm: Communicator,
+    cfg: &TrainConfig,
+    manifest: &Manifest,
+    fb: &FlatBuffer,
+    plan: Option<&DpPlan>,
+) -> Result<TrainResult> {
+    let mut rt = Runtime::new(&cfg.artifacts_dir)
+        .with_context(|| format!("rank {rank}: PJRT init"))?;
+    let fwd_bwd_file = manifest.artifact_file("fwd_bwd")?.to_string();
+
+    let mut flat = init_flat(manifest, fb, cfg.seed);
+    // Optimizer states, flat per parameter: muon momentum (numel) or
+    // adamw m+v (2*numel).
+    let mut states: Vec<Vec<f32>> = manifest
+        .params
+        .iter()
+        .map(|p| if p.optim == "muon" { vec![0.0; p.numel] } else { vec![0.0; 2 * p.numel] })
+        .collect();
+
+    // Which parameter indices this rank updates.
+    let owned: Vec<usize> = match plan {
+        None => (0..manifest.params.len()).collect(),
+        Some(p) => p.rank_params(fb).swap_remove(rank),
+    };
+
+    let mb = manifest.model.batch;
+    let seq = manifest.model.seq_len;
+    let vocab = manifest.model.vocab;
+    let muon_lr = manifest.muon_lr as f32;
+    let muon_beta = manifest.muon_beta as f32;
+    let adamw_lr = manifest.adamw_lr as f32;
+    let inv_ranks = 1.0f32 / cfg.ranks as f32;
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut step_times = Vec::with_capacity(cfg.steps);
+    let mut opt_times = Vec::with_capacity(cfg.steps);
+    let mut grads = vec![0.0f32; fb.total];
+
+    for step in 1..=cfg.steps {
+        let t_step = Instant::now();
+        let b = data::batch(vocab, mb, seq, cfg.seed, step, rank);
+
+        // fwd + bwd through the AOT artifact.
+        let mut inputs = Vec::with_capacity(manifest.params.len() + 2);
+        for (i, mp) in manifest.params.iter().enumerate() {
+            let placed = &fb.params[i];
+            let dims: Vec<i64> = mp.shape.iter().map(|&d| d as i64).collect();
+            inputs.push(literal_f32(&flat[placed.start..placed.end], &dims)?);
+        }
+        let bs = [mb as i64, seq as i64];
+        inputs.push(literal_i32(&b.tokens, &bs)?);
+        inputs.push(literal_i32(&b.targets, &bs)?);
+        let outputs = rt.execute(&fwd_bwd_file, &inputs)?;
+        anyhow::ensure!(outputs.len() == manifest.params.len() + 1,
+                        "unexpected fwd_bwd arity {}", outputs.len());
+        let loss = outputs[0].to_vec::<f32>()?[0];
+        for (i, out) in outputs[1..].iter().enumerate() {
+            let placed = &fb.params[i];
+            let g = to_f32_vec(out)?;
+            grads[placed.start..placed.end].copy_from_slice(&g);
+        }
+
+        // DP gradient synchronisation (averaged in fixed rank order).
+        let t_opt = Instant::now();
+        if cfg.ranks > 1 {
+            match plan {
+                None => {
+                    // SC/DDP: All-Reduce, every rank keeps full gradients.
+                    let reduced = comm.all_reduce(&grads);
+                    for (g, r) in grads.iter_mut().zip(&reduced) {
+                        *g = r * inv_ranks;
+                    }
+                }
+                Some(p) => {
+                    // Variable-size Reduce-Scatter per bucket; only the
+                    // owned segment is kept (zero-communication updates).
+                    for (bi, bucket) in fb.buckets.iter().enumerate() {
+                        let sizes = p.shard_sizes(bi);
+                        let shard = comm
+                            .reduce_scatter_v(&grads[bucket.start..bucket.end], &sizes);
+                        let my_start = bucket.start
+                            + sizes[..rank].iter().sum::<usize>();
+                        for (dst, s) in grads[my_start..my_start + sizes[rank]]
+                            .iter_mut()
+                            .zip(&shard)
+                        {
+                            *dst = s * inv_ranks;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Optimizer step on owned parameters (whole tensors, local states).
+        for &i in &owned {
+            let mp = &manifest.params[i];
+            let placed = &fb.params[i];
+            let file = manifest.artifact_file(&mp.artifact)?.to_string();
+            let w = &flat[placed.start..placed.end];
+            let g = &grads[placed.start..placed.end];
+            if mp.optim == "muon" {
+                let dims: Vec<i64> = mp.shape.iter().map(|&d| d as i64).collect();
+                let outs = rt.execute(&file, &[
+                    literal_f32(w, &dims)?,
+                    literal_f32(g, &dims)?,
+                    literal_f32(&states[i], &dims)?,
+                    literal_scalar(muon_lr),
+                    literal_scalar(muon_beta),
+                ])?;
+                anyhow::ensure!(outs.len() == 2, "muon artifact arity");
+                flat[placed.start..placed.end].copy_from_slice(&to_f32_vec(&outs[0])?);
+                states[i].copy_from_slice(&to_f32_vec(&outs[1])?);
+            } else {
+                let n = mp.numel as i64;
+                let (m, v) = states[i].split_at(mp.numel);
+                let outs = rt.execute(&file, &[
+                    literal_f32(w, &[n])?,
+                    literal_f32(g, &[n])?,
+                    literal_f32(m, &[n])?,
+                    literal_f32(v, &[n])?,
+                    literal_scalar(step as f32),
+                    literal_scalar(adamw_lr),
+                ])?;
+                anyhow::ensure!(outs.len() == 3, "adamw artifact arity");
+                flat[placed.start..placed.end].copy_from_slice(&to_f32_vec(&outs[0])?);
+                let new_m = to_f32_vec(&outs[1])?;
+                let new_v = to_f32_vec(&outs[2])?;
+                states[i][..mp.numel].copy_from_slice(&new_m);
+                states[i][mp.numel..].copy_from_slice(&new_v);
+            }
+        }
+
+        // Parameter redistribution: variable-size All-Gather per bucket.
+        if cfg.ranks > 1 {
+            if let Some(p) = plan {
+                for (bi, bucket) in fb.buckets.iter().enumerate() {
+                    let sizes = p.shard_sizes(bi);
+                    let my_start = bucket.start + sizes[..rank].iter().sum::<usize>();
+                    let shard = flat[my_start..my_start + sizes[rank]].to_vec();
+                    let full = comm.all_gather_v(&shard, &sizes);
+                    flat[bucket.start..bucket.end].copy_from_slice(&full);
+                }
+            }
+        }
+        let opt_elapsed = t_opt.elapsed().as_secs_f64();
+
+        // DP-mean loss for logging.
+        let mean_loss = if cfg.ranks > 1 {
+            comm.all_reduce(&[loss])[0] * inv_ranks
+        } else {
+            loss
+        };
+        losses.push(mean_loss);
+        step_times.push(t_step.elapsed().as_secs_f64());
+        opt_times.push(opt_elapsed);
+        if rank == 0 && cfg.log_every > 0 && step % cfg.log_every == 0 {
+            println!(
+                "step {step:>5}  loss {mean_loss:.4}  step {:.3}s  opt {:.3}s",
+                step_times.last().unwrap(),
+                opt_elapsed,
+            );
+        }
+    }
+
+    Ok(TrainResult {
+        losses,
+        step_times,
+        opt_times,
+        comm_bytes: 0, // filled by the caller from group counters
+        params_hash: fnv1a(&flat),
+    })
+}

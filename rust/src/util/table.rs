@@ -1,0 +1,109 @@
+//! Markdown table rendering for experiment harness output.
+//!
+//! Every paper-figure harness prints its rows through this so the
+//! EXPERIMENTS.md entries can be pasted verbatim.
+
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let body: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |\n", body.join(" | "))
+        };
+        out += &fmt_row(&self.headers, &widths);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out += &format!("| {} |\n", sep.join(" | "));
+        for row in &self.rows {
+            out += &fmt_row(row, &widths);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV form (for plotting scripts).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            out += &(row.join(",") + "\n");
+        }
+        out
+    }
+}
+
+/// Format seconds with ms precision, e.g. `0.877s`.
+pub fn secs(t: f64) -> String {
+    format!("{t:.3}s")
+}
+
+/// Format a ratio, e.g. `1.57x`.
+pub fn ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("### Demo"));
+        assert!(s.contains("| a"));
+        assert!(s.contains("| 1"));
+        assert!(s.lines().filter(|l| l.starts_with('|')).count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn rejects_bad_row() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(secs(0.8774), "0.877s");
+        assert_eq!(ratio(1.567), "1.57x");
+    }
+}

@@ -1,0 +1,227 @@
+//! Artifact round-trip tests: load the AOT HLO-text executables via PJRT
+//! and verify their numerics against Rust-side reference math.
+//!
+//! Requires `make artifacts` (the tiny preset). Tests skip (pass
+//! trivially with a notice) when artifacts are absent so `cargo test`
+//! works on a fresh checkout.
+
+use std::path::PathBuf;
+
+use canzona::runtime::{literal_f32, literal_i32, literal_scalar, to_f32_vec, Manifest, Runtime};
+use canzona::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest__tiny.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir(), "tiny").unwrap();
+    assert_eq!(m.preset, "tiny");
+    assert_eq!(m.model.vocab, 256);
+    assert_eq!(m.params.len(), 3 + m.model.n_layers * 9);
+    assert!(m.muon_lr > 0.0 && m.muon_lr < 1.0);
+    for p in &m.params {
+        assert!(m.artifact_file(&p.artifact).is_ok(), "{}", p.name);
+        assert_eq!(p.numel, p.shape.iter().product::<usize>());
+    }
+    assert_eq!(m.total_params(), m.census().iter().map(|p| p.numel()).sum());
+}
+
+#[test]
+fn fwd_bwd_artifact_executes_and_is_deterministic() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir(), "tiny").unwrap();
+    let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+    let file = m.artifact_file("fwd_bwd").unwrap().to_string();
+
+    let mut rng = Rng::new(7);
+    let mut inputs = Vec::new();
+    for p in &m.params {
+        let mut data = vec![0.0f32; p.numel];
+        if p.init_std == 0.0 {
+            data.fill(1.0);
+        } else {
+            rng.fill_normal_f32(&mut data, p.init_std as f32);
+        }
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        inputs.push(literal_f32(&data, &dims).unwrap());
+    }
+    let bs = [m.model.batch as i64, m.model.seq_len as i64];
+    let tokens: Vec<i32> = (0..m.model.batch * m.model.seq_len)
+        .map(|i| (i % m.model.vocab) as i32)
+        .collect();
+    inputs.push(literal_i32(&tokens, &bs).unwrap());
+    inputs.push(literal_i32(&tokens, &bs).unwrap());
+
+    let out1 = rt.execute(&file, &inputs).unwrap();
+    assert_eq!(out1.len(), m.params.len() + 1);
+    let loss = out1[0].to_vec::<f32>().unwrap()[0];
+    // Fresh random params => loss near ln(vocab).
+    assert!((loss - (m.model.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+    // Gradients: right shapes, finite, not all zero.
+    let mut nonzero = 0;
+    for (i, g) in out1[1..].iter().enumerate() {
+        let v = to_f32_vec(g).unwrap();
+        assert_eq!(v.len(), m.params[i].numel, "{}", m.params[i].name);
+        assert!(v.iter().all(|x| x.is_finite()), "{}", m.params[i].name);
+        if v.iter().any(|&x| x != 0.0) {
+            nonzero += 1;
+        }
+    }
+    assert!(nonzero > m.params.len() / 2);
+
+    // Determinism: same inputs -> bitwise same loss.
+    let out2 = rt.execute(&file, &inputs).unwrap();
+    assert_eq!(out2[0].to_vec::<f32>().unwrap()[0], loss);
+}
+
+#[test]
+fn muon_artifact_matches_reference_math() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir(), "tiny").unwrap();
+    let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+    // Pick a matrix param artifact.
+    let p = m.params.iter().find(|p| p.optim == "muon").unwrap();
+    let file = m.artifact_file(&p.artifact).unwrap().to_string();
+    let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+
+    let mut rng = Rng::new(11);
+    let mut w = vec![0.0f32; p.numel];
+    let mut g = vec![0.0f32; p.numel];
+    rng.fill_normal_f32(&mut w, 0.05);
+    rng.fill_normal_f32(&mut g, 1.0);
+    let mom = vec![0.0f32; p.numel];
+    let lr = 0.02f32;
+    let beta = 0.95f32;
+
+    let outs = rt.execute(&file, &[
+        literal_f32(&w, &dims).unwrap(),
+        literal_f32(&g, &dims).unwrap(),
+        literal_f32(&mom, &dims).unwrap(),
+        literal_scalar(lr),
+        literal_scalar(beta),
+    ]).unwrap();
+    assert_eq!(outs.len(), 2);
+    let w_new = to_f32_vec(&outs[0]).unwrap();
+    let mom_new = to_f32_vec(&outs[1]).unwrap();
+
+    // Zero initial momentum => new momentum == gradient exactly.
+    assert_eq!(mom_new, g);
+
+    // The weight moved by an (approximately) orthogonal direction with
+    // the documented scale: || (w_new - w) / (lr * scale) ||_F^2 ~ min(m,n).
+    let (rows, cols) = (p.shape[0] as f32, p.shape[1] as f32);
+    let scale = (rows / cols).max(1.0).sqrt();
+    let mut frob2 = 0.0f64;
+    for i in 0..p.numel {
+        let step = (w_new[i] - w[i]) / (lr * scale);
+        frob2 += (step as f64) * (step as f64);
+    }
+    let expect = rows.min(cols) as f64;
+    assert!(frob2 > 0.3 * expect && frob2 < 1.8 * expect,
+            "||O||_F^2 = {frob2}, expected ~{expect}");
+}
+
+#[test]
+fn adamw_artifact_matches_reference_math() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir(), "tiny").unwrap();
+    let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+    let p = m.params.iter().find(|p| p.optim == "adamw").unwrap();
+    let file = m.artifact_file(&p.artifact).unwrap().to_string();
+    let n = p.numel;
+    let dims = [n as i64];
+
+    let mut rng = Rng::new(13);
+    let mut w = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut w, 1.0);
+    rng.fill_normal_f32(&mut g, 1.0);
+    let zero = vec![0.0f32; n];
+    let (t, lr, b1, b2, eps) = (1.0f32, 3e-3f32, 0.9f32, 0.95f32, 1e-8f32);
+
+    let outs = rt.execute(&file, &[
+        literal_f32(&w, &dims).unwrap(),
+        literal_f32(&g, &dims).unwrap(),
+        literal_f32(&zero, &dims).unwrap(),
+        literal_f32(&zero, &dims).unwrap(),
+        literal_scalar(t),
+        literal_scalar(lr),
+    ]).unwrap();
+    assert_eq!(outs.len(), 3);
+    let w_new = to_f32_vec(&outs[0]).unwrap();
+    let m_new = to_f32_vec(&outs[1]).unwrap();
+    let v_new = to_f32_vec(&outs[2]).unwrap();
+
+    for i in 0..n {
+        let m_ref = (1.0 - b1) * g[i];
+        let v_ref = (1.0 - b2) * g[i] * g[i];
+        let m_hat = m_ref / (1.0 - b1.powf(t));
+        let v_hat = v_ref / (1.0 - b2.powf(t));
+        let w_ref = w[i] - lr * m_hat / (v_hat.sqrt() + eps);
+        assert!((m_new[i] - m_ref).abs() < 1e-6);
+        assert!((v_new[i] - v_ref).abs() < 1e-6);
+        assert!((w_new[i] - w_ref).abs() < 1e-5,
+                "{} vs {} at {i}", w_new[i], w_ref);
+    }
+}
+
+#[test]
+fn shampoo_artifact_executes() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir(), "tiny").unwrap();
+    let Some((key, file)) = m.artifacts.iter().find(|(k, _)| k.starts_with("shampoo_")) else {
+        eprintln!("skipping: shampoo artifacts not built for tiny");
+        return;
+    };
+    // shampoo_<m>x<n>: (w, g, L[m,m], R[n,n], lr) -> (w', L', R')
+    let file = file.clone();
+    let dims_str = key.strip_prefix("shampoo_").unwrap();
+    let (rows, cols): (usize, usize) = {
+        let mut it = dims_str.split('x').map(|d| d.parse().unwrap());
+        (it.next().unwrap(), it.next().unwrap())
+    };
+    let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+    let dims = [rows as i64, cols as i64];
+    let mut rng = Rng::new(17);
+    let mut w = vec![0.0f32; rows * cols];
+    let mut g = vec![0.0f32; rows * cols];
+    rng.fill_normal_f32(&mut w, 0.1);
+    rng.fill_normal_f32(&mut g, 1.0);
+    let zeros_l = vec![0.0f32; rows * rows];
+    let zeros_r = vec![0.0f32; cols * cols];
+    let outs = rt.execute(&file, &[
+        literal_f32(&w, &dims).unwrap(),
+        literal_f32(&g, &dims).unwrap(),
+        literal_f32(&zeros_l, &[rows as i64, rows as i64]).unwrap(),
+        literal_f32(&zeros_r, &[cols as i64, cols as i64]).unwrap(),
+        literal_scalar(0.05),
+    ]).unwrap();
+    assert_eq!(outs.len(), 3);
+    let w_new = to_f32_vec(&outs[0]).unwrap();
+    assert!(w_new.iter().all(|x| x.is_finite()));
+    assert_ne!(w_new, w);
+    // Statistics L' = (1-beta) G G^T must be symmetric: check a few
+    // entries.
+    let l_new = to_f32_vec(&outs[1]).unwrap();
+    for (i, j) in [(3usize, 7usize), (1, rows - 1), (0, rows / 2)] {
+        let a = l_new[i * rows + j];
+        let b = l_new[j * rows + i];
+        assert!((a - b).abs() < 1e-3 * a.abs().max(1.0), "asymmetry at ({i},{j})");
+    }
+}

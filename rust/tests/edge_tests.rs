@@ -1,0 +1,190 @@
+//! Edge-case and failure-injection tests across module boundaries:
+//! degenerate censuses, single-rank groups, extreme α/C_max values,
+//! malformed manifests, and hostile JSON.
+
+use canzona::buffer::FlatBuffer;
+use canzona::cost::comm::{CollectiveKind, CommModel};
+use canzona::cost::hardware::{Hardware, LinkKind};
+use canzona::cost::optim::{CostMetric, OptimCost, OptimKind};
+use canzona::model::qwen3::{qwen3, Qwen3Size};
+use canzona::model::shapes::{Param, ParamKind, TensorShape};
+use canzona::partition::{alpha_balanced, equal_chunk, naive_atomic, naive_atomic_per_bucket};
+use canzona::schedule::microgroup::{build_micro_groups, TpTask};
+use canzona::sim::{simulate_iteration, Scenario};
+use canzona::partition::DpStrategy;
+use canzona::util::json::Value;
+
+fn single_param_census() -> Vec<Param> {
+    vec![Param::new("lonely", TensorShape::matrix(64, 64), ParamKind::Matrix, Some(0))]
+}
+
+#[test]
+fn one_param_one_rank() {
+    let fb = FlatBuffer::build(&single_param_census(), 1000);
+    for plan in [
+        alpha_balanced(&fb, 1, 1.0, true, |p| p.numel() as f64),
+        naive_atomic(&fb, 1),
+        naive_atomic_per_bucket(&fb, 1),
+        equal_chunk(&fb, 1),
+    ] {
+        plan.validate(&fb).unwrap();
+        assert_eq!(plan.rank_loads(&fb, |p| p.numel() as f64), vec![4096.0]);
+    }
+}
+
+#[test]
+fn one_param_many_ranks() {
+    // A single atomic matrix across 8 ranks: exactly one rank owns it.
+    let fb = FlatBuffer::build(&single_param_census(), 1000);
+    let plan = alpha_balanced(&fb, 8, 1.0, true, |p| p.numel() as f64);
+    plan.validate(&fb).unwrap();
+    let loads = plan.rank_loads(&fb, |p| p.numel() as f64);
+    assert_eq!(loads.iter().filter(|&&l| l > 0.0).count(), 1);
+    assert_eq!(loads.iter().sum::<f64>(), 4096.0);
+}
+
+#[test]
+fn more_ranks_than_params() {
+    let census: Vec<Param> = (0..3)
+        .map(|i| Param::new(&format!("p{i}"), TensorShape::matrix(8, 8),
+                            ParamKind::Matrix, Some(i)))
+        .collect();
+    let fb = FlatBuffer::build(&census, usize::MAX);
+    let plan = alpha_balanced(&fb, 16, 1.0, false, |p| p.numel() as f64);
+    plan.validate(&fb).unwrap();
+    let loads = plan.rank_loads(&fb, |p| p.numel() as f64);
+    assert_eq!(loads.iter().filter(|&&l| l > 0.0).count(), 3);
+}
+
+#[test]
+fn alpha_extremes_valid_on_family() {
+    let census = qwen3(Qwen3Size::S1_7B);
+    let fb = FlatBuffer::build(&census, 40_000_000);
+    for alpha in [0.0, 1e-9, 1.0 - 1e-9, 1.0] {
+        alpha_balanced(&fb, 32, alpha, true, |p| p.numel() as f64)
+            .validate(&fb)
+            .unwrap();
+    }
+}
+
+#[test]
+#[should_panic(expected = "alpha out of range")]
+fn alpha_above_one_rejected() {
+    let fb = FlatBuffer::build(&single_param_census(), 1000);
+    alpha_balanced(&fb, 2, 1.5, true, |p| p.numel() as f64);
+}
+
+#[test]
+fn zero_cost_tasks_schedule() {
+    let tasks: Vec<TpTask> = (0..10)
+        .map(|id| TpTask {
+            id,
+            name: format!("z{id}"),
+            cost: 0.0,
+            comm_bytes: 0.0,
+            flops: 0.0,
+            state_bytes: 0.0,
+        })
+        .collect();
+    let plan = build_micro_groups(tasks, 4, 1.0);
+    assert!(plan.is_complete());
+}
+
+#[test]
+fn c_max_exactly_largest_task() {
+    let tasks: Vec<TpTask> = [10.0, 10.0, 10.0]
+        .iter()
+        .enumerate()
+        .map(|(id, &c)| TpTask {
+            id,
+            name: format!("t{id}"),
+            cost: c,
+            comm_bytes: c,
+            flops: c,
+            state_bytes: c,
+        })
+        .collect();
+    // cap == task cost: each rank may hold exactly one task per group.
+    let plan = build_micro_groups(tasks, 2, 10.0);
+    assert!(plan.is_complete());
+    for g in &plan.groups {
+        assert!(g.max_load <= 10.0 + 1e-12);
+    }
+}
+
+#[test]
+fn comm_model_degenerate_sizes() {
+    let m = CommModel::new(Hardware::h800());
+    // Zero-byte collective still pays the latency floor, nothing more.
+    let t0 = m.collective(CollectiveKind::AllReduce, 0.0, 8, LinkKind::InterNode);
+    assert!(t0 > 0.0 && t0 < 1e-3, "{t0}");
+    assert_eq!(m.collective_v(CollectiveKind::ReduceScatter, &[], LinkKind::InterNode), 0.0);
+    assert_eq!(m.volume(CollectiveKind::Broadcast, 100.0, 1), 0.0);
+}
+
+#[test]
+fn optimizer_cost_tiny_shapes() {
+    for kind in [OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap, OptimKind::AdamW] {
+        let c = OptimCost::new(kind);
+        for shape in [TensorShape::matrix(1, 1), TensorShape::vector(1)] {
+            assert!(c.flops(&shape) >= 0.0);
+            assert!(c.state_bytes(&shape) > 0.0);
+            assert!(c.cost(&shape, CostMetric::Numel) == shape.numel() as f64);
+        }
+    }
+}
+
+#[test]
+fn simulator_extreme_grids() {
+    // 1x1x1 "cluster" and very wide DP both complete.
+    for (dp, tp, pp) in [(1, 1, 1), (256, 1, 1), (1, 8, 1), (2, 2, 8)] {
+        let s = Scenario::new(Qwen3Size::S1_7B, dp, tp, pp, OptimKind::Muon,
+                              DpStrategy::LbAsc);
+        let b = simulate_iteration(&s);
+        assert!(b.total_s.is_finite() && b.total_s > 0.0, "dp{dp} tp{tp} pp{pp}");
+    }
+}
+
+#[test]
+fn json_hostile_inputs() {
+    for bad in [
+        "", "{", "}", "[", "\"", "{\"a\"}", "{\"a\":}", "[1 2]",
+        "tru", "1e", "-", "{\"a\":1,}", "\"\\q\"", "\"\\u12\"",
+    ] {
+        assert!(Value::parse(bad).is_err(), "{bad:?} should fail");
+    }
+    // Deeply-nested but valid input parses.
+    let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+    assert!(Value::parse(&deep).is_ok());
+}
+
+#[test]
+fn json_number_precision() {
+    let v = Value::parse("1e308").unwrap();
+    assert_eq!(v.as_f64().unwrap(), 1e308);
+    let v = Value::parse("-0.5").unwrap();
+    assert_eq!(v.as_f64().unwrap(), -0.5);
+    assert!(Value::parse("123456789012345").unwrap().as_usize().is_ok());
+    assert!(Value::parse("-1").unwrap().as_usize().is_err());
+    assert!(Value::parse("1.5").unwrap().as_usize().is_err());
+}
+
+#[test]
+fn buffer_bucket_size_one() {
+    // bucket_size=1 => one bucket per parameter.
+    let census = qwen3(Qwen3Size::S1_7B);
+    let fb = FlatBuffer::build(&census, 1);
+    assert_eq!(fb.buckets.len(), census.len());
+    let plan = alpha_balanced(&fb, 8, 1.0, true, |p| p.numel() as f64);
+    plan.validate(&fb).unwrap();
+}
+
+#[test]
+fn strategy_and_optimizer_parsers_roundtrip() {
+    for s in ["sc", "asc", "lb-asc", "nv-layerwise"] {
+        assert!(DpStrategy::parse(s).is_some(), "{s}");
+    }
+    for o in ["muon", "shampoo", "soap", "adamw"] {
+        assert!(OptimKind::parse(o).is_some(), "{o}");
+    }
+}

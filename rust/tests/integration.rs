@@ -1,0 +1,132 @@
+//! Cross-module integration tests: census -> buffer -> plans -> simulator
+//! and the experiment registry end to end (no artifacts required).
+
+use canzona::buffer::FlatBuffer;
+use canzona::cost::optim::{CostMetric, OptimCost, OptimKind};
+use canzona::model::qwen3::{qwen3, total_params, Qwen3Size};
+use canzona::model::tp::{fragmented_matrix_params, tp_split};
+use canzona::partition::{alpha_balanced, naive_atomic, DpStrategy};
+use canzona::schedule::microgroup::{build_micro_groups, tasks_from_shards};
+use canzona::sim::{simulate_iteration, Scenario};
+use canzona::util::stats::load_balance_ratio;
+
+#[test]
+fn full_pipeline_32b_paper_grid() {
+    // The paper's main configuration end to end through the simulator.
+    let lb = simulate_iteration(&Scenario::paper_default());
+    let nv = simulate_iteration(
+        &Scenario::paper_default().with_strategy(DpStrategy::NvLayerwise));
+    // Headline shapes (paper: total 1.57x, optimizer 5.8x, fwd-bwd 1.23x).
+    let total_speedup = nv.total_s / lb.total_s;
+    let opt_speedup = nv.optimizer_s / lb.optimizer_s;
+    assert!(total_speedup > 1.2 && total_speedup < 4.0, "{total_speedup}");
+    assert!(opt_speedup > 3.0 && opt_speedup < 30.0, "{opt_speedup}");
+    assert!(nv.fwd_bwd_s > lb.fwd_bwd_s);
+}
+
+#[test]
+fn plans_compose_on_every_family_member() {
+    for size in Qwen3Size::all() {
+        let census = qwen3(size);
+        let fb = FlatBuffer::build(&census, 40_000_000);
+        for ranks in [2, 8, 32] {
+            let plan = alpha_balanced(&fb, ranks, 1.0, true, |p| p.numel() as f64);
+            plan.validate(&fb).unwrap();
+            let r = load_balance_ratio(&plan.rank_loads(&fb, |p| p.numel() as f64));
+            assert!(r < 1.4, "{} R={ranks}: ratio {r}", size.label());
+        }
+    }
+}
+
+#[test]
+fn tp_schedule_composes_with_census() {
+    let census = qwen3(Qwen3Size::S8B);
+    let shards = tp_split(&census, 8);
+    let frag = fragmented_matrix_params(&shards, 8);
+    let optim = OptimCost::new(OptimKind::Muon);
+    let tasks = tasks_from_shards(&frag, &optim, CostMetric::Numel);
+    let total_cost: f64 = tasks.iter().map(|t| t.cost).sum();
+    let plan = build_micro_groups(tasks, 8, 256e6);
+    assert!(plan.is_complete());
+    let scheduled: f64 = plan.rank_totals(|t| t.cost).iter().sum();
+    assert!((scheduled - total_cost).abs() < 1.0);
+    let r = load_balance_ratio(&plan.rank_totals(|t| t.flops));
+    assert!(r < 2.0, "TP flops ratio {r}");
+}
+
+#[test]
+fn simulator_monotone_in_cluster_size() {
+    // More DP ranks => less optimizer work per rank (for balanced plans).
+    let mut prev = f64::INFINITY;
+    for dp in [8, 16, 32, 64] {
+        let s = Scenario::new(Qwen3Size::S32B, dp, 8, 1, OptimKind::Muon, DpStrategy::LbAsc);
+        let b = simulate_iteration(&s);
+        assert!(b.optimizer_s <= prev * 1.05,
+                "dp={dp}: {} vs prev {prev}", b.optimizer_s);
+        prev = b.optimizer_s;
+    }
+}
+
+#[test]
+fn sc_redundancy_grows_with_nothing() {
+    // SC's optimizer time is independent of DP size (fully redundant).
+    let t16 = simulate_iteration(
+        &Scenario::new(Qwen3Size::S14B, 16, 4, 1, OptimKind::Muon, DpStrategy::Sc));
+    let t64 = simulate_iteration(
+        &Scenario::new(Qwen3Size::S14B, 64, 4, 1, OptimKind::Muon, DpStrategy::Sc));
+    let rel = (t16.optimizer_s - t64.optimizer_s).abs() / t16.optimizer_s;
+    assert!(rel < 0.01, "{rel}");
+}
+
+#[test]
+fn shampoo_and_soap_heavier_than_muon() {
+    for opt in [OptimKind::Shampoo, OptimKind::Soap] {
+        let muon = simulate_iteration(
+            &Scenario::new(Qwen3Size::S14B, 32, 4, 2, OptimKind::Muon, DpStrategy::Sc));
+        let other = simulate_iteration(
+            &Scenario::new(Qwen3Size::S14B, 32, 4, 2, opt, DpStrategy::Sc));
+        assert!(other.optimizer_s > muon.optimizer_s, "{opt:?}");
+    }
+}
+
+#[test]
+fn experiments_all_run() {
+    // Every registered harness executes and produces non-empty tables.
+    for (id, _) in canzona::experiments::list() {
+        let tables = canzona::experiments::run(id).unwrap();
+        assert!(!tables.is_empty(), "{id}");
+        for t in &tables {
+            let rendered = t.render();
+            assert!(rendered.lines().filter(|l| l.starts_with('|')).count() >= 3,
+                    "{id} produced an empty table");
+        }
+    }
+}
+
+#[test]
+fn census_sizes_are_stable() {
+    // Guard against accidental census edits: pin totals within 1%.
+    let expect = [
+        (Qwen3Size::S1_7B, 2.03e9),
+        (Qwen3Size::S32B, 33.0e9),
+    ];
+    for (size, approx) in expect {
+        let n = total_params(&qwen3(size)) as f64;
+        assert!((n - approx).abs() / approx < 0.05, "{}: {n:.3e}", size.label());
+    }
+}
+
+#[test]
+fn naive_atomic_eq1_owner_rule_holds() {
+    // Every parameter's owner interval contains its start index.
+    let census = qwen3(Qwen3Size::S4B);
+    let fb = FlatBuffer::build(&census, 40_000_000);
+    let plan = naive_atomic(&fb, 16);
+    plan.validate(&fb).unwrap();
+    let stride = fb.total as f64 / 16.0;
+    for p in &fb.params {
+        let owner = plan.owner_of(p);
+        let expect = ((p.start as f64 / stride) as usize).min(15);
+        assert_eq!(owner, expect, "{}", p.param.name);
+    }
+}
