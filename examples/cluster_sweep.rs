@@ -1,5 +1,6 @@
 //! Cluster sweep: scaling study across DP/TP sizes and the model family
-//! (the workloads behind paper Figs. 8 and 9), on the simulator.
+//! (the workloads behind paper Figs. 8 and 9), evaluated as one batch on
+//! the plan-cached, work-stealing sweep engine.
 //!
 //! ```bash
 //! cargo run --release --example cluster_sweep
@@ -8,19 +9,26 @@
 use canzona::cost::optim::OptimKind;
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
-use canzona::sim::{simulate_iteration, Scenario};
+use canzona::sim::Scenario;
+use canzona::sweep::SweepEngine;
 use canzona::util::stats::load_balance_ratio;
 use canzona::util::table::Table;
 
 fn main() {
+    let engine = SweepEngine::global();
+
     // DP scaling at fixed TP (paper Fig. 8a).
+    let dps = [8usize, 16, 32, 64, 128];
+    let mut scens: Vec<Scenario> = Vec::new();
+    for &dp in &dps {
+        scens.push(Scenario::new(Qwen3Size::S32B, dp, 4, 1, OptimKind::Muon, DpStrategy::Asc));
+        scens.push(Scenario::new(Qwen3Size::S32B, dp, 4, 1, OptimKind::Muon, DpStrategy::LbAsc));
+    }
+    let res = engine.eval(&scens);
     let mut t = Table::new("DP scaling — Qwen3-32B, TP=4, Muon",
                            &["DP", "GPUs", "ASC opt", "LB-ASC opt", "LB ratio (ASC)", "LB ratio (ours)"]);
-    for dp in [8, 16, 32, 64, 128] {
-        let asc = simulate_iteration(
-            &Scenario::new(Qwen3Size::S32B, dp, 4, 1, OptimKind::Muon, DpStrategy::Asc));
-        let lb = simulate_iteration(
-            &Scenario::new(Qwen3Size::S32B, dp, 4, 1, OptimKind::Muon, DpStrategy::LbAsc));
+    for (i, &dp) in dps.iter().enumerate() {
+        let (asc, lb) = (&res[2 * i], &res[2 * i + 1]);
         t.row(vec![
             dp.to_string(),
             (dp * 4).to_string(),
@@ -33,13 +41,17 @@ fn main() {
     t.print();
 
     // Model-size scaling at fixed grid (paper Fig. 9).
+    let sizes = Qwen3Size::all();
+    let mut scens2: Vec<Scenario> = Vec::new();
+    for &size in &sizes {
+        scens2.push(Scenario::new(size, 16, 4, 1, OptimKind::Muon, DpStrategy::Asc));
+        scens2.push(Scenario::new(size, 16, 4, 1, OptimKind::Muon, DpStrategy::LbAsc));
+    }
+    let res2 = engine.eval(&scens2);
     let mut t2 = Table::new("Model scaling — DP=16, TP=4, Muon",
                             &["model", "ASC LB ratio", "ours LB ratio", "ours opt"]);
-    for size in Qwen3Size::all() {
-        let asc = simulate_iteration(
-            &Scenario::new(size, 16, 4, 1, OptimKind::Muon, DpStrategy::Asc));
-        let lb = simulate_iteration(
-            &Scenario::new(size, 16, 4, 1, OptimKind::Muon, DpStrategy::LbAsc));
+    for (i, size) in sizes.iter().enumerate() {
+        let (asc, lb) = (&res2[2 * i], &res2[2 * i + 1]);
         t2.row(vec![
             size.label().into(),
             format!("{:.2}x", load_balance_ratio(&asc.dp_loads_flops)),
@@ -50,13 +62,17 @@ fn main() {
     t2.print();
 
     // Optimizer generality (paper Figs. 10-12 flavour).
+    let optims = [OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap];
+    let mut scens3: Vec<Scenario> = Vec::new();
+    for &opt in &optims {
+        scens3.push(Scenario::new(Qwen3Size::S14B, 32, 4, 2, opt, DpStrategy::Sc));
+        scens3.push(Scenario::new(Qwen3Size::S14B, 32, 4, 2, opt, DpStrategy::LbAsc));
+    }
+    let res3 = engine.eval(&scens3);
     let mut t3 = Table::new("Optimizer generality — Qwen3-14B, DP=32, TP=4, PP=2",
                             &["optimizer", "SC opt", "LB-ASC opt", "speedup"]);
-    for opt in [OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap] {
-        let sc = simulate_iteration(
-            &Scenario::new(Qwen3Size::S14B, 32, 4, 2, opt, DpStrategy::Sc));
-        let lb = simulate_iteration(
-            &Scenario::new(Qwen3Size::S14B, 32, 4, 2, opt, DpStrategy::LbAsc));
+    for (i, opt) in optims.iter().enumerate() {
+        let (sc, lb) = (&res3[2 * i], &res3[2 * i + 1]);
         t3.row(vec![
             opt.label().into(),
             format!("{:.3}s", sc.optimizer_s),
@@ -65,4 +81,8 @@ fn main() {
         ]);
     }
     t3.print();
+
+    let stats = engine.cache_stats();
+    println!("\nplan cache: {} hits / {} solves on {} threads",
+             stats.hits, stats.solves, engine.threads());
 }

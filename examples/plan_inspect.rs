@@ -14,10 +14,10 @@ use canzona::partition::{alpha_balanced, equal_chunk, naive_atomic};
 use canzona::schedule::microgroup::{build_micro_groups, tasks_from_shards};
 use canzona::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> canzona::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     let size = Qwen3Size::parse(args.get_or("model", "1.7b"))
-        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+        .ok_or_else(|| canzona::err!("unknown model"))?;
     let dp = args.get_usize("dp", 8)?;
     let tp = args.get_usize("tp", 8)?;
 

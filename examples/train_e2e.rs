@@ -13,7 +13,7 @@ use canzona::partition::DpStrategy;
 use canzona::train::{train, TrainConfig};
 use canzona::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> canzona::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     let preset = args.get_or("preset", "e2e").to_string();
     let steps = args.get_usize("steps", 300)?;
@@ -61,6 +61,6 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(&out, csv)?;
     println!("wrote {out}");
 
-    anyhow::ensure!(last < first, "loss did not decrease");
+    canzona::ensure!(last < first, "loss did not decrease");
     Ok(())
 }

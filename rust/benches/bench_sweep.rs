@@ -1,0 +1,93 @@
+//! Sweep-engine benchmarks: quantifies the two claims behind the sweep
+//! subsystem — (1) the work-stealing runner beats the sequential seed
+//! path (one cold `simulate_iteration` per scenario, in order), (2) a
+//! warm plan cache collapses repeated planning to hash lookups.
+//!
+//! ```bash
+//! cargo bench --bench bench_sweep
+//! ```
+
+use std::time::Instant;
+
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::{simulate_iteration, Scenario};
+use canzona::sweep::{SweepEngine, SweepGrid};
+use canzona::util::bench::{bench, black_box, fmt_ns};
+use canzona::util::pool;
+
+fn main() {
+    println!("# Sweep engine benchmarks\n");
+
+    // A Fig. 6/8-shaped batch: family x grid x strategy.
+    let grid = SweepGrid {
+        models: vec![Qwen3Size::S8B, Qwen3Size::S32B],
+        dp: vec![16, 32],
+        tp: vec![2, 4, 8],
+        pp: vec![1],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(512.0)],
+        metric: CostMetric::Numel,
+    };
+    let scens = grid.scenarios();
+
+    // --- sequential seed path vs the engine ----------------------------
+    // Seed behaviour: strictly sequential, every plan re-solved from
+    // scratch on each call.
+    let t0 = Instant::now();
+    for s in &scens {
+        black_box(simulate_iteration(s));
+    }
+    let seq_s = t0.elapsed().as_secs_f64();
+    println!("{:>3} scenarios, sequential cold (seed path) : {seq_s:>7.2}s", scens.len());
+
+    let engine = SweepEngine::new(pool::default_threads());
+    let t1 = Instant::now();
+    black_box(engine.eval(&scens));
+    let cold_s = t1.elapsed().as_secs_f64();
+    println!("{:>3} scenarios, parallel, cold cache        : {cold_s:>7.2}s", scens.len());
+
+    let t2 = Instant::now();
+    black_box(engine.eval(&scens));
+    let warm_s = t2.elapsed().as_secs_f64();
+    println!("{:>3} scenarios, parallel, warm cache        : {warm_s:>7.2}s", scens.len());
+    let stats = engine.cache_stats();
+    println!(
+        "speedup vs sequential: {:.2}x cold, {:.2}x warm ({} threads; \
+         cache {} hits / {} solves)\n",
+        seq_s / cold_s,
+        seq_s / warm_s,
+        engine.threads(),
+        stats.hits,
+        stats.solves,
+    );
+
+    // --- experiments::run("all"): cold vs warm global engine -----------
+    let t3 = Instant::now();
+    let n_tables = canzona::experiments::run("all").unwrap().len();
+    let all_cold_s = t3.elapsed().as_secs_f64();
+    let t4 = Instant::now();
+    black_box(canzona::experiments::run("all").unwrap().len());
+    let all_warm_s = t4.elapsed().as_secs_f64();
+    println!("run(\"all\") ({n_tables} tables): cold {all_cold_s:.2}s, warm {all_warm_s:.2}s\n");
+
+    // --- single-scenario planning: cold solve vs cache hit -------------
+    let s = Scenario::paper_default();
+    let cold = bench("simulate_iteration 32B DP32 TP8 (cold plans)", 10, || {
+        black_box(simulate_iteration(&s));
+    });
+    let one = SweepEngine::new(1);
+    one.eval_one(&s); // warm the cache
+    let hot = bench("simulate_iteration 32B DP32 TP8 (plan-cache hit)", 10, || {
+        black_box(one.eval_one(&s));
+    });
+    println!(
+        "\nplan-cache speedup: {:.2}x ({} cold vs {} warm)",
+        cold.median_ns / hot.median_ns,
+        fmt_ns(cold.median_ns),
+        fmt_ns(hot.median_ns),
+    );
+}

@@ -6,8 +6,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
-
+use crate::util::error::Result;
 use crate::util::json::Value;
 
 /// A loosely-typed configuration bag backed by JSON.

@@ -3,23 +3,27 @@
 //! Subcommands:
 //! * `plan`       — compute + report a partition plan for a model/grid.
 //! * `simulate`   — run the cluster simulator for one scenario.
+//! * `sweep`      — evaluate a scenario grid on the parallel, plan-cached
+//!   sweep engine and emit one table / JSON artifact.
 //! * `experiment` — reproduce a paper figure (`fig4`, `fig13`, … or `all`).
 //! * `train`      — run the real distributed trainer on AOT artifacts.
 //! * `list`       — list registered experiments.
 
 pub mod config;
 
-use anyhow::{bail, Result};
-
 use crate::cost::optim::OptimKind;
 use crate::experiments;
 use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
 use crate::sim::{simulate_iteration, Scenario};
+use crate::sweep::{render_json, render_table, SweepEngine, SweepGrid};
 use crate::train::{train, TrainConfig};
 use crate::util::cli::Args;
+use crate::util::error::Result;
+use crate::util::pool;
 use crate::util::stats::load_balance_ratio;
 use crate::util::table::Table;
+use crate::{bail, err};
 
 pub use config::Config;
 
@@ -29,6 +33,10 @@ canzona — unified, asynchronous, load-balanced distributed matrix-based optimi
 USAGE:
   canzona plan       --model 32b --dp 32 --tp 8 [--alpha 1.0] [--strategy lb-asc]
   canzona simulate   --model 32b --dp 32 --tp 8 [--pp 1] [--optim muon] [--strategy lb-asc]
+  canzona sweep      [--models 1.7b,8b,32b] [--dp 16,32] [--tp 1,2,4,8] [--pp 1]
+                     [--optims muon,shampoo,soap,adamw] [--strategies sc,asc,lb-asc]
+                     [--alphas 0.5,1.0] [--c-max-mb 512,none] [--metric numel]
+                     [--threads N] [--json out.json] [--csv]
   canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|planning|all>
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
                      [--seed 42] [--artifacts artifacts] [--log-every 10]
@@ -42,6 +50,7 @@ pub fn run_cli(argv: Vec<String>) -> Result<()> {
     match cmd {
         "plan" => cmd_plan(&args),
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "experiment" => cmd_experiment(&args),
         "train" => cmd_train(&args),
         "list" => {
@@ -60,11 +69,11 @@ pub fn run_cli(argv: Vec<String>) -> Result<()> {
 fn parse_scenario(args: &Args) -> Result<Scenario> {
     let model = args.get_or("model", "32b");
     let size = Qwen3Size::parse(model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (1.7b/4b/8b/14b/32b)"))?;
+        .ok_or_else(|| err!("unknown model {model:?} (1.7b/4b/8b/14b/32b)"))?;
     let strategy = DpStrategy::parse(args.get_or("strategy", "lb-asc"))
-        .ok_or_else(|| anyhow::anyhow!("unknown strategy (sc/nv-layerwise/asc/lb-asc)"))?;
+        .ok_or_else(|| err!("unknown strategy (sc/nv-layerwise/asc/lb-asc)"))?;
     let optim = OptimKind::parse(args.get_or("optim", "muon"))
-        .ok_or_else(|| anyhow::anyhow!("unknown optimizer (muon/shampoo/soap/adamw)"))?;
+        .ok_or_else(|| err!("unknown optimizer (muon/shampoo/soap/adamw)"))?;
     let mut s = Scenario::new(
         size,
         args.get_usize("dp", 32)?,
@@ -118,6 +127,34 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Evaluate a scenario grid on the sweep engine; emit one table (or CSV)
+/// plus an optional JSON artifact.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let grid = SweepGrid::parse(args)?;
+    let threads = args.get_usize("threads", pool::default_threads())?.max(1);
+    let engine = SweepEngine::new(threads);
+    let t0 = std::time::Instant::now();
+    let (scenarios, breakdowns) = engine.run_grid(&grid);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let table = render_table(&scenarios, &breakdowns);
+    if args.flag("csv") {
+        print!("{}", table.to_csv());
+    } else {
+        table.print();
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, render_json(&scenarios, &breakdowns).to_string())?;
+        println!("wrote {path}");
+    }
+    let stats = engine.cache_stats();
+    println!(
+        "\n{} scenarios in {wall_s:.2}s on {threads} threads \
+         (plan cache: {} hits / {} solves)",
+        scenarios.len(), stats.hits, stats.solves,
+    );
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(id) = args.positional.get(1) else {
         bail!("experiment id required; see `canzona list`");
@@ -141,7 +178,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = args.get_usize("seed", 42)? as u64;
     cfg.log_every = args.get_usize("log-every", 10)?;
     cfg.strategy = DpStrategy::parse(args.get_or("strategy", "lb-asc"))
-        .ok_or_else(|| anyhow::anyhow!("trainer strategies: sc/asc/lb-asc"))?;
+        .ok_or_else(|| err!("trainer strategies: sc/asc/lb-asc"))?;
     println!(
         "training preset={} ranks={} steps={} strategy={}",
         cfg.preset, cfg.ranks, cfg.steps, cfg.strategy.label()
@@ -152,8 +189,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         "done: loss {:.4} -> {:.4} | mean step {:.3}s (opt {:.3}s) | comm {:.1} MB | params hash {:016x}",
         r.losses.first().copied().unwrap_or(f32::NAN),
         r.losses.last().copied().unwrap_or(f32::NAN),
-        crate::util::stats::mean(&r.step_times.iter().map(|&x| x).collect::<Vec<_>>()),
-        crate::util::stats::mean(&r.opt_times.iter().map(|&x| x).collect::<Vec<_>>()),
+        crate::util::stats::mean(&r.step_times),
+        crate::util::stats::mean(&r.opt_times),
         r.comm_bytes as f64 / 1e6,
         r.params_hash,
     );

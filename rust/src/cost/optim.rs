@@ -46,7 +46,7 @@ impl OptimKind {
 
 /// Which scalar cost to extract (the paper balances on FLOPs and reports
 /// memory ratios alongside).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum CostMetric {
     /// numel(p) — the unified linear proxy (paper default).
     Numel,

@@ -1,7 +1,8 @@
 //! Experiment registry: id -> harness, for the CLI and the bench driver.
 
-use anyhow::{bail, Result};
-
+use crate::bail;
+use crate::util::error::Result;
+use crate::util::pool;
 use crate::util::table::Table;
 
 use super::figures;
@@ -31,13 +32,18 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
 }
 
 /// Run one experiment (or "all") and return the rendered tables.
+///
+/// "all" fans the harnesses out over the work-stealing pool (each
+/// harness additionally parallelizes its own scenario batch through the
+/// shared sweep engine) and merges tables in catalog order, so the
+/// output bytes are independent of scheduling.
 pub fn run(id: &str) -> Result<Vec<Table>> {
     if id == "all" {
-        let mut out = Vec::new();
-        for (_, _, f) in catalog() {
-            out.extend(f());
-        }
-        return Ok(out);
+        let harnesses: Vec<fn() -> Vec<Table>> =
+            catalog().into_iter().map(|(_, _, f)| f).collect();
+        let per_harness =
+            pool::parallel_map(&harnesses, pool::default_threads(), |f| f());
+        return Ok(per_harness.into_iter().flatten().collect());
     }
     for (eid, _, f) in catalog() {
         if eid == id {

@@ -23,6 +23,9 @@
 //! * [`sim`] — a discrete-event cluster simulator that plays out full
 //!   training iterations (bucket-overlapped fwd/bwd communication,
 //!   per-rank optimizer timelines) and produces the paper's metrics.
+//! * [`sweep`] — the batch-evaluation service: a plan cache keyed by
+//!   scenario fingerprint plus a work-stealing parallel runner, which the
+//!   figure harnesses and the `sweep` CLI subcommand run on.
 //! * [`collectives`] — real in-memory collectives over thread "ranks"
 //!   (variable-size reduce-scatter / all-gather, fused all-to-all) for the
 //!   numeric training path.
@@ -42,6 +45,7 @@ pub mod partition;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;
+pub mod sweep;
 pub mod train;
 pub mod util;
 

@@ -1,3 +1,3 @@
-fn main() -> anyhow::Result<()> {
+fn main() -> canzona::util::error::Result<()> {
     canzona::coordinator::run_cli(std::env::args().skip(1).collect())
 }

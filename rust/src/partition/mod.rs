@@ -25,7 +25,7 @@ pub use naive_atomic::{naive_atomic, naive_atomic_per_bucket};
 pub use plan::{Atomicity, DpPlan};
 
 /// The DP strategies the experiments compare.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DpStrategy {
     /// Synchronous/redundant compute (DDP — every rank updates everything).
     Sc,

@@ -1,8 +1,8 @@
 //! The DP partition plan (the Global Partition Map Π of Section 3.3).
 
-use anyhow::{bail, Result};
-
+use crate::bail;
 use crate::buffer::{FlatBuffer, PlacedParam};
+use crate::util::error::Result;
 
 /// Per-bucket slicing vectors: `cuts[i]` holds R+1 monotone absolute
 /// offsets, `[s_{i,0} .. s_{i,R}]`, with `s_{i,0} = bucket.start` and
@@ -42,11 +42,14 @@ impl DpPlan {
     /// Eq. (1) anchoring). Only meaningful for atomic plans.
     pub fn owner_of(&self, p: &PlacedParam) -> usize {
         let c = &self.cuts[p.bucket];
-        // Find r with c[r] <= start < c[r+1]; cuts are monotone.
-        match c.binary_search(&p.start) {
-            Ok(r) => r.min(self.ranks - 1),
-            Err(ins) => ins - 1,
-        }
+        // The unique r with c[r] <= start < c[r+1]. Plans with empty
+        // shards hold duplicate cut values, and `binary_search` returns
+        // an arbitrary duplicate — which attributed parameters to ranks
+        // whose interval is empty and disagreed with `rank_loads`. The
+        // last cut <= start is the only rank that can own a non-empty
+        // span beginning there.
+        let ins = c.partition_point(|&x| x <= p.start);
+        (ins - 1).min(self.ranks - 1)
     }
 
     /// Parameter indices owned by each rank (atomic ownership by start
@@ -184,6 +187,26 @@ mod tests {
         assert_eq!(plan.owner_of(&fb.params[1]), 0);
         assert_eq!(plan.owner_of(&fb.params[2]), 1);
         assert_eq!(plan.owner_of(&fb.params[3]), 1);
+    }
+
+    #[test]
+    fn owner_skips_empty_shards() {
+        // Duplicate cuts (ranks 0..2 hold empty intervals): the owner of
+        // a parameter starting at the duplicated offset is the rank with
+        // the non-empty span, matching where rank_loads attributes it.
+        let fb = fb(&[10, 10], 1000);
+        let plan = DpPlan {
+            ranks: 4,
+            cuts: vec![vec![0, 0, 0, 10, 20]],
+            atomicity: Atomicity::Strict,
+        };
+        assert_eq!(plan.owner_of(&fb.params[0]), 2);
+        assert_eq!(plan.owner_of(&fb.params[1]), 3);
+        let loads = plan.rank_loads(&fb, |p| p.numel() as f64);
+        assert_eq!(loads, vec![0.0, 0.0, 10.0, 10.0]);
+        let rp = plan.rank_params(&fb);
+        assert_eq!(rp[2], vec![0]);
+        assert_eq!(rp[3], vec![1]);
     }
 
     #[test]

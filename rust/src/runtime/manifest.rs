@@ -2,9 +2,8 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use crate::model::shapes::{Param, ParamKind, TensorShape};
+use crate::util::error::{Context, Result};
 use crate::util::json::Value;
 
 /// One parameter entry of the manifest.
@@ -116,7 +115,7 @@ impl Manifest {
             .iter()
             .find(|(k, _)| k == key)
             .map(|(_, f)| f.as_str())
-            .ok_or_else(|| anyhow::anyhow!("artifact {key:?} not in manifest"))
+            .ok_or_else(|| crate::err!("artifact {key:?} not in manifest"))
     }
 
     /// The census as `Param`s, in canonical flattening order.

@@ -17,6 +17,7 @@
 //! Pipeline parallelism is modelled at steady state: each PP stage is
 //! simulated independently and the slowest stage paces the iteration.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::buffer::FlatBuffer;
@@ -25,8 +26,9 @@ use crate::cost::hardware::LinkKind;
 use crate::cost::optim::{CostMetric, OptimCost};
 use crate::model::shapes::{Param, TensorShape};
 use crate::model::tp::tp_split;
-use crate::partition::{alpha_balanced, layerwise, naive_atomic_per_bucket, DpStrategy};
+use crate::partition::{alpha_balanced, layerwise, naive_atomic_per_bucket, DpPlan, DpStrategy};
 use crate::schedule::microgroup::{build_micro_groups, TpPlan, TpTask};
+use crate::sweep::cache::{DpKey, PlanCache, TpKey};
 
 use super::scenario::Scenario;
 use super::stream::Stream;
@@ -201,7 +203,18 @@ fn tp_pipeline(plan: &TpPlan, comm: &CommModel, gpu_flops: f64) -> f64 {
 }
 
 /// The optimizer step of one PP stage under the scenario's strategy.
-fn optimizer_step(s: &Scenario, locals: &[LocalParam], fb: &FlatBuffer) -> OptStepResult {
+///
+/// `dp_plan` is the stage's shared DP partition (required for ASC /
+/// LB-ASC — the same plan also drives the gradient-path shard sizes);
+/// `cache` memoizes the layerwise and TP micro-group solves.
+fn optimizer_step(
+    s: &Scenario,
+    locals: &[LocalParam],
+    fb: &FlatBuffer,
+    stage: usize,
+    dp_plan: Option<&Arc<DpPlan>>,
+    cache: &PlanCache,
+) -> OptStepResult {
     let comm = CommModel::new(s.hw.clone());
     let optim = OptimCost::new(s.optim);
     let gpu = s.hw.gpu_flops;
@@ -276,7 +289,9 @@ fn optimizer_step(s: &Scenario, locals: &[LocalParam], fb: &FlatBuffer) -> OptSt
             // exposed DP Broadcast of updated parameters.
             let t0 = Instant::now();
             let w = |p: &crate::buffer::PlacedParam| p.numel() as f64;
-            let plan = layerwise(fb, s.dp, w);
+            let plan = cache.layerwise_plan(&DpKey::for_scenario(s, stage), || {
+                layerwise(fb, s.dp, w)
+            });
             let planning_s = t0.elapsed().as_secs_f64();
             let rank_params = plan.rank_params(fb);
             let mut dp_flops = vec![0.0; s.dp];
@@ -328,26 +343,10 @@ fn optimizer_step(s: &Scenario, locals: &[LocalParam], fb: &FlatBuffer) -> OptSt
         }
         DpStrategy::Asc | DpStrategy::LbAsc => {
             let lb = s.strategy == DpStrategy::LbAsc;
-            let t0 = Instant::now();
-            let optim_for_w = optim;
-            let metric = s.metric;
-            // Matrix tasks execute holistically (full tensor, cubic cost):
-            // weigh them by the FULL shape; element-wise params update
-            // their local shard only.
-            let w = move |p: &crate::buffer::PlacedParam| {
-                if p.param.is_matrix_opt() {
-                    optim_for_w.cost(&locals[p.index].full_shape, metric)
-                } else {
-                    optim_for_w.cost(&p.param.shape, metric)
-                }
-            };
-            let plan = if lb {
-                alpha_balanced(fb, s.dp, s.alpha, true, w)
-            } else {
-                naive_atomic_per_bucket(fb, s.dp)
-            };
-            let planning_s = t0.elapsed().as_secs_f64();
+            let plan = dp_plan.expect("ASC/LB-ASC optimizer step requires a DP plan");
             let rank_params = plan.rank_params(fb);
+            // TP-plane planning latency (DP solves are timed by the caller).
+            let mut tp_planning_s = 0.0f64;
             // Element-wise loads prorated by actual cut overlap.
             let ew_loads = plan.rank_loads(fb, |p| {
                 if p.param.is_matrix_opt() { 0.0 } else { p.numel() as f64 }
@@ -356,7 +355,7 @@ fn optimizer_step(s: &Scenario, locals: &[LocalParam], fb: &FlatBuffer) -> OptSt
             let mut dp_flops = vec![0.0; s.dp];
             let mut dp_state = vec![0.0; s.dp];
             let mut dp_time = vec![0.0; s.dp];
-            let mut worst: (f64, Option<TpPlan>) = (0.0, None);
+            let mut worst: (f64, Option<Arc<TpPlan>>) = (0.0, None);
             for d in 0..s.dp {
                 let owned_matrix: Vec<usize> = rank_params[d]
                     .iter()
@@ -374,20 +373,25 @@ fn optimizer_step(s: &Scenario, locals: &[LocalParam], fb: &FlatBuffer) -> OptSt
                     + ew_loads[d] * 8.0;
 
                 let tp_time = if tp > 1 && !tasks.is_empty() {
-                    let tplan = if lb {
-                        match s.c_max_bytes {
-                            // No-Fuse (Fig. 14 baseline): one collective
-                            // per tensor, hosts still load-balanced.
-                            None => unfused_plan(tasks.clone(), tp),
-                            Some(cb) => {
-                                let cap = c_max_units(cb, s.metric, &tasks)
-                                    .max(tasks.iter().map(|t| t.cost).fold(0.0, f64::max));
-                                build_micro_groups(tasks.clone(), tp, cap)
+                    let t_tp = Instant::now();
+                    let key = TpKey::for_scenario(s, stage, d);
+                    let tplan = cache.tp_plan(&key, || {
+                        if lb {
+                            match s.c_max_bytes {
+                                // No-Fuse (Fig. 14 baseline): one collective
+                                // per tensor, hosts still load-balanced.
+                                None => unfused_plan(tasks.clone(), tp),
+                                Some(cb) => {
+                                    let cap = c_max_units(cb, s.metric, &tasks)
+                                        .max(tasks.iter().map(|t| t.cost).fold(0.0, f64::max));
+                                    build_micro_groups(tasks.clone(), tp, cap)
+                                }
                             }
+                        } else {
+                            naive_tp_plan(tasks.clone(), tp, s.c_max_bytes)
                         }
-                    } else {
-                        naive_tp_plan(tasks.clone(), tp, s.c_max_bytes)
-                    };
+                    });
+                    tp_planning_s += t_tp.elapsed().as_secs_f64();
                     let t = tp_pipeline(&tplan, &comm, gpu);
                     if dp_flops[d] >= worst.0 {
                         worst = (dp_flops[d], Some(tplan));
@@ -414,7 +418,7 @@ fn optimizer_step(s: &Scenario, locals: &[LocalParam], fb: &FlatBuffer) -> OptSt
                 tp_loads_flops,
                 tp_loads_state,
                 n_micro_groups: n_groups,
-                planning_s,
+                planning_s: tp_planning_s,
             }
         }
     }
@@ -584,44 +588,57 @@ fn fwd_bwd_time(
     (total, exposed_bwd + exposed_fwd, grad_bytes_per_gpu)
 }
 
-/// Simulate one full iteration; the slowest PP stage paces both phases.
+/// Simulate one full iteration with a throwaway plan cache (cold path).
 pub fn simulate_iteration(s: &Scenario) -> Breakdown {
+    simulate_iteration_cached(s, &PlanCache::new())
+}
+
+/// Simulate one full iteration; the slowest PP stage paces both phases.
+///
+/// The DP partition of each stage is solved **once** (shared between the
+/// gradient-path shard geometry and the optimizer step) and memoized in
+/// `cache`, as are the per-rank TP micro-group plans — a warm cache skips
+/// every LPT solve, which is what makes repeated scenario sweeps fast.
+pub fn simulate_iteration_cached(s: &Scenario, cache: &PlanCache) -> Breakdown {
     let stages = stage_census(&s.census, s.pp);
     let mut out = Breakdown::default();
-    for stage in &stages {
+    for (si, stage) in stages.iter().enumerate() {
         let locals = local_view(stage, s.tp);
         let local_census: Vec<Param> = locals.iter().map(|lp| lp.local.clone()).collect();
         let fb = FlatBuffer::build(&local_census, s.bucket_elems);
 
-        // The gradient-path shard sizes come from the same plan the
-        // optimizer uses (variable-size RS for ASC/LB-ASC).
-        let shards = match s.strategy {
-            DpStrategy::Asc => {
-                let plan = naive_atomic_per_bucket(&fb, s.dp);
-                Some((0..fb.buckets.len()).map(|i| {
-                    plan.shard_sizes(i).iter().map(|&x| x as f64).collect()
-                }).collect())
-            }
+        // One DP plan per stage: it defines both the gradient-path shard
+        // sizes (variable-size RS for ASC/LB-ASC) and optimizer ownership.
+        let t_plan = Instant::now();
+        let dp_plan: Option<Arc<DpPlan>> = match s.strategy {
+            DpStrategy::Asc => Some(cache.dp_plan(&DpKey::for_scenario(s, si), || {
+                naive_atomic_per_bucket(&fb, s.dp)
+            })),
             DpStrategy::LbAsc => {
                 let optim = OptimCost::new(s.optim);
                 let metric = s.metric;
-                let locals_ref = &locals;
-                let plan = alpha_balanced(&fb, s.dp, s.alpha, true, move |p| {
-                    if p.param.is_matrix_opt() {
-                        optim.cost(&locals_ref[p.index].full_shape, metric)
-                    } else {
-                        optim.cost(&p.param.shape, metric)
-                    }
-                });
-                Some((0..fb.buckets.len()).map(|i| {
-                    plan.shard_sizes(i).iter().map(|&x| x as f64).collect()
-                }).collect())
+                let locals_ref: &[LocalParam] = &locals;
+                Some(cache.dp_plan(&DpKey::for_scenario(s, si), || {
+                    alpha_balanced(&fb, s.dp, s.alpha, true, move |p| {
+                        if p.param.is_matrix_opt() {
+                            optim.cost(&locals_ref[p.index].full_shape, metric)
+                        } else {
+                            optim.cost(&p.param.shape, metric)
+                        }
+                    })
+                }))
             }
             _ => None,
         };
+        let dp_planning_s = t_plan.elapsed().as_secs_f64();
+        let shards: Option<Vec<Vec<f64>>> = dp_plan.as_ref().map(|plan| {
+            (0..fb.buckets.len())
+                .map(|i| plan.shard_sizes(i).iter().map(|&x| x as f64).collect())
+                .collect()
+        });
 
         let (fb_time, exposed, grad_bytes) = fwd_bwd_time(s, &locals, &fb, shards);
-        let opt = optimizer_step(s, &locals, &fb);
+        let opt = optimizer_step(s, &locals, &fb, si, dp_plan.as_ref(), cache);
 
         // AdamW reference: equal-chunk ZeRO-1, memory-bound, per DP rank.
         let adamw_elems = fb.total as f64 / s.dp as f64;
@@ -639,7 +656,7 @@ pub fn simulate_iteration(s: &Scenario) -> Breakdown {
             out.grad_comm_bytes = grad_bytes;
             out.adamw_ref_s = adamw_t;
         }
-        out.planning_s += opt.planning_s;
+        out.planning_s += dp_planning_s + opt.planning_s;
     }
     out.total_s = out.fwd_bwd_s + out.optimizer_s;
     out
@@ -708,5 +725,36 @@ mod tests {
         s.tp = 1;
         let b = simulate_iteration(&s);
         assert!(b.optimizer_s > 0.0);
+    }
+
+    #[test]
+    fn warm_cache_skips_solves_and_preserves_results() {
+        fn timing_free(b: &Breakdown) -> (u64, u64, u64, Vec<u64>, Vec<u64>, usize) {
+            (
+                b.fwd_bwd_s.to_bits(),
+                b.optimizer_s.to_bits(),
+                b.exposed_comm_s.to_bits(),
+                b.dp_loads_flops.iter().map(|x| x.to_bits()).collect(),
+                b.tp_loads_flops.iter().map(|x| x.to_bits()).collect(),
+                b.n_micro_groups,
+            )
+        }
+        for strategy in [DpStrategy::Sc, DpStrategy::NvLayerwise,
+                         DpStrategy::Asc, DpStrategy::LbAsc] {
+            let s = scen(strategy);
+            let cache = PlanCache::new();
+            let first = simulate_iteration_cached(&s, &cache);
+            let solves = cache.stats().solves;
+            let second = simulate_iteration_cached(&s, &cache);
+            assert_eq!(cache.stats().solves, solves,
+                       "{strategy:?}: warm run re-solved a plan");
+            if strategy != DpStrategy::Sc {
+                assert!(solves > 0, "{strategy:?}: no solve recorded");
+                assert!(cache.stats().hits > 0, "{strategy:?}: no cache hit");
+            }
+            let cold = simulate_iteration(&s);
+            assert_eq!(timing_free(&first), timing_free(&second), "{strategy:?}");
+            assert_eq!(timing_free(&first), timing_free(&cold), "{strategy:?}");
+        }
     }
 }

@@ -16,5 +16,5 @@ pub mod iteration;
 pub mod scenario;
 pub mod stream;
 
-pub use iteration::{simulate_iteration, Breakdown};
+pub use iteration::{simulate_iteration, simulate_iteration_cached, Breakdown};
 pub use scenario::Scenario;

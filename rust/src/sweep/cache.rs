@@ -1,0 +1,246 @@
+//! Plan cache: memoized `DpPlan` / `TpPlan` artifacts keyed by scenario
+//! fingerprint.
+//!
+//! The offline planner (paper Appendix D.1) is deterministic and pure in
+//! the scenario, so its outputs are cacheable across `simulate_iteration`
+//! calls. Keys capture exactly the inputs a plan depends on:
+//!
+//! * **DP plans** — model (census), PP stage, grid, strategy, α, cost
+//!   metric, bucket size. The optimizer enters the key only when the
+//!   metric is optimizer-dependent: under the paper-default `Numel`
+//!   proxy, every optimizer weighs a tensor identically, so e.g. the
+//!   AdamW anchors of Fig. 7 share DP plans with the Muon runs.
+//! * **TP plans** — additionally the DP rank (host-task sets differ per
+//!   rank), `C_max`, and always the optimizer (task FLOPs/state models
+//!   are optimizer-specific).
+//!
+//! The fingerprint assumes `Scenario::census` is derived from the model
+//! label (true for every constructor); hardware profiles are deliberately
+//! excluded — plans are hardware-independent.
+//!
+//! Concurrency: maps sit behind mutexes; a solve runs *outside* the lock,
+//! so two threads racing on one key may both solve — the algorithms are
+//! deterministic, so either result is structurally identical and the
+//! first insert wins. Hit/solve counters are exact (a "solve" increments
+//! only when a closure actually ran), which is what the cache-statistics
+//! assertions in `tests/sweep_determinism.rs` rely on.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cost::optim::{CostMetric, OptimKind};
+use crate::partition::{DpPlan, DpStrategy, LayerwisePlan};
+use crate::schedule::microgroup::TpPlan;
+use crate::sim::Scenario;
+
+/// Fingerprint of one DP-plane planning problem.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct DpKey {
+    pub model: String,
+    pub stage: usize,
+    pub pp: usize,
+    pub dp: usize,
+    pub tp: usize,
+    pub strategy: DpStrategy,
+    /// `None` under optimizer-agnostic metrics (Numel).
+    pub optim: Option<OptimKind>,
+    pub metric: CostMetric,
+    /// `f64::to_bits` of α (0 for strategies that ignore it).
+    pub alpha_bits: u64,
+    pub bucket_elems: usize,
+}
+
+impl DpKey {
+    pub fn for_scenario(s: &Scenario, stage: usize) -> DpKey {
+        DpKey {
+            model: s.label.clone(),
+            stage,
+            pp: s.pp,
+            dp: s.dp,
+            tp: s.tp,
+            strategy: s.strategy,
+            optim: match s.metric {
+                CostMetric::Numel => None,
+                _ => Some(s.optim),
+            },
+            metric: s.metric,
+            alpha_bits: if s.strategy == DpStrategy::LbAsc { s.alpha.to_bits() } else { 0 },
+            bucket_elems: s.bucket_elems,
+        }
+    }
+}
+
+/// Fingerprint of one TP-plane scheduling problem (per DP rank).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct TpKey {
+    pub dp_key: DpKey,
+    pub rank: usize,
+    /// `f64::to_bits` of `C_max` in bytes; `None` = No-Fuse.
+    pub c_max_bits: Option<u64>,
+    /// Task costs always depend on the optimizer.
+    pub optim: OptimKind,
+}
+
+impl TpKey {
+    pub fn for_scenario(s: &Scenario, stage: usize, rank: usize) -> TpKey {
+        TpKey {
+            dp_key: DpKey::for_scenario(s, stage),
+            rank,
+            c_max_bits: s.c_max_bytes.map(f64::to_bits),
+            optim: s.optim,
+        }
+    }
+}
+
+/// Cache hit/solve statistics snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    /// Number of solver closures actually executed (cold paths).
+    pub solves: u64,
+}
+
+/// Thread-safe memoization of partition and schedule artifacts.
+#[derive(Default)]
+pub struct PlanCache {
+    dp: Mutex<HashMap<DpKey, Arc<DpPlan>>>,
+    layerwise: Mutex<HashMap<DpKey, Arc<LayerwisePlan>>>,
+    tp: Mutex<HashMap<TpKey, Arc<TpPlan>>>,
+    hits: AtomicU64,
+    solves: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    fn get_or_solve<K, V, F>(
+        &self,
+        map: &Mutex<HashMap<K, Arc<V>>>,
+        key: &K,
+        solve: F,
+    ) -> Arc<V>
+    where
+        K: Clone + std::hash::Hash + Eq,
+        F: FnOnce() -> V,
+    {
+        if let Some(hit) = map.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        self.solves.fetch_add(1, Ordering::Relaxed);
+        let solved = Arc::new(solve());
+        map.lock().unwrap().entry(key.clone()).or_insert(solved).clone()
+    }
+
+    /// Memoized DP partition plan (α-balanced / naive-atomic).
+    pub fn dp_plan<F: FnOnce() -> DpPlan>(&self, key: &DpKey, solve: F) -> Arc<DpPlan> {
+        self.get_or_solve(&self.dp, key, solve)
+    }
+
+    /// Memoized NV-layerwise ownership plan.
+    pub fn layerwise_plan<F: FnOnce() -> LayerwisePlan>(
+        &self,
+        key: &DpKey,
+        solve: F,
+    ) -> Arc<LayerwisePlan> {
+        self.get_or_solve(&self.layerwise, key, solve)
+    }
+
+    /// Memoized TP micro-group plan for one DP rank.
+    pub fn tp_plan<F: FnOnce() -> TpPlan>(&self, key: &TpKey, solve: F) -> Arc<TpPlan> {
+        self.get_or_solve(&self.tp, key, solve)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            solves: self.solves.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of cached plans across all maps.
+    pub fn len(&self) -> usize {
+        self.dp.lock().unwrap().len()
+            + self.layerwise.lock().unwrap().len()
+            + self.tp.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (counters are kept).
+    pub fn clear(&self) {
+        self.dp.lock().unwrap().clear();
+        self.layerwise.lock().unwrap().clear();
+        self.tp.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optim::OptimKind;
+    use crate::model::qwen3::Qwen3Size;
+
+    fn scen() -> Scenario {
+        Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, DpStrategy::LbAsc)
+    }
+
+    #[test]
+    fn keys_normalize_optimizer_under_numel() {
+        let a = DpKey::for_scenario(&scen(), 0);
+        let b = DpKey::for_scenario(&scen().with_optim(OptimKind::Shampoo), 0);
+        assert_eq!(a, b, "Numel metric must be optimizer-agnostic");
+        let c = DpKey::for_scenario(
+            &scen().with_metric(CostMetric::Flops), 0);
+        let d = DpKey::for_scenario(
+            &scen().with_metric(CostMetric::Flops).with_optim(OptimKind::Shampoo), 0);
+        assert_ne!(c, d, "Flops metric is optimizer-specific");
+    }
+
+    #[test]
+    fn tp_keys_always_carry_optimizer() {
+        let a = TpKey::for_scenario(&scen(), 0, 3);
+        let b = TpKey::for_scenario(&scen().with_optim(OptimKind::Shampoo), 0, 3);
+        assert_ne!(a, b);
+        assert_ne!(a, TpKey::for_scenario(&scen(), 0, 4));
+    }
+
+    #[test]
+    fn alpha_ignored_for_non_lb_strategies() {
+        let asc = scen().with_strategy(DpStrategy::Asc);
+        let a = DpKey::for_scenario(&asc.clone().with_alpha(0.25), 0);
+        let b = DpKey::for_scenario(&asc.with_alpha(0.75), 0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn c_max_outside_dp_key() {
+        let a = DpKey::for_scenario(&scen().with_c_max(None), 0);
+        let b = DpKey::for_scenario(&scen().with_c_max(Some(64e6)), 0);
+        assert_eq!(a, b, "C_max is a TP-plane knob");
+    }
+
+    #[test]
+    fn hit_skips_solve() {
+        let cache = PlanCache::new();
+        let key = DpKey::for_scenario(&scen(), 0);
+        let mk = || DpPlan {
+            ranks: 1,
+            cuts: vec![vec![0, 10]],
+            atomicity: crate::partition::Atomicity::None,
+        };
+        let first = cache.dp_plan(&key, mk);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, solves: 1 });
+        let second = cache.dp_plan(&key, || panic!("must not re-solve"));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, solves: 1 });
+        assert_eq!(first.cuts, second.cuts);
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

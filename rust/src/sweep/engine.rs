@@ -1,0 +1,194 @@
+//! The sweep engine: plan-cached, work-stealing scenario evaluation.
+//!
+//! One [`SweepEngine`] owns a [`PlanCache`] and a worker count; `eval`
+//! fans scenarios out over `util::pool` and merges [`Breakdown`]s back in
+//! scenario order. A process-wide [`SweepEngine::global`] instance backs
+//! the figure harnesses, so `experiments::run("all")` shares one warm
+//! cache across all thirteen harnesses.
+
+use std::sync::OnceLock;
+
+use crate::sim::{simulate_iteration_cached, Breakdown, Scenario};
+use crate::util::json::Value;
+use crate::util::pool;
+use crate::util::stats::load_balance_ratio;
+use crate::util::table::{ratio, secs, Table};
+
+use super::cache::{CacheStats, PlanCache};
+use super::grid::SweepGrid;
+
+pub struct SweepEngine {
+    cache: PlanCache,
+    threads: usize,
+}
+
+impl SweepEngine {
+    /// An engine with its own cold cache.
+    pub fn new(threads: usize) -> SweepEngine {
+        SweepEngine { cache: PlanCache::new(), threads: threads.max(1) }
+    }
+
+    /// The shared process-wide engine (thread count from
+    /// `CANZONA_SWEEP_THREADS`, default: available parallelism).
+    pub fn global() -> &'static SweepEngine {
+        static GLOBAL: OnceLock<SweepEngine> = OnceLock::new();
+        GLOBAL.get_or_init(|| SweepEngine::new(pool::default_threads()))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Evaluate one scenario against the shared cache.
+    pub fn eval_one(&self, s: &Scenario) -> Breakdown {
+        simulate_iteration_cached(s, &self.cache)
+    }
+
+    /// Evaluate a scenario batch in parallel; results come back in input
+    /// order, independent of worker scheduling.
+    pub fn eval(&self, scenarios: &[Scenario]) -> Vec<Breakdown> {
+        pool::parallel_map(scenarios, self.threads, |s| {
+            simulate_iteration_cached(s, &self.cache)
+        })
+    }
+
+    /// Expand and evaluate a grid.
+    pub fn run_grid(&self, grid: &SweepGrid) -> (Vec<Scenario>, Vec<Breakdown>) {
+        let scenarios = grid.scenarios();
+        let breakdowns = self.eval(&scenarios);
+        (scenarios, breakdowns)
+    }
+}
+
+/// Render a sweep as one Markdown table, one row per scenario, in
+/// scenario order.
+pub fn render_table(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Table {
+    assert_eq!(scenarios.len(), breakdowns.len());
+    let mut t = Table::new(
+        &format!("Sweep — {} scenarios", scenarios.len()),
+        &["model", "DP", "TP", "PP", "optim", "strategy", "alpha", "C_max",
+          "fwd-bwd", "optimizer", "total", "DP LB", "TP LB", "groups"],
+    );
+    for (s, b) in scenarios.iter().zip(breakdowns) {
+        t.row(vec![
+            s.label.clone(),
+            s.dp.to_string(),
+            s.tp.to_string(),
+            s.pp.to_string(),
+            s.optim.label().into(),
+            s.strategy.label().into(),
+            format!("{:.2}", s.alpha),
+            match s.c_max_bytes {
+                None => "no-fuse".into(),
+                Some(b) => format!("{:.0}MB", b / 1e6),
+            },
+            secs(b.fwd_bwd_s),
+            secs(b.optimizer_s),
+            secs(b.total_s),
+            ratio(load_balance_ratio(&b.dp_loads_flops)),
+            ratio(load_balance_ratio(&b.tp_loads_flops)),
+            b.n_micro_groups.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render a sweep as a JSON artifact (stable key order via
+/// `util::json`'s BTreeMap objects).
+pub fn render_json(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Value {
+    assert_eq!(scenarios.len(), breakdowns.len());
+    let rows = scenarios.iter().zip(breakdowns).map(|(s, b)| {
+        Value::obj(vec![
+            ("model", Value::str(&s.label)),
+            ("dp", Value::num(s.dp as f64)),
+            ("tp", Value::num(s.tp as f64)),
+            ("pp", Value::num(s.pp as f64)),
+            ("optim", Value::str(s.optim.label())),
+            ("strategy", Value::str(s.strategy.label())),
+            ("alpha", Value::num(s.alpha)),
+            ("c_max_bytes", s.c_max_bytes.map(Value::num).unwrap_or(Value::Null)),
+            ("fwd_bwd_s", Value::num(b.fwd_bwd_s)),
+            ("optimizer_s", Value::num(b.optimizer_s)),
+            ("total_s", Value::num(b.total_s)),
+            ("exposed_comm_s", Value::num(b.exposed_comm_s)),
+            ("dp_lb_ratio", Value::num(load_balance_ratio(&b.dp_loads_flops))),
+            ("tp_lb_ratio", Value::num(load_balance_ratio(&b.tp_loads_flops))),
+            ("micro_groups", Value::num(b.n_micro_groups as f64)),
+        ])
+    });
+    Value::obj(vec![("scenarios", Value::arr(rows))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optim::OptimKind;
+    use crate::model::qwen3::Qwen3Size;
+    use crate::partition::DpStrategy;
+
+    fn small_grid() -> SweepGrid {
+        SweepGrid {
+            models: vec![Qwen3Size::S1_7B],
+            dp: vec![4, 8],
+            tp: vec![2],
+            pp: vec![1],
+            optims: vec![OptimKind::Muon],
+            strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+            alphas: vec![1.0],
+            c_max_mb: vec![Some(256.0)],
+            metric: crate::cost::optim::CostMetric::Numel,
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_tables() {
+        let grid = small_grid();
+        let serial = SweepEngine::new(1);
+        let parallel = SweepEngine::new(4);
+        let (scens_a, res_a) = serial.run_grid(&grid);
+        let (scens_b, res_b) = parallel.run_grid(&grid);
+        assert_eq!(
+            render_table(&scens_a, &res_a).render(),
+            render_table(&scens_b, &res_b).render(),
+        );
+    }
+
+    #[test]
+    fn repeated_grid_hits_cache() {
+        let engine = SweepEngine::new(2);
+        let grid = small_grid();
+        engine.run_grid(&grid);
+        let solves = engine.cache_stats().solves;
+        assert!(solves > 0);
+        engine.run_grid(&grid);
+        assert_eq!(engine.cache_stats().solves, solves, "second run must be all hits");
+        assert!(engine.cache_stats().hits >= solves);
+    }
+
+    #[test]
+    fn json_artifact_shape() {
+        let engine = SweepEngine::new(2);
+        let grid = small_grid();
+        let (scens, res) = engine.run_grid(&grid);
+        let v = render_json(&scens, &res);
+        let rows = v.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].get("model").unwrap().as_str().unwrap(), "Qwen3-1.7B");
+        assert!(rows[0].get("total_s").unwrap().as_f64().unwrap() > 0.0);
+        // Round-trips through the serializer.
+        assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn global_engine_is_shared() {
+        assert!(std::ptr::eq(SweepEngine::global(), SweepEngine::global()));
+    }
+}

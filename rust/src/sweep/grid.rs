@@ -1,0 +1,221 @@
+//! Scenario grid specification for batch sweeps.
+//!
+//! A [`SweepGrid`] is the cross product of the axes a paper experiment
+//! varies (model × DP × TP × PP × optimizer × strategy × α × C_max).
+//! [`SweepGrid::scenarios`] expands it in a fixed axis order, so a grid
+//! always yields the same scenario sequence — the deterministic merge
+//! order of the parallel runner.
+
+use crate::cost::optim::{CostMetric, OptimKind};
+use crate::model::qwen3::Qwen3Size;
+use crate::partition::DpStrategy;
+use crate::sim::Scenario;
+use crate::util::cli::Args;
+use crate::util::error::Result;
+use crate::{bail, err};
+
+/// One sweep's axes. Empty axes are invalid; single-element axes pin a
+/// dimension.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    pub models: Vec<Qwen3Size>,
+    pub dp: Vec<usize>,
+    pub tp: Vec<usize>,
+    pub pp: Vec<usize>,
+    pub optims: Vec<OptimKind>,
+    pub strategies: Vec<DpStrategy>,
+    pub alphas: Vec<f64>,
+    /// `None` entries mean No-Fuse.
+    pub c_max_mb: Vec<Option<f64>>,
+    pub metric: CostMetric,
+}
+
+impl Default for SweepGrid {
+    /// The paper's main-results configuration as a 1-point grid.
+    fn default() -> SweepGrid {
+        SweepGrid {
+            models: vec![Qwen3Size::S32B],
+            dp: vec![32],
+            tp: vec![8],
+            pp: vec![1],
+            optims: vec![OptimKind::Muon],
+            strategies: vec![DpStrategy::LbAsc],
+            alphas: vec![1.0],
+            c_max_mb: vec![Some(512.0)],
+            metric: CostMetric::Numel,
+        }
+    }
+}
+
+fn parse_list<T, F: Fn(&str) -> Option<T>>(
+    raw: &str,
+    what: &str,
+    parse: F,
+) -> Result<Vec<T>> {
+    let items: Vec<T> = raw
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| parse(s.trim()).ok_or_else(|| err!("invalid {what} value {s:?}")))
+        .collect::<Result<_>>()?;
+    if items.is_empty() {
+        bail!("--{what} list is empty");
+    }
+    Ok(items)
+}
+
+/// Positive integer axis value (0 would panic deep in the planners).
+fn parse_dim(s: &str) -> Option<usize> {
+    s.parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+impl SweepGrid {
+    /// Parse grid axes from CLI options; absent options keep defaults.
+    ///
+    /// `--models 8b,32b --dp 16,32 --tp 1,2,4,8 --pp 1 --optims muon,soap
+    ///  --strategies sc,asc,lb-asc --alphas 0.5,1.0 --c-max-mb 512,none
+    ///  --metric numel`
+    pub fn parse(args: &Args) -> Result<SweepGrid> {
+        let mut g = SweepGrid::default();
+        if let Some(raw) = args.get("models") {
+            g.models = parse_list(raw, "models", Qwen3Size::parse)?;
+        }
+        if let Some(raw) = args.get("dp") {
+            g.dp = parse_list(raw, "dp", parse_dim)?;
+        }
+        if let Some(raw) = args.get("tp") {
+            g.tp = parse_list(raw, "tp", parse_dim)?;
+        }
+        if let Some(raw) = args.get("pp") {
+            g.pp = parse_list(raw, "pp", parse_dim)?;
+        }
+        if let Some(raw) = args.get("optims") {
+            g.optims = parse_list(raw, "optims", OptimKind::parse)?;
+        }
+        if let Some(raw) = args.get("strategies") {
+            g.strategies = parse_list(raw, "strategies", DpStrategy::parse)?;
+        }
+        if let Some(raw) = args.get("alphas") {
+            g.alphas = parse_list(raw, "alphas", |s| {
+                s.parse::<f64>().ok().filter(|a| (0.0..=1.0).contains(a))
+            })?;
+        }
+        if let Some(raw) = args.get("c-max-mb") {
+            g.c_max_mb = parse_list(raw, "c-max-mb", |s| {
+                if s.eq_ignore_ascii_case("none") || s == "0" {
+                    Some(None)
+                } else {
+                    s.parse::<f64>().ok().filter(|mb| *mb > 0.0).map(Some)
+                }
+            })?;
+        }
+        if let Some(raw) = args.get("metric") {
+            g.metric = match raw.to_ascii_lowercase().as_str() {
+                "numel" => CostMetric::Numel,
+                "flops" => CostMetric::Flops,
+                "state" | "state-bytes" => CostMetric::StateBytes,
+                _ => bail!("unknown metric {raw:?} (numel/flops/state)"),
+            };
+        }
+        Ok(g)
+    }
+
+    /// Cross-product size.
+    pub fn len(&self) -> usize {
+        self.models.len()
+            * self.dp.len()
+            * self.tp.len()
+            * self.pp.len()
+            * self.optims.len()
+            * self.strategies.len()
+            * self.alphas.len()
+            * self.c_max_mb.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the grid in fixed axis order
+    /// (model → dp → tp → pp → optim → strategy → α → C_max).
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for &model in &self.models {
+            for &dp in &self.dp {
+                for &tp in &self.tp {
+                    for &pp in &self.pp {
+                        for &optim in &self.optims {
+                            for &strategy in &self.strategies {
+                                for &alpha in &self.alphas {
+                                    for &c_mb in &self.c_max_mb {
+                                        let s = Scenario::new(model, dp, tp, pp, optim, strategy)
+                                            .with_alpha(alpha)
+                                            .with_c_max(c_mb.map(|mb| mb * 1e6))
+                                            .with_metric(self.metric);
+                                        out.push(s);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()), &[]).unwrap()
+    }
+
+    #[test]
+    fn default_grid_is_paper_main() {
+        let g = SweepGrid::default();
+        assert_eq!(g.len(), 1);
+        let s = &g.scenarios()[0];
+        assert_eq!(s.dp, 32);
+        assert_eq!(s.tp, 8);
+        assert_eq!(s.strategy, DpStrategy::LbAsc);
+    }
+
+    #[test]
+    fn parses_axes_and_expands_in_order() {
+        let g = SweepGrid::parse(&argv(
+            "--models 1.7b,8b --tp 2,4 --strategies asc,lb-asc")).unwrap();
+        assert_eq!(g.len(), 8);
+        let scens = g.scenarios();
+        assert_eq!(scens.len(), 8);
+        // Axis order: model varies slowest, strategy fastest here.
+        assert_eq!(scens[0].label, "Qwen3-1.7B");
+        assert_eq!(scens[0].tp, 2);
+        assert_eq!(scens[0].strategy, DpStrategy::Asc);
+        assert_eq!(scens[1].strategy, DpStrategy::LbAsc);
+        assert_eq!(scens[4].label, "Qwen3-8B");
+    }
+
+    #[test]
+    fn c_max_none_disables_fusion() {
+        let g = SweepGrid::parse(&argv("--c-max-mb none,256")).unwrap();
+        let scens = g.scenarios();
+        assert_eq!(scens[0].c_max_bytes, None);
+        assert_eq!(scens[1].c_max_bytes, Some(256e6));
+    }
+
+    #[test]
+    fn rejects_bad_axes() {
+        assert!(SweepGrid::parse(&argv("--models 70b")).is_err());
+        assert!(SweepGrid::parse(&argv("--strategies warp")).is_err());
+        assert!(SweepGrid::parse(&argv("--metric vibes")).is_err());
+        assert!(SweepGrid::parse(&argv("--dp ,")).is_err());
+        // Values that would panic deep in the planners must error here.
+        assert!(SweepGrid::parse(&argv("--dp 0")).is_err());
+        assert!(SweepGrid::parse(&argv("--tp 0,2")).is_err());
+        assert!(SweepGrid::parse(&argv("--pp 0")).is_err());
+        assert!(SweepGrid::parse(&argv("--alphas 1.5")).is_err());
+        assert!(SweepGrid::parse(&argv("--alphas -0.1")).is_err());
+    }
+}

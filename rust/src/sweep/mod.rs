@@ -1,0 +1,26 @@
+//! Batch scenario evaluation: the plan-cached, parallel sweep engine.
+//!
+//! The paper's evaluation is hundreds of (model × DP/TP/PP grid ×
+//! optimizer × strategy) scenarios. This subsystem turns the one-off
+//! figure harnesses into a reusable batch-evaluation service:
+//!
+//! * [`cache`] — memoized `DpPlan` / `TpPlan` artifacts keyed by scenario
+//!   fingerprint, so repeated `simulate_iteration` calls reuse partitions
+//!   and micro-group schedules instead of re-solving LPT (the same
+//!   amortize-the-planning move Dion/DMuon make across steps).
+//! * [`grid`] — declarative scenario grids with deterministic expansion
+//!   order.
+//! * [`engine`] — the work-stealing runner (over [`crate::util::pool`])
+//!   that fans a grid across cores and merges results in scenario order,
+//!   plus table/JSON artifact rendering.
+//!
+//! Every `experiments::figures` harness runs on [`engine::SweepEngine::global`],
+//! and the `canzona sweep` CLI subcommand exposes ad-hoc grids.
+
+pub mod cache;
+pub mod engine;
+pub mod grid;
+
+pub use cache::{CacheStats, DpKey, PlanCache, TpKey};
+pub use engine::{render_json, render_table, SweepEngine};
+pub use grid::SweepGrid;

@@ -5,9 +5,9 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::buffer::FlatBuffer;
+use crate::util::error::{Context, Result};
+use crate::{ensure, err};
 use crate::collectives::{Communicator, Group};
 use crate::partition::{alpha_balanced, naive_atomic, Atomicity, DpPlan, DpStrategy};
 use crate::runtime::{literal_f32, literal_i32, literal_scalar, to_f32_vec, Manifest, Runtime};
@@ -105,7 +105,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         DpStrategy::LbAsc => Some(Arc::new(alpha_balanced(
             &fb, cfg.ranks, cfg.alpha, false, |p| p.numel() as f64))),
         DpStrategy::NvLayerwise => {
-            return Err(anyhow!("numeric trainer supports sc/asc/lb-asc strategies"))
+            return Err(err!("numeric trainer supports sc/asc/lb-asc strategies"))
         }
     };
     if let Some(p) = &plan {
@@ -130,7 +130,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     }
     let mut result = None;
     for (rank, h) in handles.into_iter().enumerate() {
-        let r = h.join().map_err(|_| anyhow!("rank {rank} panicked"))??;
+        let r = h.join().map_err(|_| err!("rank {rank} panicked"))??;
         if rank == 0 {
             result = Some(r);
         }
@@ -196,8 +196,8 @@ fn rank_main(
         inputs.push(literal_i32(&b.tokens, &bs)?);
         inputs.push(literal_i32(&b.targets, &bs)?);
         let outputs = rt.execute(&fwd_bwd_file, &inputs)?;
-        anyhow::ensure!(outputs.len() == manifest.params.len() + 1,
-                        "unexpected fwd_bwd arity {}", outputs.len());
+        ensure!(outputs.len() == manifest.params.len() + 1,
+                "unexpected fwd_bwd arity {}", outputs.len());
         let loss = outputs[0].to_vec::<f32>()?[0];
         for (i, out) in outputs[1..].iter().enumerate() {
             let placed = &fb.params[i];
@@ -252,7 +252,7 @@ fn rank_main(
                     literal_scalar(muon_lr),
                     literal_scalar(muon_beta),
                 ])?;
-                anyhow::ensure!(outs.len() == 2, "muon artifact arity");
+                ensure!(outs.len() == 2, "muon artifact arity");
                 flat[placed.start..placed.end].copy_from_slice(&to_f32_vec(&outs[0])?);
                 states[i].copy_from_slice(&to_f32_vec(&outs[1])?);
             } else {
@@ -266,7 +266,7 @@ fn rank_main(
                     literal_scalar(step as f32),
                     literal_scalar(adamw_lr),
                 ])?;
-                anyhow::ensure!(outs.len() == 3, "adamw artifact arity");
+                ensure!(outs.len() == 3, "adamw artifact arity");
                 flat[placed.start..placed.end].copy_from_slice(&to_f32_vec(&outs[0])?);
                 let new_m = to_f32_vec(&outs[1])?;
                 let new_v = to_f32_vec(&outs[2])?;

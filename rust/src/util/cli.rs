@@ -4,7 +4,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -28,7 +29,7 @@ impl Args {
                 } else {
                     let v = it
                         .next()
-                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                        .ok_or_else(|| err!("option --{body} expects a value"))?;
                     out.options.insert(body.to_string(), v);
                 }
             } else if arg.starts_with('-') && arg.len() > 1 {
@@ -57,7 +58,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+                .map_err(|_| err!("--{name} expects an integer, got {v:?}")),
         }
     }
 
@@ -66,7 +67,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+                .map_err(|_| err!("--{name} expects a number, got {v:?}")),
         }
     }
 }

@@ -1,0 +1,176 @@
+//! Minimal error handling (anyhow is unavailable offline).
+//!
+//! A single string-backed [`Error`] type plus the small surface the rest
+//! of the crate uses from anyhow: the [`crate::err!`] / [`crate::bail!`] /
+//! [`crate::ensure!`] macros and a [`Context`] extension trait for
+//! `Result` and `Option`.
+
+use std::fmt;
+
+/// A boxed-string error with an optional context chain baked into the
+/// message (`"context: cause"`).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: Into<String>>(msg: M) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend a context layer, anyhow-style.
+    pub fn wrap<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Attach context to a failure (`Result::Err` or `Option::None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Bail unless a condition holds (anyhow's `ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broke with code {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "broke with code 7");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing key {:?}", "k")).unwrap_err();
+        assert!(e.to_string().contains("missing key"));
+    }
+
+    #[test]
+    fn conversions_via_question_mark() {
+        fn parse(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert_eq!(parse("2.5").unwrap(), 2.5);
+        assert!(parse("nope").is_err());
+    }
+}

@@ -7,7 +7,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{bail, err};
 
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,7 +36,7 @@ impl Value {
     // ---- typed accessors -------------------------------------------------
     pub fn get(&self, key: &str) -> Result<&Value> {
         match self {
-            Value::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            Value::Obj(m) => m.get(key).ok_or_else(|| err!("missing key {key:?}")),
             _ => bail!("not an object (looking up {key:?})"),
         }
     }
@@ -173,7 +174,7 @@ impl<'a> Parser<'a> {
         self.bytes
             .get(self.pos)
             .copied()
-            .ok_or_else(|| anyhow!("unexpected end of input"))
+            .ok_or_else(|| err!("unexpected end of input"))
     }
 
     fn expect(&mut self, b: u8) -> Result<()> {

@@ -1,13 +1,15 @@
 //! Offline-environment substrates.
 //!
-//! Only `xla` and `anyhow` are available as external crates in this build
-//! environment, so the usual ecosystem pieces (serde_json, clap, rand,
-//! proptest, criterion) are implemented here from scratch, scoped to what
+//! No external crates are available in this build environment, so the
+//! usual ecosystem pieces (anyhow, serde_json, clap, rand, proptest,
+//! criterion, rayon) are implemented here from scratch, scoped to what
 //! the rest of the crate needs.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,149 @@
+//! Work-stealing thread pool (rayon is unavailable offline).
+//!
+//! [`parallel_map`] fans a slice of work items out across OS threads.
+//! Each worker owns a deque seeded with a contiguous block of indices;
+//! when its deque drains it steals from the *back* of a victim's deque
+//! (classic Chase-Lev discipline, here with a mutex per deque — the work
+//! items are whole scenario simulations, so queue contention is
+//! negligible next to task cost). Results are merged back in **input
+//! order**, so the output is byte-for-byte independent of scheduling:
+//! the property the sweep determinism tests pin down.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Worker count: `CANZONA_SWEEP_THREADS` overrides (min 1), else the
+/// machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("CANZONA_SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// Apply `f` to every item on up to `threads` workers; returns results
+/// in input order. Panics in `f` propagate to the caller.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(&f).collect();
+    }
+
+    // Seed each worker's deque with a contiguous block of indices.
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| {
+            let lo = w * n / threads;
+            let hi = (w + 1) * n / threads;
+            Mutex::new((lo..hi).collect())
+        })
+        .collect();
+
+    let worker_outputs: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let queues = &queues;
+                let f = &f;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        // Own queue first (front), then steal (back). The
+                        // own-queue guard must drop before stealing: never
+                        // hold two queue locks at once.
+                        let own = queues[w].lock().unwrap().pop_front();
+                        let next = own.or_else(|| {
+                            (0..queues.len())
+                                .filter(|&v| v != w)
+                                .find_map(|v| queues[v].lock().unwrap().pop_back())
+                        });
+                        match next {
+                            Some(idx) => out.push((idx, f(&items[idx]))),
+                            // Every index is claimed under a lock before it
+                            // runs and none respawn, so globally-empty
+                            // queues mean the sweep is drained.
+                            None => break,
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+    });
+
+    // Deterministic merge: scatter by original index.
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (idx, r) in worker_outputs.into_iter().flatten() {
+        debug_assert!(slots[idx].is_none(), "index {idx} executed twice");
+        slots[idx] = Some(r);
+    }
+    slots.into_iter().map(|r| r.expect("work item dropped")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_execution() {
+        let items: Vec<u64> = (0..257).map(|i| i * 31 % 97).collect();
+        let serial = parallel_map(&items, 1, |&x| x.wrapping_mul(x) ^ 0xABCD);
+        let parallel = parallel_map(&items, 7, |&x| x.wrapping_mul(x) ^ 0xABCD);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn imbalanced_work_is_stolen() {
+        // Front-loaded costs: block seeding puts all heavy items on
+        // worker 0; completion requires the others to steal.
+        let hits = AtomicUsize::new(0);
+        let items: Vec<u64> = (0..64).map(|i| if i < 8 { 3_000_000 } else { 10 }).collect();
+        let out = parallel_map(&items, 4, |&spins| {
+            let mut acc = 0u64;
+            for i in 0..spins {
+                acc = acc.wrapping_add(i).rotate_left(1);
+            }
+            hits.fetch_add(1, Ordering::Relaxed);
+            acc
+        });
+        assert_eq!(out.len(), 64);
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, 8, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[5u32], 8, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = [1, 2, 3];
+        assert_eq!(parallel_map(&items, 64, |&x| x), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,116 @@
+//! Golden-table regression tests: the rendered Markdown for `fig3a`,
+//! `fig4` and `planning` is pinned under `tests/goldens/` so refactors
+//! cannot silently drift the paper's numbers.
+//!
+//! * Missing golden files are bootstrapped from the current output on
+//!   first run (and the test passes with a notice) — the repo's build
+//!   environment has no way to pre-generate them. Set `REQUIRE_GOLDENS=1`
+//!   to turn a missing snapshot into a failure instead (flip it on in CI
+//!   once the bootstrapped files are committed, so the gate is real).
+//! * `UPDATE_GOLDENS=1 cargo test` refreshes every snapshot after an
+//!   intentional model change.
+//! * Wall-clock cells (the `planning` table's "N.N ms") are masked to
+//!   `<time>` and whitespace-collapsed before comparison; everything
+//!   else is byte-compared.
+
+use std::fs;
+use std::path::PathBuf;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("goldens")
+}
+
+/// Mask wall-clock measurements ("12.3 ms" → "<time> ms") and collapse
+/// space runs on masked lines, so only deterministic bytes remain.
+fn mask_timings(rendered: &str) -> String {
+    let mut out = String::with_capacity(rendered.len());
+    for line in rendered.lines() {
+        if let Some(pos) = line.find(" ms") {
+            let bytes = line.as_bytes();
+            let mut start = pos;
+            while start > 0 && matches!(bytes[start - 1], b'0'..=b'9' | b'.') {
+                start -= 1;
+            }
+            let masked = format!("{}<time>{}", &line[..start], &line[pos..]);
+            let mut collapsed = String::with_capacity(masked.len());
+            let mut prev_space = false;
+            for c in masked.chars() {
+                if c == ' ' {
+                    if !prev_space {
+                        collapsed.push(c);
+                    }
+                    prev_space = true;
+                } else {
+                    collapsed.push(c);
+                    prev_space = false;
+                }
+            }
+            out.push_str(&collapsed);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn check_golden(id: &str) {
+    let rendered: String = canzona::experiments::run(id)
+        .unwrap()
+        .iter()
+        .map(|t| t.render())
+        .collect();
+    let actual = mask_timings(&rendered);
+
+    let dir = goldens_dir();
+    fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}.golden.md", id.replace('-', "_")));
+
+    let env_on = |name: &str| std::env::var(name).map(|v| v == "1").unwrap_or(false);
+    let update = env_on("UPDATE_GOLDENS");
+    if update || !path.exists() {
+        assert!(
+            update || !env_on("REQUIRE_GOLDENS"),
+            "golden {path:?} is missing and REQUIRE_GOLDENS=1; generate it \
+             with `cargo test -q golden` and commit the snapshot",
+        );
+        fs::write(&path, &actual).unwrap();
+        eprintln!(
+            "{} golden {path:?}",
+            if update { "updated" } else { "bootstrapped" },
+        );
+        return;
+    }
+    let expected = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        actual, expected,
+        "\n`{id}` drifted from {path:?}.\nIf the change is intentional, \
+         refresh with `UPDATE_GOLDENS=1 cargo test -q golden`.",
+    );
+}
+
+#[test]
+fn golden_fig3a() {
+    check_golden("fig3a");
+}
+
+#[test]
+fn golden_fig4() {
+    check_golden("fig4");
+}
+
+#[test]
+fn golden_planning() {
+    check_golden("planning");
+}
+
+#[test]
+fn mask_is_stable_across_magnitudes() {
+    let a = mask_timings("| Qwen3-1.7B | 9.8 ms   |\n");
+    let b = mask_timings("| Qwen3-1.7B | 123.4 ms |\n");
+    assert_eq!(a, b, "masked timings must not depend on the measured value");
+    assert!(a.contains("<time> ms"));
+    // Deterministic cells are left untouched.
+    let t = "| SC | 0.877s | 12.24x |\n";
+    assert_eq!(mask_timings(t), t);
+}

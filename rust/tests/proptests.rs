@@ -5,11 +5,14 @@
 use canzona::buffer::FlatBuffer;
 use canzona::collectives::{Communicator, Group};
 use canzona::model::shapes::{Param, ParamKind, TensorShape};
-use canzona::partition::{alpha_balanced, equal_chunk, layerwise, naive_atomic};
+use canzona::partition::{
+    alpha_balanced, equal_chunk, layerwise, naive_atomic, naive_atomic_per_bucket,
+};
 use canzona::schedule::microgroup::{build_micro_groups, TpTask};
 use canzona::schedule::minheap::min_heap_balance;
 use canzona::util::prop::check;
 use canzona::util::rng::Rng;
+use canzona::util::stats::load_balance_ratio;
 
 const CASES: usize = 60;
 
@@ -108,6 +111,119 @@ fn prop_balanced_no_worse_than_naive() {
             .fold(0.0, f64::max);
         if m_bal > (m_naive * 1.25 + 1.0).max(m_naive + max_atom) {
             return Err(format!("balanced {m_bal} worse than naive {m_naive}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dp_plans_cover_every_param_exactly_once() {
+    // Disjoint + exhaustive ownership: each parameter appears in exactly
+    // one rank's list, and (for atomic plans) sits inside its owner's cut
+    // interval.
+    check("dp plan coverage", CASES, random_case, |c| {
+        let fb = FlatBuffer::build(&c.census, c.bucket);
+        let plans = [
+            ("alpha_balanced", alpha_balanced(&fb, c.ranks, c.alpha, false,
+                                              |p| p.numel() as f64)),
+            ("naive_atomic", naive_atomic(&fb, c.ranks)),
+            ("naive_atomic_per_bucket", naive_atomic_per_bucket(&fb, c.ranks)),
+        ];
+        for (name, plan) in &plans {
+            let mut owners = vec![0usize; fb.params.len()];
+            for (r, members) in plan.rank_params(&fb).iter().enumerate() {
+                for &pi in members {
+                    owners[pi] += 1;
+                    let cuts = &plan.cuts[fb.params[pi].bucket];
+                    let (lo, hi) = (cuts[r], cuts[r + 1]);
+                    let p = &fb.params[pi];
+                    // Strict plans: the whole tensor inside the interval.
+                    if !(lo <= p.start && p.end <= hi) {
+                        return Err(format!(
+                            "{name}: param {pi} [{}, {}) outside rank {r} [{lo}, {hi})",
+                            p.start, p.end));
+                    }
+                }
+            }
+            if let Some(pi) = owners.iter().position(|&n| n != 1) {
+                return Err(format!("{name}: param {pi} owned {} times", owners[pi]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balanced_ratio_no_worse_than_naive() {
+    // The ISSUE-level invariant behind Fig. 3c: the α-balanced Max/Avg
+    // load ratio never exceeds naive-atomic's, up to one atomic (matrix)
+    // tensor of per-bucket rounding slack on adversarial tiny censuses.
+    check("alpha-balanced ratio <= naive", CASES, random_case, |c| {
+        let fb = FlatBuffer::build(&c.census, c.bucket);
+        let w = |p: &canzona::buffer::PlacedParam| p.numel() as f64;
+        let r_naive = load_balance_ratio(&naive_atomic(&fb, c.ranks).rank_loads(&fb, w));
+        let r_bal = load_balance_ratio(
+            &alpha_balanced(&fb, c.ranks, 1.0, true, w).rank_loads(&fb, w));
+        let avg = fb.total as f64 / c.ranks as f64;
+        let max_atom = fb
+            .params
+            .iter()
+            .filter(|p| p.param.is_matrix_opt())
+            .map(|p| p.numel() as f64)
+            .fold(0.0, f64::max);
+        let slack = (r_naive * 0.25 + 1.0 / avg.max(1.0)).max(max_atom / avg.max(1.0));
+        if r_bal > r_naive + slack + 1e-9 {
+            return Err(format!(
+                "balanced ratio {r_bal} > naive {r_naive} (+slack {slack})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_micro_group_rollback_never_exceeds_c_max() {
+    // Tight capacities (barely above the largest task) force the greedy
+    // rollback path constantly; every emitted group must still respect
+    // C_max, cover every task once, and keep per-group loads consistent.
+    check("rollback respects C_max", CASES, |rng| {
+        let n = 1 + rng.index(60);
+        let tasks: Vec<TpTask> = (0..n)
+            .map(|id| {
+                let c = 0.5 + rng.next_f64() * 80.0;
+                TpTask {
+                    id,
+                    name: format!("t{id}"),
+                    cost: c,
+                    comm_bytes: 2.0 * c,
+                    flops: 10.0 * c,
+                    state_bytes: 4.0 * c,
+                }
+            })
+            .collect();
+        let ranks = 1 + rng.index(8);
+        let max_cost = tasks.iter().map(|t| t.cost).fold(0.0, f64::max);
+        // Within 25% of the single-task lower bound: rollback-heavy.
+        let cap = max_cost * (1.0 + rng.next_f64() * 0.25);
+        (tasks, ranks, cap)
+    }, |(tasks, ranks, cap)| {
+        let plan = build_micro_groups(tasks.clone(), *ranks, *cap);
+        if !plan.is_complete() {
+            return Err("rollback dropped or duplicated a task".into());
+        }
+        for (gi, g) in plan.groups.iter().enumerate() {
+            if g.max_load > cap + 1e-9 {
+                return Err(format!("group {gi}: load {} > C_max {cap}", g.max_load));
+            }
+            let mut loads = vec![0.0f64; *ranks];
+            for &(t, r) in &g.assignments {
+                loads[r] += plan.tasks[t].cost;
+            }
+            for (r, (&got, &want)) in loads.iter().zip(&g.rank_loads).enumerate() {
+                if (got - want).abs() > 1e-9 {
+                    return Err(format!(
+                        "group {gi} rank {r}: recomputed load {got} != recorded {want}"));
+                }
+            }
         }
         Ok(())
     });

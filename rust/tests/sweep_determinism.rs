@@ -1,0 +1,162 @@
+//! Sweep-engine determinism and plan-cache correctness across the stack:
+//!
+//! * the parallel work-stealing runner produces byte-identical tables to
+//!   a forced single-thread run;
+//! * a warm plan cache returns plans structurally equal to cold-path
+//!   solves and never re-runs an LPT solve (asserted via the cache's
+//!   statistics counters);
+//! * `experiments::run("all")` on the shared engine is render-stable.
+
+use canzona::buffer::FlatBuffer;
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::{qwen3, Qwen3Size};
+use canzona::partition::{alpha_balanced, DpStrategy};
+use canzona::sim::{simulate_iteration_cached, Scenario};
+use canzona::sweep::{render_json, render_table, DpKey, PlanCache, SweepEngine, SweepGrid};
+
+fn test_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B, Qwen3Size::S4B],
+        dp: vec![8],
+        tp: vec![2, 4],
+        pp: vec![1],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    }
+}
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_single_thread() {
+    let grid = test_grid();
+    let serial = SweepEngine::new(1);
+    let (scens_s, res_s) = serial.run_grid(&grid);
+    for threads in [2, 4, 8] {
+        let parallel = SweepEngine::new(threads);
+        let (scens_p, res_p) = parallel.run_grid(&grid);
+        assert_eq!(
+            render_table(&scens_s, &res_s).render(),
+            render_table(&scens_p, &res_p).render(),
+            "tables diverged at {threads} threads",
+        );
+        assert_eq!(
+            render_json(&scens_s, &res_s).to_string(),
+            render_json(&scens_p, &res_p).to_string(),
+            "json diverged at {threads} threads",
+        );
+    }
+}
+
+#[test]
+fn cached_plans_structurally_equal_cold_solves() {
+    // Warm a cache through the simulator, then pull the DP plan it stored
+    // and compare it cut-for-cut against a direct cold solve.
+    let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, DpStrategy::LbAsc);
+    let cache = PlanCache::new();
+    simulate_iteration_cached(&s, &cache);
+
+    let key = DpKey::for_scenario(&s, 0);
+    let warm = cache.dp_plan(&key, || panic!("plan must already be cached"));
+
+    // Cold path: rebuild the stage-0 buffer exactly as the simulator does
+    // (pp=1 → the stage census is the full census, TP-local shapes).
+    let locals = canzona::model::tp::tp_split(&qwen3(Qwen3Size::S1_7B), s.tp);
+    let local_census: Vec<_> = locals
+        .iter()
+        .map(|sh| {
+            let mut p = sh.param.clone();
+            p.shape = sh.shard_shape.clone();
+            p
+        })
+        .collect();
+    let fb = FlatBuffer::build(&local_census, s.bucket_elems);
+    let cold = alpha_balanced(&fb, s.dp, s.alpha, true, |p| {
+        if p.param.is_matrix_opt() {
+            locals[p.index].param.numel() as f64
+        } else {
+            p.param.numel() as f64
+        }
+    });
+    assert_eq!(warm.ranks, cold.ranks);
+    assert_eq!(warm.atomicity, cold.atomicity);
+    assert_eq!(warm.cuts, cold.cuts, "cached plan != cold solve");
+    cold.validate(&fb).unwrap();
+}
+
+#[test]
+fn repeated_scenario_skips_lpt_solves() {
+    let engine = SweepEngine::new(4);
+    let grid = test_grid();
+    let (scens, first) = engine.run_grid(&grid);
+    let after_cold = engine.cache_stats();
+    assert!(after_cold.solves > 0, "cold run must solve plans");
+
+    let second = engine.eval(&scens);
+    let after_warm = engine.cache_stats();
+    assert_eq!(
+        after_warm.solves, after_cold.solves,
+        "warm run re-ran an LPT solve",
+    );
+    assert!(
+        after_warm.hits >= after_cold.hits + after_cold.solves,
+        "warm run should hit every cached plan: {after_warm:?} vs {after_cold:?}",
+    );
+    assert_eq!(
+        render_table(&scens, &first).render(),
+        render_table(&scens, &second).render(),
+        "cache warmth changed results",
+    );
+}
+
+#[test]
+fn run_all_is_render_stable_and_cache_warm() {
+    // Two passes over every harness through the shared global engine:
+    // identical bytes, and the second pass adds no plan solves.
+    let first: Vec<String> = canzona::experiments::run("all")
+        .unwrap()
+        .iter()
+        .map(|t| t.render())
+        .collect();
+    let solves_after_first = SweepEngine::global().cache_stats().solves;
+    let second: Vec<String> = canzona::experiments::run("all")
+        .unwrap()
+        .iter()
+        .map(|t| t.render())
+        .collect();
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        // The planning-latency table reports wall time; skip it.
+        if a.contains("Offline planning latency") {
+            continue;
+        }
+        assert_eq!(a, b);
+    }
+    assert_eq!(
+        SweepEngine::global().cache_stats().solves,
+        solves_after_first,
+        "second run(\"all\") re-solved plans",
+    );
+}
+
+#[test]
+fn thread_env_does_not_change_results() {
+    // The runner must be a pure throughput knob: evaluate the same batch
+    // under wildly different worker counts, bit-compare everything the
+    // sweep table does not even show.
+    let scens = test_grid().scenarios();
+    let a = SweepEngine::new(1).eval(&scens);
+    let b = SweepEngine::new(16).eval(&scens);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.fwd_bwd_s.to_bits(), y.fwd_bwd_s.to_bits());
+        assert_eq!(x.optimizer_s.to_bits(), y.optimizer_s.to_bits());
+        assert_eq!(x.exposed_comm_s.to_bits(), y.exposed_comm_s.to_bits());
+        assert_eq!(x.grad_comm_bytes.to_bits(), y.grad_comm_bytes.to_bits());
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&x.dp_loads_flops), bits(&y.dp_loads_flops));
+        assert_eq!(bits(&x.dp_loads_state), bits(&y.dp_loads_state));
+        assert_eq!(bits(&x.tp_loads_flops), bits(&y.tp_loads_flops));
+        assert_eq!(x.n_micro_groups, y.n_micro_groups);
+    }
+}
