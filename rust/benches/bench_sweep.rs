@@ -90,4 +90,49 @@ fn main() {
         fmt_ns(cold.median_ns),
         fmt_ns(hot.median_ns),
     );
+
+    // --- allocation-free warm path (simulate_iteration_into) -----------
+    let mut out = canzona::sim::Breakdown::default();
+    canzona::sim::simulate_iteration_into(&s, one.cache(), &mut out);
+    let (allocs, _) =
+        canzona::util::alloc::count_allocations(|| {
+            canzona::sim::simulate_iteration_into(&s, one.cache(), &mut out)
+        });
+    let zero_alloc = bench("simulate_iteration_into 32B DP32 TP8 (warm, reused out)", 10, || {
+        canzona::sim::simulate_iteration_into(&s, one.cache(), &mut out);
+        black_box(out.total_s);
+    });
+    println!(
+        "warm allocation count: {allocs} (zero-alloc path, {} median)",
+        fmt_ns(zero_alloc.median_ns),
+    );
+
+    // --- bounded vs unbounded cache under a DP=128 family slice --------
+    let family = SweepGrid {
+        models: vec![Qwen3Size::S8B, Qwen3Size::S32B],
+        dp: vec![128],
+        tp: vec![4, 8],
+        pp: vec![1],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(512.0)],
+        metric: CostMetric::Numel,
+    };
+    let fam_scens = family.scenarios();
+    for (label, budget) in [("unbounded", 0usize), ("64 MB", 64 << 20), ("4 MB", 4 << 20)] {
+        let engine = SweepEngine::with_budget(pool::default_threads(), budget);
+        let t = Instant::now();
+        black_box(engine.eval(&fam_scens));
+        black_box(engine.eval(&fam_scens));
+        let st = engine.cache_stats();
+        println!(
+            "DP=128 family x2 passes, cache {label:>9}: {:>6.2}s \
+             ({} solves / {} evictions, peak {:.1} MB)",
+            t.elapsed().as_secs_f64(),
+            st.solves,
+            st.evictions,
+            st.peak_bytes as f64 / 1e6,
+        );
+    }
 }

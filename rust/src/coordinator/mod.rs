@@ -16,7 +16,8 @@ use crate::experiments;
 use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
 use crate::sim::{simulate_iteration, Scenario};
-use crate::sweep::{render_json, render_table, SweepEngine, SweepGrid};
+use crate::sweep::{render_json, render_table, SweepDiff, SweepEngine, SweepGrid};
+use crate::util::json::Value;
 use crate::train::{train, TrainConfig};
 use crate::util::cli::Args;
 use crate::util::error::Result;
@@ -36,7 +37,8 @@ USAGE:
   canzona sweep      [--models 1.7b,8b,32b] [--dp 16,32] [--tp 1,2,4,8] [--pp 1]
                      [--optims muon,shampoo,soap,adamw] [--strategies sc,asc,lb-asc]
                      [--alphas 0.5,1.0] [--c-max-mb 512,none] [--metric numel]
-                     [--threads N] [--json out.json] [--csv]
+                     [--threads N] [--cache-budget-mb 256] [--json out.json] [--csv]
+                     [--baseline prior.json] [--regress-pct 2.0]
   canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|planning|all>
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
                      [--seed 42] [--artifacts artifacts] [--log-every 10]
@@ -128,11 +130,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 /// Evaluate a scenario grid on the sweep engine; emit one table (or CSV)
-/// plus an optional JSON artifact.
+/// plus an optional JSON artifact, and — with `--baseline prior.json` —
+/// a diff table gated on regressions (nonzero exit beyond
+/// `--regress-pct`, default 2%).
 fn cmd_sweep(args: &Args) -> Result<()> {
     let grid = SweepGrid::parse(args)?;
     let threads = args.get_usize("threads", pool::default_threads())?.max(1);
-    let engine = SweepEngine::new(threads);
+    let engine = match args.get("cache-budget-mb") {
+        None => SweepEngine::new(threads),
+        Some(raw) => {
+            let mb: f64 = raw
+                .parse()
+                .map_err(|_| err!("--cache-budget-mb expects a number, got {raw:?}"))?;
+            // MiB, matching CANZONA_CACHE_BUDGET_MB and the 256 default.
+            let budget = crate::sweep::cache::budget_mb_to_bytes(mb)
+                .ok_or_else(|| err!("--cache-budget-mb must be finite, got {raw:?}"))?;
+            SweepEngine::with_budget(threads, budget)
+        }
+    };
     let t0 = std::time::Instant::now();
     let (scenarios, breakdowns) = engine.run_grid(&grid);
     let wall_s = t0.elapsed().as_secs_f64();
@@ -142,16 +157,46 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         table.print();
     }
+    let stats = engine.cache_stats();
     if let Some(path) = args.get("json") {
-        std::fs::write(path, render_json(&scenarios, &breakdowns).to_string())?;
+        // The artifact carries the cache counters alongside the rows, so
+        // sweep JSON doubles as a cache-behaviour record.
+        let mut artifact = render_json(&scenarios, &breakdowns);
+        if let Value::Obj(m) = &mut artifact {
+            m.insert("cache".into(), stats.to_json());
+        }
+        std::fs::write(path, artifact.to_string())?;
         println!("wrote {path}");
     }
-    let stats = engine.cache_stats();
+    const MIB: f64 = (1 << 20) as f64;
     println!(
         "\n{} scenarios in {wall_s:.2}s on {threads} threads \
-         (plan cache: {} hits / {} solves)",
-        scenarios.len(), stats.hits, stats.solves,
+         (plan cache: {} hits / {} solves / {} evictions, \
+         {:.1} MiB resident of {} budget)",
+        scenarios.len(),
+        stats.hits,
+        stats.solves,
+        stats.evictions,
+        stats.resident_bytes as f64 / MIB,
+        if stats.budget_bytes == 0 {
+            "unbounded".to_string()
+        } else {
+            format!("{:.0} MiB", stats.budget_bytes as f64 / MIB)
+        },
     );
+    if let Some(path) = args.get("baseline") {
+        let baseline = Value::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| e.wrap(format!("parsing baseline {path}")))?;
+        let threshold = args.get_f64("regress-pct", 2.0)?;
+        let diff = SweepDiff::compare(&baseline, &scenarios, &breakdowns, threshold)?;
+        if args.flag("csv") {
+            print!("{}", diff.table().to_csv());
+        } else {
+            diff.table().print();
+        }
+        diff.verdict()?;
+        println!("\nbaseline check passed: no regression beyond {threshold}% vs {path}");
+    }
     Ok(())
 }
 

@@ -76,16 +76,36 @@ impl CommModel {
         if r <= 1 {
             return 0.0;
         }
-        let bw = self.hw.bandwidth(link);
-        let lat = self.hw.latency(link);
         let total: f64 = shard_bytes.iter().sum();
         let min_shard = shard_bytes.iter().cloned().fold(f64::INFINITY, f64::min);
-        let steps = (r - 1) as f64;
+        self.collective_parts(kind, total, min_shard, r, link)
+    }
+
+    /// Scalar form of [`CommModel::collective_v`] for callers that have
+    /// precomputed the total and minimum shard of a variable-size
+    /// collective (e.g. the cached micro-group cost scalars): identical
+    /// formula, no per-rank slice required — the simulator's warm path
+    /// uses this to stay allocation-free.
+    pub fn collective_parts(
+        &self,
+        kind: CollectiveKind,
+        total_bytes: f64,
+        min_shard_bytes: f64,
+        ranks: usize,
+        link: LinkKind,
+    ) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
         match kind {
             CollectiveKind::ReduceScatter
             | CollectiveKind::AllGather
-            | CollectiveKind::AllToAll => (total - min_shard) / bw + steps * lat,
-            _ => self.collective(kind, total, r, link),
+            | CollectiveKind::AllToAll => {
+                let bw = self.hw.bandwidth(link);
+                let lat = self.hw.latency(link);
+                (total_bytes - min_shard_bytes) / bw + (ranks - 1) as f64 * lat
+            }
+            _ => self.collective(kind, total_bytes, ranks, link),
         }
     }
 
@@ -158,6 +178,21 @@ mod tests {
         let total_uniform = m.collective(CollectiveKind::ReduceScatter, 4e6, 4,
                                          LinkKind::InterNode);
         assert!((uniform - total_uniform).abs() / total_uniform < 0.05);
+    }
+
+    #[test]
+    fn collective_parts_matches_slice_form() {
+        let m = model();
+        for shards in [vec![1e6, 2e6, 0.0, 4e6], vec![5e5; 8], vec![0.0; 4]] {
+            let total: f64 = shards.iter().sum();
+            let min = shards.iter().cloned().fold(f64::INFINITY, f64::min);
+            let a = m.collective_v(CollectiveKind::AllToAll, &shards, LinkKind::IntraNode);
+            let b = m.collective_parts(CollectiveKind::AllToAll, total, min,
+                                       shards.len(), LinkKind::IntraNode);
+            assert_eq!(a.to_bits(), b.to_bits(), "{shards:?}");
+        }
+        assert_eq!(m.collective_parts(CollectiveKind::AllGather, 1e9, 0.0, 1,
+                                      LinkKind::InterNode), 0.0);
     }
 
     #[test]

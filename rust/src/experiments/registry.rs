@@ -2,7 +2,6 @@
 
 use crate::bail;
 use crate::util::error::Result;
-use crate::util::pool;
 use crate::util::table::Table;
 
 use super::figures;
@@ -33,17 +32,21 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
 
 /// Run one experiment (or "all") and return the rendered tables.
 ///
-/// "all" fans the harnesses out over the work-stealing pool (each
-/// harness additionally parallelizes its own scenario batch through the
-/// shared sweep engine) and merges tables in catalog order, so the
-/// output bytes are independent of scheduling.
+/// "all" runs the harnesses **sequentially in catalog order**; each
+/// harness's scenario batches fan out N-wide over the shared sweep
+/// engine's pool. All parallelism therefore routes through one
+/// `util::pool` executor: live threads stay bounded by the pool's N
+/// with full N-wide utilization inside each batch, instead of the old
+/// harness-level pool nesting a scenario-level pool per harness
+/// (threads ≈ N + 13·N worst case). Output bytes are independent of
+/// scheduling either way (batches merge in input order).
 pub fn run(id: &str) -> Result<Vec<Table>> {
     if id == "all" {
-        let harnesses: Vec<fn() -> Vec<Table>> =
-            catalog().into_iter().map(|(_, _, f)| f).collect();
-        let per_harness =
-            pool::parallel_map(&harnesses, pool::default_threads(), |f| f());
-        return Ok(per_harness.into_iter().flatten().collect());
+        let mut out = Vec::new();
+        for (_, _, f) in catalog() {
+            out.extend(f());
+        }
+        return Ok(out);
     }
     for (eid, _, f) in catalog() {
         if eid == id {

@@ -50,3 +50,9 @@ pub mod train;
 pub mod util;
 
 pub use coordinator::config::Config;
+
+/// Counting pass-through allocator (see [`util::alloc`]): lets the test
+/// suite prove the warm simulation path is allocation-free. Overhead is
+/// one thread-local increment per allocation.
+#[global_allocator]
+static GLOBAL_ALLOC: util::alloc::CountingAllocator = util::alloc::CountingAllocator;

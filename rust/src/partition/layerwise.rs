@@ -80,6 +80,13 @@ pub fn layerwise<F2: Fn(&PlacedParam) -> f64>(
 }
 
 impl LayerwisePlan {
+    /// Approximate heap bytes held by the plan (the plan cache's
+    /// byte-budget accounting unit).
+    pub fn heap_bytes(&self) -> usize {
+        self.owner.len() * std::mem::size_of::<usize>()
+            + self.rank_loads.len() * std::mem::size_of::<f64>()
+    }
+
     /// Does the assignment violate the ZeRO-1 geometric constraint in any
     /// bucket? True iff some bucket's owner sequence (in physical order)
     /// is not monotonically non-decreasing — the condition under which

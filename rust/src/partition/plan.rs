@@ -1,5 +1,7 @@
 //! The DP partition plan (the Global Partition Map Π of Section 3.3).
 
+#![warn(missing_docs)]
+
 use crate::bail;
 use crate::buffer::{FlatBuffer, PlacedParam};
 use crate::util::error::Result;
@@ -14,7 +16,9 @@ use crate::util::error::Result;
 /// near ratio 1.0 despite a 300M-element embedding in the census.
 #[derive(Clone, Debug)]
 pub struct DpPlan {
+    /// DP group size (R).
     pub ranks: usize,
+    /// Per-bucket cut vectors (see the struct docs).
     pub cuts: Vec<Vec<usize>>,
     /// Atomicity discipline of interior cuts:
     /// `Strict` — every interior cut on a parameter boundary;
@@ -26,8 +30,11 @@ pub struct DpPlan {
 /// See [`DpPlan::atomicity`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Atomicity {
+    /// Every interior cut on a parameter boundary.
     Strict,
+    /// Cuts may fall inside element-wise (AdamW-routed) parameters.
     MatrixOnly,
+    /// Cuts anywhere (ZeRO-1 equal chunk).
     None,
 }
 
@@ -141,6 +148,13 @@ impl DpPlan {
             }
         }
         Ok(())
+    }
+
+    /// Approximate heap bytes held by the plan (the plan cache's
+    /// byte-budget accounting unit).
+    pub fn heap_bytes(&self) -> usize {
+        self.cuts.len() * std::mem::size_of::<Vec<usize>>()
+            + self.cuts.iter().map(|c| c.len() * std::mem::size_of::<usize>()).sum::<usize>()
     }
 
     /// J_DP (paper Eq. 2): max deviation of per-rank load from the mean.

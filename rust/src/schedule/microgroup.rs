@@ -7,6 +7,19 @@
 //! compute phase. Packing is greedy under a capacity `C_max` on the
 //! per-rank load, with the exact `MinHeapSolver` simulated at every step
 //! (not a `ΣCost/R` estimate) and a rollback when the candidate overflows.
+//!
+//! # Plan encoding
+//!
+//! [`TpTask`] (which carries an owned `String` name) is the *transient*
+//! build-time census; assembled [`TpPlan`]s store a compact form instead:
+//! per-task [`TaskMeta`] records (a flat `Copy` struct) plus one
+//! per-plan interned [`Symbols`] table holding each distinct task name
+//! exactly once. [`TpPlan::assemble`] also precomputes the per-group
+//! cost scalars ([`GroupCost`]) and per-rank FLOPs/state totals that the
+//! simulator's warm path reads, so replaying a cached plan allocates
+//! nothing. Cached `TpPlan`s dominated the sweep engine's footprint
+//! (tens of MB of task-name `String`s for a DP=128 family sweep); the
+//! compact encoding plus the cache's byte budget bounds that.
 
 use crate::cost::optim::{CostMetric, OptimCost};
 use crate::model::tp::TpShard;
@@ -14,10 +27,14 @@ use crate::model::tp::TpShard;
 use super::minheap::{min_heap_balance, HeapAssignment};
 
 /// One TP-plane optimizer task: a fragmented matrix parameter.
+///
+/// This is the *builder-facing* record (owned name string); assembled
+/// plans store the compact [`TaskMeta`] form instead.
 #[derive(Clone, Debug)]
 pub struct TpTask {
     /// Stable id (index in the fragmented-param census).
     pub id: usize,
+    /// Parameter name (interned into [`Symbols`] at plan assembly).
     pub name: String,
     /// Balancing cost W(p) (paper default: numel of the full tensor).
     pub cost: f64,
@@ -26,6 +43,76 @@ pub struct TpTask {
     /// Full-tensor update FLOPs (for the simulator's exact timing).
     pub flops: f64,
     /// Optimizer state bytes resident on the host rank.
+    pub state_bytes: f64,
+}
+
+/// Interned task-name symbol id (index into a [`Symbols`] table).
+pub type Sym = u32;
+
+/// A per-plan interned string table: each distinct task name is stored
+/// once as a `Box<str>` (no capacity slack) and referenced by [`Sym`]
+/// index from [`TaskMeta::name`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Symbols {
+    names: Vec<Box<str>>,
+}
+
+impl Symbols {
+    /// An empty table.
+    pub fn new() -> Symbols {
+        Symbols::default()
+    }
+
+    /// Intern `s`, returning its symbol id. Exact duplicates share one
+    /// entry (linear probe — plan-assembly is cold-path only).
+    pub fn intern(&mut self, s: &str) -> Sym {
+        if let Some(i) = self.names.iter().position(|n| &**n == s) {
+            return i as Sym;
+        }
+        self.names.push(s.into());
+        (self.names.len() - 1) as Sym
+    }
+
+    /// Resolve a symbol id; out-of-range ids (e.g. hand-built test plans
+    /// with an empty table) render as `"?"` rather than panicking.
+    pub fn name(&self, id: Sym) -> &str {
+        self.names.get(id as usize).map(|s| &**s).unwrap_or("?")
+    }
+
+    /// Number of interned names.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Whether the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Approximate heap bytes held by the table (pointers + characters).
+    pub fn heap_bytes(&self) -> usize {
+        self.names.len() * std::mem::size_of::<Box<str>>()
+            + self.names.iter().map(|n| n.len()).sum::<usize>()
+    }
+}
+
+/// Compact per-task record stored inside an assembled [`TpPlan`]: the
+/// [`TpTask`] cost fields with the name replaced by a [`Sym`] into the
+/// plan's [`Symbols`] table. Field names match `TpTask`, so cost
+/// extractors (`|t| t.flops`) work against either.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskMeta {
+    /// Stable id (index in the fragmented-param census).
+    pub id: usize,
+    /// Interned name (resolve via [`TpPlan::task_name`]).
+    pub name: Sym,
+    /// Balancing cost W(p).
+    pub cost: f64,
+    /// Gradient bytes through the fused All-to-All.
+    pub comm_bytes: f64,
+    /// Full-tensor update FLOPs.
+    pub flops: f64,
+    /// Optimizer state bytes on the host rank.
     pub state_bytes: f64,
 }
 
@@ -42,13 +129,44 @@ pub struct MicroGroup {
     pub comm_bytes: f64,
 }
 
-/// The full TP execution plan (the sequence M of Section 4.2).
+/// Precomputed cost scalars of one micro-group, derived at
+/// [`TpPlan::assemble`] time so the simulator's warm path can time the
+/// group's fused All-to-All and balanced compute without building
+/// per-rank vectors (the allocation-free warm-path contract).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GroupCost {
+    /// Sum of per-rank hosted gradient bytes (== total group bytes).
+    pub total_bytes: f64,
+    /// Minimum per-rank hosted bytes (ranks hosting nothing count 0) —
+    /// the `min_shard` of the variable-size collective formula.
+    pub min_rank_bytes: f64,
+    /// Maximum per-rank hosted FLOPs — the group's compute makespan
+    /// numerator.
+    pub max_rank_flops: f64,
+}
+
+/// The full TP execution plan (the sequence M of Section 4.2), in the
+/// compact encoding: [`TaskMeta`] records + one interned [`Symbols`]
+/// table instead of per-task `String`s, plus precomputed group/rank
+/// cost aggregates. Construct via [`TpPlan::assemble`].
 #[derive(Clone, Debug)]
 pub struct TpPlan {
+    /// TP group size.
     pub ranks: usize,
+    /// The capacity the plan was built under (0.0 for No-Fuse plans).
     pub c_max: f64,
-    pub tasks: Vec<TpTask>,
+    /// Compact task census (indices are the `assignments` task ids).
+    pub tasks: Vec<TaskMeta>,
+    /// Interned task names (see [`TpPlan::task_name`]).
+    pub symbols: Symbols,
+    /// The micro-group sequence.
     pub groups: Vec<MicroGroup>,
+    /// Per-group precomputed cost scalars (parallel to `groups`).
+    pub group_cost: Vec<GroupCost>,
+    /// Per-rank hosted FLOPs over the whole plan.
+    pub rank_flops: Vec<f64>,
+    /// Per-rank hosted optimizer state bytes over the whole plan.
+    pub rank_state: Vec<f64>,
 }
 
 /// Build the TP task census from fragmented shards.
@@ -137,10 +255,62 @@ pub fn build_micro_groups(tasks: Vec<TpTask>, ranks: usize, c_max: f64) -> TpPla
     }
     finalize(&current, &mut groups);
 
-    TpPlan { ranks, c_max, tasks, groups }
+    TpPlan::assemble(ranks, c_max, tasks, groups)
 }
 
 impl TpPlan {
+    /// Assemble the compact plan from a build-time task census and its
+    /// micro-group sequence: intern names into a per-plan [`Symbols`]
+    /// table, strip tasks down to [`TaskMeta`], and precompute the
+    /// [`GroupCost`] scalars and per-rank FLOPs/state totals the warm
+    /// simulation path reads allocation-free.
+    pub fn assemble(
+        ranks: usize,
+        c_max: f64,
+        tasks: Vec<TpTask>,
+        groups: Vec<MicroGroup>,
+    ) -> TpPlan {
+        let mut symbols = Symbols::new();
+        let metas: Vec<TaskMeta> = tasks
+            .iter()
+            .map(|t| TaskMeta {
+                id: t.id,
+                name: symbols.intern(&t.name),
+                cost: t.cost,
+                comm_bytes: t.comm_bytes,
+                flops: t.flops,
+                state_bytes: t.state_bytes,
+            })
+            .collect();
+
+        let mut group_cost = Vec::with_capacity(groups.len());
+        let mut rank_flops = vec![0.0; ranks];
+        let mut rank_state = vec![0.0; ranks];
+        let mut hosted_bytes = vec![0.0f64; ranks];
+        let mut hosted_flops = vec![0.0f64; ranks];
+        for g in &groups {
+            hosted_bytes.iter_mut().for_each(|b| *b = 0.0);
+            hosted_flops.iter_mut().for_each(|b| *b = 0.0);
+            for &(t, r) in &g.assignments {
+                hosted_bytes[r] += metas[t].comm_bytes;
+                hosted_flops[r] += metas[t].flops;
+                rank_flops[r] += metas[t].flops;
+                rank_state[r] += metas[t].state_bytes;
+            }
+            group_cost.push(GroupCost {
+                total_bytes: hosted_bytes.iter().sum(),
+                min_rank_bytes: hosted_bytes.iter().cloned().fold(f64::INFINITY, f64::min),
+                max_rank_flops: hosted_flops.iter().cloned().fold(0.0, f64::max),
+            });
+        }
+        TpPlan { ranks, c_max, tasks: metas, symbols, groups, group_cost, rank_flops, rank_state }
+    }
+
+    /// Resolve the interned name of task `t`.
+    pub fn task_name(&self, t: usize) -> &str {
+        self.symbols.name(self.tasks[t].name)
+    }
+
     /// Every task appears exactly once across all groups?
     pub fn is_complete(&self) -> bool {
         let mut seen = vec![false; self.tasks.len()];
@@ -157,7 +327,9 @@ impl TpPlan {
 
     /// Aggregate per-rank load over the whole plan, under a cost
     /// extractor (e.g. FLOPs for the simulator, state bytes for memory).
-    pub fn rank_totals<F: Fn(&TpTask) -> f64>(&self, f: F) -> Vec<f64> {
+    /// The FLOPs/state specializations are precomputed at assembly as
+    /// [`TpPlan::rank_flops`] / [`TpPlan::rank_state`].
+    pub fn rank_totals<F: Fn(&TaskMeta) -> f64>(&self, f: F) -> Vec<f64> {
         let mut loads = vec![0.0; self.ranks];
         for g in &self.groups {
             for &(t, r) in &g.assignments {
@@ -171,6 +343,25 @@ impl TpPlan {
     /// step's critical path.
     pub fn total_makespan(&self) -> f64 {
         self.groups.iter().map(|g| g.max_load).sum()
+    }
+
+    /// Approximate heap bytes held by the plan (the cache's byte-budget
+    /// accounting unit).
+    pub fn heap_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.tasks.len() * size_of::<TaskMeta>()
+            + self.symbols.heap_bytes()
+            + self.groups.len() * size_of::<MicroGroup>()
+            + self
+                .groups
+                .iter()
+                .map(|g| {
+                    g.assignments.len() * size_of::<(usize, usize)>()
+                        + g.rank_loads.len() * size_of::<f64>()
+                })
+                .sum::<usize>()
+            + self.group_cost.len() * size_of::<GroupCost>()
+            + (self.rank_flops.len() + self.rank_state.len()) * size_of::<f64>()
     }
 }
 
@@ -270,5 +461,58 @@ mod tests {
         let plan = build_micro_groups(vec![], 4, 10.0);
         assert!(plan.groups.is_empty());
         assert!(plan.is_complete());
+    }
+
+    #[test]
+    fn symbols_intern_and_resolve() {
+        let mut syms = Symbols::new();
+        let a = syms.intern("layers.0.attn.wq");
+        let b = syms.intern("layers.0.attn.wk");
+        let a2 = syms.intern("layers.0.attn.wq");
+        assert_eq!(a, a2, "duplicates must share one entry");
+        assert_ne!(a, b);
+        assert_eq!(syms.len(), 2);
+        assert_eq!(syms.name(a), "layers.0.attn.wq");
+        assert_eq!(syms.name(999), "?", "out-of-range ids render as ?");
+        assert!(syms.heap_bytes() >= "layers.0.attn.wq".len());
+    }
+
+    #[test]
+    fn assembled_plan_interns_names_and_drops_strings() {
+        let plan = build_micro_groups(toy_tasks(&[4.0, 3.0, 2.0, 1.0]), 2, 100.0);
+        assert_eq!(plan.symbols.len(), 4);
+        for t in 0..plan.tasks.len() {
+            assert_eq!(plan.task_name(t), format!("t{}", plan.tasks[t].id));
+        }
+        // Compact encoding: the per-task record is a flat Copy struct.
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<TaskMeta>();
+    }
+
+    #[test]
+    fn assemble_precomputes_group_and_rank_aggregates() {
+        let plan = build_micro_groups(toy_tasks(&[9.0, 7.0, 5.0, 3.0]), 2, 12.0);
+        assert_eq!(plan.group_cost.len(), plan.groups.len());
+        for (g, gc) in plan.groups.iter().zip(&plan.group_cost) {
+            // Rebuild the per-rank hosted vectors and check the scalars.
+            let mut bytes = vec![0.0; plan.ranks];
+            let mut flops = vec![0.0; plan.ranks];
+            for &(t, r) in &g.assignments {
+                bytes[r] += plan.tasks[t].comm_bytes;
+                flops[r] += plan.tasks[t].flops;
+            }
+            let total: f64 = bytes.iter().sum();
+            let min = bytes.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max_f = flops.iter().cloned().fold(0.0, f64::max);
+            assert_eq!(gc.total_bytes.to_bits(), total.to_bits());
+            assert_eq!(gc.min_rank_bytes.to_bits(), min.to_bits());
+            assert_eq!(gc.max_rank_flops.to_bits(), max_f.to_bits());
+        }
+        let flops = plan.rank_totals(|t| t.flops);
+        let state = plan.rank_totals(|t| t.state_bytes);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&plan.rank_flops), bits(&flops));
+        assert_eq!(bits(&plan.rank_state), bits(&state));
+        assert!(plan.heap_bytes() > 0);
     }
 }

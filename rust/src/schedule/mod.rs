@@ -12,5 +12,5 @@ pub mod microgroup;
 pub mod minheap;
 pub mod tp_sc;
 
-pub use microgroup::{build_micro_groups, MicroGroup, TpPlan, TpTask};
+pub use microgroup::{build_micro_groups, GroupCost, MicroGroup, Sym, Symbols, TaskMeta, TpPlan, TpTask};
 pub use minheap::{min_heap_balance, HeapAssignment};

@@ -16,5 +16,7 @@ pub mod iteration;
 pub mod scenario;
 pub mod stream;
 
-pub use iteration::{simulate_iteration, simulate_iteration_cached, Breakdown};
+pub use iteration::{
+    simulate_iteration, simulate_iteration_cached, simulate_iteration_into, Breakdown, StageTable,
+};
 pub use scenario::Scenario;

@@ -11,6 +11,9 @@ use crate::partition::DpStrategy;
 pub struct Scenario {
     /// Full model census (unsharded).
     pub census: Vec<Param>,
+    /// Family member the census was derived from — the `Copy` model id
+    /// the plan-cache keys use (no string clone on the warm path).
+    pub size: Qwen3Size,
     pub label: String,
     pub dp: usize,
     pub tp: usize,
@@ -42,6 +45,7 @@ impl Scenario {
                optim: OptimKind, strategy: DpStrategy) -> Scenario {
         Scenario {
             census: qwen3(size),
+            size,
             label: size.label().to_string(),
             dp,
             tp,

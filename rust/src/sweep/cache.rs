@@ -1,5 +1,6 @@
-//! Plan cache: memoized `DpPlan` / `TpPlan` artifacts keyed by scenario
-//! fingerprint.
+//! Plan cache: memoized `DpPlan` / `TpPlan` / `LayerwisePlan` /
+//! `StageTable` artifacts keyed by scenario fingerprint, bounded by an
+//! LRU byte budget.
 //!
 //! The offline planner (paper Appendix D.1) is deterministic and pure in
 //! the scenario, so its outputs are cacheable across `simulate_iteration`
@@ -13,48 +14,111 @@
 //! * **TP plans** — additionally the DP rank (host-task sets differ per
 //!   rank), `C_max`, and always the optimizer (task FLOPs/state models
 //!   are optimizer-specific).
+//! * **Stage tables** ([`crate::sim::iteration::StageTable`]) — the
+//!   hoisted per-stage census/geometry/task tables the warm simulation
+//!   path reads; keyed like a DP plan plus the optimizer (task costs),
+//!   but *not* `C_max` (fusion only shapes TP plans).
 //!
-//! The fingerprint assumes `Scenario::census` is derived from the model
-//! label (true for every constructor); hardware profiles are deliberately
-//! excluded — plans are hardware-independent.
+//! Keys are flat `Copy` structs (the model enters as [`Qwen3Size`], not
+//! a label string), so building a key on the warm path allocates
+//! nothing. The fingerprint assumes `Scenario::census` is derived from
+//! `Scenario::size` (true for every constructor); hardware profiles are
+//! deliberately excluded — plans are hardware-independent.
 //!
-//! Concurrency: maps sit behind mutexes; a solve runs *outside* the lock,
-//! so two threads racing on one key may both solve — the algorithms are
-//! deterministic, so either result is structurally identical and the
-//! first insert wins. Hit/solve counters are exact (a "solve" increments
-//! only when a closure actually ran), which is what the cache-statistics
-//! assertions in `tests/sweep_determinism.rs` rely on.
+//! # Byte budget and eviction
+//!
+//! Without a bound, per-rank `TpPlan`s dominate (~tens of MB for a
+//! DP=128 family sweep) and a long-lived engine grows forever. Every
+//! entry is weighed on insert (shallow struct size + `heap_bytes()` of
+//! the plan + key/entry overhead); when the resident total exceeds the
+//! budget, least-recently-used entries are evicted — across all four
+//! maps — until it fits. A solved plan whose weight alone exceeds the
+//! budget is handed to the caller *uncached*, so the resident total
+//! never exceeds the budget. The default budget is
+//! [`DEFAULT_BUDGET_BYTES`]; `CANZONA_CACHE_BUDGET_MB` (0 = unbounded)
+//! overrides it process-wide and `canzona sweep --cache-budget-mb`
+//! per-invocation. Eviction is semantically invisible: an evicted key
+//! is simply re-solved on next use, and the solvers are deterministic.
+//!
+//! Concurrency: one mutex guards all maps plus the LRU clock and byte
+//! ledger; a solve runs *outside* the lock, so two threads racing on one
+//! key may both solve — the algorithms are deterministic, so either
+//! result is structurally identical and the first insert wins. Hit/solve
+//! counters are exact (a "solve" increments only when a closure actually
+//! ran), which is what the cache-statistics assertions in
+//! `tests/sweep_determinism.rs` rely on.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cost::optim::{CostMetric, OptimKind};
+use crate::model::qwen3::Qwen3Size;
 use crate::partition::{DpPlan, DpStrategy, LayerwisePlan};
 use crate::schedule::microgroup::TpPlan;
+use crate::sim::iteration::StageTable;
 use crate::sim::Scenario;
+use crate::util::json::Value;
+
+/// Default in-memory budget for cached plans: 256 MiB. Override with
+/// `CANZONA_CACHE_BUDGET_MB` (0 disables the bound) or
+/// `canzona sweep --cache-budget-mb`.
+pub const DEFAULT_BUDGET_BYTES: usize = 256 * 1024 * 1024;
+
+/// Convert a budget expressed in MiB (the `CANZONA_CACHE_BUDGET_MB` /
+/// `--cache-budget-mb` unit — `256` is exactly the default) to bytes.
+/// `0` and negative values mean unbounded; non-finite values (NaN/inf)
+/// are rejected with `None` so a typo can never silently disable the
+/// bound.
+pub fn budget_mb_to_bytes(mb: f64) -> Option<usize> {
+    if !mb.is_finite() {
+        return None;
+    }
+    Some(if mb <= 0.0 { 0 } else { (mb * (1 << 20) as f64) as usize })
+}
+
+/// The process-wide budget: `CANZONA_CACHE_BUDGET_MB` if set and valid
+/// (MiB, via [`budget_mb_to_bytes`]), else [`DEFAULT_BUDGET_BYTES`] —
+/// unparseable or non-finite values fall back to the (bounded) default,
+/// never to unbounded.
+pub fn budget_from_env() -> usize {
+    std::env::var("CANZONA_CACHE_BUDGET_MB")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .and_then(budget_mb_to_bytes)
+        .unwrap_or(DEFAULT_BUDGET_BYTES)
+}
 
 /// Fingerprint of one DP-plane planning problem.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct DpKey {
-    pub model: String,
+    /// Model family member (stands in for the census).
+    pub model: Qwen3Size,
+    /// PP stage index.
     pub stage: usize,
+    /// PP group size.
     pub pp: usize,
+    /// DP group size.
     pub dp: usize,
+    /// TP group size (shard shapes enter the stage census).
     pub tp: usize,
+    /// DP strategy.
     pub strategy: DpStrategy,
     /// `None` under optimizer-agnostic metrics (Numel).
     pub optim: Option<OptimKind>,
+    /// Balancing cost metric.
     pub metric: CostMetric,
     /// `f64::to_bits` of α (0 for strategies that ignore it).
     pub alpha_bits: u64,
+    /// Flat-buffer bucket size (elements).
     pub bucket_elems: usize,
 }
 
 impl DpKey {
+    /// The DP-plane fingerprint of `s` at PP stage `stage`.
     pub fn for_scenario(s: &Scenario, stage: usize) -> DpKey {
         DpKey {
-            model: s.label.clone(),
+            model: s.size,
             stage,
             pp: s.pp,
             dp: s.dp,
@@ -72,9 +136,11 @@ impl DpKey {
 }
 
 /// Fingerprint of one TP-plane scheduling problem (per DP rank).
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TpKey {
+    /// The enclosing DP-plane fingerprint.
     pub dp_key: DpKey,
+    /// DP rank (host-task sets differ per rank).
     pub rank: usize,
     /// `f64::to_bits` of `C_max` in bytes; `None` = No-Fuse.
     pub c_max_bits: Option<u64>,
@@ -83,6 +149,7 @@ pub struct TpKey {
 }
 
 impl TpKey {
+    /// The TP-plane fingerprint of `s` at stage `stage`, DP rank `rank`.
     pub fn for_scenario(s: &Scenario, stage: usize, rank: usize) -> TpKey {
         TpKey {
             dp_key: DpKey::for_scenario(s, stage),
@@ -93,51 +160,243 @@ impl TpKey {
     }
 }
 
-/// Cache hit/solve statistics snapshot.
+/// Fingerprint of one hoisted per-stage table
+/// ([`crate::sim::iteration::StageTable`]): a DP-plane fingerprint plus
+/// the optimizer (the task FLOPs/state tables are optimizer-specific).
+/// `C_max` is excluded — fusion only shapes TP plans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StageKey {
+    /// The enclosing DP-plane fingerprint.
+    pub dp_key: DpKey,
+    /// The optimizer whose cost model fills the task tables.
+    pub optim: OptimKind,
+}
+
+impl StageKey {
+    /// The stage-table fingerprint of `s` at PP stage `stage`.
+    pub fn for_scenario(s: &Scenario, stage: usize) -> StageKey {
+        StageKey { dp_key: DpKey::for_scenario(s, stage), optim: s.optim }
+    }
+}
+
+/// Cache statistics snapshot.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
     /// Number of solver closures actually executed (cold paths).
     pub solves: u64,
+    /// Entries evicted to respect the byte budget.
+    pub evictions: u64,
+    /// Bytes currently resident across all maps.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes`.
+    pub peak_bytes: u64,
+    /// The configured budget (0 = unbounded).
+    pub budget_bytes: u64,
 }
 
-/// Thread-safe memoization of partition and schedule artifacts.
+impl CacheStats {
+    /// JSON form for sweep artifacts (stable key order).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("hits", Value::num(self.hits as f64)),
+            ("solves", Value::num(self.solves as f64)),
+            ("evictions", Value::num(self.evictions as f64)),
+            ("resident_bytes", Value::num(self.resident_bytes as f64)),
+            ("peak_bytes", Value::num(self.peak_bytes as f64)),
+            ("budget_bytes", Value::num(self.budget_bytes as f64)),
+        ])
+    }
+}
+
+/// One cached artifact plus its LRU bookkeeping.
+struct Entry<V> {
+    value: Arc<V>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// All four maps plus the shared LRU clock and byte ledger — guarded by
+/// one mutex so cross-map eviction is race-free.
 #[derive(Default)]
+struct Maps {
+    dp: HashMap<DpKey, Entry<DpPlan>>,
+    layerwise: HashMap<DpKey, Entry<LayerwisePlan>>,
+    tp: HashMap<TpKey, Entry<TpPlan>>,
+    stage: HashMap<StageKey, Entry<StageTable>>,
+    tick: u64,
+    bytes: usize,
+}
+
+fn oldest<K: Copy, V>(m: &HashMap<K, Entry<V>>) -> Option<(u64, K)> {
+    m.iter().map(|(k, e)| (e.tick, *k)).min_by_key(|&(t, _)| t)
+}
+
+impl Maps {
+    fn len(&self) -> usize {
+        self.dp.len() + self.layerwise.len() + self.tp.len() + self.stage.len()
+    }
+
+    /// Evict the globally least-recently-used entry; returns the bytes
+    /// freed (0 when every map is empty). Ticks are unique per cache
+    /// operation, so the minimum is unambiguous.
+    fn evict_lru(&mut self) -> usize {
+        let dp = oldest(&self.dp);
+        let lw = oldest(&self.layerwise);
+        let tp = oldest(&self.tp);
+        let st = oldest(&self.stage);
+        let min_tick = [
+            dp.map(|x| x.0),
+            lw.map(|x| x.0),
+            tp.map(|x| x.0),
+            st.map(|x| x.0),
+        ]
+        .into_iter()
+        .flatten()
+        .min();
+        let Some(min_tick) = min_tick else { return 0 };
+        let freed = if dp.map(|x| x.0) == Some(min_tick) {
+            self.dp.remove(&dp.unwrap().1).map(|e| e.bytes).unwrap_or(0)
+        } else if lw.map(|x| x.0) == Some(min_tick) {
+            self.layerwise.remove(&lw.unwrap().1).map(|e| e.bytes).unwrap_or(0)
+        } else if tp.map(|x| x.0) == Some(min_tick) {
+            self.tp.remove(&tp.unwrap().1).map(|e| e.bytes).unwrap_or(0)
+        } else {
+            self.stage.remove(&st.unwrap().1).map(|e| e.bytes).unwrap_or(0)
+        };
+        self.bytes -= freed.min(self.bytes);
+        freed
+    }
+}
+
+/// Thread-safe, byte-bounded memoization of partition, schedule and
+/// stage-table artifacts. See the module docs for keying and eviction
+/// rules.
 pub struct PlanCache {
-    dp: Mutex<HashMap<DpKey, Arc<DpPlan>>>,
-    layerwise: Mutex<HashMap<DpKey, Arc<LayerwisePlan>>>,
-    tp: Mutex<HashMap<TpKey, Arc<TpPlan>>>,
+    maps: Mutex<Maps>,
+    /// Byte budget (0 = unbounded).
+    budget: usize,
     hits: AtomicU64,
     solves: AtomicU64,
+    evictions: AtomicU64,
+    peak_bytes: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache::new()
+    }
 }
 
 impl PlanCache {
+    /// A cache bounded by the environment's budget (see
+    /// [`budget_from_env`]).
     pub fn new() -> PlanCache {
-        PlanCache::default()
+        PlanCache::with_budget(budget_from_env())
     }
 
+    /// A cache with an explicit byte budget (0 = unbounded).
+    pub fn with_budget(budget_bytes: usize) -> PlanCache {
+        PlanCache {
+            maps: Mutex::new(Maps::default()),
+            budget: budget_bytes,
+            hits: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// An unbounded cache (no eviction).
+    pub fn unbounded() -> PlanCache {
+        PlanCache::with_budget(0)
+    }
+
+    /// The configured byte budget (0 = unbounded).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// The LRU lookup/insert core. `proj` selects the map (a plain `fn`
+    /// so the higher-ranked borrow is explicit), `weigh` reports the
+    /// solved value's heap bytes. The hit path takes one lock, bumps the
+    /// entry's tick and clones the `Arc` — no allocation.
     fn get_or_solve<K, V, F>(
         &self,
-        map: &Mutex<HashMap<K, Arc<V>>>,
+        proj: fn(&mut Maps) -> &mut HashMap<K, Entry<V>>,
         key: &K,
+        weigh: fn(&V) -> usize,
         solve: F,
     ) -> Arc<V>
     where
-        K: Clone + std::hash::Hash + Eq,
+        K: Copy + Eq + std::hash::Hash,
         F: FnOnce() -> V,
     {
-        if let Some(hit) = map.lock().unwrap().get(key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return hit.clone();
+        {
+            let mut m = self.maps.lock().unwrap();
+            m.tick += 1;
+            let t = m.tick;
+            if let Some(e) = proj(&mut m).get_mut(key) {
+                e.tick = t;
+                let v = e.value.clone();
+                drop(m);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return v;
+            }
         }
+        // Solve outside the lock (deterministic solvers: a racing
+        // duplicate is structurally identical; first insert wins).
         self.solves.fetch_add(1, Ordering::Relaxed);
         let solved = Arc::new(solve());
-        map.lock().unwrap().entry(key.clone()).or_insert(solved).clone()
+        let entry_bytes = std::mem::size_of::<(K, Entry<V>)>()
+            + std::mem::size_of::<V>()
+            + weigh(&solved);
+        if self.budget != 0 && entry_bytes > self.budget {
+            // Alone it would blow the budget: hand it back uncached so
+            // the resident total never exceeds the bound.
+            return solved;
+        }
+        let mut m = self.maps.lock().unwrap();
+        m.tick += 1;
+        let t = m.tick;
+        let (value, inserted) = {
+            let map = proj(&mut m);
+            match map.entry(*key) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    let e = e.into_mut();
+                    e.tick = t;
+                    (e.value.clone(), false)
+                }
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(Entry { value: solved.clone(), bytes: entry_bytes, tick: t });
+                    (solved, true)
+                }
+            }
+        };
+        if inserted {
+            m.bytes += entry_bytes;
+            let mut evicted = 0u64;
+            if self.budget != 0 {
+                while m.bytes > self.budget {
+                    if m.evict_lru() == 0 {
+                        break;
+                    }
+                    evicted += 1;
+                }
+            }
+            self.peak_bytes.fetch_max(m.bytes as u64, Ordering::Relaxed);
+            drop(m);
+            if evicted > 0 {
+                self.evictions.fetch_add(evicted, Ordering::Relaxed);
+            }
+        }
+        value
     }
 
     /// Memoized DP partition plan (α-balanced / naive-atomic).
     pub fn dp_plan<F: FnOnce() -> DpPlan>(&self, key: &DpKey, solve: F) -> Arc<DpPlan> {
-        self.get_or_solve(&self.dp, key, solve)
+        self.get_or_solve(|m| &mut m.dp, key, DpPlan::heap_bytes, solve)
     }
 
     /// Memoized NV-layerwise ownership plan.
@@ -146,37 +405,65 @@ impl PlanCache {
         key: &DpKey,
         solve: F,
     ) -> Arc<LayerwisePlan> {
-        self.get_or_solve(&self.layerwise, key, solve)
+        self.get_or_solve(|m| &mut m.layerwise, key, LayerwisePlan::heap_bytes, solve)
     }
 
     /// Memoized TP micro-group plan for one DP rank.
     pub fn tp_plan<F: FnOnce() -> TpPlan>(&self, key: &TpKey, solve: F) -> Arc<TpPlan> {
-        self.get_or_solve(&self.tp, key, solve)
+        self.get_or_solve(|m| &mut m.tp, key, TpPlan::heap_bytes, solve)
     }
 
+    /// Memoized hoisted stage table (census geometry + task tables).
+    pub fn stage_table<F: FnOnce() -> StageTable>(
+        &self,
+        key: &StageKey,
+        solve: F,
+    ) -> Arc<StageTable> {
+        self.get_or_solve(|m| &mut m.stage, key, StageTable::heap_bytes, solve)
+    }
+
+    /// Is a DP plan resident? (No LRU touch — for tests/diagnostics.)
+    pub fn contains_dp(&self, key: &DpKey) -> bool {
+        self.maps.lock().unwrap().dp.contains_key(key)
+    }
+
+    /// Is a TP plan resident? (No LRU touch — for tests/diagnostics.)
+    pub fn contains_tp(&self, key: &TpKey) -> bool {
+        self.maps.lock().unwrap().tp.contains_key(key)
+    }
+
+    /// Statistics snapshot (counters + byte ledger).
     pub fn stats(&self) -> CacheStats {
+        let resident = self.maps.lock().unwrap().bytes as u64;
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             solves: self.solves.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: resident,
+            peak_bytes: self.peak_bytes.load(Ordering::Relaxed).max(resident),
+            budget_bytes: self.budget as u64,
         }
     }
 
     /// Number of cached plans across all maps.
     pub fn len(&self) -> usize {
-        self.dp.lock().unwrap().len()
-            + self.layerwise.lock().unwrap().len()
-            + self.tp.lock().unwrap().len()
+        self.maps.lock().unwrap().len()
     }
 
+    /// Whether no plans are cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Drop every cached plan (counters are kept).
+    /// Drop every cached plan (counters are kept; the byte ledger
+    /// resets).
     pub fn clear(&self) {
-        self.dp.lock().unwrap().clear();
-        self.layerwise.lock().unwrap().clear();
-        self.tp.lock().unwrap().clear();
+        let mut m = self.maps.lock().unwrap();
+        m.dp.clear();
+        m.layerwise.clear();
+        m.tp.clear();
+        m.stage.clear();
+        m.bytes = 0;
     }
 }
 
@@ -211,6 +498,16 @@ mod tests {
     }
 
     #[test]
+    fn stage_keys_carry_optimizer_but_not_c_max() {
+        let a = StageKey::for_scenario(&scen(), 0);
+        let b = StageKey::for_scenario(&scen().with_optim(OptimKind::Shampoo), 0);
+        assert_ne!(a, b, "task tables are optimizer-specific");
+        let c = StageKey::for_scenario(&scen().with_c_max(None), 0);
+        let d = StageKey::for_scenario(&scen().with_c_max(Some(64e6)), 0);
+        assert_eq!(c, d, "C_max only shapes TP plans");
+    }
+
+    #[test]
     fn alpha_ignored_for_non_lb_strategies() {
         let asc = scen().with_strategy(DpStrategy::Asc);
         let a = DpKey::for_scenario(&asc.clone().with_alpha(0.25), 0);
@@ -225,22 +522,97 @@ mod tests {
         assert_eq!(a, b, "C_max is a TP-plane knob");
     }
 
+    fn toy_plan(ranks: usize) -> DpPlan {
+        DpPlan {
+            ranks,
+            cuts: vec![(0..=ranks).map(|r| r * 10).collect()],
+            atomicity: crate::partition::Atomicity::None,
+        }
+    }
+
     #[test]
     fn hit_skips_solve() {
-        let cache = PlanCache::new();
+        let cache = PlanCache::unbounded();
         let key = DpKey::for_scenario(&scen(), 0);
-        let mk = || DpPlan {
-            ranks: 1,
-            cuts: vec![vec![0, 10]],
-            atomicity: crate::partition::Atomicity::None,
-        };
-        let first = cache.dp_plan(&key, mk);
-        assert_eq!(cache.stats(), CacheStats { hits: 0, solves: 1 });
+        let first = cache.dp_plan(&key, || toy_plan(1));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.solves), (0, 1));
         let second = cache.dp_plan(&key, || panic!("must not re-solve"));
-        assert_eq!(cache.stats(), CacheStats { hits: 1, solves: 1 });
+        let s = cache.stats();
+        assert_eq!((s.hits, s.solves, s.evictions), (1, 1, 0));
+        assert!(s.resident_bytes > 0);
         assert_eq!(first.cuts, second.cuts);
         assert_eq!(cache.len(), 1);
         cache.clear();
         assert!(cache.is_empty());
+        assert_eq!(cache.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn budget_evicts_lru_first() {
+        // Weigh one toy entry, then budget for exactly two of them.
+        let probe = PlanCache::unbounded();
+        let mk_key = |stage: usize| DpKey { stage, ..DpKey::for_scenario(&scen(), 0) };
+        probe.dp_plan(&mk_key(0), || toy_plan(4));
+        let per_entry = probe.stats().resident_bytes as usize;
+        assert!(per_entry > 0);
+
+        let cache = PlanCache::with_budget(2 * per_entry);
+        cache.dp_plan(&mk_key(0), || toy_plan(4));
+        cache.dp_plan(&mk_key(1), || toy_plan(4));
+        assert_eq!(cache.len(), 2);
+        // Touch key 0 so key 1 is the LRU, then overflow.
+        cache.dp_plan(&mk_key(0), || panic!("hit expected"));
+        cache.dp_plan(&mk_key(2), || toy_plan(4));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.resident_bytes <= s.budget_bytes, "{s:?}");
+        assert!(cache.contains_dp(&mk_key(0)), "recently-used entry evicted");
+        assert!(!cache.contains_dp(&mk_key(1)), "LRU entry survived");
+        assert!(cache.contains_dp(&mk_key(2)));
+        assert!(s.peak_bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn oversize_entries_bypass_the_cache() {
+        let cache = PlanCache::with_budget(64); // smaller than any entry
+        let key = DpKey::for_scenario(&scen(), 0);
+        let a = cache.dp_plan(&key, || toy_plan(64));
+        assert_eq!(a.ranks, 64);
+        assert_eq!(cache.len(), 0, "oversize entry must not be cached");
+        assert_eq!(cache.stats().resident_bytes, 0);
+        // Re-solved on next use (still correct, still uncached).
+        let b = cache.dp_plan(&key, || toy_plan(64));
+        assert_eq!(a.cuts, b.cuts);
+        assert_eq!(cache.stats().solves, 2);
+    }
+
+    #[test]
+    fn env_budget_parsing_shapes() {
+        // Constructors only (env vars are process-global; don't set them
+        // here): explicit budgets round-trip, 0 = unbounded.
+        assert_eq!(PlanCache::with_budget(123).budget_bytes(), 123);
+        assert_eq!(PlanCache::unbounded().budget_bytes(), 0);
+        // MiB conversion: 256 is exactly the default; 0/negative mean
+        // unbounded; NaN/inf are rejected (never silently unbounded).
+        assert_eq!(budget_mb_to_bytes(256.0), Some(DEFAULT_BUDGET_BYTES));
+        assert_eq!(budget_mb_to_bytes(1.0), Some(1 << 20));
+        assert_eq!(budget_mb_to_bytes(0.0), Some(0));
+        assert_eq!(budget_mb_to_bytes(-3.0), Some(0));
+        assert_eq!(budget_mb_to_bytes(f64::NAN), None);
+        assert_eq!(budget_mb_to_bytes(f64::INFINITY), None);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let cache = PlanCache::with_budget(1 << 20);
+        cache.dp_plan(&DpKey::for_scenario(&scen(), 0), || toy_plan(2));
+        let v = cache.stats().to_json();
+        assert_eq!(v.get("solves").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            v.get("budget_bytes").unwrap().as_usize().unwrap(),
+            1 << 20,
+        );
+        assert!(v.get("resident_bytes").unwrap().as_f64().unwrap() > 0.0);
     }
 }

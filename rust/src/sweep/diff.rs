@@ -1,0 +1,305 @@
+//! Sweep baseline diffing: join a fresh sweep against a prior JSON
+//! artifact, emit per-scenario speedup columns, and gate on regressions.
+//!
+//! `canzona sweep --json base.json` captures a baseline;
+//! `canzona sweep --baseline base.json` re-runs the grid, prints a diff
+//! table (baseline vs. current `total_s` / `optimizer_s`, speedup
+//! columns where > 1.00x means the current code is faster), and exits
+//! nonzero when any matched scenario's `total_s` regressed beyond the
+//! threshold (`--regress-pct`, default 2%). The timing model is pure
+//! f64 arithmetic over the census, so identical code diffs clean at a
+//! 0% threshold — any drift is a real model change, which makes the
+//! sweep artifact a CI regression gate (see `.github/workflows/ci.yml`).
+//!
+//! Rows are joined on the full scenario fingerprint (model, DP/TP/PP,
+//! optimizer, strategy, α, `C_max`); baseline rows with no counterpart
+//! in the current grid (and vice versa) are counted, reported, and
+//! excluded from the verdict.
+
+use std::collections::BTreeMap;
+
+use crate::bail;
+use crate::sim::{Breakdown, Scenario};
+use crate::util::error::Result;
+use crate::util::json::Value;
+use crate::util::table::{ratio, secs, Table};
+
+/// One matched scenario: baseline vs. current timings.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    /// Human-readable scenario fingerprint (the join key).
+    pub key: String,
+    /// Baseline end-to-end iteration time (s).
+    pub base_total_s: f64,
+    /// Current end-to-end iteration time (s).
+    pub cur_total_s: f64,
+    /// Baseline optimizer-step time (s).
+    pub base_optimizer_s: f64,
+    /// Current optimizer-step time (s).
+    pub cur_optimizer_s: f64,
+}
+
+impl DiffRow {
+    /// Baseline / current total time: > 1.0 means the current code is
+    /// faster.
+    pub fn total_speedup(&self) -> f64 {
+        self.base_total_s / self.cur_total_s
+    }
+
+    /// Baseline / current optimizer-step time.
+    pub fn optimizer_speedup(&self) -> f64 {
+        self.base_optimizer_s / self.cur_optimizer_s
+    }
+
+    /// Did `total_s` regress beyond `threshold_pct` percent?
+    pub fn regressed(&self, threshold_pct: f64) -> bool {
+        self.cur_total_s > self.base_total_s * (1.0 + threshold_pct / 100.0)
+    }
+}
+
+/// A sweep-vs-baseline comparison (see the module docs).
+#[derive(Clone, Debug)]
+pub struct SweepDiff {
+    /// Matched scenarios, in current-sweep order.
+    pub rows: Vec<DiffRow>,
+    /// Current scenarios the baseline did not contain.
+    pub missing_in_baseline: usize,
+    /// Baseline scenarios the current sweep did not run.
+    pub extra_in_baseline: usize,
+    /// Regression threshold in percent (on `total_s`).
+    pub threshold_pct: f64,
+}
+
+/// The join key of one current-sweep scenario. Numeric fields are
+/// formatted with `{}` (shortest round-trip), which is exactly how the
+/// JSON artifact serializes them — so keys built from either side match
+/// byte-for-byte.
+pub fn scenario_key(s: &Scenario) -> String {
+    format!(
+        "{} dp{} tp{} pp{} {} {} a={} c={}",
+        s.label,
+        s.dp,
+        s.tp,
+        s.pp,
+        s.optim.label(),
+        s.strategy.label(),
+        s.alpha,
+        match s.c_max_bytes {
+            None => "none".to_string(),
+            Some(b) => format!("{b}"),
+        },
+    )
+}
+
+/// The join key of one baseline JSON row.
+fn row_key(v: &Value) -> Result<String> {
+    let c_max = match v.get("c_max_bytes")? {
+        Value::Null => "none".to_string(),
+        other => format!("{}", other.as_f64()?),
+    };
+    Ok(format!(
+        "{} dp{} tp{} pp{} {} {} a={} c={}",
+        v.get("model")?.as_str()?,
+        v.get("dp")?.as_f64()?,
+        v.get("tp")?.as_f64()?,
+        v.get("pp")?.as_f64()?,
+        v.get("optim")?.as_str()?,
+        v.get("strategy")?.as_str()?,
+        v.get("alpha")?.as_f64()?,
+        c_max,
+    ))
+}
+
+impl SweepDiff {
+    /// Join a baseline artifact (the `render_json` format) against a
+    /// fresh sweep's scenarios/breakdowns.
+    pub fn compare(
+        baseline: &Value,
+        scenarios: &[Scenario],
+        breakdowns: &[Breakdown],
+        threshold_pct: f64,
+    ) -> Result<SweepDiff> {
+        assert_eq!(scenarios.len(), breakdowns.len());
+        let mut base: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+        for row in baseline.get("scenarios")?.as_arr()? {
+            base.insert(
+                row_key(row)?,
+                (row.get("total_s")?.as_f64()?, row.get("optimizer_s")?.as_f64()?),
+            );
+        }
+        let mut rows = Vec::with_capacity(scenarios.len());
+        let mut missing = 0usize;
+        for (s, b) in scenarios.iter().zip(breakdowns) {
+            let key = scenario_key(s);
+            match base.remove(&key) {
+                Some((base_total_s, base_optimizer_s)) => rows.push(DiffRow {
+                    key,
+                    base_total_s,
+                    cur_total_s: b.total_s,
+                    base_optimizer_s,
+                    cur_optimizer_s: b.optimizer_s,
+                }),
+                None => missing += 1,
+            }
+        }
+        Ok(SweepDiff {
+            rows,
+            missing_in_baseline: missing,
+            extra_in_baseline: base.len(),
+            threshold_pct,
+        })
+    }
+
+    /// The matched rows whose `total_s` regressed beyond the threshold.
+    pub fn regressions(&self) -> Vec<&DiffRow> {
+        self.rows.iter().filter(|r| r.regressed(self.threshold_pct)).collect()
+    }
+
+    /// Render the diff as a Markdown table with speedup columns and a
+    /// per-row verdict.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Sweep vs baseline — {} matched, {} new, {} dropped (threshold {}%)",
+                self.rows.len(),
+                self.missing_in_baseline,
+                self.extra_in_baseline,
+                self.threshold_pct,
+            ),
+            &["scenario", "base total", "total", "speedup",
+              "base optim", "optim", "opt speedup", "verdict"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.key.clone(),
+                secs(r.base_total_s),
+                secs(r.cur_total_s),
+                ratio(r.total_speedup()),
+                secs(r.base_optimizer_s),
+                secs(r.cur_optimizer_s),
+                ratio(r.optimizer_speedup()),
+                if r.regressed(self.threshold_pct) { "REGRESSED".into() } else { "ok".into() },
+            ]);
+        }
+        t
+    }
+
+    /// The regression gate: `Err` (→ nonzero process exit) when any
+    /// matched scenario regressed beyond the threshold, or when the
+    /// baseline shares no scenarios with this sweep at all.
+    pub fn verdict(&self) -> Result<()> {
+        if self.rows.is_empty() {
+            bail!(
+                "baseline shares no scenarios with this sweep \
+                 ({} baseline rows unmatched) — same grid flags required",
+                self.extra_in_baseline,
+            );
+        }
+        let bad = self.regressions();
+        if !bad.is_empty() {
+            let worst = bad
+                .iter()
+                .map(|r| r.cur_total_s / r.base_total_s)
+                .fold(0.0f64, f64::max);
+            bail!(
+                "sweep regression: {}/{} scenarios slower than baseline by > {}% \
+                 (worst {:.2}x); first: {}",
+                bad.len(),
+                self.rows.len(),
+                self.threshold_pct,
+                worst,
+                bad[0].key,
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optim::{CostMetric, OptimKind};
+    use crate::model::qwen3::Qwen3Size;
+    use crate::partition::DpStrategy;
+    use crate::sweep::{render_json, SweepEngine, SweepGrid};
+
+    fn grid() -> SweepGrid {
+        SweepGrid {
+            models: vec![Qwen3Size::S1_7B],
+            dp: vec![4, 8],
+            tp: vec![2],
+            pp: vec![1],
+            optims: vec![OptimKind::Muon],
+            strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+            alphas: vec![1.0],
+            c_max_mb: vec![Some(256.0)],
+            metric: CostMetric::Numel,
+        }
+    }
+
+    #[test]
+    fn self_diff_is_clean_at_zero_threshold() {
+        let engine = SweepEngine::new(2);
+        let (scens, res) = engine.run_grid(&grid());
+        let baseline = render_json(&scens, &res);
+        let diff = SweepDiff::compare(&baseline, &scens, &res, 0.0).unwrap();
+        assert_eq!(diff.rows.len(), scens.len());
+        assert_eq!(diff.missing_in_baseline, 0);
+        assert_eq!(diff.extra_in_baseline, 0);
+        for r in &diff.rows {
+            assert_eq!(r.total_speedup(), 1.0, "{}", r.key);
+        }
+        diff.verdict().unwrap();
+        assert!(diff.table().render().contains("ok"));
+    }
+
+    #[test]
+    fn keys_survive_json_round_trip() {
+        // The artifact is re-parsed from its serialized bytes — numeric
+        // formatting must agree between both key builders.
+        let engine = SweepEngine::new(1);
+        let (scens, res) = engine.run_grid(&grid());
+        let reparsed = Value::parse(&render_json(&scens, &res).to_string()).unwrap();
+        let diff = SweepDiff::compare(&reparsed, &scens, &res, 0.0).unwrap();
+        assert_eq!(diff.rows.len(), scens.len());
+        assert_eq!(diff.missing_in_baseline + diff.extra_in_baseline, 0);
+    }
+
+    #[test]
+    fn injected_regression_trips_the_gate() {
+        let engine = SweepEngine::new(2);
+        let (scens, res) = engine.run_grid(&grid());
+        let mut baseline = render_json(&scens, &res);
+        // Pretend the baseline was 20% faster on one scenario: the
+        // current run now reads as a regression.
+        if let Value::Obj(m) = &mut baseline {
+            let Some(Value::Arr(rows)) = m.get_mut("scenarios") else { panic!() };
+            let Some(Value::Obj(row)) = rows.first_mut() else { panic!() };
+            let t = row.get("total_s").unwrap().as_f64().unwrap();
+            row.insert("total_s".into(), Value::num(t * 0.8));
+        }
+        let diff = SweepDiff::compare(&baseline, &scens, &res, 2.0).unwrap();
+        assert_eq!(diff.regressions().len(), 1);
+        let err = diff.verdict().unwrap_err().to_string();
+        assert!(err.contains("regression"), "{err}");
+        assert!(diff.table().render().contains("REGRESSED"));
+        // A generous threshold forgives it.
+        let lax = SweepDiff::compare(&baseline, &scens, &res, 50.0).unwrap();
+        lax.verdict().unwrap();
+    }
+
+    #[test]
+    fn disjoint_grids_are_reported_not_matched() {
+        let engine = SweepEngine::new(1);
+        let (scens, res) = engine.run_grid(&grid());
+        let baseline = render_json(&scens, &res);
+        let mut other = grid();
+        other.tp = vec![4]; // disjoint fingerprints
+        let (scens2, res2) = engine.run_grid(&other);
+        let diff = SweepDiff::compare(&baseline, &scens2, &res2, 2.0).unwrap();
+        assert!(diff.rows.is_empty());
+        assert_eq!(diff.missing_in_baseline, scens2.len());
+        assert_eq!(diff.extra_in_baseline, scens.len());
+        assert!(diff.verdict().is_err(), "no overlap must fail loudly");
+    }
+}

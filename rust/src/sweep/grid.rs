@@ -18,15 +18,23 @@ use crate::{bail, err};
 /// dimension.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
+    /// Model family members to sweep.
     pub models: Vec<Qwen3Size>,
+    /// DP group sizes.
     pub dp: Vec<usize>,
+    /// TP group sizes.
     pub tp: Vec<usize>,
+    /// PP group sizes.
     pub pp: Vec<usize>,
+    /// Optimizers.
     pub optims: Vec<OptimKind>,
+    /// DP strategies.
     pub strategies: Vec<DpStrategy>,
+    /// α values (LB-ASC balance factor).
     pub alphas: Vec<f64>,
-    /// `None` entries mean No-Fuse.
+    /// `C_max` values in MB; `None` entries mean No-Fuse.
     pub c_max_mb: Vec<Option<f64>>,
+    /// Balancing cost metric (one per grid).
     pub metric: CostMetric,
 }
 
@@ -131,6 +139,7 @@ impl SweepGrid {
             * self.c_max_mb.len()
     }
 
+    /// Whether the cross product is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

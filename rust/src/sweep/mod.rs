@@ -4,23 +4,32 @@
 //! optimizer × strategy) scenarios. This subsystem turns the one-off
 //! figure harnesses into a reusable batch-evaluation service:
 //!
-//! * [`cache`] — memoized `DpPlan` / `TpPlan` artifacts keyed by scenario
-//!   fingerprint, so repeated `simulate_iteration` calls reuse partitions
-//!   and micro-group schedules instead of re-solving LPT (the same
-//!   amortize-the-planning move Dion/DMuon make across steps).
+//! * [`cache`] — memoized `DpPlan` / `TpPlan` / `LayerwisePlan` /
+//!   `StageTable` artifacts keyed by scenario fingerprint and bounded by
+//!   an LRU byte budget, so repeated `simulate_iteration` calls reuse
+//!   partitions, micro-group schedules and hoisted census tables instead
+//!   of re-solving LPT (the same amortize-the-planning move Dion/DMuon
+//!   make across steps) — without growing forever.
 //! * [`grid`] — declarative scenario grids with deterministic expansion
 //!   order.
 //! * [`engine`] — the work-stealing runner (over [`crate::util::pool`])
 //!   that fans a grid across cores and merges results in scenario order,
 //!   plus table/JSON artifact rendering.
+//! * [`diff`] — baseline diffing: join a sweep against a prior JSON
+//!   artifact, print speedup columns, exit nonzero on regression
+//!   (`canzona sweep --baseline`).
 //!
 //! Every `experiments::figures` harness runs on [`engine::SweepEngine::global`],
 //! and the `canzona sweep` CLI subcommand exposes ad-hoc grids.
 
+#![warn(missing_docs)]
+
 pub mod cache;
+pub mod diff;
 pub mod engine;
 pub mod grid;
 
-pub use cache::{CacheStats, DpKey, PlanCache, TpKey};
+pub use cache::{CacheStats, DpKey, PlanCache, StageKey, TpKey};
+pub use diff::{DiffRow, SweepDiff};
 pub use engine::{render_json, render_table, SweepEngine};
 pub use grid::SweepGrid;

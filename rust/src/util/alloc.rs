@@ -1,0 +1,105 @@
+//! Heap-allocation instrumentation: a counting [`GlobalAlloc`] wrapper
+//! around the system allocator plus a per-thread counter.
+//!
+//! Registered as the crate's `#[global_allocator]` (see `lib.rs`), it
+//! lets tests *prove* a code path performs zero heap allocations — the
+//! contract the warm (plan-cache-hit) `simulate_iteration` path makes
+//! (`tests/warm_alloc.rs`). The counter is thread-local, so
+//! concurrently-running tests and pool workers never pollute each
+//! other's measurements, and the per-allocation overhead is one
+//! thread-local increment (negligible next to `malloc` itself).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    /// Allocations (alloc / alloc_zeroed / realloc) on this thread.
+    /// `const`-initialized so the TLS access itself never allocates.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The counting allocator. Forwards everything to [`System`], counting
+/// each allocation (not deallocation) on the calling thread.
+pub struct CountingAllocator;
+
+#[inline]
+fn bump() {
+    // `try_with`: TLS is unavailable during thread teardown — counting
+    // must never panic inside the allocator.
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+// SAFETY: pure pass-through to `System`; the counter has no effect on
+// the returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Heap allocations performed by the current thread so far.
+pub fn allocations_on_this_thread() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Run `f` and report how many heap allocations it performed on this
+/// thread (plus its result).
+pub fn count_allocations<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = allocations_on_this_thread();
+    let r = f();
+    (allocations_on_this_thread() - before, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_an_allocation() {
+        let (n, v) = count_allocations(|| vec![1u8, 2, 3]);
+        assert!(n >= 1, "Vec construction must register");
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pure_arithmetic_is_free() {
+        let (n, x) = count_allocations(|| {
+            let mut acc = 0.0f64;
+            for i in 0..1000 {
+                acc += (i as f64).sqrt();
+            }
+            acc
+        });
+        assert_eq!(n, 0, "scalar math must not allocate");
+        assert!(x > 0.0);
+    }
+
+    #[test]
+    fn vec_reuse_within_capacity_is_free() {
+        // The pattern Breakdown reuse relies on: clear + refill within
+        // capacity allocates nothing.
+        let mut v: Vec<f64> = Vec::with_capacity(64);
+        v.resize(64, 1.0);
+        let (n, _) = count_allocations(|| {
+            v.clear();
+            v.extend_from_slice(&[2.0; 64]);
+            v.len()
+        });
+        assert_eq!(n, 0);
+    }
+}

@@ -5,6 +5,7 @@
 //! criterion, rayon) are implemented here from scratch, scoped to what
 //! the rest of the crate needs.
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod error;

@@ -8,9 +8,36 @@
 //! negligible next to task cost). Results are merged back in **input
 //! order**, so the output is byte-for-byte independent of scheduling:
 //! the property the sweep determinism tests pin down.
+//!
+//! # One shared executor
+//!
+//! The whole crate funnels its parallelism through this module, and the
+//! *outermost* `parallel_map` on a thread is the executor. Callers that
+//! used to nest pools route everything through one tier instead:
+//! `experiments::run("all")` runs harnesses sequentially and lets each
+//! scenario batch fan out N-wide here (it previously peaked at
+//! ≈ N + 13·N live threads, one harness pool nesting a scenario pool
+//! per harness). As a guard, a `parallel_map` issued from *inside* a
+//! worker ([`on_worker`]) runs inline on that worker rather than
+//! spawning a second tier of threads, so the live thread count is
+//! bounded by the outer pool's N regardless of nesting depth. The
+//! merged output is unchanged either way (results are index-merged,
+//! never scheduling-dependent).
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::Mutex;
+
+thread_local! {
+    /// Set while the current thread is executing as a pool worker.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Is the current thread a `parallel_map` worker? Nested calls use this
+/// to run inline on the shared executor instead of spawning threads.
+pub fn on_worker() -> bool {
+    IN_WORKER.with(|f| f.get())
+}
 
 /// Worker count: `CANZONA_SWEEP_THREADS` overrides (min 1), else the
 /// machine's available parallelism.
@@ -37,7 +64,9 @@ where
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
-    if threads == 1 {
+    // Single-thread request, or a nested call from inside a worker: run
+    // inline — the outermost pool is the one shared executor.
+    if threads == 1 || on_worker() {
         return items.iter().map(&f).collect();
     }
 
@@ -56,6 +85,7 @@ where
                 let queues = &queues;
                 let f = &f;
                 s.spawn(move || {
+                    IN_WORKER.with(|flag| flag.set(true));
                     let mut out = Vec::new();
                     loop {
                         // Own queue first (front), then steal (back). The
@@ -145,5 +175,23 @@ mod tests {
     #[test]
     fn default_threads_is_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn nested_calls_run_inline_on_the_shared_executor() {
+        // A nested parallel_map from inside a worker must not spawn a
+        // second tier of threads: it runs inline on the caller's worker
+        // (on_worker() is visible there) and still merges correctly.
+        assert!(!on_worker(), "test thread is not a worker");
+        let outer: Vec<u32> = (0..8).collect();
+        let out = parallel_map(&outer, 4, |&x| {
+            assert!(on_worker(), "closure must run on a pool worker");
+            let inner: Vec<u32> = (0..50).collect();
+            let sums = parallel_map(&inner, 4, |&y| y + x);
+            sums.iter().sum::<u32>()
+        });
+        let expect: Vec<u32> = (0..8).map(|x| (0..50).map(|y| y + x).sum()).collect();
+        assert_eq!(out, expect);
+        assert!(!on_worker(), "flag must not leak to the caller");
     }
 }

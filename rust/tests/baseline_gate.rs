@@ -1,0 +1,81 @@
+//! End-to-end `canzona sweep --baseline` regression gate, through the
+//! real CLI entry point: a clean self-diff exits zero; an injected
+//! regression fixture exits nonzero (run_cli returns Err, which main
+//! maps to a nonzero process exit).
+
+use std::fs;
+use std::path::PathBuf;
+
+use canzona::coordinator::run_cli;
+use canzona::util::json::Value;
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("canzona_baseline_gate_{}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|x| x.to_string()).collect()
+}
+
+const GRID: &str = "--models 1.7b --dp 4 --tp 2 --pp 1 --strategies asc,lb-asc";
+
+#[test]
+fn baseline_gate_round_trip() {
+    let base = tmp_path("base.json");
+    let base_s = base.to_str().unwrap();
+
+    // Capture a baseline artifact.
+    run_cli(argv(&format!("sweep {GRID} --threads 2 --json {base_s}"))).unwrap();
+    let artifact = Value::parse(&fs::read_to_string(&base).unwrap()).unwrap();
+    assert!(artifact.get("cache").is_ok(), "artifact must carry cache stats");
+    assert_eq!(artifact.get("scenarios").unwrap().as_arr().unwrap().len(), 2);
+
+    // Clean self-diff: identical code, deterministic model => exit 0
+    // even at a 0% threshold.
+    run_cli(argv(&format!(
+        "sweep {GRID} --threads 2 --baseline {base_s} --regress-pct 0"
+    )))
+    .unwrap();
+
+    // Injected regression fixture: pretend the baseline was 25% faster.
+    let mut tampered = artifact.clone();
+    if let Value::Obj(m) = &mut tampered {
+        let Some(Value::Arr(rows)) = m.get_mut("scenarios") else { panic!() };
+        for row in rows.iter_mut() {
+            let Value::Obj(r) = row else { panic!() };
+            let t = r.get("total_s").unwrap().as_f64().unwrap();
+            r.insert("total_s".into(), Value::num(t * 0.75));
+        }
+    }
+    let bad = tmp_path("base_regressed.json");
+    fs::write(&bad, tampered.to_string()).unwrap();
+    let err = run_cli(argv(&format!(
+        "sweep {GRID} --threads 2 --baseline {}",
+        bad.to_str().unwrap()
+    )))
+    .unwrap_err();
+    assert!(err.to_string().contains("regression"), "{err}");
+
+    // A corrupt baseline fails loudly, not silently.
+    let garbage = tmp_path("garbage.json");
+    fs::write(&garbage, "{not json").unwrap();
+    assert!(run_cli(argv(&format!(
+        "sweep {GRID} --threads 2 --baseline {}",
+        garbage.to_str().unwrap()
+    )))
+    .is_err());
+}
+
+#[test]
+fn cache_budget_flag_is_accepted() {
+    // Tiny budget: must still complete and report eviction counters.
+    run_cli(argv(&format!(
+        "sweep {GRID} --threads 2 --cache-budget-mb 0.05"
+    )))
+    .unwrap();
+    // 0 = unbounded.
+    run_cli(argv(&format!("sweep {GRID} --threads 1 --cache-budget-mb 0"))).unwrap();
+}

@@ -54,7 +54,7 @@ fn cached_plans_structurally_equal_cold_solves() {
     // Warm a cache through the simulator, then pull the DP plan it stored
     // and compare it cut-for-cut against a direct cold solve.
     let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, DpStrategy::LbAsc);
-    let cache = PlanCache::new();
+    let cache = PlanCache::unbounded();
     simulate_iteration_cached(&s, &cache);
 
     let key = DpKey::for_scenario(&s, 0);
@@ -87,7 +87,8 @@ fn cached_plans_structurally_equal_cold_solves() {
 
 #[test]
 fn repeated_scenario_skips_lpt_solves() {
-    let engine = SweepEngine::new(4);
+    // Unbounded: an env budget override must not evict between passes.
+    let engine = SweepEngine::with_budget(4, 0);
     let grid = test_grid();
     let (scens, first) = engine.run_grid(&grid);
     let after_cold = engine.cache_stats();
@@ -99,10 +100,16 @@ fn repeated_scenario_skips_lpt_solves() {
         after_warm.solves, after_cold.solves,
         "warm run re-ran an LPT solve",
     );
+    // The warm path reads one hoisted stage table per (scenario, stage)
+    // plus one TP plan per DP rank; the DP/layerwise solves are folded
+    // into the stage-table build, so warm hits are fewer than cold
+    // solves — but every scenario must hit at least its stage table.
     assert!(
-        after_warm.hits >= after_cold.hits + after_cold.solves,
-        "warm run should hit every cached plan: {after_warm:?} vs {after_cold:?}",
+        after_warm.hits >= after_cold.hits + scens.len() as u64,
+        "warm run should hit every scenario's stage table: \
+         {after_warm:?} vs {after_cold:?}",
     );
+    assert_eq!(after_warm.evictions, 0, "unbounded cache must not evict");
     assert_eq!(
         render_table(&scens, &first).render(),
         render_table(&scens, &second).render(),

@@ -1,0 +1,77 @@
+//! The warm-path allocation contract: a cache-hit `simulate_iteration`
+//! performs **zero heap allocations**.
+//!
+//! The crate's global allocator (`util::alloc::CountingAllocator`)
+//! counts allocations per thread; after two priming calls (first builds
+//! the cached stage tables / plans, second sizes the reused
+//! `Breakdown`'s vectors), a third `simulate_iteration_into` must not
+//! touch the heap at all — every strategy, with and without fusion,
+//! across PP stages, and at TP=1.
+
+use canzona::cost::optim::OptimKind;
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::{simulate_iteration_into, Breakdown, Scenario};
+use canzona::sweep::PlanCache;
+use canzona::util::alloc::count_allocations;
+
+fn assert_warm_alloc_free(s: &Scenario, label: &str) {
+    // Explicitly unbounded: a CANZONA_CACHE_BUDGET_MB override must not
+    // be able to force evictions (and thus warm re-solves) here.
+    let cache = PlanCache::unbounded();
+    let mut out = Breakdown::default();
+    simulate_iteration_into(s, &cache, &mut out); // cold: builds tables
+    simulate_iteration_into(s, &cache, &mut out); // warm: sizes capacity
+    let before = out.total_s;
+    let (allocs, _) = count_allocations(|| simulate_iteration_into(s, &cache, &mut out));
+    assert_eq!(
+        allocs, 0,
+        "{label}: warm simulate_iteration performed {allocs} heap allocations",
+    );
+    assert_eq!(out.total_s.to_bits(), before.to_bits(), "{label}: warm result drifted");
+    assert!(out.total_s > 0.0);
+}
+
+#[test]
+fn warm_simulate_is_allocation_free_for_every_strategy() {
+    for strategy in [
+        DpStrategy::Sc,
+        DpStrategy::NvLayerwise,
+        DpStrategy::Asc,
+        DpStrategy::LbAsc,
+    ] {
+        let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, strategy);
+        assert_warm_alloc_free(&s, &format!("{strategy:?}"));
+    }
+}
+
+#[test]
+fn warm_simulate_is_allocation_free_no_fuse_and_flops_metric() {
+    let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, DpStrategy::LbAsc)
+        .with_c_max(None);
+    assert_warm_alloc_free(&s, "LbAsc/no-fuse");
+    let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Shampoo, DpStrategy::LbAsc)
+        .with_metric(canzona::cost::optim::CostMetric::Flops);
+    assert_warm_alloc_free(&s, "LbAsc/flops-metric");
+}
+
+#[test]
+fn warm_simulate_is_allocation_free_across_pp_stages_and_tp1() {
+    let mut s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 1, OptimKind::Muon, DpStrategy::LbAsc);
+    s.pp = 2;
+    assert_warm_alloc_free(&s, "LbAsc/pp2");
+    let mut s = Scenario::new(Qwen3Size::S1_7B, 8, 1, 1, OptimKind::Muon, DpStrategy::LbAsc);
+    s.tp = 1;
+    assert_warm_alloc_free(&s, "LbAsc/tp1");
+}
+
+#[test]
+fn cold_path_still_allocates_sanity() {
+    // The counter itself must be live in this binary: a cold run (fresh
+    // cache) visibly allocates.
+    let s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 1, OptimKind::Muon, DpStrategy::LbAsc);
+    let cache = PlanCache::unbounded();
+    let mut out = Breakdown::default();
+    let (allocs, _) = count_allocations(|| simulate_iteration_into(&s, &cache, &mut out));
+    assert!(allocs > 0, "cold path must register allocations");
+}
