@@ -12,7 +12,7 @@ use std::time::Instant;
 use canzona::cost::optim::{CostMetric, OptimKind};
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
-use canzona::sim::{simulate_iteration, Scenario};
+use canzona::sim::{simulate_iteration, PipelineSchedule, Scenario};
 use canzona::sweep::{SweepEngine, SweepGrid};
 use canzona::util::bench::{bench, black_box, fmt_ns};
 use canzona::util::pool;
@@ -26,6 +26,9 @@ fn main() {
         dp: vec![16, 32],
         tp: vec![2, 4, 8],
         pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
         optims: vec![OptimKind::Muon],
         strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
         alphas: vec![1.0],
@@ -113,6 +116,9 @@ fn main() {
         dp: vec![128],
         tp: vec![4, 8],
         pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
         optims: vec![OptimKind::Muon],
         strategies: vec![DpStrategy::LbAsc],
         alphas: vec![1.0],
@@ -135,4 +141,48 @@ fn main() {
             st.peak_bytes as f64 / 1e6,
         );
     }
+
+    // --- bench_timeline: the event-driven pp sweep ----------------------
+    // Paste the printed rows into CHANGES.md from a toolchain-equipped
+    // run: cold (plans + tables solved) vs warm (pure timeline replay)
+    // per pipeline depth, plus the single-scenario replay latency.
+    println!("\n# Timeline engine (pp sweep, 1F1B, mb=8)\n");
+    let pp_grid = SweepGrid {
+        models: vec![Qwen3Size::S8B],
+        dp: vec![8],
+        tp: vec![4],
+        pp: vec![1, 2, 4, 8],
+        micro_batches: vec![8],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::NvLayerwise, DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(512.0)],
+        metric: CostMetric::Numel,
+    };
+    let pp_scens = pp_grid.scenarios();
+    let engine = SweepEngine::new(pool::default_threads());
+    let t = Instant::now();
+    black_box(engine.eval(&pp_scens));
+    let cold_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    black_box(engine.eval(&pp_scens));
+    let warm_s = t.elapsed().as_secs_f64();
+    let st = engine.cache_stats();
+    println!(
+        "{:>3} pp-sweep scenarios: cold {cold_s:.3}s, warm {warm_s:.3}s \
+         ({} solves, {} hits; stage canonicalization shares interior stages)",
+        pp_scens.len(),
+        st.solves,
+        st.hits,
+    );
+    let deep = Scenario::new(Qwen3Size::S8B, 8, 4, 8, OptimKind::Muon, DpStrategy::LbAsc)
+        .with_micro_batches(8);
+    let one = SweepEngine::new(1);
+    one.eval_one(&deep); // warm
+    let replay = bench("timeline replay 8B DP8 TP4 PP8 mb8 (warm)", 10, || {
+        black_box(one.eval_one(&deep));
+    });
+    println!("warm timeline replay: {} median", fmt_ns(replay.median_ns));
 }

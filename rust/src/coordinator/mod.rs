@@ -33,13 +33,16 @@ canzona — unified, asynchronous, load-balanced distributed matrix-based optimi
 
 USAGE:
   canzona plan       --model 32b --dp 32 --tp 8 [--alpha 1.0] [--strategy lb-asc]
-  canzona simulate   --model 32b --dp 32 --tp 8 [--pp 1] [--optim muon] [--strategy lb-asc]
-  canzona sweep      [--models 1.7b,8b,32b] [--dp 16,32] [--tp 1,2,4,8] [--pp 1]
+  canzona simulate   --model 32b --dp 32 --tp 8 [--pp 1] [--micro-batches 1]
+                     [--schedule 1f1b|gpipe] [--straggler 1.0]
+                     [--optim muon] [--strategy lb-asc]
+  canzona sweep      [--models 1.7b,8b,32b] [--dp 16,32] [--tp 1,2,4,8] [--pp 1,2,4,8]
+                     [--micro-batches 1,8] [--schedule 1f1b,gpipe] [--straggler 1.0,1.5]
                      [--optims muon,shampoo,soap,adamw] [--strategies sc,asc,lb-asc]
                      [--alphas 0.5,1.0] [--c-max-mb 512,none] [--metric numel]
                      [--threads N] [--cache-budget-mb 256] [--json out.json] [--csv]
                      [--baseline prior.json] [--regress-pct 2.0]
-  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|planning|all>
+  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|planning|all>
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
                      [--seed 42] [--artifacts artifacts] [--log-every 10]
   canzona list
@@ -76,18 +79,31 @@ fn parse_scenario(args: &Args) -> Result<Scenario> {
         .ok_or_else(|| err!("unknown strategy (sc/nv-layerwise/asc/lb-asc)"))?;
     let optim = OptimKind::parse(args.get_or("optim", "muon"))
         .ok_or_else(|| err!("unknown optimizer (muon/shampoo/soap/adamw)"))?;
-    let mut s = Scenario::new(
-        size,
+    let (dp, tp, pp) = (
         args.get_usize("dp", 32)?,
         args.get_usize("tp", 8)?,
         args.get_usize("pp", 1)?,
-        optim,
-        strategy,
     );
+    if dp < 1 || tp < 1 || pp < 1 {
+        bail!("--dp/--tp/--pp must be >= 1 (got dp={dp} tp={tp} pp={pp})");
+    }
+    let mut s = Scenario::new(size, dp, tp, pp, optim, strategy);
     s.alpha = args.get_f64("alpha", 1.0)?;
     if let Some(cb) = args.get("c-max-mb") {
         let mb: f64 = cb.parse()?;
         s.c_max_bytes = if mb <= 0.0 { None } else { Some(mb * 1e6) };
+    }
+    s.micro_batches = args.get_usize("micro-batches", 1)?;
+    if s.micro_batches < 1 {
+        bail!("--micro-batches must be >= 1");
+    }
+    if let Some(raw) = args.get("schedule") {
+        s.schedule = crate::sim::PipelineSchedule::parse(raw)
+            .ok_or_else(|| err!("unknown schedule {raw:?} (1f1b/gpipe)"))?;
+    }
+    s.straggler = args.get_f64("straggler", 1.0)?;
+    if !s.straggler.is_finite() || s.straggler < 1.0 {
+        bail!("--straggler expects a finite factor >= 1.0, got {}", s.straggler);
     }
     Ok(s)
 }
@@ -124,6 +140,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     t.row(vec!["optimizer".into(), format!("{:.4}s", b.optimizer_s)]);
     t.row(vec!["total".into(), format!("{:.4}s", b.total_s)]);
     t.row(vec!["exposed comm".into(), format!("{:.4}s", b.exposed_comm_s)]);
+    t.row(vec!["schedule bubble".into(), format!("{:.4}s", b.bubble_s)]);
     t.row(vec!["AdamW reference".into(), format!("{:.4}s", b.adamw_ref_s)]);
     t.print();
     Ok(())

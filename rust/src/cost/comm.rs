@@ -120,6 +120,12 @@ impl CommModel {
             .sum()
     }
 
+    /// Point-to-point transfer (pipeline-parallel activation /
+    /// activation-gradient send): pure α-β, no collective scaling.
+    pub fn p2p(&self, bytes: f64, link: LinkKind) -> f64 {
+        bytes / self.hw.bandwidth(link) + self.hw.latency(link)
+    }
+
     /// Communication volume in bytes actually crossing the wire per GPU.
     pub fn volume(&self, kind: CollectiveKind, bytes: f64, r: usize) -> f64 {
         if r <= 1 {
@@ -204,6 +210,14 @@ mod tests {
         let scattered = m.per_message(&sizes, 8, LinkKind::IntraNode,
                                       CollectiveKind::AllToAll);
         assert!(scattered > 10.0 * fused, "{scattered} vs {fused}");
+    }
+
+    #[test]
+    fn p2p_is_alpha_beta() {
+        let m = model();
+        let t = m.p2p(40e9, LinkKind::InterNode); // 40 GB over 40 GB/s
+        assert!((t - (1.0 + m.hw.ib_lat)).abs() < 1e-9);
+        assert!(m.p2p(1e6, LinkKind::IntraNode) < m.p2p(1e6, LinkKind::InterNode));
     }
 
     #[test]

@@ -91,6 +91,19 @@ impl Hardware {
         }
     }
 
+    /// This profile with compute and HBM throughput derated by `factor`
+    /// (`1.0` = unchanged; `1.2` = 20% slower GPU). The network terms
+    /// stay unscaled — the fabric is shared, a slow *GPU* does not slow
+    /// the wire. Used for per-stage straggler perturbation in the
+    /// timeline engine.
+    pub fn derate(&self, factor: f64) -> Hardware {
+        Hardware {
+            gpu_flops: self.gpu_flops / factor,
+            hbm_bw: self.hbm_bw / factor,
+            ..self.clone()
+        }
+    }
+
     /// Time to execute `flops` of dense matmul work on one GPU.
     pub fn compute_time(&self, flops: f64) -> f64 {
         flops / self.gpu_flops
@@ -119,6 +132,21 @@ mod tests {
     fn lookup() {
         assert!(Hardware::by_name("h800").is_some());
         assert!(Hardware::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn derate_scales_compute_not_network() {
+        let hw = Hardware::h800();
+        let slow = hw.derate(2.0);
+        assert_eq!(slow.gpu_flops, hw.gpu_flops / 2.0);
+        assert_eq!(slow.hbm_bw, hw.hbm_bw / 2.0);
+        assert_eq!(slow.nvlink_bw, hw.nvlink_bw);
+        assert_eq!(slow.ib_bw, hw.ib_bw);
+        // factor 1.0 is an exact no-op (the fast-path dispatch relies
+        // on it being bit-identical).
+        let same = hw.derate(1.0);
+        assert_eq!(same.gpu_flops.to_bits(), hw.gpu_flops.to_bits());
+        assert_eq!(same.hbm_bw.to_bits(), hw.hbm_bw.to_bits());
     }
 
     #[test]

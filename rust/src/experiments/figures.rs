@@ -3,7 +3,7 @@
 //! Every harness is a thin table-assembly layer over the sweep engine:
 //! it declares its scenario batch, evaluates it through
 //! [`SweepEngine::global`] (parallel, plan-cached — `run("all")` shares
-//! one warm cache across all thirteen harnesses), and formats rows from
+//! one warm cache across all fourteen harnesses), and formats rows from
 //! the returned breakdowns in a fixed order. To add a new figure, build
 //! the scenario list, call `eval`, and index the results; see
 //! README.md § "Adding a figure harness".
@@ -395,6 +395,44 @@ pub fn fig16() -> Vec<Table> {
     vec![t]
 }
 
+/// PP sweep — the 1F1B timeline engine: pp ∈ {1, 2, 4, 8} × strategy
+/// (Qwen3-8B, DP=8, TP=4, 8 micro-batches, Muon). Expected shapes: the
+/// pipeline bubble fraction tracks (pp-1)/(m+pp-1); LB-ASC's optimizer
+/// advantage over NV-layerwise persists across pp because the
+/// asynchronous optimizer consumes cooldown slack. Note each
+/// micro-batch carries a full `Scenario::tokens` of work, so absolute
+/// times grow with m — the comparable column is the bubble fraction.
+pub fn fig_pp() -> Vec<Table> {
+    let mut t = Table::new(
+        "PP sweep — 1F1B timeline engine (Qwen3-8B, DP=8, TP=4, mb=8, Muon)",
+        &["PP", "strategy", "fwd-bwd", "optimizer", "total", "bubble", "bubble %"],
+    );
+    let pps = [1usize, 2, 4, 8];
+    let strats = [DpStrategy::NvLayerwise, DpStrategy::LbAsc];
+    let mut scens = Vec::with_capacity(pps.len() * strats.len());
+    for &pp in &pps {
+        for &strategy in &strats {
+            scens.push(
+                Scenario::new(Qwen3Size::S8B, 8, 4, pp, OptimKind::Muon, strategy)
+                    .with_micro_batches(8),
+            );
+        }
+    }
+    let res = eval(&scens);
+    for (s, b) in scens.iter().zip(&res) {
+        t.row(vec![
+            s.pp.to_string(),
+            s.strategy.label().into(),
+            secs(b.fwd_bwd_s),
+            secs(b.optimizer_s),
+            secs(b.total_s),
+            secs(b.bubble_s),
+            format!("{:.1}%", 100.0 * b.bubble_s / b.fwd_bwd_s.max(1e-12)),
+        ]);
+    }
+    vec![t]
+}
+
 /// Appendix D.1 — offline planning latency across the family.
 ///
 /// Note: on a warm plan cache this reports the *memoized* planning
@@ -481,11 +519,30 @@ mod tests {
     }
 
     #[test]
+    fn fig_pp_pipeline_bubble_grows_with_depth() {
+        let t = &fig_pp()[0];
+        let csv = t.to_csv();
+        let rows: Vec<Vec<String>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        let bubble = |pp: &str| -> f64 {
+            rows.iter()
+                .find(|r| r[0] == pp && r[1].contains("LB-ASC"))
+                .map(|r| r[5].trim_end_matches('s').parse().unwrap())
+                .unwrap()
+        };
+        assert!(bubble("8") > bubble("1"), "{} vs {}", bubble("8"), bubble("1"));
+        assert!(bubble("4") > 0.0);
+    }
+
+    #[test]
     fn harnesses_are_deterministic_across_cache_states() {
         // Cold first call warms the global cache; warm second call must
         // render the identical bytes (the plan cache is semantically
         // invisible). planning_latency is excluded: it reports wall time.
-        for f in [fig3a, fig4, fig13] {
+        for f in [fig3a, fig4, fig13, fig_pp] {
             let a: String = f().iter().map(|t| t.render()).collect();
             let b: String = f().iter().map(|t| t.render()).collect();
             assert_eq!(a, b);

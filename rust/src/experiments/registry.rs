@@ -21,6 +21,7 @@ pub fn catalog() -> Vec<(&'static str, &'static str, fn() -> Vec<Table>)> {
         ("fig13", "Alpha ablation", figures::fig13),
         ("fig14", "C_max micro-group fusion ablation", figures::fig14),
         ("fig16", "Cost metric ablation (numel vs FLOPs)", figures::fig16),
+        ("fig_pp", "PP sweep on the 1F1B timeline engine", figures::fig_pp),
         ("planning", "Appendix D.1 offline planning latency", figures::planning_latency),
     ]
 }
@@ -67,7 +68,7 @@ mod tests {
         let ids: Vec<&str> = list().iter().map(|(i, _)| *i).collect();
         for required in ["fig3a", "fig3bc", "fig4", "fig6", "fig7", "fig8",
                          "fig9", "fig10-11", "fig12", "fig13", "fig14",
-                         "fig16", "planning"] {
+                         "fig16", "fig_pp", "planning"] {
             assert!(ids.contains(&required), "{required} missing");
         }
     }

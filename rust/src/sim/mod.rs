@@ -5,18 +5,26 @@
 //! step-time breakdowns). Timing-only: the *numeric* path lives in
 //! [`crate::train`] on real thread ranks.
 //!
-//! * [`stream`] — per-resource (compute / communication stream) event
-//!   scheduling primitives.
+//! * [`stream`] — the single-resource scheduling primitive the
+//!   closed-form playback composes by hand.
+//! * [`timeline`] — the discrete-event engine (streams + dependent
+//!   tasks) and the 1F1B / GPipe pipeline schedule builder that times
+//!   `pp > 1` / multi-micro-batch / straggler scenarios.
 //! * [`scenario`] — the experiment configuration (model, DP/TP/PP grid,
-//!   optimizer, strategy, hardware).
+//!   micro-batches, schedule, optimizer, strategy, hardware).
 //! * [`iteration`] — the iteration playback: bucket-overlapped fwd/bwd
-//!   gradient communication + the per-strategy optimizer step.
+//!   gradient communication + the per-strategy optimizer step, with a
+//!   closed-form `pp = 1` fast path and the timeline engine for
+//!   everything else.
 
 pub mod iteration;
 pub mod scenario;
 pub mod stream;
+pub mod timeline;
 
 pub use iteration::{
-    simulate_iteration, simulate_iteration_cached, simulate_iteration_into, Breakdown, StageTable,
+    simulate_iteration, simulate_iteration_cached, simulate_iteration_into,
+    simulate_iteration_timeline, Breakdown, StageTable,
 };
 pub use scenario::Scenario;
+pub use timeline::{PipelineSchedule, Timeline};

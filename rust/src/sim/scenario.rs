@@ -6,6 +6,8 @@ use crate::model::qwen3::{qwen3, Qwen3Size};
 use crate::model::shapes::Param;
 use crate::partition::DpStrategy;
 
+use super::timeline::PipelineSchedule;
+
 /// One simulated configuration (a single bar/point in a paper figure).
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -32,6 +34,22 @@ pub struct Scenario {
     pub batch_per_dp: usize,
     /// Bucket size of the flat buffer, in elements (Megatron default 40M).
     pub bucket_elems: usize,
+    /// Micro-batches per iteration (each processes [`Scenario::tokens`]
+    /// tokens). `> 1` or `pp > 1` routes through the event-driven
+    /// timeline engine; `1` with `pp == 1` keeps the closed-form fast
+    /// path.
+    pub micro_batches: usize,
+    /// Pipeline schedule for `pp > 1` (1F1B default; GPipe available).
+    pub schedule: PipelineSchedule,
+    /// Straggler factor: the last PP stage's compute/HBM throughput is
+    /// derated by this multiplier (`1.0` = homogeneous hardware;
+    /// `1.2` = that stage's GPUs are 20% slower). Values `!= 1.0` route
+    /// through the timeline engine even at `pp == 1`.
+    pub straggler: f64,
+    /// Transformer depth (highest census layer index + 1), cached at
+    /// construction so plan-cache key builds never re-scan the census.
+    /// Derived from `census`; don't set independently.
+    pub n_layers: usize,
 }
 
 impl Scenario {
@@ -43,13 +61,23 @@ impl Scenario {
 
     pub fn new(size: Qwen3Size, dp: usize, tp: usize, pp: usize,
                optim: OptimKind, strategy: DpStrategy) -> Scenario {
+        let census = qwen3(size);
+        let n_layers = census
+            .iter()
+            .filter_map(|p| p.layer)
+            .max()
+            .map(|l| l + 1)
+            .unwrap_or(0);
         Scenario {
-            census: qwen3(size),
+            census,
             size,
             label: size.label().to_string(),
             dp,
             tp,
-            pp,
+            // pp = 0 is meaningless (there is always at least one
+            // stage); clamp so library callers can't route a zero into
+            // the stage split. The CLI/grid parsers reject it outright.
+            pp: pp.max(1),
             optim,
             strategy,
             alpha: 1.0,
@@ -59,6 +87,10 @@ impl Scenario {
             seq_len: 4096,
             batch_per_dp: 1,
             bucket_elems: 40_000_000,
+            micro_batches: 1,
+            schedule: PipelineSchedule::OneFOneB,
+            straggler: 1.0,
+            n_layers,
         }
     }
 
@@ -95,6 +127,27 @@ impl Scenario {
         self.metric = m;
         self
     }
+
+    pub fn with_micro_batches(mut self, m: usize) -> Scenario {
+        self.micro_batches = m.max(1);
+        self
+    }
+
+    pub fn with_schedule(mut self, sched: PipelineSchedule) -> Scenario {
+        self.schedule = sched;
+        self
+    }
+
+    /// Set the last-stage straggler factor, normalized like
+    /// [`Scenario::with_micro_batches`] clamps its input: non-finite
+    /// values fall back to 1.0 (homogeneous) and factors below 1.0 are
+    /// clamped up — a "straggler" can only be slower, and `derate(0.0)`
+    /// would otherwise produce infinite throughput. The CLI/grid
+    /// parsers reject such inputs with an error instead.
+    pub fn with_straggler(mut self, f: f64) -> Scenario {
+        self.straggler = if f.is_finite() { f.max(1.0) } else { 1.0 };
+        self
+    }
 }
 
 #[cfg(test)]
@@ -115,10 +168,33 @@ mod tests {
             .with_strategy(DpStrategy::Sc)
             .with_alpha(0.5)
             .with_optim(OptimKind::Shampoo)
-            .with_c_max(None);
+            .with_c_max(None)
+            .with_micro_batches(8)
+            .with_schedule(PipelineSchedule::GPipe)
+            .with_straggler(1.5);
         assert_eq!(s.strategy, DpStrategy::Sc);
         assert_eq!(s.alpha, 0.5);
         assert_eq!(s.optim, OptimKind::Shampoo);
         assert!(s.c_max_bytes.is_none());
+        assert_eq!(s.micro_batches, 8);
+        assert_eq!(s.schedule, PipelineSchedule::GPipe);
+        assert_eq!(s.straggler, 1.5);
+        // Defaults keep the closed-form fast path.
+        let d = Scenario::paper_default();
+        assert_eq!(d.micro_batches, 1);
+        assert_eq!(d.schedule, PipelineSchedule::OneFOneB);
+        assert_eq!(d.straggler, 1.0);
+        assert_eq!(d.n_layers, 64); // Qwen3-32B depth, cached at construction
+        // Builder/constructor normalization: invalid inputs clamp.
+        let c = Scenario::new(Qwen3Size::S1_7B, 4, 2, 0, OptimKind::Muon, DpStrategy::LbAsc)
+            .with_straggler(0.5)
+            .with_micro_batches(0);
+        assert_eq!(c.pp, 1);
+        assert_eq!(c.straggler, 1.0);
+        assert_eq!(c.micro_batches, 1);
+        assert_eq!(
+            Scenario::paper_default().with_straggler(f64::NAN).straggler,
+            1.0,
+        );
     }
 }

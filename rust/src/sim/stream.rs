@@ -1,10 +1,16 @@
-//! Stream-based discrete-event scheduling.
+//! Single-resource event scheduling: the closed-form playback's
+//! primitive.
 //!
 //! GPUs expose independent compute and communication streams; overlap is
 //! expressed by scheduling work on different streams with data-dependency
-//! ready-times. This tiny abstraction is sufficient to reproduce
-//! Megatron's bucket-overlap behaviour and the paper's micro-group
-//! pipeline (Fig. 2, right).
+//! ready-times. A [`Stream`] is one such serially-executing resource.
+//! The closed-form `pp = 1` iteration playback composes a handful of
+//! them by hand (bucket-overlap, the micro-group pipeline of Fig. 2);
+//! multi-stage schedules with cross-stage dependencies use the full
+//! discrete-event engine in [`crate::sim::timeline`] instead, which
+//! additionally records a verifiable task trace.
+
+#![warn(missing_docs)]
 
 /// One serially-executing resource (a CUDA stream / NIC queue).
 #[derive(Clone, Debug, Default)]
@@ -13,8 +19,9 @@ pub struct Stream {
 }
 
 impl Stream {
+    /// A stream that is free from t = 0.
     pub fn new() -> Stream {
-        Stream { free_at: 0.0 }
+        Stream::default()
     }
 
     /// Schedule a task that becomes ready at `ready` and takes `dur`.
@@ -33,35 +40,6 @@ impl Stream {
     /// Advance the stream's availability to at least `t` (a barrier).
     pub fn barrier(&mut self, t: f64) {
         self.free_at = self.free_at.max(t);
-    }
-}
-
-/// A group of per-rank streams advancing together (e.g. the compute
-/// streams of all ranks in a collective group — collectives synchronise
-/// them).
-#[derive(Clone, Debug)]
-pub struct RankStreams {
-    pub streams: Vec<Stream>,
-}
-
-impl RankStreams {
-    pub fn new(ranks: usize) -> RankStreams {
-        RankStreams { streams: vec![Stream::new(); ranks] }
-    }
-
-    /// Schedule per-rank durations all becoming ready at `ready`; returns
-    /// the max completion (the makespan barrier a collective implies).
-    pub fn schedule_all(&mut self, ready: f64, durs: &[f64]) -> f64 {
-        assert_eq!(durs.len(), self.streams.len());
-        let mut max_done = 0.0f64;
-        for (s, &d) in self.streams.iter_mut().zip(durs) {
-            max_done = max_done.max(s.schedule(ready, d));
-        }
-        max_done
-    }
-
-    pub fn max_free(&self) -> f64 {
-        self.streams.iter().map(|s| s.free_at()).fold(0.0, f64::max)
     }
 }
 
@@ -108,10 +86,10 @@ mod tests {
     }
 
     #[test]
-    fn rank_streams_barrier() {
-        let mut rs = RankStreams::new(3);
-        let done = rs.schedule_all(0.0, &[1.0, 5.0, 2.0]);
-        assert_eq!(done, 5.0);
-        assert_eq!(rs.max_free(), 5.0);
+    fn barrier_advances() {
+        let mut s = Stream::new();
+        s.schedule(0.0, 1.0);
+        s.barrier(5.0);
+        assert_eq!(s.schedule(0.0, 1.0), 6.0);
     }
 }

@@ -1,0 +1,485 @@
+//! Discrete-event timeline engine: streams, dependent tasks, and the
+//! pipeline-parallel (1F1B / GPipe) schedule builder.
+//!
+//! The closed-form playback in [`crate::sim::iteration`] times each PP
+//! stage independently — correct only at `pp = 1`. Real 3D-parallel
+//! iterations are *schedules*: forward/backward micro-batches flow
+//! across stages, gradient collectives overlap the tail of backward,
+//! and the asynchronous optimizer pipeline consumes whatever stream
+//! slack the fill/drain bubbles leave. This module provides the event
+//! engine those schedules are expressed in:
+//!
+//! * [`Timeline`] — a set of serially-executing streams (CUDA stream /
+//!   NIC queue analogues) plus a task trace. A task occupies one stream
+//!   for its duration and starts no earlier than (a) the stream's
+//!   previous task and (b) every declared dependency's completion.
+//!   Tasks must be submitted in dependency order (ids are handed out at
+//!   submission), which makes scheduling a single deterministic forward
+//!   pass — no event queue, no tie-breaking.
+//! * [`schedule_order`] — the per-stage slot order of a pipeline
+//!   schedule ([`PipelineSchedule::OneFOneB`] warmup/steady/cooldown or
+//!   [`PipelineSchedule::GPipe`] all-forward-then-all-backward).
+//! * [`drive_pipeline`] — turns those per-stage orders into tasks via a
+//!   caller-supplied emitter, resolving cross-stage dependencies
+//!   (`F(i,j)` after `F(i-1,j)`; `B(i,j)` after `F(i,j)` and
+//!   `B(i+1,j)`) with a deadlock-checked work-list sweep.
+//! * [`build_pipeline`] — the minimal emitter (one compute task per
+//!   slot), used by the schedule-invariant property tests and as the
+//!   reference for the analytic 1F1B bubble fraction
+//!   `(pp-1)/(m+pp-1)`.
+//!
+//! The full-iteration emitter (bucket-split first-forward/last-backward
+//! micro-batches, reduce-scatter overlap, the optimizer as a trailing
+//! stream consumer) lives in `sim::iteration::simulate_iteration_timeline`.
+//!
+//! Invariants the trace exposes for verification (see
+//! `tests/timeline_props.rs`): no stream runs two tasks concurrently;
+//! every task starts at or after all of its dependencies' ends; the
+//! makespan is bounded below by the dependency-graph critical path and
+//! above by the serial sum of all durations.
+
+#![warn(missing_docs)]
+
+/// Handle of one serially-executing resource in a [`Timeline`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamId(pub u32);
+
+/// Handle of one scheduled task in a [`Timeline`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskId(pub u32);
+
+/// What a task models — for trace analysis and bubble accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Forward compute of (part of) a micro-batch.
+    Forward,
+    /// Backward compute of (part of) a micro-batch.
+    Backward,
+    /// Gradient-path collective (Reduce-Scatter / All-Reduce).
+    GradComm,
+    /// Parameter All-Gather (ZeRO-1 prefetch).
+    ParamComm,
+    /// Inter-stage activation (or activation-gradient) transfer.
+    ActComm,
+    /// TP activation All-Reduce block.
+    TpComm,
+    /// Optimizer step (the micro-group pipeline as one consumer).
+    Optimizer,
+    /// Anything else (synthetic tests).
+    Other,
+}
+
+/// One scheduled task: placement, timing, and its dependency slice.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskRec {
+    /// The stream the task occupied.
+    pub stream: StreamId,
+    /// What the task models.
+    pub kind: TaskKind,
+    /// Start time (s).
+    pub start: f64,
+    /// Duration (s).
+    pub dur: f64,
+    /// Completion time (s) — `start + dur`.
+    pub end: f64,
+    dep_off: u32,
+    dep_len: u32,
+}
+
+/// A deterministic discrete-event schedule under construction (see the
+/// module docs).
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    free_at: Vec<f64>,
+    busy: Vec<f64>,
+    tasks: Vec<TaskRec>,
+    deps: Vec<TaskId>,
+}
+
+impl Timeline {
+    /// An empty timeline with no streams.
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    /// Create a new stream (free from t = 0).
+    pub fn stream(&mut self) -> StreamId {
+        self.free_at.push(0.0);
+        self.busy.push(0.0);
+        StreamId((self.free_at.len() - 1) as u32)
+    }
+
+    /// Schedule a task of `dur` seconds on `stream`, starting no earlier
+    /// than the stream's previous task and every task in `deps`.
+    /// Dependencies must already be scheduled (ids are submission-time).
+    pub fn task(&mut self, stream: StreamId, kind: TaskKind, dur: f64, deps: &[TaskId]) -> TaskId {
+        debug_assert!(dur.is_finite() && dur >= 0.0, "bad duration {dur}");
+        let mut ready = self.free_at[stream.0 as usize];
+        for &d in deps {
+            ready = ready.max(self.tasks[d.0 as usize].end);
+        }
+        let start = ready;
+        let end = start + dur;
+        self.free_at[stream.0 as usize] = end;
+        self.busy[stream.0 as usize] += dur;
+        let dep_off = self.deps.len() as u32;
+        self.deps.extend_from_slice(deps);
+        self.tasks.push(TaskRec {
+            stream,
+            kind,
+            start,
+            dur,
+            end,
+            dep_off,
+            dep_len: deps.len() as u32,
+        });
+        TaskId((self.tasks.len() - 1) as u32)
+    }
+
+    /// Completion time of `t`.
+    pub fn end(&self, t: TaskId) -> f64 {
+        self.tasks[t.0 as usize].end
+    }
+
+    /// Latest completion time over all tasks (0 when empty).
+    pub fn makespan(&self) -> f64 {
+        self.tasks.iter().map(|t| t.end).fold(0.0, f64::max)
+    }
+
+    /// The full task trace, in submission order.
+    pub fn tasks(&self) -> &[TaskRec] {
+        &self.tasks
+    }
+
+    /// The declared dependencies of `t`.
+    pub fn deps_of(&self, t: TaskId) -> &[TaskId] {
+        let r = &self.tasks[t.0 as usize];
+        &self.deps[r.dep_off as usize..(r.dep_off + r.dep_len) as usize]
+    }
+
+    /// Total busy time (sum of task durations) on `s`.
+    pub fn stream_busy(&self, s: StreamId) -> f64 {
+        self.busy[s.0 as usize]
+    }
+
+    /// When `s` drains (end of its last task; 0 if idle).
+    pub fn stream_free(&self, s: StreamId) -> f64 {
+        self.free_at[s.0 as usize]
+    }
+
+    /// Number of streams created.
+    pub fn n_streams(&self) -> usize {
+        self.free_at.len()
+    }
+
+    /// Dependency-graph critical path: the resource-oblivious lower
+    /// bound on the makespan (longest chain of `dur` through `deps`).
+    pub fn critical_path(&self) -> f64 {
+        // Tasks are submitted in dependency order, so one forward pass.
+        let mut lp = vec![0.0f64; self.tasks.len()];
+        let mut best = 0.0f64;
+        for (i, t) in self.tasks.iter().enumerate() {
+            let mut start = 0.0f64;
+            for &d in &self.deps[t.dep_off as usize..(t.dep_off + t.dep_len) as usize] {
+                start = start.max(lp[d.0 as usize]);
+            }
+            lp[i] = start + t.dur;
+            best = best.max(lp[i]);
+        }
+        best
+    }
+
+    /// Sum of all task durations: the fully-serialized upper bound.
+    pub fn serial_sum(&self) -> f64 {
+        self.tasks.iter().map(|t| t.dur).sum()
+    }
+}
+
+/// Which pipeline-parallel schedule orders each stage's micro-batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PipelineSchedule {
+    /// One-forward-one-backward (Megatron / PipeDream-Flush): stage `i`
+    /// runs `min(m, pp-1-i)` warmup forwards, then alternates
+    /// forward/backward, then drains. Default.
+    OneFOneB,
+    /// GPipe: all `m` forwards, then all `m` backwards.
+    GPipe,
+}
+
+impl PipelineSchedule {
+    /// CLI / artifact label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PipelineSchedule::OneFOneB => "1f1b",
+            PipelineSchedule::GPipe => "gpipe",
+        }
+    }
+
+    /// Parse a CLI spelling (`1f1b` / `gpipe`, case-insensitive).
+    pub fn parse(s: &str) -> Option<PipelineSchedule> {
+        match s.to_ascii_lowercase().as_str() {
+            "1f1b" | "one-f-one-b" => Some(PipelineSchedule::OneFOneB),
+            "gpipe" => Some(PipelineSchedule::GPipe),
+            _ => None,
+        }
+    }
+}
+
+/// One slot in a stage's pipeline order: forward or backward of a
+/// micro-batch index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipeSlot {
+    /// Forward of micro-batch `j`.
+    Fwd(usize),
+    /// Backward of micro-batch `j`.
+    Bwd(usize),
+}
+
+/// The slot order stage `stage` (0-based, of `pp`) executes under
+/// `sched` with `m` micro-batches. Every micro-batch appears exactly
+/// once as `Fwd` and once as `Bwd`, with `Bwd(j)` after `Fwd(j)`.
+pub fn schedule_order(
+    sched: PipelineSchedule,
+    pp: usize,
+    stage: usize,
+    m: usize,
+) -> Vec<PipeSlot> {
+    assert!(pp >= 1 && stage < pp && m >= 1);
+    let mut out = Vec::with_capacity(2 * m);
+    match sched {
+        PipelineSchedule::GPipe => {
+            out.extend((0..m).map(PipeSlot::Fwd));
+            out.extend((0..m).map(PipeSlot::Bwd));
+        }
+        PipelineSchedule::OneFOneB => {
+            let w = (pp - 1 - stage).min(m);
+            for j in 0..w {
+                out.push(PipeSlot::Fwd(j));
+            }
+            for k in 0..(m - w) {
+                out.push(PipeSlot::Fwd(w + k));
+                out.push(PipeSlot::Bwd(k));
+            }
+            for k in (m - w)..m {
+                out.push(PipeSlot::Bwd(k));
+            }
+        }
+    }
+    out
+}
+
+/// Expand a pipeline schedule into tasks via `emit`, resolving
+/// cross-stage dependencies with a deadlock-checked work-list sweep.
+///
+/// `emit(timeline, stage, slot, deps)` schedules whatever tasks one
+/// slot needs and returns the id representing that slot's *completion*
+/// (later slots depend on it). The `deps` slice holds the cross-stage
+/// gates: for `Fwd(j)` it is `[F(stage-1, j)]` (empty on stage 0); for
+/// `Bwd(j)` it is `[F(stage, j)]` on the last stage and
+/// `[F(stage, j), B(stage+1, j)]` elsewhere.
+///
+/// Returns the per-stage `(forward, backward)` completion-id tables.
+pub fn drive_pipeline<F>(
+    tl: &mut Timeline,
+    sched: PipelineSchedule,
+    pp: usize,
+    m: usize,
+    mut emit: F,
+) -> (Vec<Vec<TaskId>>, Vec<Vec<TaskId>>)
+where
+    F: FnMut(&mut Timeline, usize, PipeSlot, &[TaskId]) -> TaskId,
+{
+    assert!(pp >= 1 && m >= 1);
+    let orders: Vec<Vec<PipeSlot>> =
+        (0..pp).map(|i| schedule_order(sched, pp, i, m)).collect();
+    let mut fwd: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; pp];
+    let mut bwd: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; pp];
+    let mut cursor = vec![0usize; pp];
+    let mut remaining = 2 * m * pp;
+    let mut deps_buf: Vec<TaskId> = Vec::with_capacity(2);
+    while remaining > 0 {
+        let mut progressed = false;
+        for i in 0..pp {
+            while cursor[i] < orders[i].len() {
+                let slot = orders[i][cursor[i]];
+                deps_buf.clear();
+                let eligible = match slot {
+                    PipeSlot::Fwd(j) => {
+                        if i == 0 {
+                            true
+                        } else if let Some(d) = fwd[i - 1][j] {
+                            deps_buf.push(d);
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                    PipeSlot::Bwd(j) => match fwd[i][j] {
+                        None => false,
+                        Some(own) => {
+                            deps_buf.push(own);
+                            if i + 1 == pp {
+                                true
+                            } else if let Some(d) = bwd[i + 1][j] {
+                                deps_buf.push(d);
+                                true
+                            } else {
+                                false
+                            }
+                        }
+                    },
+                };
+                if !eligible {
+                    break;
+                }
+                let id = emit(tl, i, slot, &deps_buf);
+                match slot {
+                    PipeSlot::Fwd(j) => fwd[i][j] = Some(id),
+                    PipeSlot::Bwd(j) => bwd[i][j] = Some(id),
+                }
+                cursor[i] += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "pipeline schedule deadlocked (invalid slot order)");
+    }
+    let unwrap = |v: Vec<Vec<Option<TaskId>>>| -> Vec<Vec<TaskId>> {
+        v.into_iter()
+            .map(|row| {
+                row.into_iter()
+                    .map(|t| t.expect("slot scheduled"))
+                    .collect::<Vec<TaskId>>()
+            })
+            .collect()
+    };
+    (unwrap(fwd), unwrap(bwd))
+}
+
+/// A minimal scheduled pipeline: one compute stream per stage, one task
+/// per slot (the reference shape the schedule-invariant property tests
+/// analyze).
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    /// Per-stage compute stream.
+    pub compute: Vec<StreamId>,
+    /// `fwd[stage][micro_batch]` completion ids.
+    pub fwd: Vec<Vec<TaskId>>,
+    /// `bwd[stage][micro_batch]` completion ids.
+    pub bwd: Vec<Vec<TaskId>>,
+}
+
+/// Build a bare compute-only pipeline: stage `i` runs forwards of
+/// `fwd_dur[i]` and backwards of `bwd_dur[i]` seconds under `sched`.
+/// With uniform durations and `OneFOneB` (or `GPipe`) this reproduces
+/// the analytic makespan `(m + pp - 1) * (f + b)` and hence the bubble
+/// fraction `(pp - 1) / (m + pp - 1)` exactly.
+pub fn build_pipeline(
+    tl: &mut Timeline,
+    sched: PipelineSchedule,
+    pp: usize,
+    m: usize,
+    fwd_dur: &[f64],
+    bwd_dur: &[f64],
+) -> Pipeline {
+    assert_eq!(fwd_dur.len(), pp);
+    assert_eq!(bwd_dur.len(), pp);
+    let compute: Vec<StreamId> = (0..pp).map(|_| tl.stream()).collect();
+    let (fwd, bwd) = drive_pipeline(tl, sched, pp, m, |tl, i, slot, deps| match slot {
+        PipeSlot::Fwd(_) => tl.task(compute[i], TaskKind::Forward, fwd_dur[i], deps),
+        PipeSlot::Bwd(_) => tl.task(compute[i], TaskKind::Backward, bwd_dur[i], deps),
+    });
+    Pipeline { compute, fwd, bwd }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_serializes_and_deps_gate() {
+        let mut tl = Timeline::new();
+        let a = tl.stream();
+        let b = tl.stream();
+        let t1 = tl.task(a, TaskKind::Other, 2.0, &[]);
+        let t2 = tl.task(a, TaskKind::Other, 1.0, &[]); // queued behind t1
+        assert_eq!(tl.end(t1), 2.0);
+        assert_eq!(tl.end(t2), 3.0);
+        let t3 = tl.task(b, TaskKind::Other, 0.5, &[t2]); // dep across streams
+        assert_eq!(tl.end(t3), 3.5);
+        assert_eq!(tl.stream_busy(a), 3.0);
+        assert_eq!(tl.stream_busy(b), 0.5);
+        assert_eq!(tl.makespan(), 3.5);
+        assert_eq!(tl.deps_of(t3), &[t2]);
+        assert!(tl.critical_path() <= tl.makespan() + 1e-12);
+        assert!(tl.makespan() <= tl.serial_sum() + 1e-12);
+    }
+
+    #[test]
+    fn schedule_order_covers_every_slot_once() {
+        for sched in [PipelineSchedule::OneFOneB, PipelineSchedule::GPipe] {
+            for pp in 1..=5 {
+                for m in 1..=6 {
+                    for stage in 0..pp {
+                        let order = schedule_order(sched, pp, stage, m);
+                        assert_eq!(order.len(), 2 * m);
+                        for j in 0..m {
+                            let f = order.iter().position(|&s| s == PipeSlot::Fwd(j));
+                            let b = order.iter().position(|&s| s == PipeSlot::Bwd(j));
+                            assert!(f.unwrap() < b.unwrap(), "{sched:?} pp{pp} s{stage} m{m}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_1f1b_matches_analytic_makespan() {
+        // Classic result: makespan = (m + pp - 1)(f + b), bubble
+        // fraction (pp - 1)/(m + pp - 1).
+        for (pp, m, f, b) in [(2, 2, 1.0, 1.0), (3, 3, 1.0, 2.0), (4, 8, 0.5, 1.0)] {
+            let mut tl = Timeline::new();
+            build_pipeline(
+                &mut tl,
+                PipelineSchedule::OneFOneB,
+                pp,
+                m,
+                &vec![f; pp],
+                &vec![b; pp],
+            );
+            let expect = (m + pp - 1) as f64 * (f + b);
+            assert!(
+                (tl.makespan() - expect).abs() < 1e-9,
+                "pp{pp} m{m}: {} vs {expect}",
+                tl.makespan()
+            );
+        }
+    }
+
+    #[test]
+    fn gpipe_matches_analytic_makespan_uniform() {
+        let (pp, m, f, b) = (3, 4, 1.0, 2.0);
+        let mut tl = Timeline::new();
+        build_pipeline(&mut tl, PipelineSchedule::GPipe, pp, m, &vec![f; pp], &vec![b; pp]);
+        let expect = (m + pp - 1) as f64 * (f + b);
+        assert!((tl.makespan() - expect).abs() < 1e-9, "{}", tl.makespan());
+    }
+
+    #[test]
+    fn single_stage_pipeline_is_serial() {
+        let mut tl = Timeline::new();
+        let p = build_pipeline(&mut tl, PipelineSchedule::OneFOneB, 1, 3, &[1.0], &[2.0]);
+        assert_eq!(tl.makespan(), 9.0);
+        assert_eq!(tl.stream_busy(p.compute[0]), 9.0);
+    }
+
+    #[test]
+    fn schedule_parse_round_trip() {
+        for s in [PipelineSchedule::OneFOneB, PipelineSchedule::GPipe] {
+            assert_eq!(PipelineSchedule::parse(s.label()), Some(s));
+        }
+        assert_eq!(PipelineSchedule::parse("GPipe"), Some(PipelineSchedule::GPipe));
+        assert_eq!(PipelineSchedule::parse("zigzag"), None);
+    }
+}

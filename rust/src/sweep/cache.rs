@@ -25,22 +25,39 @@
 //! `Scenario::size` (true for every constructor); hardware profiles are
 //! deliberately excluded — plans are hardware-independent.
 //!
+//! # Stage canonicalization (reuse across PP stages)
+//!
+//! The PP stage index enters every key through [`DpKey::stage`] — but
+//! it is *canonicalized* by [`canonical_stage`] first: interior stages
+//! (no embedding, no head) that host the same number of transformer
+//! layers have identical shape censuses up to layer numbering, so their
+//! DP plans, TP plans and stage tables are structurally identical. All
+//! such stages share the first equivalent stage's index, which turns a
+//! `pp = 8` sweep's eight stage solves into three (first, interior,
+//! last) — plan/stage-table reuse across stages for free.
+//!
 //! # Byte budget and eviction
 //!
 //! Without a bound, per-rank `TpPlan`s dominate (~tens of MB for a
 //! DP=128 family sweep) and a long-lived engine grows forever. Every
 //! entry is weighed on insert (shallow struct size + `heap_bytes()` of
-//! the plan + key/entry overhead); when the resident total exceeds the
-//! budget, least-recently-used entries are evicted — across all four
-//! maps — until it fits. A solved plan whose weight alone exceeds the
-//! budget is handed to the caller *uncached*, so the resident total
-//! never exceeds the budget. The default budget is
-//! [`DEFAULT_BUDGET_BYTES`]; `CANZONA_CACHE_BUDGET_MB` (0 = unbounded)
-//! overrides it process-wide and `canzona sweep --cache-budget-mb`
-//! per-invocation. Eviction is semantically invisible: an evicted key
-//! is simply re-solved on next use, and the solvers are deterministic.
+//! the plan + key/entry/LRU-node overhead); when the resident total
+//! exceeds the budget, least-recently-used entries are evicted — across
+//! all four maps — until it fits. Recency is tracked by an intrusive
+//! doubly-linked list threading all four maps (each entry holds its
+//! node index): a hit moves the node to the front in O(1) and an
+//! eviction pops the global tail in O(1), replacing the old
+//! O(entries) min-tick scan per eviction (a ROADMAP item — the scan was
+//! fine at hundreds of plans, not at the ~10⁵ a family × DP sweep can
+//! reach). A solved plan whose weight alone exceeds the budget is
+//! handed to the caller *uncached*, so the resident total never exceeds
+//! the budget. The default budget is [`DEFAULT_BUDGET_BYTES`];
+//! `CANZONA_CACHE_BUDGET_MB` (0 = unbounded) overrides it process-wide
+//! and `canzona sweep --cache-budget-mb` per-invocation. Eviction is
+//! semantically invisible: an evicted key is simply re-solved on next
+//! use, and the solvers are deterministic.
 //!
-//! Concurrency: one mutex guards all maps plus the LRU clock and byte
+//! Concurrency: one mutex guards all maps plus the LRU list and byte
 //! ledger; a solve runs *outside* the lock, so two threads racing on one
 //! key may both solve — the algorithms are deterministic, so either
 //! result is structurally identical and the first insert wins. Hit/solve
@@ -89,12 +106,36 @@ pub fn budget_from_env() -> usize {
         .unwrap_or(DEFAULT_BUDGET_BYTES)
 }
 
+/// The canonical form of PP stage `stage`: itself for the first and
+/// last stages (embedding / head parameters make them unique), else the
+/// first *interior* stage hosting the same number of transformer layers
+/// — whose census is shape-identical, so every derived plan and table
+/// can be shared (see the module docs). Allocation-free, O(pp): layer
+/// counts come from the split rule shared with `stage_census`
+/// ([`crate::sim::iteration::stage_layer_count`]) over the cached
+/// [`Scenario::n_layers`].
+pub fn canonical_stage(s: &Scenario, stage: usize) -> usize {
+    let pp = s.pp.max(1);
+    let stage = stage.min(pp - 1);
+    if stage == 0 || stage == pp - 1 {
+        return stage;
+    }
+    let count = |si| crate::sim::iteration::stage_layer_count(s.n_layers, pp, si);
+    let c = count(stage);
+    for sj in 1..stage {
+        if count(sj) == c {
+            return sj;
+        }
+    }
+    stage
+}
+
 /// Fingerprint of one DP-plane planning problem.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct DpKey {
     /// Model family member (stands in for the census).
     pub model: Qwen3Size,
-    /// PP stage index.
+    /// Canonical PP stage index (see [`canonical_stage`]).
     pub stage: usize,
     /// PP group size.
     pub pp: usize,
@@ -115,11 +156,12 @@ pub struct DpKey {
 }
 
 impl DpKey {
-    /// The DP-plane fingerprint of `s` at PP stage `stage`.
+    /// The DP-plane fingerprint of `s` at PP stage `stage` (stage index
+    /// canonicalized — shape-identical interior stages share keys).
     pub fn for_scenario(s: &Scenario, stage: usize) -> DpKey {
         DpKey {
             model: s.size,
-            stage,
+            stage: canonical_stage(s, stage),
             pp: s.pp,
             dp: s.dp,
             tp: s.tp,
@@ -210,27 +252,135 @@ impl CacheStats {
     }
 }
 
-/// One cached artifact plus its LRU bookkeeping.
+/// One cached artifact plus its intrusive-LRU node index.
 struct Entry<V> {
     value: Arc<V>,
     bytes: usize,
-    tick: u64,
+    node: u32,
 }
 
-/// All four maps plus the shared LRU clock and byte ledger — guarded by
-/// one mutex so cross-map eviction is race-free.
+/// Which map a cached artifact lives in, plus its key — the LRU node's
+/// payload, so a popped tail can be resolved back to its map entry.
+#[derive(Clone, Copy, Debug)]
+enum AnyKey {
+    Dp(DpKey),
+    Layerwise(DpKey),
+    Tp(TpKey),
+    Stage(StageKey),
+}
+
+const NIL: u32 = u32::MAX;
+
+struct LruNode {
+    key: AnyKey,
+    prev: u32,
+    next: u32,
+}
+
+/// Intrusive doubly-linked recency list threading all four maps: O(1)
+/// front-move on a hit, O(1) pop of the global LRU on eviction. Node
+/// slots are recycled through a free list, so the slab never grows past
+/// the high-water entry count.
+struct LruList {
+    nodes: Vec<LruNode>,
+    head: u32,
+    tail: u32,
+    free: Vec<u32>,
+}
+
+impl Default for LruList {
+    fn default() -> LruList {
+        LruList { nodes: Vec::new(), head: NIL, tail: NIL, free: Vec::new() }
+    }
+}
+
+impl LruList {
+    /// Insert a fresh node at the MRU position; returns its slot index.
+    fn push_front(&mut self, key: AnyKey) -> u32 {
+        let node = LruNode { key, prev: NIL, next: self.head };
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.nodes[id as usize] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = id;
+        }
+        self.head = id;
+        if self.tail == NIL {
+            self.tail = id;
+        }
+        id
+    }
+
+    /// Detach `id` from the list (slot not recycled — caller relinks or
+    /// frees it).
+    fn unlink(&mut self, id: u32) {
+        let (prev, next) = {
+            let n = &self.nodes[id as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Move an existing node to the MRU position (a cache hit). A
+    /// single-element list returns at the `head == id` check, so after
+    /// `unlink` the list is guaranteed non-empty.
+    fn touch(&mut self, id: u32) {
+        if self.head == id {
+            return;
+        }
+        self.unlink(id);
+        let old_head = self.head;
+        self.nodes[id as usize].prev = NIL;
+        self.nodes[id as usize].next = old_head;
+        self.nodes[old_head as usize].prev = id;
+        self.head = id;
+    }
+
+    /// Pop the LRU node, recycling its slot; `None` when empty.
+    fn pop_tail(&mut self) -> Option<AnyKey> {
+        if self.tail == NIL {
+            return None;
+        }
+        let id = self.tail;
+        self.unlink(id);
+        self.free.push(id);
+        Some(self.nodes[id as usize].key)
+    }
+
+    fn clear(&mut self) {
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+}
+
+/// All four maps plus the shared intrusive LRU list and byte ledger —
+/// guarded by one mutex so cross-map eviction is race-free.
 #[derive(Default)]
 struct Maps {
     dp: HashMap<DpKey, Entry<DpPlan>>,
     layerwise: HashMap<DpKey, Entry<LayerwisePlan>>,
     tp: HashMap<TpKey, Entry<TpPlan>>,
     stage: HashMap<StageKey, Entry<StageTable>>,
-    tick: u64,
+    lru: LruList,
     bytes: usize,
-}
-
-fn oldest<K: Copy, V>(m: &HashMap<K, Entry<V>>) -> Option<(u64, K)> {
-    m.iter().map(|(k, e)| (e.tick, *k)).min_by_key(|&(t, _)| t)
 }
 
 impl Maps {
@@ -239,32 +389,19 @@ impl Maps {
     }
 
     /// Evict the globally least-recently-used entry; returns the bytes
-    /// freed (0 when every map is empty). Ticks are unique per cache
-    /// operation, so the minimum is unambiguous.
+    /// freed (0 when every map is empty). O(1): pop the list tail and
+    /// remove the map entry it names. Every resident entry holds exactly
+    /// one list node and vice versa, so the removal cannot miss — a
+    /// desync is a bug worth failing loudly over, not papering over.
     fn evict_lru(&mut self) -> usize {
-        let dp = oldest(&self.dp);
-        let lw = oldest(&self.layerwise);
-        let tp = oldest(&self.tp);
-        let st = oldest(&self.stage);
-        let min_tick = [
-            dp.map(|x| x.0),
-            lw.map(|x| x.0),
-            tp.map(|x| x.0),
-            st.map(|x| x.0),
-        ]
-        .into_iter()
-        .flatten()
-        .min();
-        let Some(min_tick) = min_tick else { return 0 };
-        let freed = if dp.map(|x| x.0) == Some(min_tick) {
-            self.dp.remove(&dp.unwrap().1).map(|e| e.bytes).unwrap_or(0)
-        } else if lw.map(|x| x.0) == Some(min_tick) {
-            self.layerwise.remove(&lw.unwrap().1).map(|e| e.bytes).unwrap_or(0)
-        } else if tp.map(|x| x.0) == Some(min_tick) {
-            self.tp.remove(&tp.unwrap().1).map(|e| e.bytes).unwrap_or(0)
-        } else {
-            self.stage.remove(&st.unwrap().1).map(|e| e.bytes).unwrap_or(0)
-        };
+        let Some(key) = self.lru.pop_tail() else { return 0 };
+        let freed = match key {
+            AnyKey::Dp(k) => self.dp.remove(&k).map(|e| e.bytes),
+            AnyKey::Layerwise(k) => self.layerwise.remove(&k).map(|e| e.bytes),
+            AnyKey::Tp(k) => self.tp.remove(&k).map(|e| e.bytes),
+            AnyKey::Stage(k) => self.stage.remove(&k).map(|e| e.bytes),
+        }
+        .expect("LRU tail names a live cache entry");
         self.bytes -= freed.min(self.bytes);
         freed
     }
@@ -318,13 +455,16 @@ impl PlanCache {
         self.budget
     }
 
-    /// The LRU lookup/insert core. `proj` selects the map (a plain `fn`
-    /// so the higher-ranked borrow is explicit), `weigh` reports the
-    /// solved value's heap bytes. The hit path takes one lock, bumps the
-    /// entry's tick and clones the `Arc` — no allocation.
+    /// The LRU lookup/insert core. `proj` selects the map and `wrap`
+    /// tags the key for the shared LRU list (plain `fn`s so the
+    /// higher-ranked borrows are explicit); `weigh` reports the solved
+    /// value's heap bytes. The hit path takes one lock, moves the
+    /// entry's LRU node to the front (O(1)) and clones the `Arc` — no
+    /// allocation.
     fn get_or_solve<K, V, F>(
         &self,
         proj: fn(&mut Maps) -> &mut HashMap<K, Entry<V>>,
+        wrap: fn(K) -> AnyKey,
         key: &K,
         weigh: fn(&V) -> usize,
         solve: F,
@@ -335,11 +475,9 @@ impl PlanCache {
     {
         {
             let mut m = self.maps.lock().unwrap();
-            m.tick += 1;
-            let t = m.tick;
-            if let Some(e) = proj(&mut m).get_mut(key) {
-                e.tick = t;
-                let v = e.value.clone();
+            let found = proj(&mut m).get(key).map(|e| (e.value.clone(), e.node));
+            if let Some((v, node)) = found {
+                m.lru.touch(node);
                 drop(m);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return v;
@@ -351,6 +489,7 @@ impl PlanCache {
         let solved = Arc::new(solve());
         let entry_bytes = std::mem::size_of::<(K, Entry<V>)>()
             + std::mem::size_of::<V>()
+            + std::mem::size_of::<LruNode>()
             + weigh(&solved);
         if self.budget != 0 && entry_bytes > self.budget {
             // Alone it would blow the budget: hand it back uncached so
@@ -358,45 +497,35 @@ impl PlanCache {
             return solved;
         }
         let mut m = self.maps.lock().unwrap();
-        m.tick += 1;
-        let t = m.tick;
-        let (value, inserted) = {
-            let map = proj(&mut m);
-            match map.entry(*key) {
-                std::collections::hash_map::Entry::Occupied(e) => {
-                    let e = e.into_mut();
-                    e.tick = t;
-                    (e.value.clone(), false)
+        let raced = proj(&mut m).get(key).map(|e| (e.value.clone(), e.node));
+        if let Some((v, node)) = raced {
+            // Another thread inserted while we solved: theirs wins.
+            m.lru.touch(node);
+            return v;
+        }
+        let node = m.lru.push_front(wrap(*key));
+        proj(&mut m).insert(*key, Entry { value: solved.clone(), bytes: entry_bytes, node });
+        m.bytes += entry_bytes;
+        let mut evicted = 0u64;
+        if self.budget != 0 {
+            while m.bytes > self.budget {
+                if m.evict_lru() == 0 {
+                    break;
                 }
-                std::collections::hash_map::Entry::Vacant(slot) => {
-                    slot.insert(Entry { value: solved.clone(), bytes: entry_bytes, tick: t });
-                    (solved, true)
-                }
-            }
-        };
-        if inserted {
-            m.bytes += entry_bytes;
-            let mut evicted = 0u64;
-            if self.budget != 0 {
-                while m.bytes > self.budget {
-                    if m.evict_lru() == 0 {
-                        break;
-                    }
-                    evicted += 1;
-                }
-            }
-            self.peak_bytes.fetch_max(m.bytes as u64, Ordering::Relaxed);
-            drop(m);
-            if evicted > 0 {
-                self.evictions.fetch_add(evicted, Ordering::Relaxed);
+                evicted += 1;
             }
         }
-        value
+        self.peak_bytes.fetch_max(m.bytes as u64, Ordering::Relaxed);
+        drop(m);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        solved
     }
 
     /// Memoized DP partition plan (α-balanced / naive-atomic).
     pub fn dp_plan<F: FnOnce() -> DpPlan>(&self, key: &DpKey, solve: F) -> Arc<DpPlan> {
-        self.get_or_solve(|m| &mut m.dp, key, DpPlan::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.dp, AnyKey::Dp, key, DpPlan::heap_bytes, solve)
     }
 
     /// Memoized NV-layerwise ownership plan.
@@ -405,12 +534,13 @@ impl PlanCache {
         key: &DpKey,
         solve: F,
     ) -> Arc<LayerwisePlan> {
-        self.get_or_solve(|m| &mut m.layerwise, key, LayerwisePlan::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.layerwise, AnyKey::Layerwise, key,
+                          LayerwisePlan::heap_bytes, solve)
     }
 
     /// Memoized TP micro-group plan for one DP rank.
     pub fn tp_plan<F: FnOnce() -> TpPlan>(&self, key: &TpKey, solve: F) -> Arc<TpPlan> {
-        self.get_or_solve(|m| &mut m.tp, key, TpPlan::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.tp, AnyKey::Tp, key, TpPlan::heap_bytes, solve)
     }
 
     /// Memoized hoisted stage table (census geometry + task tables).
@@ -419,7 +549,7 @@ impl PlanCache {
         key: &StageKey,
         solve: F,
     ) -> Arc<StageTable> {
-        self.get_or_solve(|m| &mut m.stage, key, StageTable::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.stage, AnyKey::Stage, key, StageTable::heap_bytes, solve)
     }
 
     /// Is a DP plan resident? (No LRU touch — for tests/diagnostics.)
@@ -463,6 +593,7 @@ impl PlanCache {
         m.layerwise.clear();
         m.tp.clear();
         m.stage.clear();
+        m.lru.clear();
         m.bytes = 0;
     }
 }
@@ -601,6 +732,54 @@ mod tests {
         assert_eq!(budget_mb_to_bytes(-3.0), Some(0));
         assert_eq!(budget_mb_to_bytes(f64::NAN), None);
         assert_eq!(budget_mb_to_bytes(f64::INFINITY), None);
+    }
+
+    #[test]
+    fn canonical_stage_shares_interior_stages() {
+        // Qwen3-1.7B has 28 layers; pp = 8 -> per_stage 4: stage 0
+        // (embed), interior 1..=6 all host 4 layers, stage 7 (head).
+        let mut s = scen();
+        s.pp = 8;
+        assert_eq!(canonical_stage(&s, 0), 0);
+        for si in 1..=6 {
+            assert_eq!(canonical_stage(&s, si), 1, "stage {si}");
+        }
+        assert_eq!(canonical_stage(&s, 7), 7);
+        // pp = 1 is the identity.
+        assert_eq!(canonical_stage(&scen(), 0), 0);
+        // Uneven split: 28 layers over pp = 5 -> per_stage 6; interior
+        // stages 1..=3 host 6 layers each (stage 4 takes the rest).
+        let mut s5 = scen();
+        s5.pp = 5;
+        assert_eq!(canonical_stage(&s5, 2), 1);
+        assert_eq!(canonical_stage(&s5, 3), 1);
+        assert_eq!(canonical_stage(&s5, 4), 4);
+        // Keys built through for_scenario collapse accordingly.
+        assert_eq!(DpKey::for_scenario(&s, 3), DpKey::for_scenario(&s, 5));
+        assert_ne!(DpKey::for_scenario(&s, 0), DpKey::for_scenario(&s, 1));
+    }
+
+    #[test]
+    fn lru_list_order_and_recycling() {
+        let mut l = LruList::default();
+        let keyed = |stage| AnyKey::Dp(DpKey { stage, ..DpKey::for_scenario(&scen(), 0) });
+        let stage_of = |k: AnyKey| match k {
+            AnyKey::Dp(d) => d.stage,
+            _ => unreachable!(),
+        };
+        let a = l.push_front(keyed(1));
+        let b = l.push_front(keyed(2));
+        let c = l.push_front(keyed(3));
+        // Order (MRU..LRU): 3, 2, 1. Touch the oldest -> 1, 3, 2.
+        l.touch(a);
+        assert_eq!(stage_of(l.pop_tail().unwrap()), 2, "untouched LRU goes first");
+        assert_eq!(stage_of(l.pop_tail().unwrap()), 3, "then the middle");
+        assert_eq!(stage_of(l.pop_tail().unwrap()), 1, "the touched node last");
+        assert!(l.pop_tail().is_none());
+        // Slots recycle through the free list.
+        let d = l.push_front(keyed(4));
+        assert!(d == a || d == b || d == c, "freed slot reused");
+        assert_eq!(l.nodes.len(), 3);
     }
 
     #[test]

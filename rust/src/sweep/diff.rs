@@ -76,11 +76,14 @@ pub struct SweepDiff {
 /// byte-for-byte.
 pub fn scenario_key(s: &Scenario) -> String {
     format!(
-        "{} dp{} tp{} pp{} {} {} a={} c={}",
+        "{} dp{} tp{} pp{} mb{} {} x{} {} {} a={} c={}",
         s.label,
         s.dp,
         s.tp,
         s.pp,
+        s.micro_batches,
+        s.schedule.label(),
+        s.straggler,
         s.optim.label(),
         s.strategy.label(),
         s.alpha,
@@ -91,18 +94,35 @@ pub fn scenario_key(s: &Scenario) -> String {
     )
 }
 
-/// The join key of one baseline JSON row.
+/// The join key of one baseline JSON row. Pipeline fields absent from
+/// pre-timeline baselines fall back to their defaults (`mb1 1f1b x1`),
+/// so old artifacts keep joining against default-grid sweeps.
 fn row_key(v: &Value) -> Result<String> {
     let c_max = match v.get("c_max_bytes")? {
         Value::Null => "none".to_string(),
         other => format!("{}", other.as_f64()?),
     };
+    let mb = match v.opt("micro_batches") {
+        Some(x) => x.as_f64()?,
+        None => 1.0,
+    };
+    let sched = match v.opt("schedule") {
+        Some(x) => x.as_str()?.to_string(),
+        None => "1f1b".to_string(),
+    };
+    let straggler = match v.opt("straggler") {
+        Some(x) => x.as_f64()?,
+        None => 1.0,
+    };
     Ok(format!(
-        "{} dp{} tp{} pp{} {} {} a={} c={}",
+        "{} dp{} tp{} pp{} mb{} {} x{} {} {} a={} c={}",
         v.get("model")?.as_str()?,
         v.get("dp")?.as_f64()?,
         v.get("tp")?.as_f64()?,
         v.get("pp")?.as_f64()?,
+        mb,
+        sched,
+        straggler,
         v.get("optim")?.as_str()?,
         v.get("strategy")?.as_str()?,
         v.get("alpha")?.as_f64()?,
@@ -229,6 +249,9 @@ mod tests {
             dp: vec![4, 8],
             tp: vec![2],
             pp: vec![1],
+            micro_batches: vec![1],
+            schedules: vec![crate::sim::PipelineSchedule::OneFOneB],
+            stragglers: vec![1.0],
             optims: vec![OptimKind::Muon],
             strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
             alphas: vec![1.0],
@@ -263,6 +286,31 @@ mod tests {
         let diff = SweepDiff::compare(&reparsed, &scens, &res, 0.0).unwrap();
         assert_eq!(diff.rows.len(), scens.len());
         assert_eq!(diff.missing_in_baseline + diff.extra_in_baseline, 0);
+    }
+
+    #[test]
+    fn pre_timeline_baselines_still_join() {
+        // Artifacts written before the timeline engine lack the
+        // micro_batches/schedule/straggler fields; they must still join
+        // against a default-grid sweep via the fallback defaults.
+        let engine = SweepEngine::new(1);
+        let (scens, res) = engine.run_grid(&grid());
+        let mut baseline = render_json(&scens, &res);
+        if let Value::Obj(m) = &mut baseline {
+            let Some(Value::Arr(rows)) = m.get_mut("scenarios") else { panic!() };
+            for row in rows {
+                if let Value::Obj(r) = row {
+                    r.remove("micro_batches");
+                    r.remove("schedule");
+                    r.remove("straggler");
+                    r.remove("bubble_s");
+                }
+            }
+        }
+        let diff = SweepDiff::compare(&baseline, &scens, &res, 0.0).unwrap();
+        assert_eq!(diff.rows.len(), scens.len());
+        assert_eq!(diff.missing_in_baseline + diff.extra_in_baseline, 0);
+        diff.verdict().unwrap();
     }
 
     #[test]

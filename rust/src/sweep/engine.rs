@@ -4,7 +4,7 @@
 //! fans scenarios out over `util::pool` and merges [`Breakdown`]s back in
 //! scenario order. A process-wide [`SweepEngine::global`] instance backs
 //! the figure harnesses, so `experiments::run("all")` shares one warm
-//! cache across all thirteen harnesses.
+//! cache across all fourteen harnesses.
 
 use std::sync::OnceLock;
 
@@ -85,8 +85,9 @@ pub fn render_table(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Table {
     assert_eq!(scenarios.len(), breakdowns.len());
     let mut t = Table::new(
         &format!("Sweep — {} scenarios", scenarios.len()),
-        &["model", "DP", "TP", "PP", "optim", "strategy", "alpha", "C_max",
-          "fwd-bwd", "optimizer", "total", "DP LB", "TP LB", "groups"],
+        &["model", "DP", "TP", "PP", "mb", "sched", "strag", "optim", "strategy",
+          "alpha", "C_max", "fwd-bwd", "optimizer", "total", "bubble", "DP LB",
+          "TP LB", "groups"],
     );
     for (s, b) in scenarios.iter().zip(breakdowns) {
         t.row(vec![
@@ -94,6 +95,9 @@ pub fn render_table(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Table {
             s.dp.to_string(),
             s.tp.to_string(),
             s.pp.to_string(),
+            s.micro_batches.to_string(),
+            s.schedule.label().into(),
+            format!("{:.2}", s.straggler),
             s.optim.label().into(),
             s.strategy.label().into(),
             format!("{:.2}", s.alpha),
@@ -104,6 +108,7 @@ pub fn render_table(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Table {
             secs(b.fwd_bwd_s),
             secs(b.optimizer_s),
             secs(b.total_s),
+            secs(b.bubble_s),
             ratio(load_balance_ratio(&b.dp_loads_flops)),
             ratio(load_balance_ratio(&b.tp_loads_flops)),
             b.n_micro_groups.to_string(),
@@ -122,6 +127,9 @@ pub fn render_json(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Value {
             ("dp", Value::num(s.dp as f64)),
             ("tp", Value::num(s.tp as f64)),
             ("pp", Value::num(s.pp as f64)),
+            ("micro_batches", Value::num(s.micro_batches as f64)),
+            ("schedule", Value::str(s.schedule.label())),
+            ("straggler", Value::num(s.straggler)),
             ("optim", Value::str(s.optim.label())),
             ("strategy", Value::str(s.strategy.label())),
             ("alpha", Value::num(s.alpha)),
@@ -129,6 +137,7 @@ pub fn render_json(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Value {
             ("fwd_bwd_s", Value::num(b.fwd_bwd_s)),
             ("optimizer_s", Value::num(b.optimizer_s)),
             ("total_s", Value::num(b.total_s)),
+            ("bubble_s", Value::num(b.bubble_s)),
             ("exposed_comm_s", Value::num(b.exposed_comm_s)),
             ("dp_lb_ratio", Value::num(load_balance_ratio(&b.dp_loads_flops))),
             ("tp_lb_ratio", Value::num(load_balance_ratio(&b.tp_loads_flops))),
@@ -151,6 +160,9 @@ mod tests {
             dp: vec![4, 8],
             tp: vec![2],
             pp: vec![1],
+            micro_batches: vec![1],
+            schedules: vec![crate::sim::PipelineSchedule::OneFOneB],
+            stragglers: vec![1.0],
             optims: vec![OptimKind::Muon],
             strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
             alphas: vec![1.0],

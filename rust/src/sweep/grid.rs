@@ -1,15 +1,16 @@
 //! Scenario grid specification for batch sweeps.
 //!
 //! A [`SweepGrid`] is the cross product of the axes a paper experiment
-//! varies (model × DP × TP × PP × optimizer × strategy × α × C_max).
-//! [`SweepGrid::scenarios`] expands it in a fixed axis order, so a grid
-//! always yields the same scenario sequence — the deterministic merge
-//! order of the parallel runner.
+//! varies (model × DP × TP × PP × micro-batches × schedule × straggler
+//! × optimizer × strategy × α × C_max). [`SweepGrid::scenarios`]
+//! expands it in a fixed axis order, so a grid always yields the same
+//! scenario sequence — the deterministic merge order of the parallel
+//! runner.
 
 use crate::cost::optim::{CostMetric, OptimKind};
 use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
-use crate::sim::Scenario;
+use crate::sim::{PipelineSchedule, Scenario};
 use crate::util::cli::Args;
 use crate::util::error::Result;
 use crate::{bail, err};
@@ -26,6 +27,12 @@ pub struct SweepGrid {
     pub tp: Vec<usize>,
     /// PP group sizes.
     pub pp: Vec<usize>,
+    /// Micro-batch counts per iteration.
+    pub micro_batches: Vec<usize>,
+    /// Pipeline schedules (1F1B / GPipe).
+    pub schedules: Vec<PipelineSchedule>,
+    /// Straggler factors (last-stage compute derate; 1.0 = homogeneous).
+    pub stragglers: Vec<f64>,
     /// Optimizers.
     pub optims: Vec<OptimKind>,
     /// DP strategies.
@@ -46,6 +53,9 @@ impl Default for SweepGrid {
             dp: vec![32],
             tp: vec![8],
             pp: vec![1],
+            micro_batches: vec![1],
+            schedules: vec![PipelineSchedule::OneFOneB],
+            stragglers: vec![1.0],
             optims: vec![OptimKind::Muon],
             strategies: vec![DpStrategy::LbAsc],
             alphas: vec![1.0],
@@ -96,6 +106,17 @@ impl SweepGrid {
         if let Some(raw) = args.get("pp") {
             g.pp = parse_list(raw, "pp", parse_dim)?;
         }
+        if let Some(raw) = args.get("micro-batches") {
+            g.micro_batches = parse_list(raw, "micro-batches", parse_dim)?;
+        }
+        if let Some(raw) = args.get("schedule") {
+            g.schedules = parse_list(raw, "schedule", PipelineSchedule::parse)?;
+        }
+        if let Some(raw) = args.get("straggler") {
+            g.stragglers = parse_list(raw, "straggler", |s| {
+                s.parse::<f64>().ok().filter(|f| f.is_finite() && *f >= 1.0)
+            })?;
+        }
         if let Some(raw) = args.get("optims") {
             g.optims = parse_list(raw, "optims", OptimKind::parse)?;
         }
@@ -133,6 +154,9 @@ impl SweepGrid {
             * self.dp.len()
             * self.tp.len()
             * self.pp.len()
+            * self.micro_batches.len()
+            * self.schedules.len()
+            * self.stragglers.len()
             * self.optims.len()
             * self.strategies.len()
             * self.alphas.len()
@@ -144,23 +168,35 @@ impl SweepGrid {
         self.len() == 0
     }
 
-    /// Expand the grid in fixed axis order
-    /// (model → dp → tp → pp → optim → strategy → α → C_max).
+    /// Expand the grid in fixed axis order (model → dp → tp → pp →
+    /// micro-batches → schedule → straggler → optim → strategy → α →
+    /// C_max).
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for &model in &self.models {
             for &dp in &self.dp {
                 for &tp in &self.tp {
                     for &pp in &self.pp {
-                        for &optim in &self.optims {
-                            for &strategy in &self.strategies {
-                                for &alpha in &self.alphas {
-                                    for &c_mb in &self.c_max_mb {
-                                        let s = Scenario::new(model, dp, tp, pp, optim, strategy)
-                                            .with_alpha(alpha)
-                                            .with_c_max(c_mb.map(|mb| mb * 1e6))
-                                            .with_metric(self.metric);
-                                        out.push(s);
+                        for &mb in &self.micro_batches {
+                            for &sched in &self.schedules {
+                                for &strag in &self.stragglers {
+                                    for &optim in &self.optims {
+                                        for &strategy in &self.strategies {
+                                            for &alpha in &self.alphas {
+                                                for &c_mb in &self.c_max_mb {
+                                                    let s = Scenario::new(
+                                                        model, dp, tp, pp, optim, strategy,
+                                                    )
+                                                    .with_alpha(alpha)
+                                                    .with_c_max(c_mb.map(|x| x * 1e6))
+                                                    .with_metric(self.metric)
+                                                    .with_micro_batches(mb)
+                                                    .with_schedule(sched)
+                                                    .with_straggler(strag);
+                                                    out.push(s);
+                                                }
+                                            }
+                                        }
                                     }
                                 }
                             }
@@ -226,5 +262,29 @@ mod tests {
         assert!(SweepGrid::parse(&argv("--pp 0")).is_err());
         assert!(SweepGrid::parse(&argv("--alphas 1.5")).is_err());
         assert!(SweepGrid::parse(&argv("--alphas -0.1")).is_err());
+        assert!(SweepGrid::parse(&argv("--micro-batches 0")).is_err());
+        assert!(SweepGrid::parse(&argv("--schedule zigzag")).is_err());
+        assert!(SweepGrid::parse(&argv("--straggler 0.5")).is_err());
+        assert!(SweepGrid::parse(&argv("--straggler nan")).is_err());
+    }
+
+    #[test]
+    fn parses_pipeline_axes() {
+        let g = SweepGrid::parse(&argv(
+            "--pp 1,2,4 --micro-batches 1,8 --schedule 1f1b,gpipe --straggler 1.0,1.5",
+        ))
+        .unwrap();
+        assert_eq!(g.len(), 3 * 2 * 2 * 2);
+        let scens = g.scenarios();
+        assert_eq!(scens.len(), 24);
+        // Axis order: pp slowest of the four, straggler fastest.
+        assert_eq!(scens[0].pp, 1);
+        assert_eq!(scens[0].micro_batches, 1);
+        assert_eq!(scens[0].schedule, PipelineSchedule::OneFOneB);
+        assert_eq!(scens[0].straggler, 1.0);
+        assert_eq!(scens[1].straggler, 1.5);
+        assert_eq!(scens[2].schedule, PipelineSchedule::GPipe);
+        assert_eq!(scens[4].micro_batches, 8);
+        assert_eq!(scens[8].pp, 2);
     }
 }

@@ -156,6 +156,9 @@ fn bounded_family_sweep_evicts_but_matches_unbounded_results() {
         dp: vec![128],
         tp: vec![2, 4],
         pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![canzona::sim::PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
         optims: vec![OptimKind::Muon],
         strategies: vec![DpStrategy::LbAsc],
         alphas: vec![1.0],

@@ -1,0 +1,224 @@
+//! The intrusive-LRU rewrite of the plan cache must be behaviorally
+//! indistinguishable from the original O(entries) min-tick scan: this
+//! file drives random op sequences (inserts + re-touches across two of
+//! the cache's maps) against both the real `PlanCache` and a shadow
+//! reference model implementing the old scan-based eviction, asserting
+//! after every op that
+//!
+//! * resident-byte accounting is byte-identical,
+//! * the eviction count matches,
+//! * exactly the same keys are resident (i.e. the eviction *order* is
+//!   identical — any divergence in order shows up as a membership
+//!   mismatch on the very next overflow).
+
+use std::collections::HashMap;
+
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::{Atomicity, DpPlan, DpStrategy};
+use canzona::schedule::microgroup::{build_micro_groups, TpTask};
+use canzona::sweep::{DpKey, PlanCache, TpKey};
+use canzona::util::rng::Rng;
+
+fn dp_key(stage: usize) -> DpKey {
+    DpKey {
+        model: Qwen3Size::S1_7B,
+        stage,
+        pp: 1,
+        dp: 8,
+        tp: 2,
+        strategy: DpStrategy::LbAsc,
+        optim: None,
+        metric: CostMetric::Numel,
+        alpha_bits: 1.0f64.to_bits(),
+        bucket_elems: 40_000_000,
+    }
+}
+
+fn tp_key(rank: usize) -> TpKey {
+    TpKey {
+        dp_key: dp_key(0),
+        rank,
+        c_max_bits: Some(512e6f64.to_bits()),
+        optim: OptimKind::Muon,
+    }
+}
+
+/// Deterministic synthetic DP plan whose heap size varies with `i`.
+fn dp_plan(i: usize) -> DpPlan {
+    let ranks = 2 + i % 5;
+    DpPlan {
+        ranks,
+        cuts: vec![(0..=ranks).map(|r| r * (7 + i)).collect()],
+        atomicity: Atomicity::None,
+    }
+}
+
+/// Deterministic synthetic TP plan whose heap size varies with `i`.
+fn tp_plan(i: usize) -> canzona::schedule::microgroup::TpPlan {
+    let tasks: Vec<TpTask> = (0..(2 + i % 4))
+        .map(|id| TpTask {
+            id,
+            name: format!("t{id}"),
+            cost: 1.0 + id as f64,
+            comm_bytes: 2.0,
+            flops: 10.0,
+            state_bytes: 4.0,
+        })
+        .collect();
+    build_micro_groups(tasks, 2, 1e9)
+}
+
+/// One op against either map.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Dp(usize),
+    Tp(usize),
+}
+
+/// The reference model: the pre-rewrite scan-based LRU. Entries carry a
+/// monotonically increasing tick, bumped on every touch; eviction scans
+/// for the minimum tick across both maps.
+struct ShadowLru {
+    budget: usize,
+    tick: u64,
+    bytes: usize,
+    evictions: u64,
+    dp: HashMap<usize, (usize, u64)>, // key index -> (bytes, tick)
+    tp: HashMap<usize, (usize, u64)>,
+}
+
+impl ShadowLru {
+    fn new(budget: usize) -> ShadowLru {
+        ShadowLru { budget, tick: 0, bytes: 0, evictions: 0,
+                    dp: HashMap::new(), tp: HashMap::new() }
+    }
+
+    fn touch_or_insert(&mut self, op: Op, weight: usize) {
+        self.tick += 1;
+        let t = self.tick;
+        let slot = match op {
+            Op::Dp(i) => self.dp.get_mut(&i),
+            Op::Tp(i) => self.tp.get_mut(&i),
+        };
+        if let Some(e) = slot {
+            e.1 = t;
+            return;
+        }
+        if self.budget != 0 && weight > self.budget {
+            return; // oversize: bypass, uncached
+        }
+        match op {
+            Op::Dp(i) => self.dp.insert(i, (weight, t)),
+            Op::Tp(i) => self.tp.insert(i, (weight, t)),
+        };
+        self.bytes += weight;
+        while self.budget != 0 && self.bytes > self.budget {
+            // The old implementation: scan every entry for the min tick.
+            let dp_min = self.dp.iter().map(|(k, v)| (v.1, *k)).min();
+            let tp_min = self.tp.iter().map(|(k, v)| (v.1, *k)).min();
+            let freed = match (dp_min, tp_min) {
+                (Some((td, kd)), Some((tt, kt))) => {
+                    if td < tt {
+                        self.dp.remove(&kd).unwrap().0
+                    } else {
+                        self.tp.remove(&kt).unwrap().0
+                    }
+                }
+                (Some((_, kd)), None) => self.dp.remove(&kd).unwrap().0,
+                (None, Some((_, kt))) => self.tp.remove(&kt).unwrap().0,
+                (None, None) => break,
+            };
+            self.bytes -= freed;
+            self.evictions += 1;
+        }
+    }
+}
+
+/// Probe the real cache's per-entry weight for each synthetic plan by
+/// inserting it alone into a fresh unbounded cache.
+fn probe_weights(n: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut dp_w = Vec::with_capacity(n);
+    let mut tp_w = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = PlanCache::unbounded();
+        c.dp_plan(&dp_key(i), || dp_plan(i));
+        dp_w.push(c.stats().resident_bytes as usize);
+        let c = PlanCache::unbounded();
+        c.tp_plan(&tp_key(i), || tp_plan(i));
+        tp_w.push(c.stats().resident_bytes as usize);
+    }
+    (dp_w, tp_w)
+}
+
+#[test]
+fn randomized_lru_matches_scan_reference() {
+    const N_KEYS: usize = 10;
+    let (dp_w, tp_w) = probe_weights(N_KEYS);
+    let typical = dp_w.iter().chain(&tp_w).sum::<usize>() / (2 * N_KEYS);
+
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0xB10C ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        // Budgets from "fits ~1 entry" to "fits most", so eviction is
+        // exercised at every pressure level.
+        let budget = typical + rng.index(6 * typical).max(1);
+        let cache = PlanCache::with_budget(budget);
+        let mut shadow = ShadowLru::new(budget);
+
+        for step in 0..300 {
+            let i = rng.index(N_KEYS);
+            let op = if rng.index(2) == 0 { Op::Dp(i) } else { Op::Tp(i) };
+            match op {
+                Op::Dp(i) => {
+                    cache.dp_plan(&dp_key(i), || dp_plan(i));
+                    shadow.touch_or_insert(op, dp_w[i]);
+                }
+                Op::Tp(i) => {
+                    cache.tp_plan(&tp_key(i), || tp_plan(i));
+                    shadow.touch_or_insert(op, tp_w[i]);
+                }
+            }
+            let stats = cache.stats();
+            assert_eq!(
+                stats.resident_bytes as usize, shadow.bytes,
+                "seed {seed} step {step} {op:?}: resident bytes diverged \
+                 (budget {budget})",
+            );
+            assert_eq!(
+                stats.evictions, shadow.evictions,
+                "seed {seed} step {step} {op:?}: eviction count diverged",
+            );
+            for k in 0..N_KEYS {
+                assert_eq!(
+                    cache.contains_dp(&dp_key(k)),
+                    shadow.dp.contains_key(&k),
+                    "seed {seed} step {step}: dp key {k} membership diverged",
+                );
+                assert_eq!(
+                    cache.contains_tp(&tp_key(k)),
+                    shadow.tp.contains_key(&k),
+                    "seed {seed} step {step}: tp key {k} membership diverged",
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lru_handles_pathological_touch_patterns() {
+    // Single hot key re-touched between every insert: the hot key must
+    // survive arbitrary churn; everything else cycles.
+    let probe = PlanCache::unbounded();
+    probe.dp_plan(&dp_key(0), || dp_plan(0));
+    let w0 = probe.stats().resident_bytes as usize;
+    let cache = PlanCache::with_budget(3 * w0);
+    cache.dp_plan(&dp_key(0), || dp_plan(0));
+    for i in 1..50 {
+        cache.dp_plan(&dp_key(0), || panic!("hot key evicted"));
+        cache.dp_plan(&dp_key(i), || dp_plan(0)); // same weight as key 0
+        assert!(cache.contains_dp(&dp_key(0)), "hot key gone at step {i}");
+        let s = cache.stats();
+        assert!(s.resident_bytes <= s.budget_bytes, "{s:?}");
+    }
+    assert!(cache.stats().evictions > 0);
+}

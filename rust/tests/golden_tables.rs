@@ -105,6 +105,13 @@ fn golden_planning() {
 }
 
 #[test]
+fn golden_fig_pp() {
+    // The timeline engine's pp sweep: every cell is simulated (not
+    // wall-clock) time, so the snapshot is fully deterministic.
+    check_golden("fig_pp");
+}
+
+#[test]
 fn mask_is_stable_across_magnitudes() {
     let a = mask_timings("| Qwen3-1.7B | 9.8 ms   |\n");
     let b = mask_timings("| Qwen3-1.7B | 123.4 ms |\n");

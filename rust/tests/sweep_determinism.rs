@@ -11,7 +11,7 @@ use canzona::buffer::FlatBuffer;
 use canzona::cost::optim::{CostMetric, OptimKind};
 use canzona::model::qwen3::{qwen3, Qwen3Size};
 use canzona::partition::{alpha_balanced, DpStrategy};
-use canzona::sim::{simulate_iteration_cached, Scenario};
+use canzona::sim::{simulate_iteration_cached, PipelineSchedule, Scenario};
 use canzona::sweep::{render_json, render_table, DpKey, PlanCache, SweepEngine, SweepGrid};
 
 fn test_grid() -> SweepGrid {
@@ -20,6 +20,27 @@ fn test_grid() -> SweepGrid {
         dp: vec![8],
         tp: vec![2, 4],
         pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    }
+}
+
+/// A pp>1 grid exercising the timeline engine through the sweep stack.
+fn pp_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![4],
+        tp: vec![2],
+        pp: vec![1, 2, 4],
+        micro_batches: vec![1, 4],
+        schedules: vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe],
+        stragglers: vec![1.0, 1.5],
         optims: vec![OptimKind::Muon],
         strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
         alphas: vec![1.0],
@@ -145,6 +166,63 @@ fn run_all_is_render_stable_and_cache_warm() {
         solves_after_first,
         "second run(\"all\") re-solved plans",
     );
+}
+
+#[test]
+fn pp_sweep_parallel_is_byte_identical_to_single_thread() {
+    // The timeline engine is pure arithmetic over cached tables, so the
+    // pp>1 path must be exactly as scheduler-independent as pp=1.
+    let grid = pp_grid();
+    let serial = SweepEngine::new(1);
+    let (scens_s, res_s) = serial.run_grid(&grid);
+    let parallel = SweepEngine::new(8);
+    let (scens_p, res_p) = parallel.run_grid(&grid);
+    assert_eq!(
+        render_table(&scens_s, &res_s).render(),
+        render_table(&scens_p, &res_p).render(),
+        "pp>1 tables diverged across thread counts",
+    );
+    assert_eq!(
+        render_json(&scens_s, &res_s).to_string(),
+        render_json(&scens_p, &res_p).to_string(),
+        "pp>1 json diverged across thread counts",
+    );
+}
+
+#[test]
+fn pp_sweep_warm_cache_skips_solves_and_preserves_bytes() {
+    // cached == cold through the timeline engine: a second pass over the
+    // pp grid adds no plan solves and renders identical bytes.
+    let engine = SweepEngine::with_budget(4, 0);
+    let grid = pp_grid();
+    let (scens, first) = engine.run_grid(&grid);
+    let cold = engine.cache_stats();
+    assert!(cold.solves > 0);
+    let second = engine.eval(&scens);
+    let warm = engine.cache_stats();
+    assert_eq!(warm.solves, cold.solves, "pp>1 warm run re-ran a solve");
+    assert_eq!(warm.evictions, 0);
+    assert_eq!(
+        render_table(&scens, &first).render(),
+        render_table(&scens, &second).render(),
+        "cache warmth changed pp>1 results",
+    );
+}
+
+#[test]
+fn interior_stages_share_cached_tables() {
+    // Stage canonicalization: a pp=8 scenario has 8 stages but only 3
+    // distinct censuses (embed stage, interior, head stage) — the cache
+    // must solve 3 stage tables, not 8.
+    let mut s = Scenario::new(Qwen3Size::S1_7B, 4, 1, 8, OptimKind::Muon, DpStrategy::LbAsc);
+    s.micro_batches = 2;
+    let cache = PlanCache::unbounded();
+    simulate_iteration_cached(&s, &cache);
+    // tp=1, LB-ASC: one DP plan + one stage table per *distinct* stage.
+    assert_eq!(cache.len(), 6, "expected 3 stage tables + 3 DP plans");
+    let warm_solves = cache.stats().solves;
+    simulate_iteration_cached(&s, &cache);
+    assert_eq!(cache.stats().solves, warm_solves, "warm pp=8 run re-solved");
 }
 
 #[test]

@@ -1,0 +1,164 @@
+//! Differential oracle: the event-driven timeline engine must reproduce
+//! the closed-form `simulate_iteration` Breakdown at `pp = 1,
+//! micro_batches = 1` for every strategy × optimizer × size × TP ×
+//! fusion setting in the test sweep grid, within 1e-9 relative
+//! tolerance — the two paths are independent derivations of the same
+//! schedule, so agreement here is the engine's correctness anchor.
+//!
+//! Also pins the dispatch rule: `pp > 1` / `micro_batches > 1` /
+//! `straggler != 1.0` scenarios evaluated through the public
+//! `simulate_iteration*` entry points are bit-identical to calling the
+//! timeline engine directly.
+
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::{
+    simulate_iteration_cached, simulate_iteration_timeline, Breakdown, PipelineSchedule,
+    Scenario,
+};
+use canzona::sweep::{PlanCache, SweepGrid};
+
+/// Relative-or-absolute closeness: timings are ~1e-3..1e1 s, so 1e-9
+/// relative; the absolute floor absorbs exact-zero fields (bubble at
+/// full overlap) where the two paths differ only in summation order.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()) + 1e-12
+}
+
+fn assert_breakdowns_match(label: &str, closed: &Breakdown, event: &Breakdown) {
+    for (field, a, b) in [
+        ("fwd_bwd_s", closed.fwd_bwd_s, event.fwd_bwd_s),
+        ("optimizer_s", closed.optimizer_s, event.optimizer_s),
+        ("total_s", closed.total_s, event.total_s),
+        ("exposed_comm_s", closed.exposed_comm_s, event.exposed_comm_s),
+        ("bubble_s", closed.bubble_s, event.bubble_s),
+        ("adamw_ref_s", closed.adamw_ref_s, event.adamw_ref_s),
+        ("grad_comm_bytes", closed.grad_comm_bytes, event.grad_comm_bytes),
+    ] {
+        assert!(
+            close(a, b),
+            "{label}: {field} diverged: closed={a:.17e} event={b:.17e} \
+             (rel {:.3e})",
+            (a - b).abs() / a.abs().max(b.abs()).max(1e-300),
+        );
+    }
+    // Load vectors and plan statistics come from the same cached tables:
+    // exact equality.
+    assert_eq!(closed.n_micro_groups, event.n_micro_groups, "{label}");
+    assert_eq!(closed.dp_loads_flops, event.dp_loads_flops, "{label}");
+    assert_eq!(closed.dp_loads_state, event.dp_loads_state, "{label}");
+    assert_eq!(closed.tp_loads_flops, event.tp_loads_flops, "{label}");
+    assert_eq!(closed.tp_loads_state, event.tp_loads_state, "{label}");
+}
+
+/// Every strategy × optimizer × size × TP × fusion at pp = 1.
+fn oracle_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B, Qwen3Size::S4B],
+        dp: vec![8],
+        tp: vec![1, 4],
+        pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap, OptimKind::AdamW],
+        strategies: vec![
+            DpStrategy::Sc,
+            DpStrategy::NvLayerwise,
+            DpStrategy::Asc,
+            DpStrategy::LbAsc,
+        ],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0), None],
+        metric: CostMetric::Numel,
+    }
+}
+
+#[test]
+fn timeline_reproduces_closed_form_at_pp1() {
+    let cache = PlanCache::unbounded();
+    for s in oracle_grid().scenarios() {
+        let label = format!(
+            "{} tp{} {} {} c_max={:?}",
+            s.label,
+            s.tp,
+            s.optim.label(),
+            s.strategy.label(),
+            s.c_max_bytes,
+        );
+        let closed = simulate_iteration_cached(&s, &cache); // pp=1 fast path
+        let event = simulate_iteration_timeline(&s, &cache);
+        assert_breakdowns_match(&label, &closed, &event);
+    }
+}
+
+#[test]
+fn timeline_agrees_warm_and_cold() {
+    // A warm cache must not change the event engine's timings.
+    let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, DpStrategy::LbAsc);
+    let cache = PlanCache::unbounded();
+    let cold = simulate_iteration_timeline(&s, &cache);
+    let warm = simulate_iteration_timeline(&s, &cache);
+    assert_eq!(cold.total_s.to_bits(), warm.total_s.to_bits());
+    assert_eq!(cold.fwd_bwd_s.to_bits(), warm.fwd_bwd_s.to_bits());
+    assert_eq!(cold.bubble_s.to_bits(), warm.bubble_s.to_bits());
+}
+
+#[test]
+fn dispatcher_routes_non_trivial_scenarios_to_the_timeline() {
+    let cache = PlanCache::unbounded();
+    let base = Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, DpStrategy::LbAsc);
+    for s in [
+        base.clone().with_micro_batches(4),
+        base.clone().with_schedule(PipelineSchedule::GPipe).with_micro_batches(2),
+        Scenario::new(Qwen3Size::S1_7B, 8, 2, 1, OptimKind::Muon, DpStrategy::LbAsc)
+            .with_straggler(1.5),
+    ] {
+        let via_dispatch = simulate_iteration_cached(&s, &cache);
+        let direct = simulate_iteration_timeline(&s, &cache);
+        assert_eq!(
+            via_dispatch.total_s.to_bits(),
+            direct.total_s.to_bits(),
+            "dispatch and direct timeline disagree",
+        );
+        assert_eq!(via_dispatch.fwd_bwd_s.to_bits(), direct.fwd_bwd_s.to_bits());
+        assert_eq!(via_dispatch.bubble_s.to_bits(), direct.bubble_s.to_bits());
+    }
+}
+
+#[test]
+fn pp_sweep_runs_end_to_end_with_deterministic_artifacts() {
+    // `canzona sweep` with pp > 1 grids: two engine evaluations of the
+    // same grid must produce byte-identical JSON artifacts.
+    use canzona::sweep::{render_json, SweepEngine};
+    let grid = SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![4],
+        tp: vec![2],
+        pp: vec![1, 2, 4],
+        micro_batches: vec![1, 4],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    };
+    let a = SweepEngine::new(2);
+    let (scens_a, res_a) = a.run_grid(&grid);
+    let b = SweepEngine::new(4);
+    let (scens_b, res_b) = b.run_grid(&grid);
+    assert_eq!(
+        render_json(&scens_a, &res_a).to_string(),
+        render_json(&scens_b, &res_b).to_string(),
+    );
+    // pp rows carry a positive bubble; pp=1/m=1 rows a (near-)zero one.
+    for (s, r) in scens_a.iter().zip(&res_a) {
+        if s.pp > 1 {
+            assert!(r.bubble_s > 0.0, "pp={} must have a bubble", s.pp);
+        }
+        assert!(r.total_s > 0.0);
+    }
+}

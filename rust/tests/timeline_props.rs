@@ -1,0 +1,213 @@
+//! Schedule invariants of the discrete-event timeline engine, checked
+//! over randomized pipelines (random depth, micro-batch count, per-stage
+//! durations, schedule choice):
+//!
+//! * no stream ever executes two tasks concurrently;
+//! * every task starts at or after all of its dependencies complete;
+//! * the makespan is >= the dependency-graph critical path and <= the
+//!   serial sum of all durations;
+//! * per-stage slot orders are complete and well-formed;
+//! * for uniform stages the 1F1B (and GPipe) bubble fraction matches
+//!   the analytic (pp-1)/(m+pp-1) within tolerance.
+
+use canzona::sim::timeline::{
+    build_pipeline, schedule_order, PipeSlot, PipelineSchedule, Timeline,
+};
+use canzona::util::prop::check;
+use canzona::util::rng::Rng;
+
+const CASES: usize = 80;
+
+struct Case {
+    pp: usize,
+    m: usize,
+    sched: PipelineSchedule,
+    fwd: Vec<f64>,
+    bwd: Vec<f64>,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case(pp={}, m={}, {:?}, fwd={:?}, bwd={:?})",
+            self.pp, self.m, self.sched, self.fwd, self.bwd
+        )
+    }
+}
+
+fn random_case(rng: &mut Rng) -> Case {
+    let pp = 1 + rng.index(6);
+    let m = 1 + rng.index(8);
+    let sched = if rng.index(2) == 0 {
+        PipelineSchedule::OneFOneB
+    } else {
+        PipelineSchedule::GPipe
+    };
+    let dur = |rng: &mut Rng| 0.1 + rng.next_f64() * 4.0;
+    Case {
+        pp,
+        m,
+        sched,
+        fwd: (0..pp).map(|_| dur(rng)).collect(),
+        bwd: (0..pp).map(|_| dur(rng)).collect(),
+    }
+}
+
+fn build(case: &Case) -> Timeline {
+    let mut tl = Timeline::new();
+    build_pipeline(&mut tl, case.sched, case.pp, case.m, &case.fwd, &case.bwd);
+    tl
+}
+
+#[test]
+fn prop_no_stream_runs_two_tasks_concurrently() {
+    check("stream exclusivity", CASES, random_case, |c| {
+        let tl = build(c);
+        for s in 0..tl.n_streams() {
+            let mut spans: Vec<(f64, f64)> = tl
+                .tasks()
+                .iter()
+                .filter(|t| t.stream.0 as usize == s)
+                .map(|t| (t.start, t.end))
+                .collect();
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                if w[1].0 < w[0].1 - 1e-12 {
+                    return Err(format!(
+                        "stream {s}: task starting {} overlaps one ending {}",
+                        w[1].0, w[0].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tasks_start_after_their_dependencies() {
+    check("dependency gating", CASES, random_case, |c| {
+        let tl = build(c);
+        for (i, t) in tl.tasks().iter().enumerate() {
+            for &d in tl.deps_of(canzona::sim::timeline::TaskId(i as u32)) {
+                let dep_end = tl.end(d);
+                if t.start < dep_end - 1e-12 {
+                    return Err(format!(
+                        "task {i} starts {} before dependency ends {dep_end}",
+                        t.start
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_makespan_within_critical_path_and_serial_sum() {
+    check("makespan bounds", CASES, random_case, |c| {
+        let tl = build(c);
+        let ms = tl.makespan();
+        let cp = tl.critical_path();
+        let serial = tl.serial_sum();
+        if ms < cp - 1e-9 {
+            return Err(format!("makespan {ms} below critical path {cp}"));
+        }
+        if ms > serial + 1e-9 {
+            return Err(format!("makespan {ms} above serial sum {serial}"));
+        }
+        // The busiest stage is also a lower bound.
+        let busiest = (0..tl.n_streams())
+            .map(|s| tl.stream_busy(canzona::sim::timeline::StreamId(s as u32)))
+            .fold(0.0, f64::max);
+        if ms < busiest - 1e-9 {
+            return Err(format!("makespan {ms} below busiest stream {busiest}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_orders_complete_and_causal() {
+    check("slot orders", CASES, random_case, |c| {
+        for stage in 0..c.pp {
+            let order = schedule_order(c.sched, c.pp, stage, c.m);
+            if order.len() != 2 * c.m {
+                return Err(format!("stage {stage}: {} slots", order.len()));
+            }
+            for j in 0..c.m {
+                let f = order.iter().position(|&s| s == PipeSlot::Fwd(j));
+                let b = order.iter().position(|&s| s == PipeSlot::Bwd(j));
+                match (f, b) {
+                    (Some(f), Some(b)) if f < b => {}
+                    _ => return Err(format!("stage {stage} mb {j}: bad F/B order")),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_bubble_fraction_matches_analytic() {
+    check(
+        "1f1b bubble analytic",
+        CASES,
+        |rng| {
+            let pp = 1 + rng.index(6);
+            let m = 1 + rng.index(10);
+            let f = 0.2 + rng.next_f64() * 3.0;
+            let b = 0.2 + rng.next_f64() * 3.0;
+            let sched = if rng.index(2) == 0 {
+                PipelineSchedule::OneFOneB
+            } else {
+                PipelineSchedule::GPipe
+            };
+            (pp, m, f, b, sched)
+        },
+        |&(pp, m, f, b, sched)| {
+            let mut tl = Timeline::new();
+            build_pipeline(&mut tl, sched, pp, m, &vec![f; pp], &vec![b; pp]);
+            let ms = tl.makespan();
+            let expect = (m + pp - 1) as f64 * (f + b);
+            if (ms - expect).abs() > 1e-9 * expect {
+                return Err(format!("makespan {ms} != analytic {expect}"));
+            }
+            // Bubble fraction off the trace: 1 - busy/makespan on any
+            // stage (uniform stages are all equally busy).
+            let busy = tl.stream_busy(canzona::sim::timeline::StreamId(0));
+            let frac = 1.0 - busy / ms;
+            let analytic = (pp - 1) as f64 / (m + pp - 1) as f64;
+            if (frac - analytic).abs() > 1e-9 {
+                return Err(format!("bubble {frac} != analytic {analytic}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scenario_timeline_respects_bounds_too() {
+    // End-to-end: the full-iteration timeline's Breakdown obeys the same
+    // bounds — bubble below the span, total at least the span, and the
+    // pp=4 bubble fraction within a loose band of the analytic (the
+    // embed/head stages skew uniformity).
+    use canzona::cost::optim::OptimKind;
+    use canzona::model::qwen3::Qwen3Size;
+    use canzona::partition::DpStrategy;
+    use canzona::sim::{simulate_iteration, Scenario};
+    for m in [1usize, 4, 16] {
+        let s = Scenario::new(Qwen3Size::S1_7B, 2, 1, 4, OptimKind::Muon, DpStrategy::LbAsc)
+            .with_micro_batches(m);
+        let b = simulate_iteration(&s);
+        assert!(b.bubble_s >= 0.0 && b.bubble_s < b.fwd_bwd_s, "m={m}: {b:?}");
+        assert!(b.total_s >= b.fwd_bwd_s);
+        let analytic = 3.0 / (m as f64 + 3.0);
+        let frac = b.bubble_s / b.fwd_bwd_s;
+        assert!(
+            (frac - analytic).abs() < 0.35,
+            "m={m}: bubble fraction {frac} far from analytic {analytic}",
+        );
+    }
+}
