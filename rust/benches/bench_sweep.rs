@@ -185,4 +185,32 @@ fn main() {
         black_box(one.eval_one(&deep));
     });
     println!("warm timeline replay: {} median", fmt_ns(replay.median_ns));
+
+    // --- zero-allocation warm timeline path (reused scratch + out) ------
+    // The warm steady state runs a lean Timeline over the per-thread
+    // SimScratch: reused Breakdown + warm cache + warm scratch must
+    // schedule every task without touching the heap.
+    let mut out = canzona::sim::Breakdown::default();
+    canzona::sim::simulate_iteration_into(&deep, one.cache(), &mut out);
+    canzona::sim::simulate_iteration_into(&deep, one.cache(), &mut out);
+    let tasks_before = one.cache_stats().timeline_tasks;
+    let (tl_allocs, _) = canzona::util::alloc::count_allocations(|| {
+        canzona::sim::simulate_iteration_into(&deep, one.cache(), &mut out)
+    });
+    let tasks_per_call = one.cache_stats().timeline_tasks - tasks_before;
+    let warm_into = bench("timeline replay PP8 mb8 (warm, reused out + scratch)", 10, || {
+        canzona::sim::simulate_iteration_into(&deep, one.cache(), &mut out);
+        black_box(out.total_s);
+    });
+    println!(
+        "warm timeline path: {tasks_per_call} tasks/call, {:.0} tasks/s, \
+         {tl_allocs} allocs per warm call ({} median)",
+        tasks_per_call as f64 / (warm_into.median_ns * 1e-9),
+        fmt_ns(warm_into.median_ns),
+    );
+    let st = one.cache_stats();
+    println!(
+        "timeline counters: {} tasks total, {} scratch reuses, {} order-cache hits",
+        st.timeline_tasks, st.scratch_reuses, st.order_hits,
+    );
 }

@@ -201,6 +201,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             format!("{:.0} MiB", stats.budget_bytes as f64 / MIB)
         },
     );
+    if stats.timeline_tasks > 0 {
+        println!(
+            "timeline: {} tasks scheduled ({:.0} tasks/s), \
+             {} scratch reuses, {} schedule-order cache hits",
+            stats.timeline_tasks,
+            stats.timeline_tasks as f64 / wall_s.max(1e-9),
+            stats.scratch_reuses,
+            stats.order_hits,
+        );
+    }
     if let Some(path) = args.get("baseline") {
         let baseline = Value::parse(&std::fs::read_to_string(path)?)
             .map_err(|e| e.wrap(format!("parsing baseline {path}")))?;
@@ -210,6 +220,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             print!("{}", diff.table().to_csv());
         } else {
             diff.table().print();
+        }
+        // Old artifacts default these to zero (CacheStats::from_json);
+        // only report when the baseline actually recorded them — and
+        // *before* the verdict, so the diagnostic survives a failing
+        // gate (a timeline-path slowdown is exactly when you want it).
+        if diff.base_cache.timeline_tasks > 0 {
+            println!(
+                "baseline timeline counters: {} tasks / {} scratch reuses / \
+                 {} order hits (current: {} / {} / {})",
+                diff.base_cache.timeline_tasks,
+                diff.base_cache.scratch_reuses,
+                diff.base_cache.order_hits,
+                stats.timeline_tasks,
+                stats.scratch_reuses,
+                stats.order_hits,
+            );
         }
         diff.verdict()?;
         println!("\nbaseline check passed: no regression beyond {threshold}% vs {path}");

@@ -47,9 +47,23 @@
 //! [`simulate_iteration_into`] with a reused [`Breakdown`] to stay on
 //! that path; [`simulate_iteration_cached`] allocates only the output
 //! struct's vectors.
+//!
+//! The zero-allocation contract covers **both** dispatch arms. The
+//! timeline arm runs a *lean* [`Timeline`] (no trace — see
+//! `sim::timeline`'s module docs) over a per-thread `SimScratch`
+//! workspace: the timeline itself (reset in place, capacity retained),
+//! the flat `pp × m` pipeline-drive tables, the interned schedule-order
+//! tables, and the per-stage `StagePlayback`/`ag_stretch`/`last_*`/
+//! `opt_ends` vectors all live in the scratch and are refilled per
+//! call. Each `util::pool` worker (and the caller's thread) owns one
+//! scratch, so a warm family sweep's steady state never touches the
+//! heap; the counters the scratch feeds (`timeline_tasks`,
+//! `scratch_reuses`, `order_hits`) surface in the sweep summary via
+//! [`crate::sweep::cache::CacheStats`].
 
 #![warn(missing_docs)]
 
+use std::cell::RefCell;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -65,7 +79,9 @@ use crate::sweep::cache::{DpKey, PlanCache, StageKey, TpKey};
 
 use super::scenario::Scenario;
 use super::stream::Stream;
-use super::timeline::{drive_pipeline, PipeSlot, StreamId, TaskId, TaskKind, Timeline};
+use super::timeline::{
+    drive_pipeline_flat, OrderCache, PipeScratch, PipeSlot, StreamId, TaskId, TaskKind, Timeline,
+};
 
 /// Bytes per gradient / parameter element on the wire (bf16).
 const WIRE_BYTES: f64 = 2.0;
@@ -169,6 +185,9 @@ pub(crate) fn stage_layer_count(n_layers: usize, pp: usize, stage: usize) -> usi
 /// block ([`stage_of_layer`]), embedding on the first stage, head +
 /// final norm on the last.
 fn stage_census(census: &[Param], pp: usize) -> Vec<Vec<Param>> {
+    // Clamp like `Scenario::new` does: `pp = 0` through the pub field
+    // would otherwise index an empty stage list.
+    let pp = pp.max(1);
     let n_layers = census
         .iter()
         .filter_map(|p| p.param_layer())
@@ -340,12 +359,14 @@ impl StageTable {
         let fb = FlatBuffer::build(&local_census, s.bucket_elems);
 
         // --- fwd/bwd geometry -------------------------------------------
-        let n_layers = locals
-            .iter()
-            .filter_map(|p| p.local.layer)
-            .max()
-            .map(|l| l + 1)
-            .unwrap_or(0) as f64;
+        // Layers *hosted by this stage*, from the split rule shared with
+        // `stage_census` — not `max global layer index + 1`, which for
+        // stages > 0 would count every upstream layer too (inflating the
+        // attention-FLOPs and TP-AR terms) and, worse, differ between
+        // shape-identical interior stages, breaking the canonical-stage
+        // sharing contract (`canonical_stage` assumes equal-layer-count
+        // interior stages build identical tables).
+        let n_layers = stage_layer_count(s.n_layers, s.pp, si) as f64;
         let hidden = locals
             .iter()
             .find(|p| p.local.name.ends_with("attn_norm.weight"))
@@ -879,6 +900,15 @@ fn stage_times(s: &Scenario, hw: &Hardware, comm: &CommModel, t: &StageTable) ->
     (fwd_t, bwd_t, tp_ar, act_bytes)
 }
 
+/// The collective-timing model of a scenario's shared fabric — the one
+/// construction both dispatch arms ([`simulate_closed_form_into`] and
+/// [`simulate_timeline_into`]) price collectives against, hoisted here
+/// so the two can't drift. `Hardware` owns no heap data (`&'static`
+/// name + scalars), so this is a stack copy: warm-path safe.
+fn comm_model(s: &Scenario) -> CommModel {
+    CommModel::new(s.hw.clone())
+}
+
 /// Does the strategy's gradient path use All-Reduce (full parameter
 /// copies) rather than the ZeRO-1 Reduce-Scatter / All-Gather pair?
 fn uses_all_reduce(s: &Scenario) -> bool {
@@ -982,13 +1012,15 @@ pub fn simulate_iteration_cached(s: &Scenario, cache: &PlanCache) -> Breakdown {
 }
 
 /// [`simulate_iteration_cached`] writing into a caller-owned
-/// [`Breakdown`]. On the closed-form fast path (`pp == 1`,
-/// `micro_batches == 1`, `straggler == 1.0`), with a warm `cache` and
-/// an `out` whose vectors have been sized by a prior call (same DP/TP),
-/// this performs **zero heap allocations** — the contract
-/// `tests/warm_alloc.rs` enforces with the counting allocator. Other
-/// scenarios route through the event-driven timeline engine, which
-/// builds a task trace and therefore allocates.
+/// [`Breakdown`]. With a warm `cache` and an `out` whose vectors have
+/// been sized by a prior call (same DP/TP), this performs **zero heap
+/// allocations** at steady state on *both* dispatch arms — the
+/// closed-form fast path (`pp == 1`, `micro_batches == 1`,
+/// `straggler == 1.0`) outright, and the event-driven timeline arm
+/// once the calling thread's `SimScratch` (lean timeline, flat
+/// pipeline tables, interned schedule orders) has grown to the
+/// scenario's shape. Both contracts are enforced by the counting
+/// allocator in `tests/warm_alloc.rs`.
 pub fn simulate_iteration_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) {
     if s.pp <= 1 && s.micro_batches <= 1 && s.straggler == 1.0 {
         simulate_closed_form_into(s, cache, out);
@@ -1001,9 +1033,9 @@ pub fn simulate_iteration_into(s: &Scenario, cache: &PlanCache, out: &mut Breakd
 /// dispatcher only routes `pp == 1` here, so this is exactly one
 /// stage's bucket-overlap arithmetic plus its optimizer step.
 fn simulate_closed_form_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) {
-    debug_assert_eq!(s.pp, 1, "closed form is the pp == 1 fast path");
+    debug_assert!(s.pp <= 1, "closed form is the pp <= 1 fast path");
     out.reset();
-    let comm = CommModel::new(s.hw.clone());
+    let comm = comm_model(s);
     // Fetch (or cold-build) the stage's hoisted tables; the fetch
     // latency is the warm proxy for offline planning time.
     let t_fetch = Instant::now();
@@ -1062,26 +1094,109 @@ pub fn simulate_iteration_timeline(s: &Scenario, cache: &PlanCache) -> Breakdown
     out
 }
 
-/// The timeline playback: build the pipeline schedule as a task graph
-/// and read the [`Breakdown`] off the trace (see the module docs for
-/// the schedule shape).
+/// The per-thread reusable workspace of the timeline playback: the lean
+/// [`Timeline`], the flat pipeline-drive tables, the interned
+/// schedule-order tables, and every per-stage vector
+/// [`simulate_timeline_into`] used to allocate per call. One lives on
+/// each thread that evaluates timeline scenarios — the sweep's
+/// `util::pool` workers and the caller's own thread — so a warm sweep's
+/// steady state refills buffers in place instead of touching the heap.
+///
+/// Ownership/reset rules: the scratch is reachable only through the
+/// thread-local [`SIM_SCRATCH`] (one playback at a time per thread; the
+/// playback never re-enters itself). Every buffer is cleared at the top
+/// of a playback and refilled, so stale state can't leak between
+/// scenarios; capacity is retained and only grows, bounded by the
+/// largest `(pp, micro_batches, bucket-count)` shape the thread has
+/// seen.
+struct SimScratch {
+    /// The event timeline, lean mode ([`Timeline::reset`] per call).
+    tl: Timeline,
+    /// Interned `(schedule, pp, m)` slot tables.
+    orders: OrderCache,
+    /// Flat `pp × m` forward/backward drive tables + cursors + deps.
+    pipe: PipeScratch,
+    /// Per-stage playback scalars (Arc'd tables — clone-cheap).
+    stages: Vec<StagePlayback>,
+    /// Per-stage exposed All-Gather stretch of the first micro-batch.
+    ag_stretch: Vec<f64>,
+    /// Per-stage last backward compute task.
+    last_bwd: Vec<Option<TaskId>>,
+    /// Per-stage last gradient-collective task.
+    last_rs: Vec<Option<TaskId>>,
+    /// Per-stage optimizer completion times.
+    opt_ends: Vec<f64>,
+    /// Small dependency assembly buffer for emitted tasks.
+    dbuf: Vec<TaskId>,
+    /// Has this scratch served a playback before? (feeds the
+    /// `scratch_reuses` counter).
+    used: bool,
+}
+
+impl SimScratch {
+    fn new() -> SimScratch {
+        SimScratch {
+            tl: Timeline::new(),
+            orders: OrderCache::new(),
+            pipe: PipeScratch::new(),
+            stages: Vec::new(),
+            ag_stretch: Vec::new(),
+            last_bwd: Vec::new(),
+            last_rs: Vec::new(),
+            opt_ends: Vec::new(),
+            dbuf: Vec::new(),
+            used: false,
+        }
+    }
+}
+
+thread_local! {
+    /// One [`SimScratch`] per thread — pool workers and direct callers
+    /// alike (see the struct docs for the ownership rules).
+    static SIM_SCRATCH: RefCell<SimScratch> = RefCell::new(SimScratch::new());
+}
+
+/// The timeline playback entry: borrow this thread's scratch and run
+/// the schedule. The playback never calls back into itself, so the
+/// `RefCell` borrow cannot be re-entered.
 fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) {
+    SIM_SCRATCH.with(|sc| simulate_timeline_scratch(s, cache, &mut sc.borrow_mut(), out));
+}
+
+/// The timeline playback: build the pipeline schedule as a task graph
+/// over the reusable `scratch` and read the [`Breakdown`] off the lean
+/// timeline (see the module docs for the schedule shape). Allocation
+/// profile: warm caches + a scratch that has seen this `(pp, m,
+/// schedule)` shape ⇒ zero heap allocations (`tests/warm_alloc.rs`).
+fn simulate_timeline_scratch(
+    s: &Scenario,
+    cache: &PlanCache,
+    scratch: &mut SimScratch,
+    out: &mut Breakdown,
+) {
     out.reset();
-    let comm = CommModel::new(s.hw.clone());
+    if scratch.used {
+        cache.note_scratch_reuse();
+    } else {
+        scratch.used = true;
+    }
+    let comm = comm_model(s);
     let pp = s.pp.max(1);
     let m = s.micro_batches.max(1);
 
     // --- per-stage cached tables + playback scalars ---------------------
     // Canonical-equal interior stages (see `canonical_stage`) resolve to
     // the same cached table, hardware and plans, so their playback
-    // scalars are bit-identical — build once, clone for the rest. The
-    // straggler-derated last stage canonicalizes to itself.
-    let mut stages: Vec<StagePlayback> = Vec::with_capacity(pp);
+    // scalars are bit-identical — build once, clone for the rest (Arc
+    // bumps + scalar copies, no heap). The straggler-derated last stage
+    // canonicalizes to itself, and its hardware is derated exactly once
+    // per playback.
+    scratch.stages.clear();
     for si in 0..pp {
         let canon = crate::sweep::cache::canonical_stage(s, si);
         if canon < si {
-            let shared = stages[canon].clone();
-            stages.push(shared);
+            let shared = scratch.stages[canon].clone();
+            scratch.stages.push(shared);
             continue;
         }
         let t_fetch = Instant::now();
@@ -1096,24 +1211,54 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
         let grad_bytes = stage_grad_bytes(s, &comm, &table);
         let opt = optimizer_step(s, &hw, &comm, &table, si, cache);
         out.planning_s += opt.planning_s;
-        stages.push(StagePlayback { table, hw, fwd_t, bwd_t, tp_ar, act_p2p, grad_bytes, opt });
+        scratch
+            .stages
+            .push(StagePlayback { table, hw, fwd_t, bwd_t, tp_ar, act_p2p, grad_bytes, opt });
     }
 
+    // Split-borrow the scratch: the emitter below mutates the per-stage
+    // vectors and `dbuf` while `drive_pipeline_flat` drives `tl` +
+    // `pipe` and the slot table borrows `orders` — all disjoint fields.
+    let SimScratch {
+        tl,
+        orders,
+        pipe,
+        stages,
+        ag_stretch,
+        last_bwd,
+        last_rs,
+        opt_ends,
+        dbuf,
+        ..
+    } = scratch;
+
     // --- streams: compute / optimizer / DP-collective / PP send ---------
-    let mut tl = Timeline::new();
-    let compute: Vec<StreamId> = (0..pp).map(|_| tl.stream()).collect();
-    let opt_stream: Vec<StreamId> = (0..pp).map(|_| tl.stream()).collect();
-    let dpc: Vec<StreamId> = (0..pp).map(|_| tl.stream()).collect();
-    let p2p_f: Vec<StreamId> = (0..pp).map(|_| tl.stream()).collect();
-    let p2p_b: Vec<StreamId> = (0..pp).map(|_| tl.stream()).collect();
+    // Creation order (pp of each group, in this sequence) pins the same
+    // ids the old per-group `Vec<StreamId>` tables held, so the id of
+    // group g's stage i is plain index math.
+    tl.reset();
+    for _ in 0..5 * pp {
+        tl.stream();
+    }
+    let compute = |i: usize| StreamId(i as u32);
+    let opt_stream = |i: usize| StreamId((pp + i) as u32);
+    let dpc = |i: usize| StreamId((2 * pp + i) as u32);
+    let p2p_f = |i: usize| StreamId((3 * pp + i) as u32);
+    let p2p_b = |i: usize| StreamId((4 * pp + i) as u32);
 
     let has_ag = s.dp > 1 && !uses_all_reduce(s);
-    let mut ag_stretch = vec![0.0f64; pp];
-    let mut last_bwd: Vec<Option<TaskId>> = vec![None; pp];
-    let mut last_rs: Vec<Option<TaskId>> = vec![None; pp];
-    let mut dbuf: Vec<TaskId> = Vec::with_capacity(3);
+    ag_stretch.clear();
+    ag_stretch.resize(pp, 0.0);
+    last_bwd.clear();
+    last_bwd.resize(pp, None);
+    last_rs.clear();
+    last_rs.resize(pp, None);
 
-    drive_pipeline(&mut tl, s.schedule, pp, m, |tl, i, slot, deps| {
+    let (slots, order_hit) = orders.get(s.schedule, pp, m);
+    if order_hit {
+        cache.note_order_hit();
+    }
+    drive_pipeline_flat(tl, slots, pp, m, pipe, |tl, i, slot, deps| {
         let sp = &stages[i];
         let nb = sp.table.bucket_bytes.len();
         match slot {
@@ -1121,19 +1266,19 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
                 // Activation arrival rides the upstream stage's forward
                 // p2p stream.
                 let gate = (i > 0)
-                    .then(|| tl.task(p2p_f[i - 1], TaskKind::ActComm, stages[i - 1].act_p2p, deps));
+                    .then(|| tl.task(p2p_f(i - 1), TaskKind::ActComm, stages[i - 1].act_p2p, deps));
                 if j == 0 && has_ag && nb > 0 {
                     // First micro-batch: each bucket's forward compute is
                     // gated on that bucket's parameter All-Gather
                     // (ZeRO-1 prefetch; the AGs start at t=0 and hide in
                     // the pipeline-fill bubble on later stages).
                     let ready0 = tl
-                        .stream_free(compute[i])
+                        .stream_free(compute(i))
                         .max(gate.map(|g| tl.end(g)).unwrap_or(0.0));
                     let mut last = None;
                     for b in 0..nb {
                         let ag = tl.task(
-                            dpc[i],
+                            dpc(i),
                             TaskKind::ParamComm,
                             bucket_ag_time(s, &comm, &sp.table, b),
                             &[],
@@ -1147,10 +1292,10 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
                         }
                         let frac = sp.table.bucket_frac[b];
                         last = Some(tl.task(
-                            compute[i],
+                            compute(i),
                             TaskKind::Forward,
                             sp.fwd_t * frac,
-                            &dbuf,
+                            dbuf.as_slice(),
                         ));
                     }
                     let last = last.expect("nb > 0");
@@ -1161,7 +1306,7 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
                     if let Some(g) = gate {
                         dbuf.push(g);
                     }
-                    tl.task(compute[i], TaskKind::Forward, sp.fwd_t, &dbuf)
+                    tl.task(compute(i), TaskKind::Forward, sp.fwd_t, dbuf.as_slice())
                 }
             }
             PipeSlot::Bwd(j) => {
@@ -1169,7 +1314,7 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
                 // stage is not last) the downstream backward — its
                 // activation gradients ride the downstream p2p stream.
                 let gate = (i + 1 < pp)
-                    .then(|| tl.task(p2p_b[i + 1], TaskKind::ActComm, sp.act_p2p, &[deps[1]]));
+                    .then(|| tl.task(p2p_b(i + 1), TaskKind::ActComm, sp.act_p2p, &[deps[1]]));
                 if j == m - 1 && nb > 0 {
                     // Last micro-batch: buckets complete sequentially and
                     // each bucket's gradient collective overlaps the
@@ -1187,13 +1332,13 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
                         }
                         let frac = sp.table.bucket_frac[b];
                         let c = tl.task(
-                            compute[i],
+                            compute(i),
                             TaskKind::Backward,
                             sp.bwd_t * frac,
-                            &dbuf,
+                            dbuf.as_slice(),
                         );
                         let r = tl.task(
-                            dpc[i],
+                            dpc(i),
                             TaskKind::GradComm,
                             bucket_grad_time(s, &comm, &sp.table, b),
                             &[c],
@@ -1210,7 +1355,7 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
                     if let Some(g) = gate {
                         dbuf.push(g);
                     }
-                    let c = tl.task(compute[i], TaskKind::Backward, sp.bwd_t, &dbuf);
+                    let c = tl.task(compute(i), TaskKind::Backward, sp.bwd_t, dbuf.as_slice());
                     if j == m - 1 {
                         last_bwd[i] = Some(c);
                     }
@@ -1225,7 +1370,8 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
     // *its* stage's gradients are synchronized, overlapping later stages'
     // backward cooldown (the paper's asynchronous-optimizer claim).
     let mut fwd_bwd_end = 0.0f64;
-    let mut opt_ends = vec![0.0f64; pp];
+    opt_ends.clear();
+    opt_ends.resize(pp, 0.0);
     for i in 0..pp {
         dbuf.clear();
         if let Some(c) = last_bwd[i] {
@@ -1234,13 +1380,15 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
         if let Some(r) = last_rs[i] {
             dbuf.push(r);
         }
-        let tp_id = tl.task(compute[i], TaskKind::TpComm, m as f64 * stages[i].tp_ar, &dbuf);
+        let tp_id =
+            tl.task(compute(i), TaskKind::TpComm, m as f64 * stages[i].tp_ar, dbuf.as_slice());
         fwd_bwd_end = fwd_bwd_end.max(tl.end(tp_id));
-        let opt_id = tl.task(opt_stream[i], TaskKind::Optimizer, stages[i].opt.time_s, &[tp_id]);
+        let opt_id = tl.task(opt_stream(i), TaskKind::Optimizer, stages[i].opt.time_s, &[tp_id]);
         opt_ends[i] = tl.end(opt_id);
     }
+    cache.note_timeline_tasks(tl.n_tasks() as u64);
 
-    // --- read the Breakdown off the trace -------------------------------
+    // --- read the Breakdown off the lean timeline -----------------------
     // Pacing stage: the one whose optimizer drains last.
     let mut pacing = 0usize;
     for i in 1..pp {
@@ -1257,13 +1405,18 @@ fn simulate_timeline_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) 
         _ => 0.0,
     };
     out.exposed_comm_s = ag_stretch[pacing] + rs_tail;
-    let max_busy = (0..pp).map(|i| tl.stream_busy(compute[i])).fold(0.0, f64::max);
+    let max_busy = (0..pp).map(|i| tl.stream_busy(compute(i))).fold(0.0, f64::max);
     out.bubble_s = (out.fwd_bwd_s - max_busy).max(0.0);
     out.n_micro_groups = sp.opt.n_micro_groups;
     out.grad_comm_bytes = sp.grad_bytes;
     let adamw_elems = sp.table.total_elems / s.dp as f64;
     out.adamw_ref_s = sp.hw.memory_time(adamw_elems * ADAMW_BYTES_PER_ELEM);
     fill_loads(out, s, &sp.table, sp.opt.worst_tplan.as_deref());
+    // Drop the stage Arcs now rather than at the thread's next playback:
+    // holding them would pin evicted StageTables/TpPlans past the plan
+    // cache's byte budget. The buffer keeps its capacity (it is refilled
+    // from the cache every call), so the warm path stays allocation-free.
+    stages.clear();
 }
 
 #[cfg(test)]
@@ -1321,6 +1474,26 @@ mod tests {
         s.pp = 4;
         let b = simulate_iteration(&s);
         assert!(b.total_s > 0.0);
+    }
+
+    #[test]
+    fn stage_tables_count_hosted_layers_and_match_across_interior_stages() {
+        // Qwen3-1.7B has 28 layers; pp = 4 -> every stage hosts exactly
+        // 7. The table must count the layers the stage *hosts* (not
+        // "max global layer index + 1", which for stage 2 would be 21
+        // and would also differ between shape-identical interior stages
+        // — breaking the canonical-stage sharing contract that lets a
+        // racing build of stage 2 stand in for stage 1's cache entry).
+        let mut s = scen(DpStrategy::LbAsc);
+        s.pp = 4;
+        let cache = PlanCache::unbounded();
+        let t1 = StageTable::build(&s, 1, &cache);
+        let t2 = StageTable::build(&s, 2, &cache);
+        assert_eq!(t1.n_layers, 7.0);
+        assert_eq!(t2.n_layers.to_bits(), t1.n_layers.to_bits());
+        assert_eq!(t2.matrix_numel.to_bits(), t1.matrix_numel.to_bits());
+        assert_eq!(t2.total_elems.to_bits(), t1.total_elems.to_bits());
+        assert_eq!(t2.param_bytes.to_bits(), t1.param_bytes.to_bits());
     }
 
     #[test]

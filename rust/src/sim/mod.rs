@@ -8,8 +8,10 @@
 //! * [`stream`] — the single-resource scheduling primitive the
 //!   closed-form playback composes by hand.
 //! * [`timeline`] — the discrete-event engine (streams + dependent
-//!   tasks) and the 1F1B / GPipe pipeline schedule builder that times
-//!   `pp > 1` / multi-micro-batch / straggler scenarios.
+//!   tasks; lean scheduling core with an opt-in verification trace) and
+//!   the 1F1B / GPipe pipeline schedule builder that times `pp > 1` /
+//!   multi-micro-batch / straggler scenarios over a reusable per-worker
+//!   scratch.
 //! * [`scenario`] — the experiment configuration (model, DP/TP/PP grid,
 //!   micro-batches, schedule, optimizer, strategy, hardware).
 //! * [`iteration`] — the iteration playback: bucket-overlapped fwd/bwd

@@ -7,8 +7,9 @@
 //! The closed-form `pp = 1` iteration playback composes a handful of
 //! them by hand (bucket-overlap, the micro-group pipeline of Fig. 2);
 //! multi-stage schedules with cross-stage dependencies use the full
-//! discrete-event engine in [`crate::sim::timeline`] instead, which
-//! additionally records a verifiable task trace.
+//! discrete-event engine in [`crate::sim::timeline`] instead, which can
+//! additionally record a verifiable task trace (opt-in recording mode —
+//! the sweep hot path runs the lean, trace-free core).
 
 #![warn(missing_docs)]
 

@@ -10,23 +10,48 @@
 //! engine those schedules are expressed in:
 //!
 //! * [`Timeline`] — a set of serially-executing streams (CUDA stream /
-//!   NIC queue analogues) plus a task trace. A task occupies one stream
-//!   for its duration and starts no earlier than (a) the stream's
-//!   previous task and (b) every declared dependency's completion.
-//!   Tasks must be submitted in dependency order (ids are handed out at
-//!   submission), which makes scheduling a single deterministic forward
-//!   pass — no event queue, no tie-breaking.
-//! * [`schedule_order`] — the per-stage slot order of a pipeline
-//!   schedule ([`PipelineSchedule::OneFOneB`] warmup/steady/cooldown or
-//!   [`PipelineSchedule::GPipe`] all-forward-then-all-backward).
-//! * [`drive_pipeline`] — turns those per-stage orders into tasks via a
-//!   caller-supplied emitter, resolving cross-stage dependencies
-//!   (`F(i,j)` after `F(i-1,j)`; `B(i,j)` after `F(i,j)` and
-//!   `B(i+1,j)`) with a deadlock-checked work-list sweep.
+//!   NIC queue analogues). A task occupies one stream for its duration
+//!   and starts no earlier than (a) the stream's previous task and (b)
+//!   every declared dependency's completion. Tasks must be submitted in
+//!   dependency order (ids are handed out at submission), which makes
+//!   scheduling a single deterministic forward pass — no event queue,
+//!   no tie-breaking.
+//! * [`schedule_order`] / [`schedule_order_iter`] — the per-stage slot
+//!   order of a pipeline schedule ([`PipelineSchedule::OneFOneB`]
+//!   warmup/steady/cooldown or [`PipelineSchedule::GPipe`]
+//!   all-forward-then-all-backward), as a `Vec` or as an
+//!   allocation-free iterator.
+//! * [`drive_pipeline`] / [`drive_pipeline_flat`] — turn those
+//!   per-stage orders into tasks via a caller-supplied emitter,
+//!   resolving cross-stage dependencies (`F(i,j)` after `F(i-1,j)`;
+//!   `B(i,j)` after `F(i,j)` and `B(i+1,j)`) with a deadlock-checked
+//!   work-list sweep. The nested-table form is the readable reference;
+//!   the flat form drives the same sweep over a reusable
+//!   [`PipeScratch`] (plus a pre-expanded [`OrderCache`] table) and
+//!   performs zero heap allocations once the scratch has capacity —
+//!   `tests/timeline_props.rs` pins the two shadow-equivalent.
 //! * [`build_pipeline`] — the minimal emitter (one compute task per
 //!   slot), used by the schedule-invariant property tests and as the
 //!   reference for the analytic 1F1B bubble fraction
 //!   `(pp-1)/(m+pp-1)`.
+//!
+//! # Lean vs. recording mode
+//!
+//! Scheduling needs only per-stream `free_at` running sums and each
+//! task's end time; the full `TaskRec` + dependency trace exists so the
+//! property/differential tests can *verify* a schedule. The two
+//! concerns are split: [`Timeline::new`] builds a **lean** timeline
+//! (per-stream `free_at`/`busy`, a flat `ends` vector, the makespan as
+//! a running max, the serial sum as a running total — everything
+//! dependency resolution and `Breakdown` extraction read), while
+//! [`Timeline::recording`] additionally keeps the `TaskRec` + deps
+//! trace behind [`Timeline::tasks`] / [`Timeline::deps_of`] /
+//! [`Timeline::critical_path`]. Both modes run the identical
+//! scheduling arithmetic in the identical order, so every timing they
+//! produce is bit-identical (property-tested over randomized DAGs).
+//! Sweeps run lean; [`Timeline::reset`] clears a timeline for reuse
+//! while retaining capacity, which is what makes the warm
+//! `simulate_iteration_timeline` path allocation-free.
 //!
 //! The full-iteration emitter (bucket-split first-forward/last-backward
 //! micro-batches, reduce-scatter overlap, the optimizer as a trailing
@@ -70,6 +95,7 @@ pub enum TaskKind {
 }
 
 /// One scheduled task: placement, timing, and its dependency slice.
+/// Only kept in recording mode (see the module docs).
 #[derive(Clone, Copy, Debug)]
 pub struct TaskRec {
     /// The stream the task occupied.
@@ -86,20 +112,64 @@ pub struct TaskRec {
     dep_len: u32,
 }
 
-/// A deterministic discrete-event schedule under construction (see the
-/// module docs).
+/// The opt-in verification trace: full task records plus a flattened
+/// dependency arena.
 #[derive(Clone, Debug, Default)]
-pub struct Timeline {
-    free_at: Vec<f64>,
-    busy: Vec<f64>,
+struct Trace {
     tasks: Vec<TaskRec>,
     deps: Vec<TaskId>,
 }
 
+/// A deterministic discrete-event schedule under construction (see the
+/// module docs). Lean by default; [`Timeline::recording`] keeps the
+/// verification trace.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    free_at: Vec<f64>,
+    busy: Vec<f64>,
+    /// Per-task completion times — the lean core's whole task state.
+    ends: Vec<f64>,
+    /// Running `max` of `ends` in submission order (bit-identical to a
+    /// fold over the trace).
+    span: f64,
+    /// Running sum of durations in submission order.
+    dur_sum: f64,
+    trace: Option<Trace>,
+}
+
 impl Timeline {
-    /// An empty timeline with no streams.
+    /// An empty **lean** timeline with no streams: schedules and times
+    /// tasks without recording a trace (the sweep hot path).
     pub fn new() -> Timeline {
         Timeline::default()
+    }
+
+    /// An empty **recording** timeline: additionally keeps the
+    /// [`TaskRec`] + dependency trace behind [`Timeline::tasks`],
+    /// [`Timeline::deps_of`] and [`Timeline::critical_path`] — the mode
+    /// the property/differential tests verify schedules in.
+    pub fn recording() -> Timeline {
+        Timeline { trace: Some(Trace::default()), ..Timeline::default() }
+    }
+
+    /// Does this timeline keep the verification trace?
+    pub fn is_recording(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Clear all streams and tasks for reuse, retaining every buffer's
+    /// capacity (and the lean/recording mode). A reset-then-rebuild of
+    /// a same-shaped schedule performs zero heap allocations.
+    pub fn reset(&mut self) {
+        self.free_at.clear();
+        self.busy.clear();
+        self.ends.clear();
+        self.span = 0.0;
+        self.dur_sum = 0.0;
+        if let Some(tr) = &mut self.trace {
+            tr.tasks.clear();
+            tr.deps.clear();
+        }
     }
 
     /// Create a new stream (free from t = 0).
@@ -116,45 +186,65 @@ impl Timeline {
         debug_assert!(dur.is_finite() && dur >= 0.0, "bad duration {dur}");
         let mut ready = self.free_at[stream.0 as usize];
         for &d in deps {
-            ready = ready.max(self.tasks[d.0 as usize].end);
+            ready = ready.max(self.ends[d.0 as usize]);
         }
         let start = ready;
         let end = start + dur;
         self.free_at[stream.0 as usize] = end;
         self.busy[stream.0 as usize] += dur;
-        let dep_off = self.deps.len() as u32;
-        self.deps.extend_from_slice(deps);
-        self.tasks.push(TaskRec {
-            stream,
-            kind,
-            start,
-            dur,
-            end,
-            dep_off,
-            dep_len: deps.len() as u32,
-        });
-        TaskId((self.tasks.len() - 1) as u32)
+        self.span = self.span.max(end);
+        self.dur_sum += dur;
+        let id = TaskId(self.ends.len() as u32);
+        self.ends.push(end);
+        if let Some(tr) = &mut self.trace {
+            let dep_off = tr.deps.len() as u32;
+            tr.deps.extend_from_slice(deps);
+            tr.tasks.push(TaskRec {
+                stream,
+                kind,
+                start,
+                dur,
+                end,
+                dep_off,
+                dep_len: deps.len() as u32,
+            });
+        }
+        id
     }
 
     /// Completion time of `t`.
     pub fn end(&self, t: TaskId) -> f64 {
-        self.tasks[t.0 as usize].end
+        self.ends[t.0 as usize]
     }
 
     /// Latest completion time over all tasks (0 when empty).
     pub fn makespan(&self) -> f64 {
-        self.tasks.iter().map(|t| t.end).fold(0.0, f64::max)
+        self.span
     }
 
-    /// The full task trace, in submission order.
+    /// Number of tasks scheduled so far (both modes).
+    pub fn n_tasks(&self) -> usize {
+        self.ends.len()
+    }
+
+    /// The trace, or a clear panic in lean mode — trace readers are
+    /// verification paths that must opt in via [`Timeline::recording`].
+    fn require_trace(&self) -> &Trace {
+        self.trace
+            .as_ref()
+            .expect("task trace requires a recording timeline (Timeline::recording)")
+    }
+
+    /// The full task trace, in submission order (recording mode only).
     pub fn tasks(&self) -> &[TaskRec] {
-        &self.tasks
+        &self.require_trace().tasks
     }
 
-    /// The declared dependencies of `t`.
+    /// The declared dependencies of `t` (recording mode only).
     pub fn deps_of(&self, t: TaskId) -> &[TaskId] {
-        let r = &self.tasks[t.0 as usize];
-        &self.deps[r.dep_off as usize..(r.dep_off + r.dep_len) as usize]
+        let tr = self.require_trace();
+        let r = &tr.tasks[t.0 as usize];
+        &tr.deps[r.dep_off as usize..(r.dep_off + r.dep_len) as usize]
     }
 
     /// Total busy time (sum of task durations) on `s`.
@@ -174,13 +264,15 @@ impl Timeline {
 
     /// Dependency-graph critical path: the resource-oblivious lower
     /// bound on the makespan (longest chain of `dur` through `deps`).
+    /// Recording mode only (the lean core does not keep dependencies).
     pub fn critical_path(&self) -> f64 {
+        let tr = self.require_trace();
         // Tasks are submitted in dependency order, so one forward pass.
-        let mut lp = vec![0.0f64; self.tasks.len()];
+        let mut lp = vec![0.0f64; tr.tasks.len()];
         let mut best = 0.0f64;
-        for (i, t) in self.tasks.iter().enumerate() {
+        for (i, t) in tr.tasks.iter().enumerate() {
             let mut start = 0.0f64;
-            for &d in &self.deps[t.dep_off as usize..(t.dep_off + t.dep_len) as usize] {
+            for &d in &tr.deps[t.dep_off as usize..(t.dep_off + t.dep_len) as usize] {
                 start = start.max(lp[d.0 as usize]);
             }
             lp[i] = start + t.dur;
@@ -189,9 +281,10 @@ impl Timeline {
         best
     }
 
-    /// Sum of all task durations: the fully-serialized upper bound.
+    /// Sum of all task durations: the fully-serialized upper bound
+    /// (maintained as a running total — available in both modes).
     pub fn serial_sum(&self) -> f64 {
-        self.tasks.iter().map(|t| t.dur).sum()
+        self.dur_sum
     }
 }
 
@@ -215,12 +308,15 @@ impl PipelineSchedule {
         }
     }
 
-    /// Parse a CLI spelling (`1f1b` / `gpipe`, case-insensitive).
+    /// Parse a CLI spelling (`1f1b` / `gpipe`, case-insensitive) —
+    /// per-spelling `eq_ignore_ascii_case`, no lowercase buffer.
     pub fn parse(s: &str) -> Option<PipelineSchedule> {
-        match s.to_ascii_lowercase().as_str() {
-            "1f1b" | "one-f-one-b" => Some(PipelineSchedule::OneFOneB),
-            "gpipe" => Some(PipelineSchedule::GPipe),
-            _ => None,
+        if s.eq_ignore_ascii_case("1f1b") || s.eq_ignore_ascii_case("one-f-one-b") {
+            Some(PipelineSchedule::OneFOneB)
+        } else if s.eq_ignore_ascii_case("gpipe") {
+            Some(PipelineSchedule::GPipe)
+        } else {
+            None
         }
     }
 }
@@ -235,41 +331,266 @@ pub enum PipeSlot {
     Bwd(usize),
 }
 
+/// Allocation-free iterator over one stage's slot order (see
+/// [`schedule_order`]). Both schedules reduce to a single closed form
+/// parameterized by the warmup length `w`: `w = m` for GPipe (all
+/// forwards first), `w = min(pp-1-stage, m)` for 1F1B — slot `k` is
+/// then warmup `Fwd(k)` for `k < w`, the alternating steady phase for
+/// `k < 2m - w`, and cooldown `Bwd(k - m)` after.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleOrderIter {
+    w: usize,
+    m: usize,
+    k: usize,
+}
+
+impl Iterator for ScheduleOrderIter {
+    type Item = PipeSlot;
+
+    fn next(&mut self) -> Option<PipeSlot> {
+        if self.k >= 2 * self.m {
+            return None;
+        }
+        let k = self.k;
+        self.k += 1;
+        Some(if k < self.w {
+            PipeSlot::Fwd(k)
+        } else if k < 2 * self.m - self.w {
+            let t = k - self.w;
+            if t % 2 == 0 {
+                PipeSlot::Fwd(self.w + t / 2)
+            } else {
+                PipeSlot::Bwd(t / 2)
+            }
+        } else {
+            PipeSlot::Bwd(k - self.m)
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = 2 * self.m - self.k;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for ScheduleOrderIter {}
+
 /// The slot order stage `stage` (0-based, of `pp`) executes under
-/// `sched` with `m` micro-batches. Every micro-batch appears exactly
-/// once as `Fwd` and once as `Bwd`, with `Bwd(j)` after `Fwd(j)`.
+/// `sched` with `m` micro-batches, as an allocation-free iterator.
+/// Every micro-batch appears exactly once as `Fwd` and once as `Bwd`,
+/// with `Bwd(j)` after `Fwd(j)`.
+pub fn schedule_order_iter(
+    sched: PipelineSchedule,
+    pp: usize,
+    stage: usize,
+    m: usize,
+) -> ScheduleOrderIter {
+    assert!(pp >= 1 && stage < pp && m >= 1);
+    let w = match sched {
+        PipelineSchedule::GPipe => m,
+        PipelineSchedule::OneFOneB => (pp - 1 - stage).min(m),
+    };
+    ScheduleOrderIter { w, m, k: 0 }
+}
+
+/// [`schedule_order_iter`] collected into a `Vec` (the convenient form
+/// for tests and one-off analysis).
 pub fn schedule_order(
     sched: PipelineSchedule,
     pp: usize,
     stage: usize,
     m: usize,
 ) -> Vec<PipeSlot> {
-    assert!(pp >= 1 && stage < pp && m >= 1);
-    let mut out = Vec::with_capacity(2 * m);
-    match sched {
-        PipelineSchedule::GPipe => {
-            out.extend((0..m).map(PipeSlot::Fwd));
-            out.extend((0..m).map(PipeSlot::Bwd));
-        }
-        PipelineSchedule::OneFOneB => {
-            let w = (pp - 1 - stage).min(m);
-            for j in 0..w {
-                out.push(PipeSlot::Fwd(j));
-            }
-            for k in 0..(m - w) {
-                out.push(PipeSlot::Fwd(w + k));
-                out.push(PipeSlot::Bwd(k));
-            }
-            for k in (m - w)..m {
-                out.push(PipeSlot::Bwd(k));
-            }
-        }
+    schedule_order_iter(sched, pp, stage, m).collect()
+}
+
+/// Interned, fully-expanded slot tables keyed by `(sched, pp, m)` —
+/// the stage dimension is flattened in (stage-major, `2m` slots per
+/// stage), so one entry serves a whole [`drive_pipeline_flat`] call.
+/// Lookups are a linear scan over the handful of distinct grid shapes a
+/// sweep visits and never allocate; only the first sighting of a shape
+/// expands (and allocates) its table. Typically held in a per-worker
+/// scratch so repeated grid points re-derive nothing.
+#[derive(Debug, Default)]
+pub struct OrderCache {
+    entries: Vec<OrderEntry>,
+}
+
+#[derive(Debug)]
+struct OrderEntry {
+    sched: PipelineSchedule,
+    pp: usize,
+    m: usize,
+    slots: Vec<PipeSlot>,
+}
+
+impl OrderCache {
+    /// An empty cache.
+    pub fn new() -> OrderCache {
+        OrderCache::default()
     }
-    out
+
+    /// The stage-major slot table for `(sched, pp, m)` (stage `i`'s
+    /// order at `[i*2m .. (i+1)*2m]`), plus whether it was already
+    /// interned (`true` = hit, no derivation).
+    pub fn get(&mut self, sched: PipelineSchedule, pp: usize, m: usize) -> (&[PipeSlot], bool) {
+        if let Some(i) = self
+            .entries
+            .iter()
+            .position(|e| e.sched == sched && e.pp == pp && e.m == m)
+        {
+            return (&self.entries[i].slots, true);
+        }
+        let mut slots = Vec::with_capacity(pp * 2 * m);
+        for stage in 0..pp {
+            slots.extend(schedule_order_iter(sched, pp, stage, m));
+        }
+        self.entries.push(OrderEntry { sched, pp, m, slots });
+        (&self.entries.last().expect("just pushed").slots, false)
+    }
+
+    /// Number of distinct `(sched, pp, m)` shapes interned.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether no shapes have been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The sentinel [`drive_pipeline_flat`] marks unscheduled slots with.
+const NONE_TASK: TaskId = TaskId(u32::MAX);
+
+/// Reusable flat state for [`drive_pipeline_flat`]: the `pp × m`
+/// forward/backward completion-id tables (replacing the nested
+/// `Vec<Vec<Option<TaskId>>>` of the reference driver), the per-stage
+/// cursors, and the cross-stage dependency buffer. All buffers are
+/// cleared and refilled in place, so reuse across calls is
+/// allocation-free once capacity covers the largest `(pp, m)` seen.
+#[derive(Debug, Default)]
+pub struct PipeScratch {
+    fwd: Vec<TaskId>,
+    bwd: Vec<TaskId>,
+    cursor: Vec<usize>,
+    deps: Vec<TaskId>,
+    /// Micro-batch count of the last drive (the flat tables' row
+    /// stride; their length over `m` gives the stage count).
+    m: usize,
+}
+
+impl PipeScratch {
+    /// An empty scratch (buffers grow on first drive).
+    pub fn new() -> PipeScratch {
+        PipeScratch::default()
+    }
+
+    /// Completion id of `F(stage, j)` from the last completed drive.
+    pub fn fwd_id(&self, stage: usize, j: usize) -> TaskId {
+        let id = self.fwd[stage * self.m + j];
+        debug_assert!(id != NONE_TASK, "slot F({stage},{j}) never scheduled");
+        id
+    }
+
+    /// Completion id of `B(stage, j)` from the last completed drive.
+    pub fn bwd_id(&self, stage: usize, j: usize) -> TaskId {
+        let id = self.bwd[stage * self.m + j];
+        debug_assert!(id != NONE_TASK, "slot B({stage},{j}) never scheduled");
+        id
+    }
+}
+
+/// Allocation-free twin of [`drive_pipeline`]: expand the pre-derived
+/// stage-major `slots` table (from [`OrderCache::get`], `pp * 2m`
+/// entries) into tasks via `emit`, tracking completion ids in the flat
+/// tables of `sc`. Identical traversal, eligibility rule and emission
+/// order to the nested reference — the shadow-equivalence property test
+/// in `tests/timeline_props.rs` pins the two producing bit-identical
+/// schedules. Completion ids stay readable through
+/// [`PipeScratch::fwd_id`] / [`PipeScratch::bwd_id`] after the call.
+pub fn drive_pipeline_flat<F>(
+    tl: &mut Timeline,
+    slots: &[PipeSlot],
+    pp: usize,
+    m: usize,
+    sc: &mut PipeScratch,
+    mut emit: F,
+) where
+    F: FnMut(&mut Timeline, usize, PipeSlot, &[TaskId]) -> TaskId,
+{
+    assert!(pp >= 1 && m >= 1);
+    assert_eq!(slots.len(), pp * 2 * m, "slots must be the full stage-major table");
+    sc.m = m;
+    sc.fwd.clear();
+    sc.fwd.resize(pp * m, NONE_TASK);
+    sc.bwd.clear();
+    sc.bwd.resize(pp * m, NONE_TASK);
+    sc.cursor.clear();
+    sc.cursor.resize(pp, 0);
+    let mut remaining = 2 * m * pp;
+    while remaining > 0 {
+        let mut progressed = false;
+        for i in 0..pp {
+            while sc.cursor[i] < 2 * m {
+                let slot = slots[i * 2 * m + sc.cursor[i]];
+                sc.deps.clear();
+                let eligible = match slot {
+                    PipeSlot::Fwd(j) => {
+                        if i == 0 {
+                            true
+                        } else {
+                            let d = sc.fwd[(i - 1) * m + j];
+                            if d != NONE_TASK {
+                                sc.deps.push(d);
+                                true
+                            } else {
+                                false
+                            }
+                        }
+                    }
+                    PipeSlot::Bwd(j) => {
+                        let own = sc.fwd[i * m + j];
+                        if own == NONE_TASK {
+                            false
+                        } else {
+                            sc.deps.push(own);
+                            if i + 1 == pp {
+                                true
+                            } else {
+                                let d = sc.bwd[(i + 1) * m + j];
+                                if d != NONE_TASK {
+                                    sc.deps.push(d);
+                                    true
+                                } else {
+                                    false
+                                }
+                            }
+                        }
+                    }
+                };
+                if !eligible {
+                    break;
+                }
+                let id = emit(tl, i, slot, &sc.deps);
+                match slot {
+                    PipeSlot::Fwd(j) => sc.fwd[i * m + j] = id,
+                    PipeSlot::Bwd(j) => sc.bwd[i * m + j] = id,
+                }
+                sc.cursor[i] += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "pipeline schedule deadlocked (invalid slot order)");
+    }
 }
 
 /// Expand a pipeline schedule into tasks via `emit`, resolving
-/// cross-stage dependencies with a deadlock-checked work-list sweep.
+/// cross-stage dependencies with a deadlock-checked work-list sweep —
+/// the readable nested-table reference implementation (the hot path
+/// uses [`drive_pipeline_flat`]; a property test pins the two
+/// equivalent).
 ///
 /// `emit(timeline, stage, slot, deps)` schedules whatever tasks one
 /// slot needs and returns the id representing that slot's *completion*
@@ -398,7 +719,7 @@ mod tests {
 
     #[test]
     fn stream_serializes_and_deps_gate() {
-        let mut tl = Timeline::new();
+        let mut tl = Timeline::recording();
         let a = tl.stream();
         let b = tl.stream();
         let t1 = tl.task(a, TaskKind::Other, 2.0, &[]);
@@ -411,8 +732,48 @@ mod tests {
         assert_eq!(tl.stream_busy(b), 0.5);
         assert_eq!(tl.makespan(), 3.5);
         assert_eq!(tl.deps_of(t3), &[t2]);
+        assert_eq!(tl.n_tasks(), 3);
         assert!(tl.critical_path() <= tl.makespan() + 1e-12);
         assert!(tl.makespan() <= tl.serial_sum() + 1e-12);
+    }
+
+    #[test]
+    fn lean_timeline_times_identically_and_resets_in_place() {
+        let build = |tl: &mut Timeline| {
+            let a = tl.stream();
+            let b = tl.stream();
+            let t1 = tl.task(a, TaskKind::Other, 2.0, &[]);
+            let _ = tl.task(a, TaskKind::Other, 1.0, &[t1]);
+            let t3 = tl.task(b, TaskKind::Other, 0.5, &[t1]);
+            tl.end(t3)
+        };
+        let mut lean = Timeline::new();
+        assert!(!lean.is_recording());
+        let mut rec = Timeline::recording();
+        assert_eq!(build(&mut lean).to_bits(), build(&mut rec).to_bits());
+        assert_eq!(lean.makespan().to_bits(), rec.makespan().to_bits());
+        assert_eq!(lean.serial_sum().to_bits(), rec.serial_sum().to_bits());
+        assert_eq!(lean.n_tasks(), rec.n_tasks());
+        // Reset retains the mode and produces identical timings again.
+        let before = lean.makespan();
+        lean.reset();
+        assert_eq!(lean.n_tasks(), 0);
+        assert_eq!(lean.n_streams(), 0);
+        assert_eq!(lean.makespan(), 0.0);
+        assert_eq!(build(&mut lean).to_bits(), 2.5f64.to_bits());
+        assert_eq!(lean.makespan().to_bits(), before.to_bits());
+        let mut rec2 = Timeline::recording();
+        rec2.reset();
+        assert!(rec2.is_recording());
+    }
+
+    #[test]
+    #[should_panic(expected = "recording timeline")]
+    fn lean_timeline_has_no_trace() {
+        let mut tl = Timeline::new();
+        let s = tl.stream();
+        tl.task(s, TaskKind::Other, 1.0, &[]);
+        let _ = tl.tasks();
     }
 
     #[test]
@@ -429,6 +790,68 @@ mod tests {
                             assert!(f.unwrap() < b.unwrap(), "{sched:?} pp{pp} s{stage} m{m}");
                         }
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn order_iter_is_exact_size() {
+        let mut it = schedule_order_iter(PipelineSchedule::OneFOneB, 4, 1, 6);
+        assert_eq!(it.len(), 12);
+        it.next();
+        assert_eq!(it.len(), 11);
+        assert_eq!(it.count(), 11);
+    }
+
+    #[test]
+    fn order_cache_interns_and_hits() {
+        let mut cache = OrderCache::new();
+        assert!(cache.is_empty());
+        let (slots, hit) = cache.get(PipelineSchedule::OneFOneB, 3, 4);
+        assert!(!hit);
+        assert_eq!(slots.len(), 3 * 2 * 4);
+        // Stage-major layout matches per-stage derivation.
+        for stage in 0..3 {
+            let expect = schedule_order(PipelineSchedule::OneFOneB, 3, stage, 4);
+            let (slots, _) = cache.get(PipelineSchedule::OneFOneB, 3, 4);
+            assert_eq!(&slots[stage * 8..(stage + 1) * 8], &expect[..], "stage {stage}");
+        }
+        let (_, hit) = cache.get(PipelineSchedule::OneFOneB, 3, 4);
+        assert!(hit, "second lookup must hit");
+        let (_, hit) = cache.get(PipelineSchedule::GPipe, 3, 4);
+        assert!(!hit, "different schedule is a distinct shape");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn flat_drive_matches_nested_reference() {
+        for (sched, pp, m) in [
+            (PipelineSchedule::OneFOneB, 1, 1),
+            (PipelineSchedule::OneFOneB, 3, 5),
+            (PipelineSchedule::GPipe, 4, 2),
+        ] {
+            let fwd_dur: Vec<f64> = (0..pp).map(|i| 0.5 + i as f64 * 0.25).collect();
+            let bwd_dur: Vec<f64> = (0..pp).map(|i| 1.0 + i as f64 * 0.125).collect();
+            let mut ref_tl = Timeline::new();
+            let p = build_pipeline(&mut ref_tl, sched, pp, m, &fwd_dur, &bwd_dur);
+
+            let mut tl = Timeline::new();
+            let compute: Vec<StreamId> = (0..pp).map(|_| tl.stream()).collect();
+            let mut orders = OrderCache::new();
+            let (slots, _) = orders.get(sched, pp, m);
+            let mut sc = PipeScratch::new();
+            drive_pipeline_flat(&mut tl, slots, pp, m, &mut sc, |tl, i, slot, deps| {
+                match slot {
+                    PipeSlot::Fwd(_) => tl.task(compute[i], TaskKind::Forward, fwd_dur[i], deps),
+                    PipeSlot::Bwd(_) => tl.task(compute[i], TaskKind::Backward, bwd_dur[i], deps),
+                }
+            });
+            assert_eq!(tl.makespan().to_bits(), ref_tl.makespan().to_bits());
+            for i in 0..pp {
+                for j in 0..m {
+                    assert_eq!(sc.fwd_id(i, j), p.fwd[i][j], "F({i},{j})");
+                    assert_eq!(sc.bwd_id(i, j), p.bwd[i][j], "B({i},{j})");
                 }
             }
         }
@@ -480,6 +903,11 @@ mod tests {
             assert_eq!(PipelineSchedule::parse(s.label()), Some(s));
         }
         assert_eq!(PipelineSchedule::parse("GPipe"), Some(PipelineSchedule::GPipe));
+        assert_eq!(PipelineSchedule::parse("1F1B"), Some(PipelineSchedule::OneFOneB));
+        assert_eq!(
+            PipelineSchedule::parse("One-F-One-B"),
+            Some(PipelineSchedule::OneFOneB),
+        );
         assert_eq!(PipelineSchedule::parse("zigzag"), None);
     }
 }

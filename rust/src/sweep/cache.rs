@@ -221,7 +221,9 @@ impl StageKey {
     }
 }
 
-/// Cache statistics snapshot.
+/// Cache statistics snapshot — the plan-cache counters plus the warm
+/// timeline-path counters the simulator reports through its cache
+/// handle (task throughput, scratch reuse, schedule-order interning).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookups served from the cache.
@@ -236,10 +238,31 @@ pub struct CacheStats {
     pub peak_bytes: u64,
     /// The configured budget (0 = unbounded).
     pub budget_bytes: u64,
+    /// Tasks scheduled by the event-driven timeline engine, summed over
+    /// every playback evaluated against this cache.
+    pub timeline_tasks: u64,
+    /// Timeline playbacks that reused an already-warm per-worker
+    /// `SimScratch` (vs. first use on a thread). Scratch warmth is
+    /// per *thread*, not per cache: a scratch warmed by an earlier
+    /// engine on the same thread counts as a reuse for the next one
+    /// (the counter describes the allocation behavior the sweep
+    /// actually saw, which is what the zero-alloc contract cares
+    /// about).
+    pub scratch_reuses: u64,
+    /// Pipeline schedule-order tables served from a per-worker interned
+    /// cache instead of being re-derived (per-thread, like
+    /// `scratch_reuses`).
+    pub order_hits: u64,
 }
 
 impl CacheStats {
-    /// JSON form for sweep artifacts (stable key order).
+    /// JSON form for sweep artifacts (stable key order). Note the
+    /// counters are *diagnostics*, not pinned outputs: `hits`/`solves`
+    /// can vary under solve races, and the per-thread
+    /// `scratch_reuses`/`order_hits` vary with `--threads` and
+    /// work-stealing order — which is why `render_json` (the
+    /// byte-determinism surface) excludes this block and only the CLI
+    /// attaches it to `--json` artifacts.
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("hits", Value::num(self.hits as f64)),
@@ -248,7 +271,34 @@ impl CacheStats {
             ("resident_bytes", Value::num(self.resident_bytes as f64)),
             ("peak_bytes", Value::num(self.peak_bytes as f64)),
             ("budget_bytes", Value::num(self.budget_bytes as f64)),
+            ("timeline_tasks", Value::num(self.timeline_tasks as f64)),
+            ("scratch_reuses", Value::num(self.scratch_reuses as f64)),
+            ("order_hits", Value::num(self.order_hits as f64)),
         ])
+    }
+
+    /// Parse a sweep artifact's `cache` block. Every counter defaults
+    /// to zero when absent, so artifacts written before a counter
+    /// existed (e.g. pre-timeline `--json` baselines) still load — the
+    /// tolerance `sweep --baseline` relies on.
+    pub fn from_json(v: &Value) -> CacheStats {
+        let num = |k: &str| {
+            v.opt(k)
+                .and_then(|x| x.as_f64().ok())
+                .map(|x| x as u64)
+                .unwrap_or(0)
+        };
+        CacheStats {
+            hits: num("hits"),
+            solves: num("solves"),
+            evictions: num("evictions"),
+            resident_bytes: num("resident_bytes"),
+            peak_bytes: num("peak_bytes"),
+            budget_bytes: num("budget_bytes"),
+            timeline_tasks: num("timeline_tasks"),
+            scratch_reuses: num("scratch_reuses"),
+            order_hits: num("order_hits"),
+        }
     }
 }
 
@@ -418,6 +468,11 @@ pub struct PlanCache {
     solves: AtomicU64,
     evictions: AtomicU64,
     peak_bytes: AtomicU64,
+    // Warm timeline-path counters (reported by the simulator through
+    // its cache handle; see `CacheStats` for meanings).
+    timeline_tasks: AtomicU64,
+    scratch_reuses: AtomicU64,
+    order_hits: AtomicU64,
 }
 
 impl Default for PlanCache {
@@ -442,6 +497,9 @@ impl PlanCache {
             solves: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             peak_bytes: AtomicU64::new(0),
+            timeline_tasks: AtomicU64::new(0),
+            scratch_reuses: AtomicU64::new(0),
+            order_hits: AtomicU64::new(0),
         }
     }
 
@@ -562,6 +620,25 @@ impl PlanCache {
         self.maps.lock().unwrap().tp.contains_key(key)
     }
 
+    /// Record `n` tasks scheduled by one timeline playback (feeds the
+    /// `timeline_tasks` counter; allocation-free, called on the warm
+    /// path).
+    pub fn note_timeline_tasks(&self, n: u64) {
+        self.timeline_tasks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record a timeline playback that reused an already-warm
+    /// per-worker `SimScratch`.
+    pub fn note_scratch_reuse(&self) {
+        self.scratch_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a pipeline schedule-order table served from a per-worker
+    /// interned cache instead of being re-derived.
+    pub fn note_order_hit(&self) {
+        self.order_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Statistics snapshot (counters + byte ledger).
     pub fn stats(&self) -> CacheStats {
         let resident = self.maps.lock().unwrap().bytes as u64;
@@ -572,6 +649,9 @@ impl PlanCache {
             resident_bytes: resident,
             peak_bytes: self.peak_bytes.load(Ordering::Relaxed).max(resident),
             budget_bytes: self.budget as u64,
+            timeline_tasks: self.timeline_tasks.load(Ordering::Relaxed),
+            scratch_reuses: self.scratch_reuses.load(Ordering::Relaxed),
+            order_hits: self.order_hits.load(Ordering::Relaxed),
         }
     }
 
@@ -793,5 +873,41 @@ mod tests {
             1 << 20,
         );
         assert!(v.get("resident_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(v.get("timeline_tasks").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn timeline_counters_round_trip_and_default() {
+        let cache = PlanCache::unbounded();
+        cache.note_timeline_tasks(42);
+        cache.note_timeline_tasks(8);
+        cache.note_scratch_reuse();
+        cache.note_order_hit();
+        cache.note_order_hit();
+        let s = cache.stats();
+        assert_eq!(
+            (s.timeline_tasks, s.scratch_reuses, s.order_hits),
+            (50, 1, 2),
+        );
+        // to_json -> from_json is lossless for every counter.
+        assert_eq!(CacheStats::from_json(&s.to_json()), s);
+        // Artifacts written before the timeline counters existed (only
+        // the original six keys — or no recognizable keys at all) still
+        // parse, with zero defaults: the `--baseline` join tolerance.
+        let old = Value::obj(vec![
+            ("hits", Value::num(3.0)),
+            ("solves", Value::num(2.0)),
+            ("evictions", Value::num(0.0)),
+            ("resident_bytes", Value::num(100.0)),
+            ("peak_bytes", Value::num(100.0)),
+            ("budget_bytes", Value::num(0.0)),
+        ]);
+        let parsed = CacheStats::from_json(&old);
+        assert_eq!((parsed.hits, parsed.solves), (3, 2));
+        assert_eq!(
+            (parsed.timeline_tasks, parsed.scratch_reuses, parsed.order_hits),
+            (0, 0, 0),
+        );
+        assert_eq!(CacheStats::from_json(&Value::Null), CacheStats::default());
     }
 }

@@ -24,6 +24,8 @@ use crate::util::error::Result;
 use crate::util::json::Value;
 use crate::util::table::{ratio, secs, Table};
 
+use super::cache::CacheStats;
+
 /// One matched scenario: baseline vs. current timings.
 #[derive(Clone, Debug)]
 pub struct DiffRow {
@@ -68,6 +70,11 @@ pub struct SweepDiff {
     pub extra_in_baseline: usize,
     /// Regression threshold in percent (on `total_s`).
     pub threshold_pct: f64,
+    /// The baseline artifact's `cache` block (plan-cache + timeline
+    /// counters), every field zero-defaulted — artifacts written before
+    /// a counter existed (or without a `cache` block at all) still
+    /// join.
+    pub base_cache: CacheStats,
 }
 
 /// The join key of one current-sweep scenario. Numeric fields are
@@ -167,6 +174,10 @@ impl SweepDiff {
             missing_in_baseline: missing,
             extra_in_baseline: base.len(),
             threshold_pct,
+            base_cache: baseline
+                .opt("cache")
+                .map(CacheStats::from_json)
+                .unwrap_or_default(),
         })
     }
 
@@ -310,6 +321,31 @@ mod tests {
         let diff = SweepDiff::compare(&baseline, &scens, &res, 0.0).unwrap();
         assert_eq!(diff.rows.len(), scens.len());
         assert_eq!(diff.missing_in_baseline + diff.extra_in_baseline, 0);
+        diff.verdict().unwrap();
+    }
+
+    #[test]
+    fn baseline_cache_counters_join_with_defaults() {
+        let engine = SweepEngine::new(1);
+        let (scens, res) = engine.run_grid(&grid());
+        // No cache block at all (render_json never adds one; the CLI
+        // does) -> all-zero counters, join unaffected.
+        let bare = render_json(&scens, &res);
+        let diff = SweepDiff::compare(&bare, &scens, &res, 0.0).unwrap();
+        assert_eq!(diff.base_cache, CacheStats::default());
+        diff.verdict().unwrap();
+        // A cache block with only the pre-timeline keys: old counters
+        // surface, new ones default to zero.
+        let mut with_cache = render_json(&scens, &res);
+        if let Value::Obj(m) = &mut with_cache {
+            m.insert(
+                "cache".into(),
+                Value::obj(vec![("hits", Value::num(7.0)), ("solves", Value::num(3.0))]),
+            );
+        }
+        let diff = SweepDiff::compare(&with_cache, &scens, &res, 0.0).unwrap();
+        assert_eq!((diff.base_cache.hits, diff.base_cache.solves), (7, 3));
+        assert_eq!(diff.base_cache.timeline_tasks, 0);
         diff.verdict().unwrap();
     }
 

@@ -5,6 +5,13 @@
 //! scenario order. A process-wide [`SweepEngine::global`] instance backs
 //! the figure harnesses, so `experiments::run("all")` shares one warm
 //! cache across all fourteen harnesses.
+//!
+//! Warm-path mechanics: every worker thread owns a reusable
+//! `SimScratch` (thread-local in `sim::iteration`), so a batch's
+//! timeline scenarios after the first on each worker schedule without
+//! heap allocations; the scratch reports its reuse/order-cache/task
+//! counters through the engine's cache, visible in
+//! [`SweepEngine::cache_stats`] alongside the plan-cache counters.
 
 use std::sync::OnceLock;
 

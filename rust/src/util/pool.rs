@@ -23,6 +23,25 @@
 //! bounded by the outer pool's N regardless of nesting depth. The
 //! merged output is unchanged either way (results are index-merged,
 //! never scheduling-dependent).
+//!
+//! # Workers as the unit of scratch reuse
+//!
+//! Each worker is one OS thread that processes many work items in a
+//! loop, which makes `thread_local!` state the natural per-worker
+//! scratch mechanism: the first item a worker claims pays the
+//! allocation, every later item reuses the warm buffers, and no
+//! synchronization is ever needed. The timeline simulator's
+//! `SimScratch` (see `sim::iteration`) relies on exactly this — a warm
+//! family sweep's steady state is allocation-free per scenario because
+//! the scratch lives for the whole `parallel_map` call. Two properties
+//! of this pool make that sound: a worker never runs two items
+//! concurrently (items are claimed and executed serially), and nested
+//! `parallel_map` calls run inline on the same thread (so a scratch is
+//! never borrowed re-entrantly from a second tier). Note workers are
+//! *scoped* threads: thread-locals warmed inside one `parallel_map`
+//! call die with its workers, while state on the caller's own thread
+//! (e.g. under `threads == 1` or inline nesting) persists across
+//! calls.
 
 use std::cell::Cell;
 use std::collections::VecDeque;

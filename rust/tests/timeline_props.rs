@@ -8,10 +8,22 @@
 //!   serial sum of all durations;
 //! * per-stage slot orders are complete and well-formed;
 //! * for uniform stages the 1F1B (and GPipe) bubble fraction matches
-//!   the analytic (pp-1)/(m+pp-1) within tolerance.
+//!   the analytic (pp-1)/(m+pp-1) within tolerance;
+//! * **lean == recording**: over randomized task DAGs, a lean timeline
+//!   produces bit-identical per-task ends, stream busy sums, serial sum
+//!   and makespan to a recording one (the trace is pure observation);
+//! * **flat == nested**: `drive_pipeline_flat` (production, reusable
+//!   scratch + interned orders) emits the same task ids with the same
+//!   bit-identical timings as the nested-table `drive_pipeline`
+//!   reference.
+//!
+//! Invariant checks that read the trace build their timelines with
+//! `Timeline::recording()`; the equivalence properties are exactly what
+//! licenses the sweep hot path to run lean.
 
 use canzona::sim::timeline::{
-    build_pipeline, schedule_order, PipeSlot, PipelineSchedule, Timeline,
+    build_pipeline, drive_pipeline_flat, schedule_order, schedule_order_iter, OrderCache,
+    PipeScratch, PipeSlot, PipelineSchedule, StreamId, TaskId, TaskKind, Timeline,
 };
 use canzona::util::prop::check;
 use canzona::util::rng::Rng;
@@ -55,7 +67,8 @@ fn random_case(rng: &mut Rng) -> Case {
 }
 
 fn build(case: &Case) -> Timeline {
-    let mut tl = Timeline::new();
+    // Recording mode: these properties read the task trace.
+    let mut tl = Timeline::recording();
     build_pipeline(&mut tl, case.sched, case.pp, case.m, &case.fwd, &case.bwd);
     tl
 }
@@ -181,6 +194,183 @@ fn prop_uniform_bubble_fraction_matches_analytic() {
             let analytic = (pp - 1) as f64 / (m + pp - 1) as f64;
             if (frac - analytic).abs() > 1e-9 {
                 return Err(format!("bubble {frac} != analytic {analytic}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A randomized task DAG: streams, durations, and back-references to
+/// earlier tasks as dependencies.
+fn random_dag(rng: &mut Rng) -> (usize, Vec<(usize, f64, Vec<u32>)>) {
+    let n_streams = 1 + rng.index(5);
+    let n_tasks = 1 + rng.index(48);
+    let mut tasks = Vec::with_capacity(n_tasks);
+    for i in 0..n_tasks {
+        let stream = rng.index(n_streams);
+        let dur = rng.next_f64() * 3.0;
+        let n_deps = rng.index(3.min(i + 1)); // 0 for the first task
+        let deps: Vec<u32> = (0..n_deps).map(|_| rng.index(i) as u32).collect();
+        tasks.push((stream, dur, deps));
+    }
+    (n_streams, tasks)
+}
+
+#[test]
+fn prop_lean_and_recording_timelines_agree_on_random_dags() {
+    check("lean == recording", CASES, random_dag, |case| {
+        let (n_streams, tasks) = case;
+        let run = |mut tl: Timeline| -> (Timeline, Vec<u64>) {
+            let streams: Vec<StreamId> = (0..*n_streams).map(|_| tl.stream()).collect();
+            let mut ids: Vec<TaskId> = Vec::with_capacity(tasks.len());
+            let mut ends = Vec::with_capacity(tasks.len());
+            for (stream, dur, deps) in tasks {
+                let dep_ids: Vec<TaskId> = deps.iter().map(|&d| ids[d as usize]).collect();
+                let id = tl.task(streams[*stream], TaskKind::Other, *dur, &dep_ids);
+                ends.push(tl.end(id).to_bits());
+                ids.push(id);
+            }
+            (tl, ends)
+        };
+        let (lean, lean_ends) = run(Timeline::new());
+        let (rec, rec_ends) = run(Timeline::recording());
+        if lean_ends != rec_ends {
+            return Err("per-task end times diverged".into());
+        }
+        if lean.makespan().to_bits() != rec.makespan().to_bits() {
+            return Err(format!(
+                "makespan diverged: lean {} vs recording {}",
+                lean.makespan(),
+                rec.makespan()
+            ));
+        }
+        if lean.serial_sum().to_bits() != rec.serial_sum().to_bits() {
+            return Err("serial sum diverged".into());
+        }
+        if lean.n_tasks() != rec.n_tasks() {
+            return Err("task counts diverged".into());
+        }
+        for s in 0..*n_streams {
+            let sid = StreamId(s as u32);
+            if lean.stream_busy(sid).to_bits() != rec.stream_busy(sid).to_bits() {
+                return Err(format!("stream {s} busy diverged"));
+            }
+            if lean.stream_free(sid).to_bits() != rec.stream_free(sid).to_bits() {
+                return Err(format!("stream {s} free diverged"));
+            }
+        }
+        // The recording trace agrees with the lean accessors too.
+        for (i, t) in rec.tasks().iter().enumerate() {
+            if t.end.to_bits() != rec_ends[i] {
+                return Err(format!("trace end of task {i} disagrees"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_drive_shadow_equivalent_to_nested() {
+    check("flat == nested drive", CASES, random_case, |c| {
+        // Nested-table reference.
+        let mut ref_tl = Timeline::new();
+        let p = build_pipeline(&mut ref_tl, c.sched, c.pp, c.m, &c.fwd, &c.bwd);
+        // Production driver: interned orders + flat scratch tables.
+        let mut tl = Timeline::new();
+        let compute: Vec<StreamId> = (0..c.pp).map(|_| tl.stream()).collect();
+        let mut orders = OrderCache::new();
+        let (slots, hit) = orders.get(c.sched, c.pp, c.m);
+        if hit {
+            return Err("fresh order cache reported a hit".into());
+        }
+        let mut sc = PipeScratch::new();
+        drive_pipeline_flat(&mut tl, slots, c.pp, c.m, &mut sc, |tl, i, slot, deps| {
+            match slot {
+                PipeSlot::Fwd(_) => tl.task(compute[i], TaskKind::Forward, c.fwd[i], deps),
+                PipeSlot::Bwd(_) => tl.task(compute[i], TaskKind::Backward, c.bwd[i], deps),
+            }
+        });
+        if tl.n_tasks() != ref_tl.n_tasks() {
+            return Err("task counts diverged".into());
+        }
+        if tl.makespan().to_bits() != ref_tl.makespan().to_bits() {
+            return Err(format!(
+                "makespan diverged: flat {} vs nested {}",
+                tl.makespan(),
+                ref_tl.makespan()
+            ));
+        }
+        for i in 0..c.pp {
+            if tl.stream_busy(compute[i]).to_bits()
+                != ref_tl.stream_busy(p.compute[i]).to_bits()
+            {
+                return Err(format!("stage {i} busy diverged"));
+            }
+            for j in 0..c.m {
+                if sc.fwd_id(i, j) != p.fwd[i][j] || sc.bwd_id(i, j) != p.bwd[i][j] {
+                    return Err(format!("completion ids diverged at stage {i} mb {j}"));
+                }
+                if tl.end(sc.fwd_id(i, j)).to_bits() != ref_tl.end(p.fwd[i][j]).to_bits() {
+                    return Err(format!("F({i},{j}) end diverged"));
+                }
+                if tl.end(sc.bwd_id(i, j)).to_bits() != ref_tl.end(p.bwd[i][j]).to_bits() {
+                    return Err(format!("B({i},{j}) end diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_order_iter_matches_collected_order() {
+    check(
+        "order iterator == Vec expansion",
+        CASES,
+        |rng| {
+            let pp = 1 + rng.index(6);
+            let stage = rng.index(pp);
+            let m = 1 + rng.index(10);
+            let sched = if rng.index(2) == 0 {
+                PipelineSchedule::OneFOneB
+            } else {
+                PipelineSchedule::GPipe
+            };
+            (sched, pp, stage, m)
+        },
+        |&(sched, pp, stage, m)| {
+            // Straightforward push-loop reference (the pre-iterator
+            // expansion): warmup forwards, steady F/B alternation,
+            // cooldown backwards — all-forward warmup for GPipe.
+            let mut expect = Vec::with_capacity(2 * m);
+            match sched {
+                PipelineSchedule::GPipe => {
+                    expect.extend((0..m).map(PipeSlot::Fwd));
+                    expect.extend((0..m).map(PipeSlot::Bwd));
+                }
+                PipelineSchedule::OneFOneB => {
+                    let w = (pp - 1 - stage).min(m);
+                    for j in 0..w {
+                        expect.push(PipeSlot::Fwd(j));
+                    }
+                    for k in 0..(m - w) {
+                        expect.push(PipeSlot::Fwd(w + k));
+                        expect.push(PipeSlot::Bwd(k));
+                    }
+                    for k in (m - w)..m {
+                        expect.push(PipeSlot::Bwd(k));
+                    }
+                }
+            }
+            let via_iter: Vec<PipeSlot> = schedule_order_iter(sched, pp, stage, m).collect();
+            if via_iter != expect {
+                return Err(format!("{sched:?} pp{pp} s{stage} m{m}: orders diverged"));
+            }
+            if schedule_order(sched, pp, stage, m) != expect {
+                return Err("Vec form diverged from reference".into());
+            }
+            if schedule_order_iter(sched, pp, stage, m).len() != 2 * m {
+                return Err("iterator length wrong".into());
             }
             Ok(())
         },

@@ -1,22 +1,27 @@
 //! The warm-path allocation contract: a cache-hit `simulate_iteration`
-//! on the closed-form `pp = 1` fast path performs **zero heap
-//! allocations**.
+//! performs **zero heap allocations** — on *both* dispatch arms.
 //!
 //! The crate's global allocator (`util::alloc::CountingAllocator`)
 //! counts allocations per thread; after two priming calls (first builds
-//! the cached stage tables / plans, second sizes the reused
-//! `Breakdown`'s vectors), a third `simulate_iteration_into` must not
-//! touch the heap at all — every strategy, with and without fusion, and
-//! at TP=1. Scenarios with `pp > 1`, `micro_batches > 1`, or a
-//! straggler factor route through the event-driven timeline engine,
-//! which builds a task trace and is *expected* to allocate — the last
-//! test pins that boundary so the fast-path rule can't silently widen
-//! or narrow.
+//! the cached stage tables / plans and grows the per-thread scratch,
+//! second settles every reused buffer's capacity), a third
+//! `simulate_iteration_into` must not touch the heap at all:
+//!
+//! * the closed-form `pp = 1` fast path — every strategy, with and
+//!   without fusion, and at TP = 1;
+//! * the event-driven timeline path — `pp ∈ {2, 4}`, `mb = 8`, both
+//!   pipeline schedules, straggler ∈ {1.0, 1.5} (and straggler-forced
+//!   timeline dispatch at `pp = 1`). The timeline arm stays heap-free
+//!   because the lean `Timeline`, the flat pipeline-drive tables and
+//!   the interned schedule orders all live in a reusable per-thread
+//!   `SimScratch` (see `sim::iteration`'s module docs).
 
 use canzona::cost::optim::OptimKind;
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
-use canzona::sim::{simulate_iteration_into, Breakdown, Scenario};
+use canzona::sim::{
+    simulate_iteration_into, Breakdown, PipelineSchedule, Scenario,
+};
 use canzona::sweep::PlanCache;
 use canzona::util::alloc::count_allocations;
 
@@ -28,11 +33,13 @@ fn assert_warm_alloc_free(s: &Scenario, label: &str) {
     simulate_iteration_into(s, &cache, &mut out); // cold: builds tables
     simulate_iteration_into(s, &cache, &mut out); // warm: sizes capacity
     let before = out.total_s;
+    let solves = cache.stats().solves;
     let (allocs, _) = count_allocations(|| simulate_iteration_into(s, &cache, &mut out));
     assert_eq!(
         allocs, 0,
         "{label}: warm simulate_iteration performed {allocs} heap allocations",
     );
+    assert_eq!(cache.stats().solves, solves, "{label}: warm call re-solved a plan");
     assert_eq!(out.total_s.to_bits(), before.to_bits(), "{label}: warm result drifted");
     assert!(out.total_s > 0.0);
 }
@@ -68,22 +75,63 @@ fn warm_simulate_is_allocation_free_at_tp1() {
 }
 
 #[test]
-fn timeline_scenarios_are_outside_the_zero_alloc_contract() {
-    // pp=2 routes through the event engine: it must still be warm-cache
-    // deterministic, but it builds a task trace (allocates). This pins
-    // the fast-path boundary: if the dispatch rule ever sent pp>1
-    // through the closed form again, the differential suite would be
-    // the only guard — here we assert the boundary itself.
-    let mut s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 1, OptimKind::Muon, DpStrategy::LbAsc);
-    s.pp = 2;
+fn warm_timeline_is_allocation_free_across_the_pp_grid() {
+    // The extended contract: warm steady-state on the event-driven
+    // timeline path is zero-allocation for every cell of
+    // pp ∈ {2, 4} × schedule ∈ {1f1b, gpipe} × straggler ∈ {1.0, 1.5}
+    // at mb = 8.
+    for pp in [2usize, 4] {
+        for sched in [PipelineSchedule::OneFOneB, PipelineSchedule::GPipe] {
+            for straggler in [1.0f64, 1.5] {
+                let s = Scenario::new(
+                    Qwen3Size::S1_7B, 4, 2, pp, OptimKind::Muon, DpStrategy::LbAsc,
+                )
+                .with_micro_batches(8)
+                .with_schedule(sched)
+                .with_straggler(straggler);
+                assert_warm_alloc_free(
+                    &s,
+                    &format!("timeline pp{pp}/{}/x{straggler}", sched.label()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_timeline_is_allocation_free_for_other_strategies_and_straggler_pp1() {
+    // The AR-path strategies exercise different emitter branches (no
+    // parameter All-Gather gating), and straggler != 1.0 forces the
+    // timeline arm even at pp = 1.
+    for strategy in [DpStrategy::Sc, DpStrategy::NvLayerwise, DpStrategy::Asc] {
+        let s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, strategy)
+            .with_micro_batches(8);
+        assert_warm_alloc_free(&s, &format!("timeline {strategy:?}"));
+    }
+    let s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 1, OptimKind::Muon, DpStrategy::LbAsc)
+        .with_straggler(1.5);
+    assert_warm_alloc_free(&s, "timeline pp1/straggler");
+}
+
+#[test]
+fn timeline_counters_report_through_the_cache() {
+    // The scratch/order/task counters ride the cache handle: a pp>1
+    // evaluation schedules tasks, and repeated evaluations on one
+    // thread reuse the scratch and the interned schedule order.
+    let s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, DpStrategy::LbAsc)
+        .with_micro_batches(4);
     let cache = PlanCache::unbounded();
     let mut out = Breakdown::default();
-    simulate_iteration_into(&s, &cache, &mut out); // cold
-    simulate_iteration_into(&s, &cache, &mut out); // warm
-    let before = out.total_s;
-    let (allocs, _) = count_allocations(|| simulate_iteration_into(&s, &cache, &mut out));
-    assert!(allocs > 0, "pp=2 should route through the (allocating) timeline engine");
-    assert_eq!(out.total_s.to_bits(), before.to_bits(), "warm timeline result drifted");
+    simulate_iteration_into(&s, &cache, &mut out);
+    let first = cache.stats();
+    assert!(first.timeline_tasks > 0, "pp=2 must schedule timeline tasks");
+    simulate_iteration_into(&s, &cache, &mut out);
+    simulate_iteration_into(&s, &cache, &mut out);
+    let warm = cache.stats();
+    assert_eq!(warm.timeline_tasks, 3 * first.timeline_tasks,
+               "same scenario must schedule the same task count");
+    assert!(warm.scratch_reuses >= 2, "warm calls must reuse the scratch");
+    assert!(warm.order_hits >= 2, "warm calls must hit the order cache");
 }
 
 #[test]
