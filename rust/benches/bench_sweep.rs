@@ -12,8 +12,8 @@ use std::time::Instant;
 use canzona::cost::optim::{CostMetric, OptimKind};
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
-use canzona::sim::{simulate_iteration, PipelineSchedule, Scenario};
-use canzona::sweep::{SweepEngine, SweepGrid};
+use canzona::sim::{simulate_iteration, simulate_iteration_cached, PipelineSchedule, Scenario};
+use canzona::sweep::{PlanCache, SweepEngine, SweepGrid};
 use canzona::util::bench::{bench, black_box, fmt_ns};
 use canzona::util::pool;
 
@@ -140,6 +140,85 @@ fn main() {
             st.evictions,
             st.peak_bytes as f64 / 1e6,
         );
+    }
+
+    // --- per-batch overhead: spawn-per-call vs persistent ---------------
+    // 100 warm batches of 8 scenarios each, same L2-warm plan cache. The
+    // delta is everything spawn-per-call costs a batch in practice: N
+    // thread spawn/joins per call PLUS the cold per-thread state fresh
+    // workers start with every time (SimScratch rebuilt, cache L1 empty
+    // so reads serialize on the L2 mutex) — versus one injector push
+    // onto long-lived workers whose scratches and L1s are already warm.
+    // Paste the printed rows into CHANGES.md from a toolchain-equipped
+    // run.
+    println!("\n# Per-batch overhead (100 batches x 8 scenarios, warm cache)\n");
+    let batch: Vec<Scenario> = grid.scenarios().into_iter().take(8).collect();
+    let threads = pool::default_threads().min(8);
+    let dispatch_cache = PlanCache::unbounded();
+    let run_batch = |c: &PlanCache| {
+        black_box(pool::parallel_map(&batch, threads, |s| simulate_iteration_cached(s, c)));
+    };
+    run_batch(&dispatch_cache); // warm plans + workers + scratches
+    let t = Instant::now();
+    for _ in 0..100 {
+        black_box(pool::scoped_map(&batch, threads, |s| {
+            simulate_iteration_cached(s, &dispatch_cache)
+        }));
+    }
+    let scoped_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    for _ in 0..100 {
+        run_batch(&dispatch_cache);
+    }
+    let persistent_s = t.elapsed().as_secs_f64();
+    println!(
+        "spawn-per-call (scoped, cold per-thread state) : {scoped_s:>7.3}s total, \
+         {:>8.1} us/batch",
+        scoped_s * 1e4,
+    );
+    println!(
+        "persistent executor (warm scratches + L1s)     : {persistent_s:>7.3}s total, \
+         {:>8.1} us/batch ({:.2}x less per-batch overhead, {threads} threads)",
+        persistent_s * 1e4,
+        scoped_s / persistent_s.max(1e-12),
+    );
+
+    // --- warm DP=128 read throughput: lock-free L1 vs single mutex ------
+    // Every warm lookup in the mutex-only cache serializes N workers on
+    // one lock; the L1 path takes no lock at all. Same scenarios, same
+    // results (tests/cache_coherence.rs) — only the read path differs.
+    // The 4-scenario family slice is cycled to 64 items per pass so 16
+    // workers genuinely contend on the same hot plans.
+    println!("\n# Warm DP=128 sweep: lock-free L1 vs mutex-only reads\n");
+    let pressure: Vec<Scenario> =
+        fam_scens.iter().cycle().take(64).cloned().collect();
+    for threads in [1usize, 8, 16] {
+        for (label, l1) in [("lock-free L1", true), ("mutex-only", false)] {
+            let cache = PlanCache::with_options(0, l1);
+            let warm_once =
+                |c: &PlanCache| {
+                    black_box(pool::parallel_map(&pressure, threads, |s| {
+                        simulate_iteration_cached(s, c)
+                    }))
+                };
+            warm_once(&cache); // cold pass: solve everything
+            warm_once(&cache); // settle every worker's L1/scratch
+            let t = Instant::now();
+            const PASSES: usize = 5;
+            for _ in 0..PASSES {
+                warm_once(&cache);
+            }
+            let warm_s = t.elapsed().as_secs_f64();
+            let per_pass = warm_s / PASSES as f64;
+            let st = cache.stats();
+            println!(
+                "threads={threads:>2} {label:>13}: {per_pass:>7.4}s/pass \
+                 ({:>7.0} scenarios/s; {} hits, {} via L1)",
+                pressure.len() as f64 / per_pass,
+                st.hits,
+                st.l1_hits,
+            );
+        }
     }
 
     // --- bench_timeline: the event-driven pp sweep ----------------------

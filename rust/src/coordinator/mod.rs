@@ -43,6 +43,7 @@ USAGE:
                      [--threads N] [--cache-budget-mb 256] [--json out.json] [--csv]
                      [--baseline prior.json] [--regress-pct 2.0]
   canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|planning|all>
+                     [--threads N]
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
                      [--seed 42] [--artifacts artifacts] [--log-every 10]
   canzona list
@@ -188,10 +189,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     const MIB: f64 = (1 << 20) as f64;
     println!(
         "\n{} scenarios in {wall_s:.2}s on {threads} threads \
-         (plan cache: {} hits / {} solves / {} evictions, \
+         (plan cache: {} hits ({} lock-free L1) / {} solves / {} evictions, \
          {:.1} MiB resident of {} budget)",
         scenarios.len(),
         stats.hits,
+        stats.l1_hits,
         stats.solves,
         stats.evictions,
         stats.resident_bytes as f64 / MIB,
@@ -247,6 +249,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let Some(id) = args.positional.get(1) else {
         bail!("experiment id required; see `canzona list`");
     };
+    // `--threads` overrides CANZONA_SWEEP_THREADS process-wide; applied
+    // before the first `SweepEngine::global()` touch so the shared
+    // engine (and the persistent executor it sizes) picks it up. Parsed
+    // and clamped exactly like `sweep --threads` (0 clamps to 1).
+    if args.get("threads").is_some() {
+        pool::set_default_threads(args.get_usize("threads", 1)?.max(1));
+    }
     for table in experiments::run(id)? {
         if args.flag("csv") {
             print!("{}", table.to_csv());

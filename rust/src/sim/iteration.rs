@@ -56,10 +56,16 @@
 //! tables, and the per-stage `StagePlayback`/`ag_stretch`/`last_*`/
 //! `opt_ends` vectors all live in the scratch and are refilled per
 //! call. Each `util::pool` worker (and the caller's thread) owns one
-//! scratch, so a warm family sweep's steady state never touches the
-//! heap; the counters the scratch feeds (`timeline_tasks`,
-//! `scratch_reuses`, `order_hits`) surface in the sweep summary via
-//! [`crate::sweep::cache::CacheStats`].
+//! scratch — and because the pool's workers are *persistent*
+//! (long-lived threads serving every batch), a scratch warmed by one
+//! `SweepEngine::eval` batch is still warm for the next: scratch
+//! warm-up is paid once per process, not once per batch, so a warm
+//! family sweep's steady state never touches the heap even across
+//! batch boundaries and whole `run("all")` sessions. The counters the
+//! scratch feeds (`timeline_tasks`, `scratch_reuses`, `order_hits`)
+//! surface in the sweep summary via
+//! [`crate::sweep::cache::CacheStats`] — `scratch_reuses` now shows
+//! cross-batch reuse, which `tests/pool_lifecycle.rs` pins.
 
 #![warn(missing_docs)]
 
@@ -1099,8 +1105,10 @@ pub fn simulate_iteration_timeline(s: &Scenario, cache: &PlanCache) -> Breakdown
 /// schedule-order tables, and every per-stage vector
 /// [`simulate_timeline_into`] used to allocate per call. One lives on
 /// each thread that evaluates timeline scenarios — the sweep's
-/// `util::pool` workers and the caller's own thread — so a warm sweep's
-/// steady state refills buffers in place instead of touching the heap.
+/// (persistent) `util::pool` workers and the caller's own thread — so a
+/// warm sweep's steady state refills buffers in place instead of
+/// touching the heap, across `parallel_map` batches as well as within
+/// one (workers outlive the batch; see `util::pool`'s module docs).
 ///
 /// Ownership/reset rules: the scratch is reachable only through the
 /// thread-local [`SIM_SCRATCH`] (one playback at a time per thread; the

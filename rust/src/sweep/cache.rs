@@ -57,6 +57,60 @@
 //! semantically invisible: an evicted key is simply re-solved on next
 //! use, and the solvers are deterministic.
 //!
+//! # Two-level read path (lock-free warm reads)
+//!
+//! The shared mutex above is the **L2**. On top of it every thread owns
+//! an **L1**: a `thread_local!` map of `Arc`-cloned artifacts populated
+//! on L2 hits/inserts. A warm lookup (the steady state of a family
+//! sweep, where every worker reads the same few hundred hot plans and
+//! stage tables thousands of times) is served entirely from the L1 —
+//! one atomic epoch load, one hash probe, one `Arc` clone, **no lock**
+//! — so N sweep workers no longer serialize on the cache mutex.
+//!
+//! Three rules keep the two levels coherent with the L2's contracts:
+//!
+//! * **Epoch invalidation.** The cache carries a shared epoch counter,
+//!   bumped whenever an eviction (or `clear`) removes entries. Each L1
+//!   records the epoch it was filled under and wholesale-clears itself
+//!   when the counter moves, so an L1 can never pin evicted artifacts
+//!   past the next access, and the byte budget stays a property of the
+//!   L2 ledger alone. For threads that might *not* access the cache
+//!   again — a pool worker parking after a batch — the same check runs
+//!   as `util::pool`'s participant-retire hook (`l1_park`, via a
+//!   `Weak` handle to the epoch counter): stale or orphaned L1s are
+//!   released at batch end, warm ones survive to the next batch.
+//!   (Values are immutable and solvers deterministic, so even a read
+//!   that races an eviction returns bytes identical to a fresh
+//!   re-solve — `tests/cache_coherence.rs` pins this under randomized
+//!   eviction schedules.)
+//! * **Batched recency touches.** An L1 hit cannot move the entry's LRU
+//!   node (that needs the lock), so it records the touch in a
+//!   per-thread buffer instead; the buffer is flushed to the shared
+//!   clock — in recorded order, validated by key so stale touches are
+//!   skipped — whenever the thread next takes the L2 lock (any miss)
+//!   and synchronously when full. Since evictions only happen at
+//!   inserts, i.e. misses, every touch a thread recorded is applied
+//!   before any eviction it could influence: for a thread interacting
+//!   with one L1-enabled cache (every engine/sweep workload),
+//!   single-threaded eviction order is **bit-identical** to the old
+//!   always-locked path (the shadow-LRU differential in
+//!   `tests/cache_lru.rs` runs unchanged). The one exception is a
+//!   thread *alternating between two L1-enabled caches*: rebinding
+//!   drops the first cache's un-flushed touches (there is no cache
+//!   reference left to flush into), so its recency can lag by up to
+//!   one hit-streak — values and the byte budget are unaffected
+//!   (evicted keys re-solve deterministically), only which key evicts
+//!   first may differ from the always-locked order.
+//! * **Uncached stays uncached.** Oversize artifacts that bypass the L2
+//!   never enter an L1, so the "re-solved on every use" contract holds.
+//!
+//! The L1 belongs to one cache at a time (keyed by a unique cache id):
+//! touching a different `PlanCache` from the same thread clears it.
+//! Counters: an L1 hit increments `hits` (it *is* a cache hit) and the
+//! separate `l1_hits` diagnostic; `PlanCache::with_options(.., false)`
+//! disables the L1 entirely (every read takes the mutex) for A/B
+//! benchmarking of the read paths.
+//!
 //! Concurrency: one mutex guards all maps plus the LRU list and byte
 //! ledger; a solve runs *outside* the lock, so two threads racing on one
 //! key may both solve — the algorithms are deterministic, so either
@@ -226,8 +280,13 @@ impl StageKey {
 /// handle (task throughput, scratch reuse, schedule-order interning).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lookups served from the cache.
+    /// Lookups served from the cache (both levels; L1 hits included).
     pub hits: u64,
+    /// The subset of `hits` served lock-free from a per-thread L1 (see
+    /// the module docs). Like the scratch/order counters this is a
+    /// per-thread diagnostic: it varies with `--threads` and
+    /// work-stealing order while the sweep rows stay byte-identical.
+    pub l1_hits: u64,
     /// Number of solver closures actually executed (cold paths).
     pub solves: u64,
     /// Entries evicted to respect the byte budget.
@@ -243,11 +302,12 @@ pub struct CacheStats {
     pub timeline_tasks: u64,
     /// Timeline playbacks that reused an already-warm per-worker
     /// `SimScratch` (vs. first use on a thread). Scratch warmth is
-    /// per *thread*, not per cache: a scratch warmed by an earlier
-    /// engine on the same thread counts as a reuse for the next one
-    /// (the counter describes the allocation behavior the sweep
-    /// actually saw, which is what the zero-alloc contract cares
-    /// about).
+    /// per *thread*, not per cache or per batch: the pool's workers are
+    /// persistent, so a scratch warmed by an earlier batch — or an
+    /// earlier engine — on the same thread counts as a reuse for the
+    /// next one (the counter describes the allocation behavior the
+    /// sweep actually saw, which is what the zero-alloc contract cares
+    /// about; cross-batch reuse is pinned by `tests/pool_lifecycle.rs`).
     pub scratch_reuses: u64,
     /// Pipeline schedule-order tables served from a per-worker interned
     /// cache instead of being re-derived (per-thread, like
@@ -266,6 +326,7 @@ impl CacheStats {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("hits", Value::num(self.hits as f64)),
+            ("l1_hits", Value::num(self.l1_hits as f64)),
             ("solves", Value::num(self.solves as f64)),
             ("evictions", Value::num(self.evictions as f64)),
             ("resident_bytes", Value::num(self.resident_bytes as f64)),
@@ -290,6 +351,7 @@ impl CacheStats {
         };
         CacheStats {
             hits: num("hits"),
+            l1_hits: num("l1_hits"),
             solves: num("solves"),
             evictions: num("evictions"),
             resident_bytes: num("resident_bytes"),
@@ -457,14 +519,129 @@ impl Maps {
     }
 }
 
+/// Recency touches an L1 can batch before it must flush to the shared
+/// LRU clock. The buffer is pre-reserved once per thread, so recording
+/// a touch on the warm path never allocates; a full buffer flushes
+/// synchronously (one lock per `PENDING_CAP` warm hits, amortized away).
+const PENDING_CAP: usize = 512;
+
+/// Total entries a thread's L1 may hold across all four maps before it
+/// wholesale-clears (a backstop against per-thread map growth on very
+/// large sweeps; values are shared `Arc`s, so only map overhead is at
+/// stake).
+const L1_MAX_ENTRIES: usize = 1 << 16;
+
+/// One thread's L1 over a single [`PlanCache`]: `Arc`-cloned hot
+/// artifacts plus the recency touches not yet flushed to the shared
+/// clock. See the module docs ("Two-level read path") for the
+/// epoch-invalidation and flush rules.
+struct L1 {
+    /// Which cache these entries belong to (an L1 serves one cache at a
+    /// time; a different cache id wholesale-clears it).
+    cache_id: u64,
+    /// The owner cache's epoch these entries were filled under.
+    epoch: u64,
+    /// Weak handle to the owner cache's epoch counter, so the pool's
+    /// participant-retire hook ([`l1_park`]) can detect — without a
+    /// cache reference — that the cache was dropped or has evicted
+    /// since, and release the Arcs instead of pinning them on a parked
+    /// worker.
+    epoch_handle: std::sync::Weak<AtomicU64>,
+    dp: HashMap<DpKey, Arc<DpPlan>>,
+    layerwise: HashMap<DpKey, Arc<LayerwisePlan>>,
+    tp: HashMap<TpKey, Arc<TpPlan>>,
+    stage: HashMap<StageKey, Arc<StageTable>>,
+    /// L1-hit recency touches awaiting the shared clock, in hit order.
+    pending: Vec<AnyKey>,
+}
+
+impl L1 {
+    fn new() -> L1 {
+        L1 {
+            cache_id: 0,
+            epoch: 0,
+            epoch_handle: std::sync::Weak::new(),
+            dp: HashMap::new(),
+            layerwise: HashMap::new(),
+            tp: HashMap::new(),
+            stage: HashMap::new(),
+            pending: Vec::with_capacity(PENDING_CAP),
+        }
+    }
+
+    fn entries(&self) -> usize {
+        self.dp.len() + self.layerwise.len() + self.tp.len() + self.stage.len()
+    }
+
+    /// Drop every cached Arc (capacity kept; `pending` untouched —
+    /// flushes validate by key, so stale touches are harmless).
+    fn clear_maps(&mut self) {
+        self.dp.clear();
+        self.layerwise.clear();
+        self.tp.clear();
+        self.stage.clear();
+    }
+}
+
+thread_local! {
+    /// The calling thread's L1 (pool workers and direct callers alike).
+    static L1_TLS: std::cell::RefCell<L1> = std::cell::RefCell::new(L1::new());
+}
+
+/// Source of unique per-cache ids for L1 ownership checks.
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The pool's participant-retire hook (registered once, at the first
+/// `PlanCache` construction): whenever a participant goes idle — a
+/// worker finishing a job, a worker waking on a submission without
+/// claiming a slot (the pool runs the hook before every park), or the
+/// submitting caller after participating — release the thread's L1
+/// Arcs if they are **stale**: the owner cache was dropped, or its
+/// epoch moved (something was evicted) since the L1 was filled. A
+/// parked worker therefore never pins evicted artifacts or a dead
+/// cache's memory past its next wake-up (every job submission wakes
+/// all workers), while warm L1s (no eviction, cache alive — the steady
+/// state) survive across batches. `pending` is kept either way: the
+/// touch records are `Copy` keys (no pinning) and flushes validate by
+/// key.
+fn l1_park() {
+    // try_with / try_borrow: must never panic — the hook can run during
+    // thread teardown, and the L1 may be borrowed if a mapped closure
+    // itself unwound mid-access (the pool catches panics at the item
+    // boundary).
+    let _ = L1_TLS.try_with(|cell| {
+        if let Ok(mut l1) = cell.try_borrow_mut() {
+            let stale = match l1.epoch_handle.upgrade() {
+                None => l1.entries() > 0, // owner cache dropped
+                Some(e) => e.load(Ordering::Acquire) != l1.epoch,
+            };
+            if stale {
+                l1.clear_maps();
+            }
+        }
+    });
+}
+
 /// Thread-safe, byte-bounded memoization of partition, schedule and
-/// stage-table artifacts. See the module docs for keying and eviction
-/// rules.
+/// stage-table artifacts, read through a lock-free per-thread L1 over
+/// the shared mutex-guarded L2. See the module docs for keying,
+/// eviction and coherence rules.
 pub struct PlanCache {
     maps: Mutex<Maps>,
     /// Byte budget (0 = unbounded).
     budget: usize,
+    /// Unique id binding thread L1s to this cache.
+    id: u64,
+    /// Bumped (under the lock) whenever eviction or `clear` removes
+    /// entries; L1s wholesale-invalidate when it moves. `Arc`'d so each
+    /// L1 can hold a `Weak` handle for the retire-time staleness check
+    /// ([`l1_park`]) without keeping a dropped cache alive.
+    epoch: Arc<AtomicU64>,
+    /// Per-thread L1s enabled? (`false` = every read takes the mutex —
+    /// the pre-two-level behaviour, kept for A/B benchmarks.)
+    l1_enabled: bool,
     hits: AtomicU64,
+    l1_hits: AtomicU64,
     solves: AtomicU64,
     evictions: AtomicU64,
     peak_bytes: AtomicU64,
@@ -490,10 +667,26 @@ impl PlanCache {
 
     /// A cache with an explicit byte budget (0 = unbounded).
     pub fn with_budget(budget_bytes: usize) -> PlanCache {
+        PlanCache::with_options(budget_bytes, true)
+    }
+
+    /// A cache with an explicit byte budget and an explicit L1 policy.
+    /// `l1_enabled = false` forces every read through the shared mutex
+    /// (the pre-two-level path) — results are identical either way
+    /// (`tests/cache_coherence.rs`); the knob exists so
+    /// `benches/bench_sweep.rs` can A/B the read paths.
+    pub fn with_options(budget_bytes: usize, l1_enabled: bool) -> PlanCache {
+        // Parked pool participants must release stale L1 state; register
+        // the hook once, with the first cache (idempotent after that).
+        crate::util::pool::set_participant_retire_hook(l1_park);
         PlanCache {
             maps: Mutex::new(Maps::default()),
             budget: budget_bytes,
+            id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Arc::new(AtomicU64::new(1)),
+            l1_enabled,
             hits: AtomicU64::new(0),
+            l1_hits: AtomicU64::new(0),
             solves: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             peak_bytes: AtomicU64::new(0),
@@ -513,15 +706,110 @@ impl PlanCache {
         self.budget
     }
 
-    /// The LRU lookup/insert core. `proj` selects the map and `wrap`
-    /// tags the key for the shared LRU list (plain `fn`s so the
-    /// higher-ranked borrows are explicit); `weigh` reports the solved
-    /// value's heap bytes. The hit path takes one lock, moves the
-    /// entry's LRU node to the front (O(1)) and clones the `Arc` — no
-    /// allocation.
+    /// Bind the calling thread's L1 to this cache and the current
+    /// epoch, wholesale-clearing it when either moved (different cache:
+    /// pending touches are dropped too, they name the old cache's keys;
+    /// epoch bump: pending is kept — flushes validate by key, and the
+    /// touched entries may well have survived the eviction).
+    fn l1_sync(&self, l1: &mut L1) {
+        let epoch = self.epoch.load(Ordering::Acquire);
+        if l1.cache_id != self.id {
+            l1.clear_maps();
+            l1.pending.clear();
+            l1.cache_id = self.id;
+            l1.epoch = epoch;
+            l1.epoch_handle = Arc::downgrade(&self.epoch);
+        } else if l1.epoch != epoch {
+            l1.clear_maps();
+            l1.epoch = epoch;
+        }
+    }
+
+    /// Apply batched recency touches to the shared LRU clock, in
+    /// recorded order. Runs under the L2 lock; touches whose entries
+    /// were evicted meanwhile are skipped (the key lookup validates
+    /// each one — node indices are recycled, so a stale node id must
+    /// never be touched directly). `drain` keeps the buffer's capacity,
+    /// so the synchronous-overflow flush on the warm path allocates
+    /// nothing.
+    fn apply_touches(m: &mut Maps, pending: &mut Vec<AnyKey>) {
+        for k in pending.drain(..) {
+            let node = match k {
+                AnyKey::Dp(k) => m.dp.get(&k).map(|e| e.node),
+                AnyKey::Layerwise(k) => m.layerwise.get(&k).map(|e| e.node),
+                AnyKey::Tp(k) => m.tp.get(&k).map(|e| e.node),
+                AnyKey::Stage(k) => m.stage.get(&k).map(|e| e.node),
+            };
+            if let Some(node) = node {
+                m.lru.touch(node);
+            }
+        }
+    }
+
+    /// Flush the calling thread's batched recency touches into the
+    /// shared LRU clock (no-op when the thread's L1 belongs to another
+    /// cache — its touches name that cache's keys).
+    fn flush_pending_into(&self, m: &mut Maps) {
+        if !self.l1_enabled {
+            return;
+        }
+        L1_TLS.with(|cell| {
+            let mut l1 = cell.borrow_mut();
+            if l1.cache_id != self.id {
+                return;
+            }
+            Self::apply_touches(m, &mut l1.pending);
+        });
+    }
+
+    /// Publish an L2-resident value into the calling thread's L1 (only
+    /// resident values — oversize bypasses must stay uncached at both
+    /// levels). `observed_epoch` is the epoch read **under the L2 lock**
+    /// at the moment the value was known resident: if an eviction raced
+    /// in between (bumping the epoch), the value may already be gone
+    /// from the L2 and publishing it under the *new* epoch would pin it
+    /// invisibly to every invalidation check — skip the store instead
+    /// (the next read simply goes through the L2 again).
+    fn l1_store<K, V>(
+        &self,
+        l1_proj: fn(&mut L1) -> &mut HashMap<K, Arc<V>>,
+        key: &K,
+        value: &Arc<V>,
+        observed_epoch: u64,
+    ) where
+        K: Copy + Eq + std::hash::Hash,
+    {
+        if !self.l1_enabled {
+            return;
+        }
+        L1_TLS.with(|cell| {
+            let mut l1 = cell.borrow_mut();
+            self.l1_sync(&mut l1);
+            if l1.epoch != observed_epoch {
+                return;
+            }
+            if l1.entries() >= L1_MAX_ENTRIES {
+                l1.clear_maps();
+            }
+            l1_proj(&mut l1).insert(*key, value.clone());
+        });
+    }
+
+    /// The two-level lookup/insert core. `proj`/`l1_proj` select the L2
+    /// and L1 maps and `wrap` tags the key for the shared LRU list
+    /// (plain `fn`s so the higher-ranked borrows are explicit); `weigh`
+    /// reports the solved value's heap bytes.
+    ///
+    /// The warm path is the L1 block at the top: one epoch load, one
+    /// hash probe, one `Arc` clone and a buffered recency touch — no
+    /// lock, no allocation. Everything below it (L2 hit, solve, insert,
+    /// eviction) first flushes this thread's buffered touches so the
+    /// single-thread recency order seen by the eviction logic is
+    /// bit-identical to the always-locked path.
     fn get_or_solve<K, V, F>(
         &self,
         proj: fn(&mut Maps) -> &mut HashMap<K, Entry<V>>,
+        l1_proj: fn(&mut L1) -> &mut HashMap<K, Arc<V>>,
         wrap: fn(K) -> AnyKey,
         key: &K,
         weigh: fn(&V) -> usize,
@@ -531,13 +819,43 @@ impl PlanCache {
         K: Copy + Eq + std::hash::Hash,
         F: FnOnce() -> V,
     {
+        if self.l1_enabled {
+            let l1_hit = L1_TLS.with(|cell| {
+                let mut l1 = cell.borrow_mut();
+                self.l1_sync(&mut l1);
+                let found = l1_proj(&mut l1).get(key).cloned();
+                if found.is_some() {
+                    if l1.pending.len() == l1.pending.capacity() {
+                        // Full: flush synchronously so the push below
+                        // never grows the buffer (keeps the warm path
+                        // allocation-free). The L1 borrow is already
+                        // held, so apply directly — `flush_pending_into`
+                        // would re-borrow the TLS cell.
+                        let mut m = self.maps.lock().unwrap();
+                        Self::apply_touches(&mut m, &mut l1.pending);
+                    }
+                    l1.pending.push(wrap(*key));
+                }
+                found
+            });
+            if let Some(v) = l1_hit {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.l1_hits.fetch_add(1, Ordering::Relaxed);
+                return v;
+            }
+        }
         {
             let mut m = self.maps.lock().unwrap();
+            self.flush_pending_into(&mut m);
             let found = proj(&mut m).get(key).map(|e| (e.value.clone(), e.node));
             if let Some((v, node)) = found {
                 m.lru.touch(node);
+                // Epoch while the entry is provably resident (evictions
+                // happen under this lock) — the L1 store's race guard.
+                let epoch_seen = self.epoch.load(Ordering::Relaxed);
                 drop(m);
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                self.l1_store(l1_proj, key, &v, epoch_seen);
                 return v;
             }
         }
@@ -551,14 +869,20 @@ impl PlanCache {
             + weigh(&solved);
         if self.budget != 0 && entry_bytes > self.budget {
             // Alone it would blow the budget: hand it back uncached so
-            // the resident total never exceeds the bound.
+            // the resident total never exceeds the bound. Not L1-stored
+            // either — "oversize is re-solved on every use" is a
+            // counter contract the tests pin.
             return solved;
         }
         let mut m = self.maps.lock().unwrap();
+        self.flush_pending_into(&mut m);
         let raced = proj(&mut m).get(key).map(|e| (e.value.clone(), e.node));
         if let Some((v, node)) = raced {
             // Another thread inserted while we solved: theirs wins.
             m.lru.touch(node);
+            let epoch_seen = self.epoch.load(Ordering::Relaxed);
+            drop(m);
+            self.l1_store(l1_proj, key, &v, epoch_seen);
             return v;
         }
         let node = m.lru.push_front(wrap(*key));
@@ -573,17 +897,28 @@ impl PlanCache {
                 evicted += 1;
             }
         }
+        if evicted > 0 {
+            // Entries left the L2: move the epoch (under the lock) so
+            // every thread's L1 invalidates at its next access.
+            self.epoch.fetch_add(1, Ordering::Release);
+        }
+        // Our fresh entry sits at the LRU front, so it survived any
+        // eviction loop above: it is resident under this (possibly just
+        // bumped) epoch, which is the one the L1 store must match.
+        let epoch_seen = self.epoch.load(Ordering::Relaxed);
         self.peak_bytes.fetch_max(m.bytes as u64, Ordering::Relaxed);
         drop(m);
         if evicted > 0 {
             self.evictions.fetch_add(evicted, Ordering::Relaxed);
         }
+        self.l1_store(l1_proj, key, &solved, epoch_seen);
         solved
     }
 
     /// Memoized DP partition plan (α-balanced / naive-atomic).
     pub fn dp_plan<F: FnOnce() -> DpPlan>(&self, key: &DpKey, solve: F) -> Arc<DpPlan> {
-        self.get_or_solve(|m| &mut m.dp, AnyKey::Dp, key, DpPlan::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.dp, |l| &mut l.dp, AnyKey::Dp, key,
+                          DpPlan::heap_bytes, solve)
     }
 
     /// Memoized NV-layerwise ownership plan.
@@ -592,13 +927,14 @@ impl PlanCache {
         key: &DpKey,
         solve: F,
     ) -> Arc<LayerwisePlan> {
-        self.get_or_solve(|m| &mut m.layerwise, AnyKey::Layerwise, key,
-                          LayerwisePlan::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.layerwise, |l| &mut l.layerwise, AnyKey::Layerwise,
+                          key, LayerwisePlan::heap_bytes, solve)
     }
 
     /// Memoized TP micro-group plan for one DP rank.
     pub fn tp_plan<F: FnOnce() -> TpPlan>(&self, key: &TpKey, solve: F) -> Arc<TpPlan> {
-        self.get_or_solve(|m| &mut m.tp, AnyKey::Tp, key, TpPlan::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.tp, |l| &mut l.tp, AnyKey::Tp, key,
+                          TpPlan::heap_bytes, solve)
     }
 
     /// Memoized hoisted stage table (census geometry + task tables).
@@ -607,7 +943,8 @@ impl PlanCache {
         key: &StageKey,
         solve: F,
     ) -> Arc<StageTable> {
-        self.get_or_solve(|m| &mut m.stage, AnyKey::Stage, key, StageTable::heap_bytes, solve)
+        self.get_or_solve(|m| &mut m.stage, |l| &mut l.stage, AnyKey::Stage, key,
+                          StageTable::heap_bytes, solve)
     }
 
     /// Is a DP plan resident? (No LRU touch — for tests/diagnostics.)
@@ -644,6 +981,7 @@ impl PlanCache {
         let resident = self.maps.lock().unwrap().bytes as u64;
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
+            l1_hits: self.l1_hits.load(Ordering::Relaxed),
             solves: self.solves.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             resident_bytes: resident,
@@ -666,7 +1004,7 @@ impl PlanCache {
     }
 
     /// Drop every cached plan (counters are kept; the byte ledger
-    /// resets).
+    /// resets; the epoch moves so per-thread L1s invalidate too).
     pub fn clear(&self) {
         let mut m = self.maps.lock().unwrap();
         m.dp.clear();
@@ -675,6 +1013,7 @@ impl PlanCache {
         m.stage.clear();
         m.lru.clear();
         m.bytes = 0;
+        self.epoch.fetch_add(1, Ordering::Release);
     }
 }
 
@@ -860,6 +1199,112 @@ mod tests {
         let d = l.push_front(keyed(4));
         assert!(d == a || d == b || d == c, "freed slot reused");
         assert_eq!(l.nodes.len(), 3);
+    }
+
+    #[test]
+    fn l1_serves_repeat_hits() {
+        // First get: solve (L2 insert + L1 publish). Every later get on
+        // this thread is an L1 hit — counted both as a hit and in the
+        // l1_hits diagnostic.
+        let cache = PlanCache::unbounded();
+        let key = DpKey::for_scenario(&scen(), 0);
+        let first = cache.dp_plan(&key, || toy_plan(3));
+        assert_eq!(cache.stats().l1_hits, 0);
+        for _ in 0..5 {
+            let again = cache.dp_plan(&key, || panic!("must not re-solve"));
+            assert!(Arc::ptr_eq(&first, &again), "L1 must serve the same Arc");
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.l1_hits, s.solves), (5, 5, 1));
+    }
+
+    #[test]
+    fn eviction_bumps_epoch_and_invalidates_l1() {
+        // Budget fits ~one entry: inserting B evicts A and moves the
+        // epoch, so this thread's L1 copy of A must NOT be served — the
+        // next get re-solves through the L2, exactly like the
+        // always-locked path would.
+        let probe = PlanCache::unbounded();
+        let mk_key = |stage: usize| DpKey { stage, ..DpKey::for_scenario(&scen(), 0) };
+        probe.dp_plan(&mk_key(0), || toy_plan(4));
+        let per_entry = probe.stats().resident_bytes as usize;
+
+        let cache = PlanCache::with_budget(per_entry + 64);
+        cache.dp_plan(&mk_key(0), || toy_plan(4));
+        cache.dp_plan(&mk_key(0), || panic!("hit expected")); // L1-resident
+        cache.dp_plan(&mk_key(1), || toy_plan(4)); // evicts key 0
+        assert!(cache.stats().evictions >= 1);
+        assert!(!cache.contains_dp(&mk_key(0)));
+        let solves = cache.stats().solves;
+        cache.dp_plan(&mk_key(0), || toy_plan(4));
+        assert_eq!(
+            cache.stats().solves,
+            solves + 1,
+            "epoch bump must invalidate the stale L1 entry",
+        );
+    }
+
+    #[test]
+    fn clear_invalidates_l1() {
+        let cache = PlanCache::unbounded();
+        let key = DpKey::for_scenario(&scen(), 0);
+        cache.dp_plan(&key, || toy_plan(2));
+        cache.dp_plan(&key, || panic!("hit expected"));
+        cache.clear();
+        let solves = cache.stats().solves;
+        cache.dp_plan(&key, || toy_plan(2));
+        assert_eq!(cache.stats().solves, solves + 1, "cleared entry served from L1");
+    }
+
+    #[test]
+    fn l1_is_per_cache() {
+        // Two caches touched alternately from one thread: each get must
+        // resolve against its own cache (the L1 rebinds on cache switch,
+        // never serving cache A's artifact for cache B's key).
+        let a = PlanCache::unbounded();
+        let b = PlanCache::unbounded();
+        let key = DpKey::for_scenario(&scen(), 0);
+        let va = a.dp_plan(&key, || toy_plan(2));
+        let vb = b.dp_plan(&key, || toy_plan(7));
+        assert_eq!(va.ranks, 2);
+        assert_eq!(vb.ranks, 7);
+        // Re-reads after the switches still return the right plans
+        // (via L2 — the L1 rebinds each time).
+        assert_eq!(a.dp_plan(&key, || panic!("a must hit")).ranks, 2);
+        assert_eq!(b.dp_plan(&key, || panic!("b must hit")).ranks, 7);
+    }
+
+    #[test]
+    fn mutex_only_cache_disables_l1() {
+        let cache = PlanCache::with_options(0, false);
+        let key = DpKey::for_scenario(&scen(), 0);
+        cache.dp_plan(&key, || toy_plan(2));
+        cache.dp_plan(&key, || panic!("hit expected"));
+        cache.dp_plan(&key, || panic!("hit expected"));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.l1_hits, s.solves), (2, 0, 1), "L1 must be off");
+    }
+
+    #[test]
+    fn pending_touch_overflow_flushes_without_losing_recency() {
+        // More L1 hits than PENDING_CAP between two inserts: the buffer
+        // flushes synchronously mid-stream and the hot key's recency
+        // still protects it from eviction.
+        let probe = PlanCache::unbounded();
+        let mk_key = |stage: usize| DpKey { stage, ..DpKey::for_scenario(&scen(), 0) };
+        probe.dp_plan(&mk_key(0), || toy_plan(4));
+        let per_entry = probe.stats().resident_bytes as usize;
+
+        let cache = PlanCache::with_budget(2 * per_entry + 64);
+        cache.dp_plan(&mk_key(0), || toy_plan(4));
+        cache.dp_plan(&mk_key(1), || toy_plan(4));
+        for _ in 0..(PENDING_CAP + 17) {
+            cache.dp_plan(&mk_key(0), || panic!("hit expected"));
+        }
+        cache.dp_plan(&mk_key(2), || toy_plan(4)); // overflow: evicts one
+        assert!(cache.stats().evictions >= 1);
+        assert!(cache.contains_dp(&mk_key(0)), "hot key evicted despite touches");
+        assert!(!cache.contains_dp(&mk_key(1)), "cold key must go first");
     }
 
     #[test]

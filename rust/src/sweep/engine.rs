@@ -6,12 +6,16 @@
 //! the figure harnesses, so `experiments::run("all")` shares one warm
 //! cache across all fourteen harnesses.
 //!
-//! Warm-path mechanics: every worker thread owns a reusable
-//! `SimScratch` (thread-local in `sim::iteration`), so a batch's
-//! timeline scenarios after the first on each worker schedule without
-//! heap allocations; the scratch reports its reuse/order-cache/task
-//! counters through the engine's cache, visible in
-//! [`SweepEngine::cache_stats`] alongside the plan-cache counters.
+//! Warm-path mechanics: `util::pool`'s workers are **persistent**
+//! (long-lived threads serving every batch for the life of the
+//! process), so the per-worker state that makes the warm path cheap
+//! survives across `eval` calls — the reusable `SimScratch`
+//! (thread-local in `sim::iteration`) and the plan cache's per-worker
+//! L1 (`sweep::cache`) are warmed once per process, not once per
+//! batch, and a batch's warm lookups never take the cache mutex. The
+//! scratch reports its reuse/order-cache/task counters through the
+//! engine's cache, visible in [`SweepEngine::cache_stats`] alongside
+//! the plan-cache counters (including `l1_hits`, the lock-free share).
 
 use std::sync::OnceLock;
 
@@ -41,6 +45,13 @@ impl SweepEngine {
     /// — the `canzona sweep --cache-budget-mb` path.
     pub fn with_budget(threads: usize, budget_bytes: usize) -> SweepEngine {
         SweepEngine { cache: PlanCache::with_budget(budget_bytes), threads: threads.max(1) }
+    }
+
+    /// An engine over a caller-constructed cache (e.g. an L1-disabled
+    /// `PlanCache::with_options(.., false)` for A/B read-path
+    /// benchmarks).
+    pub fn with_cache(threads: usize, cache: PlanCache) -> SweepEngine {
+        SweepEngine { cache, threads: threads.max(1) }
     }
 
     /// The shared process-wide engine (thread count from

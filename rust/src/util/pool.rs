@@ -1,66 +1,115 @@
-//! Work-stealing thread pool (rayon is unavailable offline).
+//! Work-stealing thread pool (rayon is unavailable offline), built
+//! around a **persistent executor**.
 //!
 //! [`parallel_map`] fans a slice of work items out across OS threads.
-//! Each worker owns a deque seeded with a contiguous block of indices;
-//! when its deque drains it steals from the *back* of a victim's deque
-//! (classic Chase-Lev discipline, here with a mutex per deque — the work
-//! items are whole scenario simulations, so queue contention is
-//! negligible next to task cost). Results are merged back in **input
-//! order**, so the output is byte-for-byte independent of scheduling:
-//! the property the sweep determinism tests pin down.
+//! Each job seeds one deque per participant with a contiguous block of
+//! indices; a participant drains its own deque from the *front* and,
+//! when it runs dry, steals from the *back* of a victim's deque
+//! (classic Chase-Lev discipline, here with a mutex per deque — the
+//! work items are whole scenario simulations, so queue contention is
+//! negligible next to task cost). Results are written into per-index
+//! output slots, so the merged output is byte-for-byte independent of
+//! scheduling: the property the sweep determinism tests pin down.
+//!
+//! # The persistent executor
+//!
+//! Workers are **long-lived**: the first `parallel_map` call that needs
+//! helpers lazily spawns them, and from then on the same OS threads
+//! serve every later call — a *job* (one `parallel_map` invocation) is
+//! pushed onto a process-wide injector, idle workers claim participant
+//! slots in it, and the submitting caller participates too (as slot 0),
+//! so a job always makes progress even when every worker is busy
+//! elsewhere. The pool grows monotonically to the largest helper count
+//! any call has requested ([`live_workers`] reports it) and never
+//! shrinks; idle workers park on a condvar and cost nothing.
+//!
+//! Two things fall out of persistence:
+//!
+//! * **Scratch state survives across batches.** A worker is one OS
+//!   thread that processes many items across many jobs, which makes
+//!   `thread_local!` state the natural per-worker scratch mechanism:
+//!   the first item a worker ever claims pays the allocation, and every
+//!   later item — *in this batch or any later one* — reuses the warm
+//!   buffers with no synchronization. The timeline simulator's
+//!   `SimScratch` (see `sim::iteration`) relies on exactly this: scratch
+//!   warm-up is paid once per process, not once per `parallel_map`
+//!   call, so a whole `run("all")` or a long sweep session keeps its
+//!   scratches (and the plan cache's per-worker L1, see
+//!   `sweep::cache`) hot. Two properties keep that sound: a
+//!   participant never runs two items concurrently (items are claimed
+//!   and executed serially), and nested `parallel_map` calls run
+//!   inline on the same thread (so a scratch is never borrowed
+//!   re-entrantly from a second tier).
+//! * **Dispatch is cheap.** Submitting a job is one lock + condvar
+//!   notify instead of N `thread::spawn`/`join` pairs; the per-batch
+//!   overhead the old scoped pool paid on every call (measured by
+//!   `benches/bench_sweep.rs` against [`scoped_map`], the reference
+//!   spawn-per-call implementation kept for differential tests) is paid
+//!   once per process.
 //!
 //! # One shared executor
 //!
-//! The whole crate funnels its parallelism through this module, and the
-//! *outermost* `parallel_map` on a thread is the executor. Callers that
-//! used to nest pools route everything through one tier instead:
+//! The whole crate funnels its parallelism through this module.
+//! Callers that used to nest pools route everything through one tier:
 //! `experiments::run("all")` runs harnesses sequentially and lets each
-//! scenario batch fan out N-wide here (it previously peaked at
-//! ≈ N + 13·N live threads, one harness pool nesting a scenario pool
-//! per harness). As a guard, a `parallel_map` issued from *inside* a
-//! worker ([`on_worker`]) runs inline on that worker rather than
-//! spawning a second tier of threads, so the live thread count is
-//! bounded by the outer pool's N regardless of nesting depth. The
-//! merged output is unchanged either way (results are index-merged,
-//! never scheduling-dependent).
+//! scenario batch fan out N-wide here. As a guard, a `parallel_map`
+//! issued from *inside* a job ([`on_worker`]) runs inline on that
+//! thread rather than submitting a nested job, so the live thread count
+//! stays bounded by the pool size regardless of nesting depth, and
+//! workers can never deadlock waiting on each other. The merged output
+//! is unchanged either way (results are index-merged, never
+//! scheduling-dependent).
 //!
-//! # Workers as the unit of scratch reuse
+//! # Panic discipline
 //!
-//! Each worker is one OS thread that processes many work items in a
-//! loop, which makes `thread_local!` state the natural per-worker
-//! scratch mechanism: the first item a worker claims pays the
-//! allocation, every later item reuses the warm buffers, and no
-//! synchronization is ever needed. The timeline simulator's
-//! `SimScratch` (see `sim::iteration`) relies on exactly this — a warm
-//! family sweep's steady state is allocation-free per scenario because
-//! the scratch lives for the whole `parallel_map` call. Two properties
-//! of this pool make that sound: a worker never runs two items
-//! concurrently (items are claimed and executed serially), and nested
-//! `parallel_map` calls run inline on the same thread (so a scratch is
-//! never borrowed re-entrantly from a second tier). Note workers are
-//! *scoped* threads: thread-locals warmed inside one `parallel_map`
-//! call die with its workers, while state on the caller's own thread
-//! (e.g. under `threads == 1` or inline nesting) persists across
-//! calls.
+//! A panic inside the mapped closure is caught at the item boundary,
+//! recorded on the job, and **re-raised on the submitting caller** with
+//! its original payload once every participant has retired. The
+//! executor itself is never poisoned: user code only ever runs outside
+//! the executor and queue locks, remaining items of the panicked job are
+//! abandoned, and the workers simply move on to the next job
+//! (`tests/pool_lifecycle.rs` pins both properties).
 
+use std::any::Any;
 use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 thread_local! {
-    /// Set while the current thread is executing as a pool worker.
+    /// Set while the current thread is executing as a pool participant.
     static IN_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
-/// Is the current thread a `parallel_map` worker? Nested calls use this
-/// to run inline on the shared executor instead of spawning threads.
+/// Is the current thread executing pool work (a persistent worker
+/// running a job, or a caller participating in its own job)? Nested
+/// calls use this to run inline on the shared executor instead of
+/// submitting a second tier of jobs.
 pub fn on_worker() -> bool {
     IN_WORKER.with(|f| f.get())
 }
 
-/// Worker count: `CANZONA_SWEEP_THREADS` overrides (min 1), else the
-/// machine's available parallelism.
+/// Process-wide `--threads` override (0 = unset). Set once by the CLI;
+/// takes precedence over `CANZONA_SWEEP_THREADS`.
+static THREADS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the process-wide default worker count (the `--threads` CLI
+/// flag). Takes precedence over `CANZONA_SWEEP_THREADS`; only affects
+/// engines/pools sized *after* the call, so the CLI applies it before
+/// touching `SweepEngine::global()`.
+pub fn set_default_threads(n: usize) {
+    THREADS_OVERRIDE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Worker count, in precedence order: [`set_default_threads`] (the
+/// `--threads` flag) if called, else `CANZONA_SWEEP_THREADS` (min 1),
+/// else the machine's available parallelism.
 pub fn default_threads() -> usize {
+    let over = THREADS_OVERRIDE.load(Ordering::Relaxed);
+    if over > 0 {
+        return over;
+    }
     std::env::var("CANZONA_SWEEP_THREADS")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())
@@ -70,8 +119,244 @@ pub fn default_threads() -> usize {
         })
 }
 
-/// Apply `f` to every item on up to `threads` workers; returns results
-/// in input order. Panics in `f` propagate to the caller.
+/// Persistent workers spawned so far (the pool's high-water helper
+/// count; it never shrinks). Diagnostic — the lifecycle tests assert
+/// repeated batches at a fixed thread count cause no growth.
+pub fn live_workers() -> usize {
+    executor().state.lock().unwrap().live_workers
+}
+
+// --- job plumbing ------------------------------------------------------
+
+/// Type-erased view of one in-flight `parallel_map`: participants claim
+/// and execute items through this vtable without knowing `T`/`R`/`F`.
+trait JobRun: Sync {
+    /// Run the work-stealing loop as participant `slot` until the job
+    /// has no runnable items left (drained, or abandoned after a panic).
+    fn work(&self, slot: usize);
+}
+
+/// Output slots for one job. Safety: each index is claimed exactly once
+/// (under a queue lock) before it runs, so at most one thread ever
+/// writes a given slot, and the caller reads only after every
+/// participant has retired.
+struct OutSlots<'a, R>(&'a [std::cell::UnsafeCell<Option<R>>]);
+
+// SAFETY: see `OutSlots` — disjoint writes, read-after-retire.
+unsafe impl<R: Send> Sync for OutSlots<'_, R> {}
+
+/// The caller-stack state of one job (items, closure, queues, outputs,
+/// panic latch). Workers reach it through the erased pointer in
+/// [`JobCtl`]; the caller keeps it alive until the job fully retires.
+struct JobState<'a, T, R, F> {
+    items: &'a [T],
+    f: &'a F,
+    out: OutSlots<'a, R>,
+    /// One deque per participant slot, seeded with contiguous blocks.
+    queues: Vec<Mutex<VecDeque<usize>>>,
+    /// Set on the first panic; participants bail out at the next claim.
+    panicked: AtomicBool,
+    /// First panic payload, re-raised on the submitting caller.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl<T, R, F> JobRun for JobState<'_, T, R, F>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    fn work(&self, slot: usize) {
+        let w = slot % self.queues.len();
+        loop {
+            if self.panicked.load(Ordering::Relaxed) {
+                break;
+            }
+            // Own queue first (front), then steal (back). The own-queue
+            // guard must drop before stealing: never hold two queue
+            // locks at once.
+            let own = self.queues[w].lock().unwrap().pop_front();
+            let next = own.or_else(|| {
+                (0..self.queues.len())
+                    .filter(|&v| v != w)
+                    .find_map(|v| self.queues[v].lock().unwrap().pop_back())
+            });
+            // Every index is claimed under a lock before it runs and
+            // none respawn, so globally-empty queues mean the job is
+            // drained.
+            let Some(idx) = next else { break };
+            match catch_unwind(AssertUnwindSafe(|| (self.f)(&self.items[idx]))) {
+                // SAFETY: `idx` was claimed exactly once; no other
+                // thread writes this slot.
+                Ok(r) => unsafe { *self.out.0[idx].get() = Some(r) },
+                Err(payload) => {
+                    let mut first = self.panic.lock().unwrap();
+                    if first.is_none() {
+                        *first = Some(payload);
+                    }
+                    self.panicked.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Shared per-job control block: the erased job pointer plus the claim
+/// counters, all mutated only under the executor lock.
+struct JobCtl {
+    /// Lifetime-erased pointer to the caller-stack [`JobState`].
+    job: *const (dyn JobRun + 'static),
+    /// Helper participant slots still unclaimed.
+    claims: AtomicUsize,
+    /// Participants currently inside `work()`.
+    active: AtomicUsize,
+    /// Next helper slot to hand out (slot 0 is the caller's).
+    next_slot: AtomicUsize,
+}
+
+// SAFETY: the raw pointer is only dereferenced by participants that
+// claimed the job through the injector, and `parallel_map` does not
+// return (i.e. the pointee stays alive) until the job has left the
+// injector *and* `active` has drained to zero — both observed under the
+// executor lock, so no participant can touch a dead job.
+unsafe impl Send for JobCtl {}
+unsafe impl Sync for JobCtl {}
+
+struct ExecState {
+    /// Jobs still wanting helper participants, in submission order.
+    injector: VecDeque<Arc<JobCtl>>,
+    /// Persistent workers spawned so far.
+    live_workers: usize,
+}
+
+/// The process-wide persistent executor.
+struct Executor {
+    state: Mutex<ExecState>,
+    /// Wakes parked workers when a job arrives.
+    work_cv: Condvar,
+    /// Wakes submitters waiting for their job's participants to retire.
+    done_cv: Condvar,
+}
+
+fn executor() -> &'static Executor {
+    static EXEC: OnceLock<Executor> = OnceLock::new();
+    EXEC.get_or_init(|| Executor {
+        state: Mutex::new(ExecState { injector: VecDeque::new(), live_workers: 0 }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+    })
+}
+
+/// Hook run by every participant as it retires from a job — workers
+/// before re-parking, the submitting caller after participating.
+static RETIRE_HOOK: OnceLock<fn()> = OnceLock::new();
+
+/// Register the participant-retire hook (first registration wins; later
+/// calls are no-ops). The plan cache uses this to drop **stale**
+/// thread-local L1 state when a participant goes idle: a parked worker
+/// must not pin artifacts its cache has evicted (or a cache that has
+/// been dropped) until some future batch happens to touch the cache
+/// again. The hook runs outside every executor/queue lock and must not
+/// panic.
+pub fn set_participant_retire_hook(hook: fn()) {
+    let _ = RETIRE_HOOK.set(hook);
+}
+
+fn run_retire_hook() {
+    if let Some(h) = RETIRE_HOOK.get() {
+        h();
+    }
+}
+
+/// Claim one helper slot in the front-most job that still wants one.
+/// Runs under the executor lock; pops fully-claimed jobs off the
+/// injector.
+fn claim_job(st: &mut ExecState) -> Option<(Arc<JobCtl>, usize)> {
+    while let Some(ctl) = st.injector.front() {
+        let claims = ctl.claims.load(Ordering::Relaxed);
+        if claims == 0 {
+            st.injector.pop_front();
+            continue;
+        }
+        ctl.claims.store(claims - 1, Ordering::Relaxed);
+        ctl.active.fetch_add(1, Ordering::Relaxed);
+        let slot = ctl.next_slot.fetch_add(1, Ordering::Relaxed);
+        let ctl = ctl.clone();
+        if claims - 1 == 0 {
+            st.injector.pop_front();
+        }
+        return Some((ctl, slot));
+    }
+    None
+}
+
+/// The persistent worker body: park until a job wants a participant,
+/// run its work loop, retire, repeat — for the life of the process.
+fn worker_loop() {
+    let exec = executor();
+    IN_WORKER.with(|f| f.set(true));
+    loop {
+        // Claim under the lock; park when nothing is claimable. The
+        // retire hook also runs (lock released) before every park, so a
+        // worker that wakes on a submission but claims no slot still
+        // refreshes its thread-local state — it never sleeps on Arcs
+        // its cache has evicted or that belong to a dropped cache. No
+        // wakeup can be lost: the claim is re-checked under the lock
+        // after the hook, and the wait holds that same lock.
+        let claimed = {
+            let mut st = exec.state.lock().unwrap();
+            claim_job(&mut st)
+        };
+        let (ctl, slot) = match claimed {
+            Some(claim) => claim,
+            None => {
+                run_retire_hook();
+                let mut st = exec.state.lock().unwrap();
+                match claim_job(&mut st) {
+                    Some(claim) => claim,
+                    None => {
+                        let _parked = exec.work_cv.wait(st).unwrap();
+                        continue;
+                    }
+                }
+            }
+        };
+        // SAFETY: claimed through the injector under the lock; the
+        // submitter keeps the pointee alive until `active` drains (see
+        // `JobCtl`'s safety contract).
+        let job = unsafe { &*ctl.job };
+        job.work(slot);
+        // Retire before signalling: the submitter can then rely on every
+        // participant's hook having run once its job fully drains.
+        run_retire_hook();
+        {
+            let _st = exec.state.lock().unwrap();
+            ctl.active.fetch_sub(1, Ordering::Relaxed);
+        }
+        exec.done_cv.notify_all();
+    }
+}
+
+/// Spawn persistent workers until at least `wanted` exist. Monotone:
+/// the pool grows to the largest helper count ever requested and stays
+/// there (repeated batches at one size never respawn — the property the
+/// lifecycle stress test pins).
+fn ensure_workers(st: &mut ExecState, wanted: usize) {
+    while st.live_workers < wanted {
+        st.live_workers += 1;
+        std::thread::Builder::new()
+            .name(format!("canzona-pool-{}", st.live_workers))
+            .spawn(worker_loop)
+            .expect("failed to spawn pool worker");
+    }
+}
+
+/// Apply `f` to every item on up to `threads` participants of the
+/// persistent executor; returns results in input order, independent of
+/// scheduling. The submitting caller participates (so progress never
+/// depends on worker availability); a panic in `f` is re-raised here
+/// with its original payload once the job has fully retired, and the
+/// executor survives to run the next job.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -83,13 +368,100 @@ where
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
-    // Single-thread request, or a nested call from inside a worker: run
-    // inline — the outermost pool is the one shared executor.
+    // Single-thread request, or a nested call from inside a job: run
+    // inline — the outermost call is the one shared executor tier.
     if threads == 1 || on_worker() {
         return items.iter().map(&f).collect();
     }
 
-    // Seed each worker's deque with a contiguous block of indices.
+    let out: Vec<std::cell::UnsafeCell<Option<R>>> =
+        (0..n).map(|_| std::cell::UnsafeCell::new(None)).collect();
+    let state = JobState {
+        items,
+        f: &f,
+        out: OutSlots(&out),
+        // Seed each participant's deque with a contiguous block.
+        queues: (0..threads)
+            .map(|w| {
+                let lo = w * n / threads;
+                let hi = (w + 1) * n / threads;
+                Mutex::new((lo..hi).collect())
+            })
+            .collect(),
+        panicked: AtomicBool::new(false),
+        panic: Mutex::new(None),
+    };
+
+    // Erase the job's lifetime for the worker-facing pointer. SAFETY:
+    // this function keeps `state` alive (and does not return) until the
+    // job has left the injector and every participant has retired.
+    let short: *const (dyn JobRun + '_) = &state;
+    let job: *const (dyn JobRun + 'static) = unsafe { std::mem::transmute(short) };
+    let ctl = Arc::new(JobCtl {
+        job,
+        claims: AtomicUsize::new(threads - 1),
+        active: AtomicUsize::new(0),
+        next_slot: AtomicUsize::new(1),
+    });
+
+    let exec = executor();
+    {
+        let mut st = exec.state.lock().unwrap();
+        ensure_workers(&mut st, threads - 1);
+        st.injector.push_back(ctl.clone());
+        exec.work_cv.notify_all();
+    }
+
+    // Participate as slot 0. `work` never unwinds (panics are caught at
+    // the item boundary), so plain set/restore of the flag is sound.
+    IN_WORKER.with(|flag| flag.set(true));
+    state.work(0);
+    IN_WORKER.with(|flag| flag.set(false));
+    run_retire_hook();
+
+    // Retire the job: pull it from the injector so no *new* participant
+    // can claim it, then wait for the active ones to drain. After this
+    // block no thread holds a reference into our stack.
+    {
+        let mut st = exec.state.lock().unwrap();
+        if let Some(pos) = st.injector.iter().position(|j| Arc::ptr_eq(j, &ctl)) {
+            let _ = st.injector.remove(pos);
+        }
+        while ctl.active.load(Ordering::Relaxed) > 0 {
+            st = exec.done_cv.wait(st).unwrap();
+        }
+    }
+
+    if let Some(payload) = state.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+    out.into_iter()
+        .map(|slot| slot.into_inner().expect("work item dropped"))
+        .collect()
+}
+
+/// The pre-persistent reference implementation: scoped threads spawned
+/// and joined **per call** (the seed pool's behaviour). Kept for the
+/// differential tests in `tests/pool_lifecycle.rs` (persistent output ==
+/// scoped output) and for `benches/bench_sweep.rs`, which measures the
+/// per-batch dispatch overhead the persistent executor removes. Panics
+/// in `f` abort the process-visible worker and propagate as a generic
+/// "pool worker panicked" — use [`parallel_map`] for payload-preserving
+/// propagation.
+pub fn scoped_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 || on_worker() {
+        return items.iter().map(&f).collect();
+    }
     let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
         .map(|w| {
             let lo = w * n / threads;
@@ -97,7 +469,6 @@ where
             Mutex::new((lo..hi).collect())
         })
         .collect();
-
     let worker_outputs: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|w| {
@@ -107,9 +478,6 @@ where
                     IN_WORKER.with(|flag| flag.set(true));
                     let mut out = Vec::new();
                     loop {
-                        // Own queue first (front), then steal (back). The
-                        // own-queue guard must drop before stealing: never
-                        // hold two queue locks at once.
                         let own = queues[w].lock().unwrap().pop_front();
                         let next = own.or_else(|| {
                             (0..queues.len())
@@ -118,9 +486,6 @@ where
                         });
                         match next {
                             Some(idx) => out.push((idx, f(&items[idx]))),
-                            // Every index is claimed under a lock before it
-                            // runs and none respawn, so globally-empty
-                            // queues mean the sweep is drained.
                             None => break,
                         }
                     }
@@ -130,8 +495,6 @@ where
             .collect();
         handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
     });
-
-    // Deterministic merge: scatter by original index.
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     for (idx, r) in worker_outputs.into_iter().flatten() {
         debug_assert!(slots[idx].is_none(), "index {idx} executed twice");
@@ -161,9 +524,17 @@ mod tests {
     }
 
     #[test]
+    fn matches_scoped_reference() {
+        let items: Vec<u64> = (0..301).map(|i| i * 17 % 113).collect();
+        let persistent = parallel_map(&items, 5, |&x| x.wrapping_mul(31).rotate_left(3));
+        let scoped = scoped_map(&items, 5, |&x| x.wrapping_mul(31).rotate_left(3));
+        assert_eq!(persistent, scoped);
+    }
+
+    #[test]
     fn imbalanced_work_is_stolen() {
         // Front-loaded costs: block seeding puts all heavy items on
-        // worker 0; completion requires the others to steal.
+        // participant 0; completion requires the others to steal.
         let hits = AtomicUsize::new(0);
         let items: Vec<u64> = (0..64).map(|i| if i < 8 { 3_000_000 } else { 10 }).collect();
         let out = parallel_map(&items, 4, |&spins| {
@@ -197,14 +568,57 @@ mod tests {
     }
 
     #[test]
+    fn workers_persist_across_calls() {
+        // The executor spawns once per high-water helper count and the
+        // same OS threads serve later batches, which is what keeps
+        // thread_local scratch state warm across batches. (The strict
+        // no-growth-over-many-batches assertion lives in
+        // tests/pool_lifecycle.rs, whose binary controls every
+        // concurrent pool width; here other unit tests may legitimately
+        // grow the pool mid-test.)
+        let items: Vec<u32> = (0..32).collect();
+        parallel_map(&items, 4, |&x| x);
+        assert!(live_workers() >= 3, "threads=4 needs >= 3 helpers");
+        // And the pool keeps serving correct, in-order results batch
+        // after batch on those same workers.
+        for round in 0..10 {
+            let out = parallel_map(&items, 4, |&x| x + round);
+            assert_eq!(out, items.iter().map(|x| x + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn panic_propagates_with_payload_and_pool_survives() {
+        let items: Vec<u32> = (0..64).collect();
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map(&items, 4, |&x| {
+                if x == 13 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        });
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 13"), "payload lost: {msg:?}");
+        // Executor not poisoned: the next job runs clean on the same pool.
+        let out = parallel_map(&items, 4, |&x| x + 1);
+        assert_eq!(out, items.iter().map(|x| x + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn nested_calls_run_inline_on_the_shared_executor() {
-        // A nested parallel_map from inside a worker must not spawn a
-        // second tier of threads: it runs inline on the caller's worker
+        // A nested parallel_map from inside a job must not submit a
+        // second tier: it runs inline on the calling participant
         // (on_worker() is visible there) and still merges correctly.
         assert!(!on_worker(), "test thread is not a worker");
         let outer: Vec<u32> = (0..8).collect();
         let out = parallel_map(&outer, 4, |&x| {
-            assert!(on_worker(), "closure must run on a pool worker");
+            assert!(on_worker(), "closure must run on a pool participant");
             let inner: Vec<u32> = (0..50).collect();
             let sums = parallel_map(&inner, 4, |&y| y + x);
             sums.iter().sum::<u32>()
@@ -212,5 +626,32 @@ mod tests {
         let expect: Vec<u32> = (0..8).map(|x| (0..50).map(|y| y + x).sum()).collect();
         assert_eq!(out, expect);
         assert!(!on_worker(), "flag must not leak to the caller");
+    }
+
+    #[test]
+    fn threads_override_takes_precedence() {
+        // set_default_threads wins over the env/default path. Process
+        // global, deliberately not reset: default_threads() stays valid
+        // (>= 1) for every other test, and thread counts never change
+        // results (the determinism suite pins that).
+        set_default_threads(3);
+        assert_eq!(default_threads(), 3);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        // Two non-worker threads submitting jobs at once: both complete
+        // correctly (jobs queue on the injector; callers participate, so
+        // neither can starve).
+        let a = std::thread::spawn(|| {
+            let items: Vec<u64> = (0..200).collect();
+            parallel_map(&items, 4, |&x| x * 3)
+        });
+        let b = std::thread::spawn(|| {
+            let items: Vec<u64> = (0..200).collect();
+            parallel_map(&items, 4, |&x| x * 5)
+        });
+        assert_eq!(a.join().unwrap(), (0..200).map(|x| x * 3).collect::<Vec<u64>>());
+        assert_eq!(b.join().unwrap(), (0..200).map(|x| x * 5).collect::<Vec<u64>>());
     }
 }

@@ -1,0 +1,238 @@
+//! Coherence of the plan cache's two-level read path: reads served
+//! through the lock-free per-thread L1 must be indistinguishable —
+//! value-wise and accounting-wise — from reads that always take the
+//! shared L2 mutex, across randomized eviction schedules.
+//!
+//! * every artifact an L1-enabled cache returns is byte-identical to a
+//!   direct solve (evictions between reads included: the epoch bump
+//!   invalidates the L1 and the deterministic solver recomputes the
+//!   same bytes);
+//! * an L1-enabled cache and a mutex-only cache driven by the same op
+//!   sequence agree **bit-for-bit** on hits, solves, evictions,
+//!   resident bytes and membership after every op (the batched recency
+//!   touches flush before every insert, so single-threaded eviction
+//!   order is exactly the always-locked order);
+//! * a multi-threaded engine sweep under eviction pressure renders
+//!   byte-identical tables with the L1 on and off.
+
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::{Atomicity, DpPlan, DpStrategy};
+use canzona::sweep::{render_table, DpKey, PlanCache, SweepEngine, SweepGrid, TpKey};
+use canzona::util::rng::Rng;
+
+fn dp_key(stage: usize) -> DpKey {
+    DpKey {
+        model: Qwen3Size::S1_7B,
+        stage,
+        pp: 1,
+        dp: 8,
+        tp: 2,
+        strategy: DpStrategy::LbAsc,
+        optim: None,
+        metric: CostMetric::Numel,
+        alpha_bits: 1.0f64.to_bits(),
+        bucket_elems: 40_000_000,
+    }
+}
+
+fn tp_key(rank: usize) -> TpKey {
+    TpKey {
+        dp_key: dp_key(0),
+        rank,
+        c_max_bits: Some(512e6f64.to_bits()),
+        optim: OptimKind::Muon,
+    }
+}
+
+/// Deterministic synthetic plan; size varies with `i` so eviction
+/// schedules differ per key.
+fn dp_plan(i: usize) -> DpPlan {
+    let ranks = 2 + i % 5;
+    DpPlan {
+        ranks,
+        cuts: vec![(0..=ranks).map(|r| r * (13 + i)).collect()],
+        atomicity: Atomicity::None,
+    }
+}
+
+fn tp_plan(i: usize) -> canzona::schedule::microgroup::TpPlan {
+    let tasks: Vec<canzona::schedule::microgroup::TpTask> = (0..(2 + i % 4))
+        .map(|id| canzona::schedule::microgroup::TpTask {
+            id,
+            name: format!("t{id}"),
+            cost: 1.0 + (id + i) as f64,
+            comm_bytes: 2.0,
+            flops: 10.0,
+            state_bytes: 4.0,
+        })
+        .collect();
+    canzona::schedule::microgroup::build_micro_groups(tasks, 2, 1e9)
+}
+
+#[test]
+fn l1_reads_are_byte_identical_to_direct_solves_under_eviction() {
+    // Randomized budgets small enough to evict constantly: whatever mix
+    // of L1 hits, L2 hits and re-solves a read lands on, the bytes must
+    // match a from-scratch solve.
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(0xC0FE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let budget = 400 + rng.index(2000);
+        let cache = PlanCache::with_budget(budget);
+        for step in 0..400 {
+            let i = rng.index(8);
+            if rng.index(2) == 0 {
+                let got = cache.dp_plan(&dp_key(i), || dp_plan(i));
+                assert_eq!(
+                    format!("{got:?}"),
+                    format!("{:?}", dp_plan(i)),
+                    "seed {seed} step {step}: dp plan {i} diverged from a direct solve",
+                );
+            } else {
+                let got = cache.tp_plan(&tp_key(i), || tp_plan(i));
+                assert_eq!(
+                    format!("{:?}", got.group_cost),
+                    format!("{:?}", tp_plan(i).group_cost),
+                    "seed {seed} step {step}: tp plan {i} diverged from a direct solve",
+                );
+            }
+            let s = cache.stats();
+            assert!(
+                s.budget_bytes == 0 || s.resident_bytes <= s.budget_bytes,
+                "seed {seed} step {step}: budget violated {s:?}",
+            );
+        }
+    }
+}
+
+#[test]
+fn l1_and_mutex_only_paths_agree_bit_for_bit() {
+    // The shadow equivalence at the accounting level: same single-thread
+    // op sequence, one cache reading through the L1, one always locking.
+    // Hits/solves/evictions/resident bytes and per-key membership must
+    // match after every op — the L1 is a pure read-path optimization.
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(0xAB1E ^ seed.wrapping_mul(0x2545F4914F6CDD1D));
+        let budget = 400 + rng.index(2000);
+        let with_l1 = PlanCache::with_options(budget, true);
+        let mutex_only = PlanCache::with_options(budget, false);
+        for step in 0..300 {
+            let i = rng.index(8);
+            if rng.index(2) == 0 {
+                with_l1.dp_plan(&dp_key(i), || dp_plan(i));
+                mutex_only.dp_plan(&dp_key(i), || dp_plan(i));
+            } else {
+                with_l1.tp_plan(&tp_key(i), || tp_plan(i));
+                mutex_only.tp_plan(&tp_key(i), || tp_plan(i));
+            }
+            let a = with_l1.stats();
+            let b = mutex_only.stats();
+            assert_eq!(
+                (a.hits, a.solves, a.evictions, a.resident_bytes, a.peak_bytes),
+                (b.hits, b.solves, b.evictions, b.resident_bytes, b.peak_bytes),
+                "seed {seed} step {step}: read paths diverged",
+            );
+            for k in 0..8 {
+                assert_eq!(
+                    with_l1.contains_dp(&dp_key(k)),
+                    mutex_only.contains_dp(&dp_key(k)),
+                    "seed {seed} step {step}: dp membership diverged at key {k}",
+                );
+                assert_eq!(
+                    with_l1.contains_tp(&tp_key(k)),
+                    mutex_only.contains_tp(&tp_key(k)),
+                    "seed {seed} step {step}: tp membership diverged at key {k}",
+                );
+            }
+        }
+        assert!(
+            with_l1.stats().l1_hits > 0,
+            "seed {seed}: the L1 path was never exercised",
+        );
+    }
+}
+
+#[test]
+fn retiring_participants_release_stale_l1_pins() {
+    // A thread's L1 holds Arc clones of what it read. If the owner
+    // cache dies (or evicts) while the thread is idle, the pool's
+    // participant-retire hook must release the stale L1 instead of
+    // pinning the artifacts until some future cache access. The caller
+    // participates in every parallel_map job and its retire hook runs
+    // before the call returns, so the orphaned-cache case is exactly
+    // observable on this thread:
+    let weak = {
+        let cache = PlanCache::unbounded();
+        let a = cache.dp_plan(&dp_key(0), || dp_plan(0)); // in L2 + our L1
+        let w = std::sync::Arc::downgrade(&a);
+        drop(a);
+        w
+        // `cache` (the L2) drops here; only this thread's L1 pins it now.
+    };
+    assert!(
+        weak.upgrade().is_some(),
+        "precondition: the thread L1 should still hold the artifact",
+    );
+    // A trivial pool round-trip: the caller's retire hook finds the
+    // epoch handle dead (owner cache dropped) and clears the L1.
+    let items = [0u8, 1];
+    canzona::util::pool::parallel_map(&items, 2, |&x| x);
+    assert!(
+        weak.upgrade().is_none(),
+        "orphaned artifact still pinned by an idle participant's L1",
+    );
+
+    // Positive control: a live cache with no evictions keeps its L1
+    // across retirement — the next read is still served lock-free.
+    let cache = PlanCache::unbounded();
+    cache.dp_plan(&dp_key(0), || dp_plan(0));
+    canzona::util::pool::parallel_map(&items, 2, |&x| x);
+    let l1_hits = cache.stats().l1_hits;
+    cache.dp_plan(&dp_key(0), || panic!("hit expected"));
+    assert_eq!(
+        cache.stats().l1_hits,
+        l1_hits + 1,
+        "a warm, un-evicted L1 must survive participant retirement",
+    );
+}
+
+#[test]
+fn sweep_under_eviction_pressure_matches_with_l1_on_and_off() {
+    // End to end through the engine and real solvers, multi-threaded,
+    // with a budget tiny enough to force evictions: the rendered tables
+    // (and a warm second pass) must be byte-identical either way.
+    let grid = SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![64],
+        tp: vec![2, 4],
+        pp: vec![1, 2],
+        micro_batches: vec![1, 4],
+        schedules: vec![canzona::sim::PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    };
+    let budget = 96 * 1024;
+    let l1_engine = SweepEngine::with_cache(4, PlanCache::with_options(budget, true));
+    let mutex_engine = SweepEngine::with_cache(4, PlanCache::with_options(budget, false));
+    let (scens_a, res_a) = l1_engine.run_grid(&grid);
+    let (scens_b, res_b) = mutex_engine.run_grid(&grid);
+    assert_eq!(
+        render_table(&scens_a, &res_a).render(),
+        render_table(&scens_b, &res_b).render(),
+        "L1 read path changed sweep results",
+    );
+    // Warm second pass under continuing pressure.
+    let res_a2 = l1_engine.eval(&scens_a);
+    let res_b2 = mutex_engine.eval(&scens_b);
+    assert_eq!(
+        render_table(&scens_a, &res_a2).render(),
+        render_table(&scens_b, &res_b2).render(),
+        "warm L1 reads changed sweep results",
+    );
+    let s = l1_engine.cache_stats();
+    assert!(s.evictions > 0, "the pressure grid must actually evict: {s:?}");
+}

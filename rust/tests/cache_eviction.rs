@@ -115,6 +115,42 @@ fn eviction_is_lru_first() {
 }
 
 #[test]
+fn budget_holds_with_and_without_the_l1_read_path() {
+    // The per-thread L1 (enabled by default — every other test in this
+    // file already runs through it) must not change byte accounting:
+    // identical op mixes against an L1-enabled and a mutex-only cache
+    // stay within budget with identical resident totals, and heavy
+    // L1-hit streaks between inserts never delay an eviction.
+    let probe = PlanCache::unbounded();
+    probe.dp_plan(&key(0), || plan(0));
+    let per_entry = probe.stats().resident_bytes as usize;
+    let budget = 3 * (per_entry + 64);
+    let l1 = PlanCache::with_options(budget, true);
+    let mutex_only = PlanCache::with_options(budget, false);
+    for round in 0..6 {
+        for i in 0..6 {
+            l1.dp_plan(&key(i), || plan(i));
+            mutex_only.dp_plan(&key(i), || plan(i));
+            // A hit streak on the freshest key (pure L1 on one side).
+            for _ in 0..10 {
+                l1.dp_plan(&key(i), || panic!("hit expected"));
+                mutex_only.dp_plan(&key(i), || panic!("hit expected"));
+            }
+            let a = l1.stats();
+            let b = mutex_only.stats();
+            assert!(a.resident_bytes <= a.budget_bytes, "round {round}: {a:?}");
+            assert_eq!(
+                (a.resident_bytes, a.evictions, a.solves),
+                (b.resident_bytes, b.evictions, b.solves),
+                "round {round} key {i}: L1 changed eviction accounting",
+            );
+        }
+    }
+    assert!(l1.stats().evictions > 0, "the mix must exercise eviction");
+    assert!(l1.stats().l1_hits > 0, "the mix must exercise the L1");
+}
+
+#[test]
 fn real_solver_recomputes_bit_identical_after_eviction() {
     let params: Vec<Param> = (0..12)
         .map(|i| {

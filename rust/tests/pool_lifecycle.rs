@@ -1,0 +1,150 @@
+//! Lifecycle contracts of the persistent executor (`util::pool`):
+//!
+//! * a panic in a job propagates to the submitting caller **with its
+//!   original payload**, and the executor is not poisoned — the next
+//!   job runs clean on the same workers;
+//! * many tiny batches back-to-back cause **no thread-count growth**
+//!   (workers are spawned once per high-water helper count, never per
+//!   batch) and per-worker `SimScratch` state visibly survives across
+//!   batches (`scratch_reuses` keeps climbing);
+//! * the persistent executor's output is byte-identical to the scoped
+//!   spawn-per-call reference implementation and to a serial run.
+//!
+//! Every test here requests at most 8 threads, so concurrently-running
+//! tests in this binary can never grow the pool past the count the
+//! stress test records.
+
+use canzona::cost::optim::OptimKind;
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::Scenario;
+use canzona::sweep::SweepEngine;
+use canzona::util::pool;
+
+#[test]
+fn panic_in_a_job_propagates_and_leaves_the_executor_clean() {
+    let items: Vec<u32> = (0..100).collect();
+    let caught = std::panic::catch_unwind(|| {
+        pool::parallel_map(&items, 4, |&x| {
+            if x == 42 {
+                panic!("scenario {x} exploded");
+            }
+            x * 2
+        })
+    });
+    let payload = caught.expect_err("the job's panic must reach the caller");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("scenario 42 exploded"),
+        "panic payload must survive propagation, got {msg:?}",
+    );
+
+    // Not poisoned: the very next job on the same executor runs clean,
+    // repeatedly.
+    for round in 0..3 {
+        let out = pool::parallel_map(&items, 4, |&x| x + round);
+        assert_eq!(out, items.iter().map(|x| x + round).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn tiny_batches_do_not_grow_the_pool() {
+    // Prewarm to this file's maximum width, then hammer the executor
+    // with small batches: the worker count must not move.
+    let warm: Vec<u64> = (0..64).collect();
+    pool::parallel_map(&warm, 8, |&x| x);
+    let workers = pool::live_workers();
+    assert!(workers >= 7, "threads=8 needs >= 7 helpers, got {workers}");
+
+    let tiny: Vec<u64> = (0..8).collect();
+    for i in 0..200u64 {
+        let out = pool::parallel_map(&tiny, 4, |&x| x.wrapping_mul(i + 1));
+        assert_eq!(out.len(), 8);
+    }
+    assert_eq!(
+        pool::live_workers(),
+        workers,
+        "200 tiny batches must reuse the persistent workers, not spawn",
+    );
+}
+
+#[test]
+fn scratch_reuse_climbs_across_batches() {
+    // pp = 2 scenarios route through the timeline engine, whose
+    // per-thread SimScratch reports reuse through the engine's cache.
+    // With persistent workers the scratches warmed by batch k are still
+    // warm for batch k+1, so the counter keeps climbing batch after
+    // batch — the cross-batch reuse the persistent executor exists for.
+    let engine = SweepEngine::with_budget(4, 0);
+    let batch: Vec<Scenario> = (0..16)
+        .map(|_| {
+            Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, DpStrategy::LbAsc)
+                .with_micro_batches(4)
+        })
+        .collect();
+
+    engine.eval(&batch);
+    let after_one = engine.cache_stats().scratch_reuses;
+    engine.eval(&batch);
+    let after_two = engine.cache_stats().scratch_reuses;
+    engine.eval(&batch);
+    let after_three = engine.cache_stats().scratch_reuses;
+
+    assert!(
+        after_two > after_one,
+        "batch 2 must reuse batch 1's worker scratches ({after_one} -> {after_two})",
+    );
+    assert!(
+        after_three > after_two,
+        "batch 3 must keep reusing ({after_two} -> {after_three})",
+    );
+    // At most `threads` playbacks per batch can be first-touches (one
+    // per participating thread); everything else must be a reuse.
+    assert!(
+        after_three - after_two >= (batch.len() - 4) as u64,
+        "almost every batch-3 playback should reuse a warm scratch \
+         ({after_two} -> {after_three})",
+    );
+}
+
+#[test]
+fn persistent_matches_scoped_reference_and_serial() {
+    // The executor rewrite must be invisible in the output: persistent,
+    // scoped spawn-per-call, and serial runs all merge byte-identically.
+    let items: Vec<u64> = (0..500).map(|i| i * 37 % 211).collect();
+    let f = |&x: &u64| x.wrapping_mul(0x9E37_79B9).rotate_left(7) ^ 0x5DEE_CE66;
+    let serial: Vec<u64> = items.iter().map(f).collect();
+    for threads in [2, 4, 8] {
+        assert_eq!(pool::parallel_map(&items, threads, f), serial, "{threads} threads");
+        assert_eq!(pool::scoped_map(&items, threads, f), serial, "{threads} threads scoped");
+    }
+}
+
+#[test]
+fn panic_mid_sweep_leaves_engine_usable() {
+    // A panicking closure routed through the same executor an engine
+    // uses must not corrupt later engine evals.
+    let items: Vec<u32> = (0..32).collect();
+    let _ = std::panic::catch_unwind(|| {
+        pool::parallel_map(&items, 4, |&x| {
+            if x % 7 == 3 {
+                panic!("boom");
+            }
+            x
+        })
+    });
+    let engine = SweepEngine::with_budget(4, 0);
+    let scens: Vec<Scenario> = (0..8)
+        .map(|_| Scenario::new(Qwen3Size::S1_7B, 4, 2, 1, OptimKind::Muon, DpStrategy::LbAsc))
+        .collect();
+    let a = engine.eval(&scens);
+    let b = engine.eval(&scens);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.total_s.to_bits(), y.total_s.to_bits());
+        assert!(x.total_s > 0.0);
+    }
+}

@@ -54,7 +54,7 @@ fn parallel_sweep_is_byte_identical_to_single_thread() {
     let grid = test_grid();
     let serial = SweepEngine::new(1);
     let (scens_s, res_s) = serial.run_grid(&grid);
-    for threads in [2, 4, 8] {
+    for threads in [2, 4, 8, 16] {
         let parallel = SweepEngine::new(threads);
         let (scens_p, res_p) = parallel.run_grid(&grid);
         assert_eq!(
@@ -223,6 +223,32 @@ fn interior_stages_share_cached_tables() {
     let warm_solves = cache.stats().solves;
     simulate_iteration_cached(&s, &cache);
     assert_eq!(cache.stats().solves, warm_solves, "warm pp=8 run re-solved");
+}
+
+#[test]
+fn repeated_batches_on_persistent_workers_are_byte_stable() {
+    // The persistent executor reuses worker threads (and their
+    // SimScratch / cache-L1 state) across eval calls; interleaving two
+    // different grids over many batches must leave every batch's bytes
+    // identical to its first run — warm per-worker state is a pure
+    // throughput optimization.
+    let engine = SweepEngine::with_budget(4, 0);
+    let plain = test_grid().scenarios();
+    let piped = pp_grid().scenarios();
+    let first_plain = render_table(&plain, &engine.eval(&plain)).render();
+    let first_piped = render_table(&piped, &engine.eval(&piped)).render();
+    for round in 0..3 {
+        assert_eq!(
+            render_table(&plain, &engine.eval(&plain)).render(),
+            first_plain,
+            "plain grid drifted on round {round}",
+        );
+        assert_eq!(
+            render_table(&piped, &engine.eval(&piped)).render(),
+            first_piped,
+            "pp grid drifted on round {round}",
+        );
+    }
 }
 
 #[test]

@@ -135,6 +135,35 @@ fn timeline_counters_report_through_the_cache() {
 }
 
 #[test]
+fn warm_path_is_allocation_free_on_persistent_pool_workers() {
+    // The contract must hold where the sweep actually runs: on the
+    // persistent executor's workers. Each closure primes its own
+    // thread's scratch/L1 (two calls), then proves the third call is
+    // heap-free — covering both dispatch arms, with the plan-cache
+    // reads going through the per-worker L1.
+    let cache = PlanCache::unbounded();
+    for pp in [1usize, 2] {
+        let s = Scenario::new(Qwen3Size::S1_7B, 4, 2, pp, OptimKind::Muon, DpStrategy::LbAsc)
+            .with_micro_batches(if pp > 1 { 4 } else { 1 });
+        let items: Vec<Scenario> = (0..16).map(|_| s.clone()).collect();
+        let counts = canzona::util::pool::parallel_map(&items, 4, |sc| {
+            let mut out = Breakdown::default();
+            simulate_iteration_into(sc, &cache, &mut out); // cold for this thread
+            simulate_iteration_into(sc, &cache, &mut out); // settles capacity
+            let (allocs, _) =
+                canzona::util::alloc::count_allocations(|| {
+                    simulate_iteration_into(sc, &cache, &mut out)
+                });
+            allocs
+        });
+        assert!(
+            counts.iter().all(|&n| n == 0),
+            "pp={pp}: warm calls on pool workers allocated: {counts:?}",
+        );
+    }
+}
+
+#[test]
 fn cold_path_still_allocates_sanity() {
     // The counter itself must be live in this binary: a cold run (fresh
     // cache) visibly allocates.
