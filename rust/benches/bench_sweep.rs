@@ -13,7 +13,7 @@ use canzona::cost::optim::{CostMetric, OptimKind};
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
 use canzona::sim::{simulate_iteration, simulate_iteration_cached, PipelineSchedule, Scenario};
-use canzona::sweep::{PlanCache, SweepEngine, SweepGrid};
+use canzona::sweep::{optimize, Objective, OptimizeOptions, PlanCache, SweepEngine, SweepGrid};
 use canzona::util::bench::{bench, black_box, fmt_ns};
 use canzona::util::pool;
 
@@ -292,4 +292,45 @@ fn main() {
         "timeline counters: {} tasks total, {} scratch reuses, {} order-cache hits",
         st.timeline_tasks, st.scratch_reuses, st.order_hits,
     );
+
+    // --- branch-and-bound optimize: pruning ratio -----------------------
+    // The search must beat exhaustive enumeration on evaluations, not
+    // just match its winner (tests/optimize_differential.rs pins the
+    // bit-identical-argmin contract; this quantifies the saving). Paste
+    // the printed rows into CHANGES.md from a toolchain-equipped run.
+    println!("\n# Branch-and-bound optimize vs exhaustive grid\n");
+    let search_grid = SweepGrid {
+        models: vec![Qwen3Size::S8B],
+        dp: vec![8, 16, 32],
+        tp: vec![2, 4, 8],
+        pp: vec![1, 2],
+        micro_batches: vec![1, 8],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon, OptimKind::Shampoo],
+        strategies: vec![DpStrategy::Sc, DpStrategy::NvLayerwise, DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(512.0)],
+        metric: CostMetric::Numel,
+    };
+    for objective in [Objective::IterTime, Objective::OptimizerLatency, Objective::Memory] {
+        let engine = SweepEngine::new(pool::default_threads());
+        let t = Instant::now();
+        black_box(engine.run_grid(&search_grid));
+        let grid_s = t.elapsed().as_secs_f64();
+        let engine = SweepEngine::new(pool::default_threads());
+        let opts = OptimizeOptions { objective, ..OptimizeOptions::default() };
+        let t = Instant::now();
+        let r = optimize(&engine, &search_grid, &opts).unwrap();
+        let search_s = t.elapsed().as_secs_f64();
+        println!(
+            "{:>17}: {:>3} of {:>3} leaves evaluated ({:>4.1}% pruned), \
+             search {search_s:>6.3}s vs exhaustive {grid_s:>6.3}s ({:.2}x)",
+            objective.label(),
+            r.evaluated.len(),
+            r.space,
+            100.0 * r.pruned as f64 / r.space.max(1) as f64,
+            grid_s / search_s.max(1e-12),
+        );
+    }
 }

@@ -5,6 +5,8 @@
 //! * `simulate`   — run the cluster simulator for one scenario.
 //! * `sweep`      — evaluate a scenario grid on the parallel, plan-cached
 //!   sweep engine and emit one table / JSON artifact.
+//! * `optimize`   — branch-and-bound search of a scenario grid for the
+//!   configuration minimizing an objective; emits the Pareto frontier.
 //! * `experiment` — reproduce a paper figure (`fig4`, `fig13`, … or `all`).
 //! * `train`      — run the real distributed trainer on AOT artifacts.
 //! * `list`       — list registered experiments.
@@ -16,7 +18,10 @@ use crate::experiments;
 use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
 use crate::sim::{simulate_iteration, Scenario};
-use crate::sweep::{render_json, render_table, SweepDiff, SweepEngine, SweepGrid};
+use crate::sweep::{
+    optimize, render_json, render_optimize_json, render_optimize_table, render_table,
+    Objective, OptimizeOptions, SweepDiff, SweepEngine, SweepGrid,
+};
 use crate::util::json::Value;
 use crate::train::{train, TrainConfig};
 use crate::util::cli::Args;
@@ -42,7 +47,11 @@ USAGE:
                      [--alphas 0.5,1.0] [--c-max-mb 512,none] [--metric numel]
                      [--threads N] [--cache-budget-mb 256] [--json out.json] [--csv]
                      [--baseline prior.json] [--regress-pct 2.0]
-  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|planning|all>
+  canzona optimize   [sweep grid axes, as above]
+                     [--objective iter-time|optimizer-latency|memory] [--gpus 256]
+                     [--batch N] [--exhaustive] [--threads N] [--cache-budget-mb 256]
+                     [--json out.json] [--csv] [--baseline prior.json] [--regress-pct 2.0]
+  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|fig_optimize|planning|all>
                      [--threads N]
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
                      [--seed 42] [--artifacts artifacts] [--log-every 10]
@@ -51,12 +60,13 @@ USAGE:
 
 /// CLI entry point.
 pub fn run_cli(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["verbose", "csv"])?;
+    let args = Args::parse(argv, &["verbose", "csv", "exhaustive"])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "plan" => cmd_plan(&args),
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "optimize" => cmd_optimize(&args),
         "experiment" => cmd_experiment(&args),
         "train" => cmd_train(&args),
         "list" => {
@@ -147,12 +157,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Evaluate a scenario grid on the sweep engine; emit one table (or CSV)
-/// plus an optional JSON artifact, and — with `--baseline prior.json` —
-/// a diff table gated on regressions (nonzero exit beyond
-/// `--regress-pct`, default 2%).
-fn cmd_sweep(args: &Args) -> Result<()> {
-    let grid = SweepGrid::parse(args)?;
+/// Build a sweep engine from `--threads` / `--cache-budget-mb` (shared
+/// by `sweep` and `optimize`); returns the thread count alongside for
+/// the summary lines.
+fn engine_from_args(args: &Args) -> Result<(SweepEngine, usize)> {
     let threads = args.get_usize("threads", pool::default_threads())?.max(1);
     let engine = match args.get("cache-budget-mb") {
         None => SweepEngine::new(threads),
@@ -166,6 +174,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             SweepEngine::with_budget(threads, budget)
         }
     };
+    Ok((engine, threads))
+}
+
+/// Evaluate a scenario grid on the sweep engine; emit one table (or CSV)
+/// plus an optional JSON artifact, and — with `--baseline prior.json` —
+/// a diff table gated on regressions (nonzero exit beyond
+/// `--regress-pct`, default 2%).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let grid = SweepGrid::parse(args)?;
+    let (engine, threads) = engine_from_args(args)?;
     let t0 = std::time::Instant::now();
     let (scenarios, breakdowns) = engine.run_grid(&grid);
     let wall_s = t0.elapsed().as_secs_f64();
@@ -238,6 +256,98 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 stats.scratch_reuses,
                 stats.order_hits,
             );
+        }
+        diff.verdict()?;
+        println!("\nbaseline check passed: no regression beyond {threshold}% vs {path}");
+    }
+    Ok(())
+}
+
+/// Branch-and-bound search of a scenario grid for the configuration
+/// minimizing `--objective`; prints the Pareto frontier (winner
+/// starred) plus search counters. `--exhaustive` disables pruning (the
+/// exact-frontier mode); `--baseline prior.json` diffs the frontier
+/// rows against a stored `optimize --json` artifact through the same
+/// join as `sweep --baseline`.
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let grid = SweepGrid::parse(args)?;
+    let objective = match args.get("objective") {
+        None => Objective::IterTime,
+        Some(raw) => Objective::parse(raw).ok_or_else(
+            || err!("unknown objective {raw:?} (iter-time/optimizer-latency/memory)"),
+        )?,
+    };
+    let gpus = match args.get("gpus") {
+        None => None,
+        Some(_) => Some(args.get_usize("gpus", 0)?),
+    };
+    let opts = OptimizeOptions {
+        objective,
+        gpus,
+        prune: !args.flag("exhaustive"),
+        batch: args.get_usize("batch", 0)?,
+    };
+    let (engine, threads) = engine_from_args(args)?;
+    let t0 = std::time::Instant::now();
+    let result = optimize(&engine, &grid, &opts)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let table = render_optimize_table(&result);
+    if args.flag("csv") {
+        print!("{}", table.to_csv());
+    } else {
+        table.print();
+    }
+    let stats = engine.cache_stats();
+    if let Some(path) = args.get("json") {
+        let mut artifact = render_optimize_json(&result);
+        if let Value::Obj(m) = &mut artifact {
+            m.insert("cache".into(), stats.to_json());
+        }
+        std::fs::write(path, artifact.to_string())?;
+        println!("wrote {path}");
+    }
+    let w = &result.evaluated[result.winner];
+    println!(
+        "\nwinner [{}]: {} dp{} tp{} pp{} mb{} {} {} a={} -> total {:.6}s, value {:.6}",
+        objective.label(),
+        w.scenario.label,
+        w.scenario.dp,
+        w.scenario.tp,
+        w.scenario.pp,
+        w.scenario.micro_batches,
+        w.scenario.optim.label(),
+        w.scenario.strategy.label(),
+        w.scenario.alpha,
+        w.breakdown.total_s,
+        w.value,
+    );
+    println!(
+        "searched {} of {} scenarios ({} pruned, {:.0}% of the space) in {wall_s:.2}s \
+         on {threads} threads",
+        result.evaluated.len(),
+        result.space,
+        result.pruned,
+        100.0 * result.pruned as f64 / result.space.max(1) as f64,
+    );
+    if let Some(path) = args.get("baseline") {
+        let baseline = Value::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| e.wrap(format!("parsing baseline {path}")))?;
+        let threshold = args.get_f64("regress-pct", 2.0)?;
+        let scens: Vec<Scenario> = result
+            .frontier
+            .iter()
+            .map(|&i| result.evaluated[i].scenario.clone())
+            .collect();
+        let breaks: Vec<crate::sim::Breakdown> = result
+            .frontier
+            .iter()
+            .map(|&i| result.evaluated[i].breakdown.clone())
+            .collect();
+        let diff = SweepDiff::compare(&baseline, &scens, &breaks, threshold)?;
+        if args.flag("csv") {
+            print!("{}", diff.table().to_csv());
+        } else {
+            diff.table().print();
         }
         diff.verdict()?;
         println!("\nbaseline check passed: no regression beyond {threshold}% vs {path}");

@@ -3,7 +3,7 @@
 //! Every harness is a thin table-assembly layer over the sweep engine:
 //! it declares its scenario batch, evaluates it through
 //! [`SweepEngine::global`] (parallel, plan-cached — `run("all")` shares
-//! one warm cache across all fourteen harnesses), and formats rows from
+//! one warm cache across all fifteen harnesses), and formats rows from
 //! the returned breakdowns in a fixed order. To add a new figure, build
 //! the scenario list, call `eval`, and index the results; see
 //! README.md § "Adding a figure harness".
@@ -454,9 +454,89 @@ pub fn planning_latency() -> Vec<Table> {
     vec![t]
 }
 
+/// `canzona optimize` as a harness: search the paper's 256-GPU
+/// Qwen3-32B shape space (DP × TP × PP with `dp*tp*pp == 256`) once
+/// per strategy and derive the headline speedups (paper: total 1.57x,
+/// optimizer 5.8x) as a ratio of search argmins — the best
+/// NV-layerwise deployment vs the best LB-ASC one, rather than a
+/// hand-picked config pair.
+pub fn fig_optimize() -> Vec<Table> {
+    use crate::sim::PipelineSchedule;
+    use crate::sweep::{optimize, Objective, OptimizeOptions, SweepGrid};
+    let shape_grid = |strategy: DpStrategy| SweepGrid {
+        models: vec![Qwen3Size::S32B],
+        dp: vec![16, 32, 64],
+        tp: vec![4, 8],
+        pp: vec![1, 2],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![strategy],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(512.0)],
+        metric: CostMetric::Numel,
+    };
+    // batch = 1 pins the evaluated set; the winner is batch-invariant.
+    let opts = OptimizeOptions {
+        objective: Objective::IterTime,
+        gpus: Some(256),
+        prune: true,
+        batch: 1,
+    };
+    let engine = SweepEngine::global();
+    let mut t = Table::new(
+        "Optimize — best 256-GPU Qwen3-32B deployment per strategy (Muon, iter-time)",
+        &["strategy", "grid", "searched", "fwd-bwd", "optimizer", "total"],
+    );
+    let mut best = Vec::new();
+    for strategy in [DpStrategy::NvLayerwise, DpStrategy::LbAsc] {
+        let r = optimize(engine, &shape_grid(strategy), &opts)
+            .expect("the 256-GPU shape space is non-empty");
+        let w = r.evaluated[r.winner].clone();
+        t.row(vec![
+            strategy.label().into(),
+            format!("DP{}-TP{}-PP{}", w.scenario.dp, w.scenario.tp, w.scenario.pp),
+            format!("{}/{}", r.evaluated.len(), r.space),
+            secs(w.breakdown.fwd_bwd_s),
+            secs(w.breakdown.optimizer_s),
+            secs(w.breakdown.total_s),
+        ]);
+        best.push(w);
+    }
+    let (nv, lb) = (&best[0].breakdown, &best[1].breakdown);
+    t.row(vec![
+        "speedup".into(),
+        "".into(),
+        "".into(),
+        ratio(nv.fwd_bwd_s / lb.fwd_bwd_s),
+        ratio(nv.optimizer_s / lb.optimizer_s),
+        ratio(nv.total_s / lb.total_s),
+    ]);
+    vec![t]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fig_optimize_search_derived_speedups_exceed_one() {
+        // The paper's 1.57x / 5.8x claims, derived as a ratio of search
+        // argmins; the harness only pins the *direction*, not the
+        // magnitude (the simulator is a model, not the measured A100s).
+        let tables = fig_optimize();
+        let text = tables[0].render();
+        let line = text.lines().find(|l| l.contains("speedup")).unwrap();
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        let opt_speedup: f64 = cells[5].trim_end_matches('x').parse().unwrap();
+        assert!(opt_speedup > 1.0, "{opt_speedup}");
+        let total_speedup: f64 = cells[6].trim_end_matches('x').parse().unwrap();
+        assert!(total_speedup > 1.0, "{total_speedup}");
+        // Both searches pruned or evaluated every leaf of the 4-point
+        // 256-GPU space — the "searched" column is n/4.
+        assert!(text.contains("/4"), "{text}");
+    }
 
     #[test]
     fn fig4_speedups_paper_shaped() {

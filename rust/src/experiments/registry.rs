@@ -22,6 +22,8 @@ pub fn catalog() -> Vec<(&'static str, &'static str, fn() -> Vec<Table>)> {
         ("fig14", "C_max micro-group fusion ablation", figures::fig14),
         ("fig16", "Cost metric ablation (numel vs FLOPs)", figures::fig16),
         ("fig_pp", "PP sweep on the 1F1B timeline engine", figures::fig_pp),
+        ("fig_optimize", "Search-derived best 256-GPU configs + headline speedups",
+         figures::fig_optimize),
         ("planning", "Appendix D.1 offline planning latency", figures::planning_latency),
     ]
 }
@@ -68,7 +70,7 @@ mod tests {
         let ids: Vec<&str> = list().iter().map(|(i, _)| *i).collect();
         for required in ["fig3a", "fig3bc", "fig4", "fig6", "fig7", "fig8",
                          "fig9", "fig10-11", "fig12", "fig13", "fig14",
-                         "fig16", "fig_pp", "planning"] {
+                         "fig16", "fig_pp", "fig_optimize", "planning"] {
             assert!(ids.contains(&required), "{required} missing");
         }
     }

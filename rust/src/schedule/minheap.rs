@@ -19,13 +19,25 @@ pub struct HeapAssignment {
     pub max_load: f64,
 }
 
-#[derive(PartialEq, PartialOrd)]
+/// Heap key over `f64` loads. `total_cmp` gives NaN a fixed position in
+/// the order instead of the `partial_cmp().unwrap()` panic — a NaN cost
+/// produces a (degenerate but deterministic) plan rather than unwinding
+/// out of the planner.
 struct F(f64);
+impl PartialEq for F {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0).is_eq()
+    }
+}
 impl Eq for F {}
-#[allow(clippy::derive_ord_xor_partial_ord)]
+impl PartialOrd for F {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
 impl Ord for F {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).unwrap()
+        self.0.total_cmp(&other.0)
     }
 }
 
@@ -34,7 +46,7 @@ pub fn min_heap_balance(costs: &[f64], ranks: usize) -> HeapAssignment {
     assert!(ranks >= 1);
     // Local LPT sort (descending cost, stable on index).
     let mut order: Vec<usize> = (0..costs.len()).collect();
-    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap().then(a.cmp(&b)));
+    order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]).then(a.cmp(&b)));
 
     let mut heap: BinaryHeap<Reverse<(F, usize)>> =
         (0..ranks).map(|r| Reverse((F(0.0), r))).collect();
@@ -106,6 +118,24 @@ mod tests {
         let costs: Vec<f64> = (0..100).map(|i| ((i * 37) % 13) as f64 + 1.0).collect();
         let a = min_heap_balance(&costs, 7);
         let b = min_heap_balance(&costs, 7);
+        assert_eq!(a.items_per_rank, b.items_per_rank);
+    }
+
+    #[test]
+    fn nan_cost_does_not_panic() {
+        // Pre-fix: both the LPT sort and F::cmp called
+        // partial_cmp().unwrap() and panicked on the first NaN cost.
+        // total_cmp gives NaN a fixed sort position, so balancing
+        // completes deterministically and every item is still assigned
+        // exactly once — the caller surfaces bad costs as an error
+        // instead of unwinding out of the planner.
+        let costs = [5.0, f64::NAN, 3.0, 1.0];
+        let a = min_heap_balance(&costs, 2);
+        let mut seen: Vec<usize> = a.items_per_rank.concat();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        // Deterministic across repeated runs.
+        let b = min_heap_balance(&costs, 2);
         assert_eq!(a.items_per_rank, b.items_per_rank);
     }
 

@@ -1,0 +1,257 @@
+//! Admissible lower bounds on [`Breakdown`] objectives, for the
+//! branch-and-bound optimizer search (`canzona optimize`).
+//!
+//! Each bound is a cheap closed-form expression over per-stage census
+//! aggregates that provably never exceeds the value the full simulator
+//! ([`simulate_iteration_into`]) produces for the same scenario — so a
+//! best-first search that prunes on them returns the exact grid argmin.
+//! Derivations (all against `iteration.rs`'s arithmetic, both arms):
+//!
+//! * **Iteration time.** Every stage's compute stream serially executes
+//!   `micro_batches` forward (`fwd_t`) + backward (`bwd_t = 2 fwd_t`)
+//!   blocks, with per-micro-batch work priced from the *full*
+//!   [`Scenario::tokens`] (micro-batches multiply total work in this
+//!   model). The makespan is at least any one stage's busy time, hence
+//!   at least the stage *average*: `mb * 3 * Σ_stages fwd / pp /
+//!   gpu_flops`, where `Σ_stages fwd = 2*T*Σ matrix_numel +
+//!   2*T*S*Σ(n_layers_st * hidden_st) / tp` — exactly `stage_times`'s
+//!   terms summed over the stage split (which partitions the census).
+//!   The straggler factor only *derates* a stage's throughput, so
+//!   pricing at the undegraded `gpu_flops` stays below. On the
+//!   closed-form arm (`fwd_bwd = bwd_end + fwd_end + tp_ar ≥ 3 fwd_t`)
+//!   the same expression applies with `mb = pp = 1`, and the optimizer
+//!   bound below adds on (closed form: `total = fwd_bwd + optimizer`).
+//! * **Optimizer latency.** Only claimed on the closed-form arm
+//!   ([`closed_form_path`]); the timeline overlaps the optimizer with
+//!   other streams, so its exposed contribution can be zero. With `F =`
+//!   full-census matrix-update FLOPs: SC updates everything redundantly
+//!   (`≥ F/gpu`); NV-layerwise partitions `F` over DP ranks and takes
+//!   the max (`≥ F/(dp*gpu)`); ASC/LB-ASC additionally spread each DP
+//!   rank's tasks over TP hosts, and the TP pipeline's compute stream
+//!   serially runs every group's `max_rank_flops ≥ group_flops/tp`
+//!   (`≥ F/(dp*tp*gpu)`). Fragmented tensors only ever *repeat* on
+//!   ranks, so per-rank sums are ≥ an exact partition's.
+//! * **Optimizer-state memory** (`max` of `dp_loads_state`). The loads
+//!   come from the pacing stage, unknown before simulating, so the
+//!   bound takes the *min over stages*. Per stage, every matrix
+//!   parameter's `state_bytes(full_shape)` and `8` bytes per
+//!   element-wise element land on some DP rank (SC replicates the full
+//!   amount on every rank; `rank_state`/`dp_state` partition it), so
+//!   the per-stage max is at least `state/1` (SC) or `(state + 8*ew)/dp`
+//!   (all others).
+//!
+//! Tightness is *not* required — only admissibility. The differential
+//! suite (`tests/optimize_differential.rs`) checks both: winners are
+//! bit-identical to the exhaustive argmin, and the bounds prune.
+//!
+//! [`Breakdown`]: crate::sim::Breakdown
+//! [`simulate_iteration_into`]: crate::sim::simulate_iteration_into
+
+use std::collections::HashMap;
+
+use crate::cost::optim::{OptimCost, OptimKind};
+use crate::model::qwen3::Qwen3Size;
+use crate::partition::DpStrategy;
+use crate::sim::iteration::{closed_form_path, local_view, stage_census, stage_layer_count};
+use crate::sim::scenario::Scenario;
+
+/// Census aggregates shared by every scenario with the same
+/// `(model, tp, pp, optimizer)` — the axes the bounds actually read.
+/// One build covers the whole `dp × strategy × α × C_max × schedule ×
+/// straggler × micro-batch` sub-grid.
+struct BoundAgg {
+    /// `Σ_stages n_layers_stage * hidden_stage` (attention-FLOPs term).
+    nl_hidden: f64,
+    /// `Σ_stages` TP-local matrix numels (dense-FLOPs term).
+    matrix_numel: f64,
+    /// Full-census matrix-optimizer FLOPs at full shapes.
+    flops_total: f64,
+    /// Per stage: matrix optimizer state bytes at full shapes.
+    stage_state: Vec<f64>,
+    /// Per stage: element-wise (AdamW-routed) elements.
+    stage_ew: Vec<f64>,
+}
+
+impl BoundAgg {
+    /// Aggregate the scenario's stage split with the same helpers the
+    /// simulator's `StageTable::build` uses, so the terms can't drift.
+    fn build(s: &Scenario) -> BoundAgg {
+        let optim = OptimCost::new(s.optim);
+        let stages = stage_census(&s.census, s.pp);
+        let mut agg = BoundAgg {
+            nl_hidden: 0.0,
+            matrix_numel: 0.0,
+            flops_total: 0.0,
+            stage_state: Vec::with_capacity(stages.len()),
+            stage_ew: Vec::with_capacity(stages.len()),
+        };
+        for (si, stage) in stages.iter().enumerate() {
+            let locals = local_view(stage, s.tp);
+            let n_layers = stage_layer_count(s.n_layers, s.pp, si) as f64;
+            let hidden = locals
+                .iter()
+                .find(|p| p.local.name.ends_with("attn_norm.weight"))
+                .map(|p| p.local.numel() as f64)
+                .unwrap_or(0.0);
+            agg.nl_hidden += n_layers * hidden;
+            let mut state = 0.0;
+            let mut ew = 0.0;
+            for lp in &locals {
+                if lp.local.shape.is_matrix() {
+                    agg.matrix_numel += lp.local.numel() as f64;
+                }
+                if lp.local.is_matrix_opt() {
+                    agg.flops_total += optim.flops(&lp.full_shape);
+                    state += optim.state_bytes(&lp.full_shape);
+                } else {
+                    ew += lp.local.numel() as f64;
+                }
+            }
+            agg.stage_state.push(state);
+            agg.stage_ew.push(ew);
+        }
+        agg
+    }
+}
+
+/// Memoized lower-bound evaluator. One instance serves a whole search;
+/// aggregates are built once per `(model, tp, pp, optimizer)` key and
+/// each bound query is then a handful of float ops.
+pub struct ScenarioBounds {
+    memo: HashMap<(Qwen3Size, usize, usize, OptimKind), BoundAgg>,
+}
+
+impl Default for ScenarioBounds {
+    fn default() -> ScenarioBounds {
+        ScenarioBounds::new()
+    }
+}
+
+impl ScenarioBounds {
+    /// Empty memo; aggregates build lazily on first query.
+    pub fn new() -> ScenarioBounds {
+        ScenarioBounds { memo: HashMap::new() }
+    }
+
+    fn agg(&mut self, s: &Scenario) -> &BoundAgg {
+        self.memo
+            .entry((s.size, s.tp, s.pp, s.optim))
+            .or_insert_with(|| BoundAgg::build(s))
+    }
+
+    /// Lower bound on `Breakdown::total_s`.
+    pub fn iter_time(&mut self, s: &Scenario) -> f64 {
+        let opt_lb = self.optimizer_latency(s);
+        let tokens = s.tokens() as f64;
+        let seq = s.seq_len as f64;
+        let a = self.agg(s);
+        let fwd_total =
+            2.0 * tokens * a.matrix_numel + 2.0 * tokens * seq * a.nl_hidden / s.tp as f64;
+        let mb = s.micro_batches.max(1) as f64;
+        mb * 3.0 * fwd_total / (s.pp.max(1) as f64 * s.hw.gpu_flops) + opt_lb
+    }
+
+    /// Lower bound on `Breakdown::optimizer_s`. Zero off the
+    /// closed-form arm, where the timeline may fully overlap the step.
+    pub fn optimizer_latency(&mut self, s: &Scenario) -> f64 {
+        if !closed_form_path(s) {
+            return 0.0;
+        }
+        let gpu = s.hw.gpu_flops;
+        let (dp, tp) = (s.dp as f64, s.tp as f64);
+        let f = self.agg(s).flops_total;
+        match s.strategy {
+            DpStrategy::Sc => f / gpu,
+            DpStrategy::NvLayerwise => f / (dp * gpu),
+            DpStrategy::Asc | DpStrategy::LbAsc => f / (dp * tp * gpu),
+        }
+    }
+
+    /// Lower bound on `max(Breakdown::dp_loads_state)` (the pacing
+    /// stage's per-DP-rank optimizer state).
+    pub fn memory(&mut self, s: &Scenario) -> f64 {
+        let dp = s.dp as f64;
+        let sc = s.strategy == DpStrategy::Sc;
+        let a = self.agg(s);
+        a.stage_state
+            .iter()
+            .zip(&a.stage_ew)
+            .map(|(&state, &ew)| if sc { state } else { (state + 8.0 * ew) / dp })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate_iteration_cached, Scenario};
+    use crate::sweep::PlanCache;
+
+    fn scenarios() -> Vec<Scenario> {
+        use crate::model::qwen3::Qwen3Size::S1_7B;
+        let mut out = Vec::new();
+        for strategy in [
+            DpStrategy::Sc,
+            DpStrategy::NvLayerwise,
+            DpStrategy::Asc,
+            DpStrategy::LbAsc,
+        ] {
+            for optim in [OptimKind::Muon, OptimKind::Shampoo] {
+                out.push(Scenario::new(S1_7B, 4, 2, 1, optim, strategy));
+                out.push(
+                    Scenario::new(S1_7B, 2, 2, 2, optim, strategy).with_micro_batches(4),
+                );
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn bounds_are_admissible() {
+        // The contract everything else rests on: bound <= simulated
+        // value, for every objective, on both dispatch arms.
+        let cache = PlanCache::new();
+        let mut bounds = ScenarioBounds::new();
+        for s in scenarios() {
+            let b = simulate_iteration_cached(&s, &cache);
+            let t_lb = bounds.iter_time(&s);
+            assert!(
+                t_lb <= b.total_s + 1e-12,
+                "{}: time bound {t_lb} > total {}",
+                s.label,
+                b.total_s
+            );
+            let o_lb = bounds.optimizer_latency(&s);
+            assert!(
+                o_lb <= b.optimizer_s + 1e-12,
+                "{}: optimizer bound {o_lb} > {}",
+                s.label,
+                b.optimizer_s
+            );
+            let m_lb = bounds.memory(&s);
+            let m = b.dp_loads_state.iter().cloned().fold(0.0, f64::max);
+            assert!(m_lb <= m + 1e-6, "{}: memory bound {m_lb} > max state {m}", s.label);
+        }
+    }
+
+    #[test]
+    fn bounds_are_positive_and_memoized() {
+        let mut bounds = ScenarioBounds::new();
+        let s = Scenario::paper_default();
+        let t1 = bounds.iter_time(&s);
+        assert!(t1 > 0.0);
+        assert!(bounds.optimizer_latency(&s) > 0.0);
+        assert!(bounds.memory(&s) > 0.0);
+        // Same key, second query: identical value off the memo.
+        assert_eq!(t1.to_bits(), bounds.iter_time(&s).to_bits());
+        assert_eq!(bounds.memo.len(), 1);
+    }
+
+    #[test]
+    fn timeline_arm_claims_no_optimizer_bound() {
+        let s = Scenario::paper_default().with_micro_batches(2);
+        let mut bounds = ScenarioBounds::new();
+        assert_eq!(bounds.optimizer_latency(&s), 0.0);
+        assert!(bounds.iter_time(&s) > 0.0);
+    }
+}

@@ -153,9 +153,9 @@ impl Breakdown {
 /// A stage-local parameter: buffer geometry uses the TP-shard shape,
 /// optimizer-task cost uses the full shape.
 #[derive(Clone, Debug)]
-struct LocalParam {
-    local: Param,
-    full_shape: TensorShape,
+pub(crate) struct LocalParam {
+    pub(crate) local: Param,
+    pub(crate) full_shape: TensorShape,
 }
 
 /// The stage hosting transformer layer `l` under the PP split rule:
@@ -190,7 +190,7 @@ pub(crate) fn stage_layer_count(n_layers: usize, pp: usize, stage: usize) -> usi
 /// Split the census into PP stages: layers round-robin by contiguous
 /// block ([`stage_of_layer`]), embedding on the first stage, head +
 /// final norm on the last.
-fn stage_census(census: &[Param], pp: usize) -> Vec<Vec<Param>> {
+pub(crate) fn stage_census(census: &[Param], pp: usize) -> Vec<Vec<Param>> {
     // Clamp like `Scenario::new` does: `pp = 0` through the pub field
     // would otherwise index an empty stage list.
     let pp = pp.max(1);
@@ -224,7 +224,7 @@ impl Param {
 
 /// Build the TP-local view of a stage: shard shapes for geometry, full
 /// shapes for task costing.
-fn local_view(stage: &[Param], tp: usize) -> Vec<LocalParam> {
+pub(crate) fn local_view(stage: &[Param], tp: usize) -> Vec<LocalParam> {
     tp_split(stage, tp)
         .into_iter()
         .map(|s| {
@@ -817,12 +817,12 @@ fn fill_loads(out: &mut Breakdown, s: &Scenario, table: &StageTable, worst: Opti
 /// comparison isolates the *fusion* benefit.
 fn unfused_plan(tasks: Vec<TpTask>, tp: usize) -> TpPlan {
     let mut order: Vec<usize> = (0..tasks.len()).collect();
-    order.sort_by(|&a, &b| tasks[b].cost.partial_cmp(&tasks[a].cost).unwrap());
+    order.sort_by(|&a, &b| tasks[b].cost.total_cmp(&tasks[a].cost));
     let mut loads = vec![0.0; tp];
     let mut groups = Vec::with_capacity(tasks.len());
     for i in order {
         let host = (0..tp)
-            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .min_by(|&a, &b| loads[a].total_cmp(&loads[b]))
             .unwrap();
         loads[host] += tasks[i].cost;
         let mut rank_loads = vec![0.0; tp];
@@ -1028,11 +1028,20 @@ pub fn simulate_iteration_cached(s: &Scenario, cache: &PlanCache) -> Breakdown {
 /// scenario's shape. Both contracts are enforced by the counting
 /// allocator in `tests/warm_alloc.rs`.
 pub fn simulate_iteration_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdown) {
-    if s.pp <= 1 && s.micro_batches <= 1 && s.straggler == 1.0 {
+    if closed_form_path(s) {
         simulate_closed_form_into(s, cache, out);
     } else {
         simulate_timeline_into(s, cache, out);
     }
+}
+
+/// The dispatch rule: does `s` take the closed-form single-stage fast
+/// path (vs the event-driven timeline engine)? The single source of
+/// truth shared by [`simulate_iteration_into`] and the optimizer-search
+/// lower bounds ([`crate::sim::bounds`]), which are tighter on the
+/// closed-form arm and must agree exactly with the dispatcher.
+pub(crate) fn closed_form_path(s: &Scenario) -> bool {
+    s.pp <= 1 && s.micro_batches <= 1 && s.straggler == 1.0
 }
 
 /// The closed-form single-stage playback (see the module docs) — the

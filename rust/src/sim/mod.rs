@@ -18,12 +18,16 @@
 //!   gradient communication + the per-strategy optimizer step, with a
 //!   closed-form `pp = 1` fast path and the timeline engine for
 //!   everything else.
+//! * [`bounds`] — admissible closed-form lower bounds on the playback's
+//!   objectives, for the `canzona optimize` branch-and-bound search.
 
+pub mod bounds;
 pub mod iteration;
 pub mod scenario;
 pub mod stream;
 pub mod timeline;
 
+pub use bounds::ScenarioBounds;
 pub use iteration::{
     simulate_iteration, simulate_iteration_cached, simulate_iteration_into,
     simulate_iteration_timeline, Breakdown, StageTable,

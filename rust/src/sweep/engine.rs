@@ -4,7 +4,7 @@
 //! fans scenarios out over `util::pool` and merges [`Breakdown`]s back in
 //! scenario order. A process-wide [`SweepEngine::global`] instance backs
 //! the figure harnesses, so `experiments::run("all")` shares one warm
-//! cache across all fourteen harnesses.
+//! cache across all fifteen harnesses.
 //!
 //! Warm-path mechanics: `util::pool`'s workers are **persistent**
 //! (long-lived threads serving every batch for the life of the

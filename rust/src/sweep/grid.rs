@@ -70,15 +70,18 @@ fn parse_list<T, F: Fn(&str) -> Option<T>>(
     what: &str,
     parse: F,
 ) -> Result<Vec<T>> {
-    let items: Vec<T> = raw
-        .split(',')
-        .filter(|s| !s.is_empty())
-        .map(|s| parse(s.trim()).ok_or_else(|| err!("invalid {what} value {s:?}")))
-        .collect::<Result<_>>()?;
-    if items.is_empty() {
-        bail!("--{what} list is empty");
+    // Empty segments are an error everywhere, not just when the whole
+    // list is empty: `--dp 1,,2` used to silently drop the hole while
+    // `--dp ,` errored. A `split(',')` always yields at least one
+    // segment, so this also covers the empty-list case.
+    let segments: Vec<&str> = raw.split(',').map(str::trim).collect();
+    if segments.iter().any(|s| s.is_empty()) {
+        bail!("--{what} has an empty element in {raw:?}");
     }
-    Ok(items)
+    segments
+        .iter()
+        .map(|s| parse(s).ok_or_else(|| err!("invalid {what} value {s:?}")))
+        .collect()
 }
 
 /// Positive integer axis value (0 would panic deep in the planners).
@@ -266,6 +269,18 @@ mod tests {
         assert!(SweepGrid::parse(&argv("--schedule zigzag")).is_err());
         assert!(SweepGrid::parse(&argv("--straggler 0.5")).is_err());
         assert!(SweepGrid::parse(&argv("--straggler nan")).is_err());
+    }
+
+    #[test]
+    fn rejects_interior_empty_segments() {
+        // Pre-fix: empty segments were filtered before validation, so
+        // `--dp 1,,2` passed while `--dp ,` errored.
+        assert!(SweepGrid::parse(&argv("--dp 1,,2")).is_err());
+        assert!(SweepGrid::parse(&argv("--tp 2,")).is_err());
+        assert!(SweepGrid::parse(&argv("--optims ,muon")).is_err());
+        assert!(SweepGrid::parse(&argv("--alphas 0.5,,1.0")).is_err());
+        // Well-formed lists still parse.
+        assert!(SweepGrid::parse(&argv("--dp 1,2")).is_ok());
     }
 
     #[test]

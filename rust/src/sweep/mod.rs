@@ -18,6 +18,10 @@
 //! * [`diff`] — baseline diffing: join a sweep against a prior JSON
 //!   artifact, print speedup columns, exit nonzero on regression
 //!   (`canzona sweep --baseline`).
+//! * [`optimize`] — best-first branch-and-bound search over a grid
+//!   (`canzona optimize`): admissible lower bounds from
+//!   [`crate::sim::bounds`] prune the space while returning the exact
+//!   exhaustive argmin, plus a Pareto frontier artifact.
 //!
 //! Every `experiments::figures` harness runs on [`engine::SweepEngine::global`],
 //! and the `canzona sweep` CLI subcommand exposes ad-hoc grids.
@@ -28,8 +32,13 @@ pub mod cache;
 pub mod diff;
 pub mod engine;
 pub mod grid;
+pub mod optimize;
 
 pub use cache::{CacheStats, DpKey, PlanCache, StageKey, TpKey};
 pub use diff::{DiffRow, SweepDiff};
 pub use engine::{render_json, render_table, SweepEngine};
 pub use grid::SweepGrid;
+pub use optimize::{
+    optimize, render_optimize_json, render_optimize_table, EvaluatedScenario, Objective,
+    OptimizeOptions, OptimizeResult,
+};

@@ -1,0 +1,518 @@
+//! Best-first branch-and-bound configuration search (`canzona optimize`).
+//!
+//! Given a [`SweepGrid`] (the model / cluster-shape / optimizer /
+//! strategy / α / C_max space) and an [`Objective`], find the grid's
+//! argmin without exhaustively simulating it. Every leaf gets an
+//! admissible lower bound from [`ScenarioBounds`] (cheap closed-form
+//! census arithmetic); leaves are then evaluated best-bound-first
+//! through the engine's warm zero-alloc path
+//! ([`SweepEngine::eval`] → `simulate_iteration_into` on the
+//! persistent `util::pool` workers, plan-cache L1 reads), and the
+//! search stops at the first leaf whose bound exceeds the incumbent —
+//! in bound order, every later leaf is pruned too.
+//!
+//! **Exactness.** Pruning is on strict `bound > incumbent`, and bounds
+//! never exceed true values, so a pruned leaf's value is `>` the final
+//! incumbent: it can't win, not even a tie. Ties among *evaluated*
+//! leaves break on the smaller grid index — exactly the exhaustive
+//! `run_grid` + argmin rule — so the winner is bit-identical to the
+//! exhaustive one for *any* batch size. The set of *evaluated* leaves
+//! (and hence the reported frontier) does depend on the batch size;
+//! tests that pin the frontier pin [`OptimizeOptions::batch`] too.
+//! `tests/optimize_differential.rs` enforces both properties.
+//!
+//! The result carries a Pareto frontier over the evaluated leaves
+//! (iteration time × optimizer-state memory × bubble fraction) plus the
+//! winner; [`render_optimize_json`] reuses the sweep's
+//! [`render_json`] row shape so `canzona optimize --baseline` joins
+//! through the same [`SweepDiff`] machinery as `sweep`.
+//!
+//! [`SweepDiff`]: crate::sweep::SweepDiff
+
+use std::cmp::Ordering;
+
+use crate::sim::{Breakdown, Scenario, ScenarioBounds};
+use crate::util::error::Result;
+use crate::util::json::Value;
+use crate::util::stats::load_balance_ratio;
+use crate::util::table::{ratio, secs, Table};
+use crate::{bail, err};
+
+use super::engine::{render_json, SweepEngine};
+use super::grid::SweepGrid;
+
+/// What the search minimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// End-to-end iteration time (`Breakdown::total_s`).
+    IterTime,
+    /// Optimizer step wall time (`Breakdown::optimizer_s`).
+    OptimizerLatency,
+    /// Pacing stage's worst per-DP-rank optimizer state bytes
+    /// (`max(Breakdown::dp_loads_state)`).
+    Memory,
+}
+
+impl Objective {
+    /// Parse a `--objective` value (`iter-time` / `optimizer-latency` /
+    /// `memory`).
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "iter-time" => Some(Objective::IterTime),
+            "optimizer-latency" => Some(Objective::OptimizerLatency),
+            "memory" => Some(Objective::Memory),
+            _ => None,
+        }
+    }
+
+    /// CLI / artifact label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Objective::IterTime => "iter-time",
+            Objective::OptimizerLatency => "optimizer-latency",
+            Objective::Memory => "memory",
+        }
+    }
+
+    /// The objective's value on a simulated breakdown.
+    pub fn value(self, b: &Breakdown) -> f64 {
+        match self {
+            Objective::IterTime => b.total_s,
+            Objective::OptimizerLatency => b.optimizer_s,
+            Objective::Memory => b.dp_loads_state.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    /// The objective's admissible lower bound for a scenario.
+    pub fn bound(self, bounds: &mut ScenarioBounds, s: &Scenario) -> f64 {
+        match self {
+            Objective::IterTime => bounds.iter_time(s),
+            Objective::OptimizerLatency => bounds.optimizer_latency(s),
+            Objective::Memory => bounds.memory(s),
+        }
+    }
+}
+
+/// Search knobs beyond the grid itself.
+#[derive(Clone, Copy, Debug)]
+pub struct OptimizeOptions {
+    /// What to minimize.
+    pub objective: Objective,
+    /// Keep only scenarios with exactly this many GPUs (`dp*tp*pp`).
+    pub gpus: Option<usize>,
+    /// `false` = evaluate the whole space (exact frontier, no pruning)
+    /// — the `--exhaustive` mode and the differential tests' oracle.
+    pub prune: bool,
+    /// Leaves evaluated per engine batch (`0` = the engine's worker
+    /// count). The winner is batch-size-invariant; the evaluated set
+    /// is not (a larger batch can evaluate leaves a smaller one would
+    /// have pruned).
+    pub batch: usize,
+}
+
+impl Default for OptimizeOptions {
+    fn default() -> OptimizeOptions {
+        OptimizeOptions { objective: Objective::IterTime, gpus: None, prune: true, batch: 0 }
+    }
+}
+
+/// One simulated leaf of the search.
+#[derive(Clone, Debug)]
+pub struct EvaluatedScenario {
+    /// Index into the grid's [`SweepGrid::scenarios`] expansion.
+    pub grid_index: usize,
+    /// The scenario itself.
+    pub scenario: Scenario,
+    /// Its full simulation result.
+    pub breakdown: Breakdown,
+    /// The objective's value on `breakdown`.
+    pub value: f64,
+    /// The admissible lower bound the search ordered this leaf by.
+    pub bound: f64,
+}
+
+/// Outcome of one [`optimize`] search.
+#[derive(Clone, Debug)]
+pub struct OptimizeResult {
+    /// What was minimized.
+    pub objective: Objective,
+    /// Full grid cross-product size (before the `--gpus` filter).
+    pub grid_len: usize,
+    /// Search-space size after the `--gpus` filter.
+    pub space: usize,
+    /// Every simulated leaf, sorted by grid index.
+    pub evaluated: Vec<EvaluatedScenario>,
+    /// Index into `evaluated` of the objective argmin (exhaustive-
+    /// identical: min value, ties to the smallest grid index).
+    pub winner: usize,
+    /// Indices into `evaluated` forming the Pareto frontier over
+    /// (total time, optimizer-state memory, bubble fraction). Exact
+    /// duplicates keep their first grid index; the winner is always
+    /// included even if a tied leaf dominates it on secondary metrics.
+    /// Globally exact only when `prune` was off — under pruning it is
+    /// the frontier *of the evaluated set*.
+    pub frontier: Vec<usize>,
+    /// Leaves skipped by the bound cut (`space - evaluated.len()`).
+    pub pruned: usize,
+}
+
+/// The (minimize-all) metric triple the frontier is computed over.
+fn frontier_metrics(b: &Breakdown) -> [f64; 3] {
+    let mem = b.dp_loads_state.iter().cloned().fold(0.0, f64::max);
+    let bubble_frac = if b.fwd_bwd_s > 0.0 { b.bubble_s / b.fwd_bwd_s } else { 0.0 };
+    [b.total_s, mem, bubble_frac]
+}
+
+/// `a` Pareto-dominates `b`: no worse everywhere, better somewhere.
+fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+}
+
+/// Non-dominated indices of `evaluated` (first grid index kept among
+/// exact-duplicate triples), with `winner` force-included.
+fn pareto_frontier(evaluated: &[EvaluatedScenario], winner: usize) -> Vec<usize> {
+    let ms: Vec<[f64; 3]> = evaluated.iter().map(|e| frontier_metrics(&e.breakdown)).collect();
+    let mut out = Vec::new();
+    'cand: for i in 0..ms.len() {
+        for j in 0..ms.len() {
+            if j != i && dominates(&ms[j], &ms[i]) {
+                continue 'cand;
+            }
+            if j < i && ms[j] == ms[i] {
+                continue 'cand; // duplicate triple: keep the first
+            }
+        }
+        out.push(i);
+    }
+    if !out.contains(&winner) {
+        let at = out.partition_point(|&i| i < winner);
+        out.insert(at, winner);
+    }
+    out
+}
+
+/// The objective's value with the search's finiteness contract: a NaN
+/// or infinite simulated value is a loud error, not a silent winner —
+/// the surfacing end of the planners' `total_cmp` hardening.
+fn finite_value(objective: Objective, b: &Breakdown, s: &Scenario) -> Result<f64> {
+    let v = objective.value(b);
+    if !v.is_finite() {
+        bail!(
+            "optimize: non-finite {} value {v} for {} dp{} tp{} pp{} {} {}",
+            objective.label(),
+            s.label,
+            s.dp,
+            s.tp,
+            s.pp,
+            s.optim.label(),
+            s.strategy.label()
+        );
+    }
+    Ok(v)
+}
+
+/// Run the best-first search (see the module docs for the exactness
+/// argument). Errors on an empty grid, an unsatisfiable `--gpus`
+/// filter, or a non-finite objective value.
+pub fn optimize(
+    engine: &SweepEngine,
+    grid: &SweepGrid,
+    opts: &OptimizeOptions,
+) -> Result<OptimizeResult> {
+    let all = grid.scenarios();
+    let grid_len = all.len();
+    if grid_len == 0 {
+        bail!("optimize: empty grid");
+    }
+    let leaves: Vec<(usize, Scenario)> = all
+        .into_iter()
+        .enumerate()
+        .filter(|(_, s)| opts.gpus.is_none_or(|g| s.gpus() == g))
+        .collect();
+    if leaves.is_empty() {
+        let g = opts.gpus.unwrap_or(0);
+        bail!("optimize: no grid point has dp*tp*pp == {g} (--gpus)");
+    }
+    let space = leaves.len();
+
+    // Bound every leaf, then visit in (bound, grid index) order: the
+    // first leaf whose bound exceeds the incumbent ends the search.
+    let mut bounds = ScenarioBounds::new();
+    let bound_of: Vec<f64> =
+        leaves.iter().map(|(_, s)| opts.objective.bound(&mut bounds, s)).collect();
+    let mut order: Vec<usize> = (0..space).collect();
+    order.sort_by(|&a, &b| {
+        bound_of[a].total_cmp(&bound_of[b]).then(leaves[a].0.cmp(&leaves[b].0))
+    });
+
+    let batch = if opts.batch == 0 { engine.threads() } else { opts.batch };
+    let mut evaluated: Vec<EvaluatedScenario> = Vec::new();
+    // (value, grid index) — the exhaustive argmin's tie-break key. The
+    // value component only decreases, so the bound cut is final.
+    let mut incumbent: Option<(f64, usize)> = None;
+    let mut cursor = 0usize;
+    let mut cut = false;
+    while cursor < order.len() && !cut {
+        let mut batch_ids: Vec<usize> = Vec::with_capacity(batch);
+        while cursor < order.len() && batch_ids.len() < batch {
+            let li = order[cursor];
+            if opts.prune {
+                if let Some((inc, _)) = incumbent {
+                    if bound_of[li] > inc {
+                        cut = true; // sorted: every later leaf prunes too
+                        break;
+                    }
+                }
+            }
+            batch_ids.push(li);
+            cursor += 1;
+        }
+        if batch_ids.is_empty() {
+            break;
+        }
+        let scens: Vec<Scenario> = batch_ids.iter().map(|&li| leaves[li].1.clone()).collect();
+        let breaks = engine.eval(&scens);
+        for ((&li, scenario), breakdown) in batch_ids.iter().zip(scens).zip(breaks) {
+            let grid_index = leaves[li].0;
+            let value = finite_value(opts.objective, &breakdown, &scenario)?;
+            let better = match incumbent {
+                None => true,
+                Some((inc, wgi)) => match value.total_cmp(&inc) {
+                    Ordering::Less => true,
+                    Ordering::Equal => grid_index < wgi,
+                    Ordering::Greater => false,
+                },
+            };
+            if better {
+                incumbent = Some((value, grid_index));
+            }
+            evaluated
+                .push(EvaluatedScenario { grid_index, scenario, breakdown, value, bound: bound_of[li] });
+        }
+    }
+
+    evaluated.sort_by_key(|e| e.grid_index);
+    let pruned = space - evaluated.len();
+    let (_, winner_gi) = incumbent.ok_or_else(|| err!("optimize: nothing evaluated"))?;
+    let winner = evaluated
+        .iter()
+        .position(|e| e.grid_index == winner_gi)
+        .expect("winner is an evaluated leaf");
+    let frontier = pareto_frontier(&evaluated, winner);
+    Ok(OptimizeResult {
+        objective: opts.objective,
+        grid_len,
+        space,
+        evaluated,
+        winner,
+        frontier,
+        pruned,
+    })
+}
+
+/// Render the frontier (winner starred) as one Markdown table.
+pub fn render_optimize_table(r: &OptimizeResult) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Optimize [{}] — {} evaluated / {} space ({} pruned)",
+            r.objective.label(),
+            r.evaluated.len(),
+            r.space,
+            r.pruned
+        ),
+        &["", "model", "DP", "TP", "PP", "mb", "optim", "strategy", "alpha", "C_max",
+          "fwd-bwd", "optimizer", "total", "bubble", "state/rank", "DP LB", "value",
+          "bound"],
+    );
+    for &i in &r.frontier {
+        let e = &r.evaluated[i];
+        let (s, b) = (&e.scenario, &e.breakdown);
+        let mem = b.dp_loads_state.iter().cloned().fold(0.0, f64::max);
+        t.row(vec![
+            if i == r.winner { "*".into() } else { String::new() },
+            s.label.clone(),
+            s.dp.to_string(),
+            s.tp.to_string(),
+            s.pp.to_string(),
+            s.micro_batches.to_string(),
+            s.optim.label().into(),
+            s.strategy.label().into(),
+            format!("{:.2}", s.alpha),
+            match s.c_max_bytes {
+                None => "no-fuse".into(),
+                Some(c) => format!("{:.0}MB", c / 1e6),
+            },
+            secs(b.fwd_bwd_s),
+            secs(b.optimizer_s),
+            secs(b.total_s),
+            secs(b.bubble_s),
+            format!("{:.2}GB", mem / 1e9),
+            ratio(load_balance_ratio(&b.dp_loads_flops)),
+            secs(e.value),
+            secs(e.bound),
+        ]);
+    }
+    t
+}
+
+/// Render the search as a JSON artifact. The frontier rows live under
+/// `"scenarios"` in the sweep's exact [`render_json`] row shape, so a
+/// saved artifact feeds straight back into `--baseline` joins
+/// ([`crate::sweep::SweepDiff`]); `"winner"`, `"objective"`, and the
+/// `"search"` counters ride alongside.
+pub fn render_optimize_json(r: &OptimizeResult) -> Value {
+    let scens: Vec<Scenario> =
+        r.frontier.iter().map(|&i| r.evaluated[i].scenario.clone()).collect();
+    let breaks: Vec<Breakdown> =
+        r.frontier.iter().map(|&i| r.evaluated[i].breakdown.clone()).collect();
+    let mut v = render_json(&scens, &breaks);
+    let w = &r.evaluated[r.winner];
+    let winner_row = render_json(
+        std::slice::from_ref(&w.scenario),
+        std::slice::from_ref(&w.breakdown),
+    )
+    .get("scenarios")
+    .and_then(|rows| Ok(rows.as_arr()?[0].clone()))
+    .expect("render_json yields one row per scenario");
+    if let Value::Obj(m) = &mut v {
+        m.insert("objective".to_string(), Value::str(r.objective.label()));
+        m.insert("winner".to_string(), winner_row);
+        m.insert(
+            "search".to_string(),
+            Value::obj(vec![
+                ("grid", Value::num(r.grid_len as f64)),
+                ("space", Value::num(r.space as f64)),
+                ("evaluated", Value::num(r.evaluated.len() as f64)),
+                ("pruned", Value::num(r.pruned as f64)),
+            ]),
+        );
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optim::{CostMetric, OptimKind};
+    use crate::model::qwen3::Qwen3Size;
+    use crate::partition::DpStrategy;
+    use crate::sim::PipelineSchedule;
+
+    fn small_grid() -> SweepGrid {
+        SweepGrid {
+            models: vec![Qwen3Size::S1_7B],
+            dp: vec![4],
+            tp: vec![2],
+            pp: vec![1],
+            micro_batches: vec![1],
+            schedules: vec![PipelineSchedule::OneFOneB],
+            stragglers: vec![1.0],
+            optims: vec![OptimKind::Muon],
+            strategies: vec![
+                DpStrategy::Sc,
+                DpStrategy::NvLayerwise,
+                DpStrategy::Asc,
+                DpStrategy::LbAsc,
+            ],
+            alphas: vec![1.0],
+            c_max_mb: vec![Some(256.0)],
+            metric: CostMetric::Numel,
+        }
+    }
+
+    #[test]
+    fn objective_parse_and_labels() {
+        for o in [Objective::IterTime, Objective::OptimizerLatency, Objective::Memory] {
+            assert_eq!(Objective::parse(o.label()), Some(o));
+        }
+        assert_eq!(Objective::parse("ITER-TIME"), Some(Objective::IterTime));
+        assert_eq!(Objective::parse("vibes"), None);
+    }
+
+    #[test]
+    fn non_finite_value_is_an_error() {
+        let s = Scenario::paper_default();
+        let mut b = Breakdown { total_s: f64::NAN, ..Breakdown::default() };
+        assert!(finite_value(Objective::IterTime, &b, &s).is_err());
+        b.total_s = f64::INFINITY;
+        assert!(finite_value(Objective::IterTime, &b, &s).is_err());
+        b.total_s = 1.5;
+        assert_eq!(finite_value(Objective::IterTime, &b, &s).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn search_finds_a_winner_and_accounts_for_every_leaf() {
+        let engine = SweepEngine::new(2);
+        let opts = OptimizeOptions {
+            objective: Objective::OptimizerLatency,
+            batch: 1,
+            ..OptimizeOptions::default()
+        };
+        let r = optimize(&engine, &small_grid(), &opts).unwrap();
+        assert_eq!(r.grid_len, 4);
+        assert_eq!(r.space, 4);
+        assert_eq!(r.evaluated.len() + r.pruned, r.space);
+        assert!(r.frontier.contains(&r.winner));
+        let w = &r.evaluated[r.winner];
+        for e in &r.evaluated {
+            assert!(
+                (w.value, w.grid_index) <= (e.value, e.grid_index),
+                "winner not minimal"
+            );
+            assert!(e.bound <= e.value + 1e-12, "inadmissible bound for #{}", e.grid_index);
+        }
+    }
+
+    #[test]
+    fn gpus_filter_restricts_and_errors_when_empty() {
+        let engine = SweepEngine::new(2);
+        let mut grid = small_grid();
+        grid.dp = vec![4, 8];
+        let opts =
+            OptimizeOptions { gpus: Some(8), batch: 1, ..OptimizeOptions::default() };
+        let r = optimize(&engine, &grid, &opts).unwrap();
+        assert_eq!(r.grid_len, 8);
+        assert_eq!(r.space, 4);
+        assert!(r.evaluated.iter().all(|e| e.scenario.gpus() == 8));
+        let bad = OptimizeOptions { gpus: Some(7), ..OptimizeOptions::default() };
+        assert!(optimize(&engine, &grid, &bad).is_err());
+    }
+
+    #[test]
+    fn json_artifact_shape_round_trips() {
+        let engine = SweepEngine::new(2);
+        let opts = OptimizeOptions { batch: 1, ..OptimizeOptions::default() };
+        let r = optimize(&engine, &small_grid(), &opts).unwrap();
+        let v = render_optimize_json(&r);
+        assert_eq!(v.get("objective").unwrap().as_str().unwrap(), "iter-time");
+        let rows = v.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), r.frontier.len());
+        assert!(v.get("winner").unwrap().get("total_s").unwrap().as_f64().unwrap() > 0.0);
+        let search = v.get("search").unwrap();
+        assert_eq!(search.get("space").unwrap().as_usize().unwrap(), r.space);
+        assert_eq!(
+            search.get("evaluated").unwrap().as_usize().unwrap(),
+            r.evaluated.len()
+        );
+        assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
+        // Table renders one line per frontier row.
+        let t = render_optimize_table(&r);
+        assert!(t.render().contains("Optimize [iter-time]"));
+    }
+
+    #[test]
+    fn dominance_and_duplicates() {
+        let mk = |total: f64, mem: f64| {
+            let mut b = Breakdown { total_s: total, fwd_bwd_s: 1.0, ..Breakdown::default() };
+            b.dp_loads_state = vec![mem];
+            b
+        };
+        let a = frontier_metrics(&mk(1.0, 5.0));
+        let b = frontier_metrics(&mk(2.0, 5.0));
+        let c = frontier_metrics(&mk(2.0, 4.0));
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&b, &c) && !dominates(&c, &b));
+        assert!(!dominates(&a, &a), "no self-domination on equal triples");
+    }
+}

@@ -23,6 +23,12 @@ impl Args {
         while let Some(arg) = it.next() {
             if let Some(body) = arg.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
+                    // Check flag names on the key *before* routing to
+                    // options: `--verbose=x` used to land in `options`
+                    // silently, so `flag("verbose")` returned false.
+                    if flag_names.contains(&k) {
+                        bail!("flag --{k} takes no value (got --{k}={v})");
+                    }
                     out.options.insert(k.to_string(), v.to_string());
                 } else if flag_names.contains(&body) {
                     out.flags.push(body.to_string());
@@ -100,6 +106,23 @@ mod tests {
     fn bad_number_errors() {
         let a = Args::parse(argv("--steps abc"), &[]).unwrap();
         assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn eq_form_flag_errors() {
+        // Pre-fix: `--verbose=1` landed in `options` and flag("verbose")
+        // silently returned false. Now a valueless flag in `=` form is a
+        // loud parse error.
+        let e = Args::parse(argv("--verbose=1"), &["verbose"]).unwrap_err();
+        assert!(e.to_string().contains("verbose"), "{e}");
+        assert!(Args::parse(argv("run --verbose=true"), &["verbose"]).is_err());
+        // Plain flags and `=`-form options still coexist.
+        let a = Args::parse(argv("--verbose --alpha=0.5"), &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.5);
+        // `=` in an ordinary option's value is untouched.
+        let a = Args::parse(argv("--filter key=value"), &["verbose"]).unwrap();
+        assert_eq!(a.get("filter"), Some("key=value"));
     }
 
     #[test]

@@ -108,7 +108,12 @@ impl fmt::Display for Value {
             Value::Null => write!(f, "null"),
             Value::Bool(b) => write!(f, "{b}"),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                // JSON has no NaN/Infinity literals — `Value::parse`
+                // rejects them — so non-finite values serialize as null
+                // to keep every emitted artifact re-parseable.
+                if !n.is_finite() {
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -278,15 +283,7 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
-                        b'u' => {
-                            if self.pos + 4 > self.bytes.len() {
-                                bail!("truncated \\u escape");
-                            }
-                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
-                            let code = u32::from_str_radix(hex, 16)?;
-                            self.pos += 4;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                        }
+                        b'u' => out.push(self.unicode_escape()?),
                         c => bail!("bad escape \\{}", c as char),
                     }
                 }
@@ -301,6 +298,45 @@ impl<'a> Parser<'a> {
                     out.push_str(std::str::from_utf8(&self.bytes[start..self.pos])?);
                 }
             }
+        }
+    }
+
+    /// Four hex digits of a `\uXXXX` escape (the `\u` already consumed).
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+        let code = u32::from_str_radix(hex, 16)?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    /// Decode one `\uXXXX` escape into a char. JSON encodes non-BMP code
+    /// points as UTF-16 surrogate pairs (U+1F600 arrives as
+    /// `\ud83d\ude00`), so a high surrogate must consume a following
+    /// `\uDC00..\uDFFF` escape and combine; surrogates with no valid
+    /// partner decode to U+FFFD.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let code = self.hex4()?;
+        match code {
+            0xD800..=0xDBFF => {
+                let save = self.pos;
+                if self.bytes[self.pos..].starts_with(b"\\u") {
+                    self.pos += 2;
+                    let lo = self.hex4()?;
+                    if (0xDC00..=0xDFFF).contains(&lo) {
+                        let cp = 0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                        return Ok(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                    }
+                    // Not a low surrogate: rewind so the next escape is
+                    // decoded on its own, and replace the lone high half.
+                    self.pos = save;
+                }
+                Ok('\u{fffd}')
+            }
+            0xDC00..=0xDFFF => Ok('\u{fffd}'), // lone low surrogate
+            c => Ok(char::from_u32(c).unwrap_or('\u{fffd}')),
         }
     }
 
@@ -380,5 +416,101 @@ mod tests {
     fn display_escapes() {
         let v = Value::Str("a\"b\\c\nd".to_string());
         assert_eq!(v.to_string(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        // Pre-fix: each half decoded independently to U+FFFD U+FFFD.
+        let v = Value::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+        // Case-insensitive hex, embedded in surrounding text.
+        let v = Value::parse("\"a\\uD83D\\uDE00b\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\u{1F600}b");
+        // Round trip: the writer emits raw UTF-8, the parser reads it back.
+        let v = Value::str("\u{1F600} caf\u{e9}");
+        assert_eq!(Value::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn lone_surrogates_replace() {
+        assert_eq!(Value::parse(r#""\ud800""#).unwrap().as_str().unwrap(), "\u{fffd}");
+        assert_eq!(Value::parse(r#""\udc00""#).unwrap().as_str().unwrap(), "\u{fffd}");
+        // High surrogate followed by a non-surrogate escape: replace the
+        // lone half, then decode the second escape on its own.
+        let v = Value::parse(r#""\ud800A""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{fffd}A");
+        // High surrogate followed by literal text.
+        assert_eq!(Value::parse(r#""\ud800x""#).unwrap().as_str().unwrap(), "\u{fffd}x");
+        // Truncated pair tail still errors like any truncated escape.
+        assert!(Value::parse(r#""\ud83d\ud"#).is_err());
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        // Pre-fix: "NaN"/"inf"/"-inf" — invalid JSON that Value::parse
+        // itself rejects, silently breaking --baseline artifacts.
+        assert_eq!(Value::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_string(), "null");
+        let v = Value::arr(vec![Value::Num(f64::NAN), Value::num(1.5)]);
+        assert_eq!(
+            Value::parse(&v.to_string()).unwrap(),
+            Value::arr(vec![Value::Null, Value::num(1.5)]),
+        );
+    }
+
+    /// A random `Value` tree; depth-limited so generation terminates.
+    fn gen_value(rng: &mut crate::util::rng::Rng, depth: usize) -> Value {
+        match rng.index(if depth >= 3 { 4 } else { 6 }) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.index(2) == 0),
+            2 => {
+                let specials = [
+                    f64::NAN, f64::INFINITY, f64::NEG_INFINITY,
+                    0.0, -0.0, -1.5, 3.25e-4, 9.9e18, -9.9e18,
+                ];
+                if rng.index(3) == 0 {
+                    Value::Num(specials[rng.index(specials.len())])
+                } else {
+                    Value::Num((rng.next_f64() - 0.5) * 1e6)
+                }
+            }
+            3 => {
+                let pool = ["", "plain", "esc\"\\\n\t\r", "caf\u{e9}",
+                            "emoji \u{1F600}", "\u{fffd}", "nul\u{0}byte"];
+                Value::str(pool[rng.index(pool.len())])
+            }
+            4 => Value::arr((0..rng.index(4)).map(|_| gen_value(rng, depth + 1))),
+            _ => Value::Obj(
+                (0..rng.index(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// What a serialize/parse round trip is specified to preserve:
+    /// everything, except non-finite numbers collapse to null.
+    fn normalize(v: &Value) -> Value {
+        match v {
+            Value::Num(n) if !n.is_finite() => Value::Null,
+            Value::Arr(a) => Value::Arr(a.iter().map(normalize).collect()),
+            Value::Obj(m) => {
+                Value::Obj(m.iter().map(|(k, x)| (k.clone(), normalize(x))).collect())
+            }
+            other => other.clone(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_generated_values() {
+        let mut rng = crate::util::rng::Rng::new(2024);
+        for _ in 0..300 {
+            let v = gen_value(&mut rng, 0);
+            let text = v.to_string();
+            let back = Value::parse(&text)
+                .unwrap_or_else(|e| panic!("unparseable {text:?}: {e}"));
+            assert_eq!(back, normalize(&v), "round-trip mismatch for {text:?}");
+        }
     }
 }

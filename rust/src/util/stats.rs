@@ -44,7 +44,8 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN sorts to a fixed end instead of panicking.
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
 }
@@ -78,6 +79,16 @@ mod tests {
         assert_eq!(max(&xs), 4.0);
         assert_eq!(min(&xs), 1.0);
         assert!((stddev(&xs) - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_nan_does_not_panic() {
+        // Pre-fix: partial_cmp().unwrap() panicked on the first NaN.
+        // Positive NaN total_cmp-sorts above +inf, so low percentiles
+        // still return the finite values.
+        let xs = [3.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
     }
 
     #[test]

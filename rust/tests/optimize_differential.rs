@@ -1,0 +1,264 @@
+//! Differential oracle for the branch-and-bound optimizer search:
+//! [`optimize`] must return the *bit-identical* winner the exhaustive
+//! `SweepEngine::run_grid` + argmin oracle finds, while evaluating
+//! strictly fewer scenarios (the bounds must actually prune on grids
+//! designed with fat bound/actual margins). Also pins the tie-break
+//! rule (equal values resolve to the smallest grid index — never
+//! pruned, because pruning is on strict `bound > incumbent`) and the
+//! Pareto-frontier contract in exhaustive mode.
+
+use std::cmp::Ordering;
+
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::{Breakdown, PipelineSchedule};
+use canzona::sweep::{
+    optimize, Objective, OptimizeOptions, OptimizeResult, SweepEngine, SweepGrid,
+};
+
+/// A 1-point Qwen3-1.7B grid the tests override axes on.
+fn base_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![4],
+        tp: vec![2],
+        pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    }
+}
+
+/// Bit-level Breakdown equality over every field except `planning_s`
+/// (wall-clock cache-fetch latency — not a simulation output).
+fn assert_bits_eq(label: &str, a: &Breakdown, b: &Breakdown) {
+    for (field, x, y) in [
+        ("fwd_bwd_s", a.fwd_bwd_s, b.fwd_bwd_s),
+        ("optimizer_s", a.optimizer_s, b.optimizer_s),
+        ("total_s", a.total_s, b.total_s),
+        ("adamw_ref_s", a.adamw_ref_s, b.adamw_ref_s),
+        ("exposed_comm_s", a.exposed_comm_s, b.exposed_comm_s),
+        ("grad_comm_bytes", a.grad_comm_bytes, b.grad_comm_bytes),
+        ("bubble_s", a.bubble_s, b.bubble_s),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: {field} {x} vs {y}");
+    }
+    for (field, xs, ys) in [
+        ("dp_loads_flops", &a.dp_loads_flops, &b.dp_loads_flops),
+        ("dp_loads_state", &a.dp_loads_state, &b.dp_loads_state),
+        ("tp_loads_flops", &a.tp_loads_flops, &b.tp_loads_flops),
+        ("tp_loads_state", &a.tp_loads_state, &b.tp_loads_state),
+    ] {
+        assert_eq!(xs.len(), ys.len(), "{label}: {field} length");
+        for (i, (x, y)) in xs.iter().zip(ys.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: {field}[{i}] {x} vs {y}");
+        }
+    }
+    assert_eq!(a.n_micro_groups, b.n_micro_groups, "{label}: n_micro_groups");
+}
+
+/// The oracle: evaluate the whole grid, argmin by (value, grid index).
+fn exhaustive_argmin(grid: &SweepGrid, obj: Objective) -> (usize, Breakdown) {
+    let engine = SweepEngine::new(2);
+    let (_, breakdowns) = engine.run_grid(grid);
+    let mut best: Option<(f64, usize)> = None;
+    for (i, b) in breakdowns.iter().enumerate() {
+        let v = obj.value(b);
+        assert!(v.is_finite(), "oracle hit a non-finite value at #{i}");
+        let better = match best {
+            None => true,
+            // First strict improvement only: ties keep the earlier index.
+            Some((bv, _)) => v.total_cmp(&bv) == Ordering::Less,
+        };
+        if better {
+            best = Some((v, i));
+        }
+    }
+    let (_, i) = best.expect("non-empty grid");
+    (i, breakdowns[i].clone())
+}
+
+/// Run the search (fresh engine, pinned batch) and check the two hard
+/// invariants against the oracle: bit-identical winner, strictly fewer
+/// evaluations. Returns the result for extra per-grid assertions.
+fn check_grid(label: &str, grid: &SweepGrid, obj: Objective) -> OptimizeResult {
+    let (oracle_idx, oracle_b) = exhaustive_argmin(grid, obj);
+    let engine = SweepEngine::new(2);
+    let opts = OptimizeOptions { objective: obj, batch: 1, ..OptimizeOptions::default() };
+    let r = optimize(&engine, grid, &opts).unwrap();
+    let w = &r.evaluated[r.winner];
+    assert_eq!(w.grid_index, oracle_idx, "{label}: winner index");
+    assert_bits_eq(label, &oracle_b, &w.breakdown);
+    assert!(
+        r.evaluated.len() < r.space,
+        "{label}: no pruning ({} of {} evaluated)",
+        r.evaluated.len(),
+        r.space
+    );
+    assert_eq!(r.evaluated.len() + r.pruned, r.space, "{label}: leaf accounting");
+    for e in &r.evaluated {
+        assert!(
+            e.bound <= e.value + 1e-12,
+            "{label}: inadmissible bound {} > value {} at #{}",
+            e.bound,
+            e.value,
+            e.grid_index
+        );
+    }
+    r
+}
+
+#[test]
+fn strategy_grid_optimizer_latency() {
+    // SC's bound (full redundant matrix update, ~F/gpu) dwarfs LB-ASC's
+    // actual step, so the strategy axis must prune.
+    let mut grid = base_grid();
+    grid.strategies = vec![
+        DpStrategy::Sc,
+        DpStrategy::NvLayerwise,
+        DpStrategy::Asc,
+        DpStrategy::LbAsc,
+    ];
+    check_grid("strategies", &grid, Objective::OptimizerLatency);
+}
+
+#[test]
+fn pipeline_grid_iter_time() {
+    // Micro-batches multiply total compute, so the mb=32 leaves' time
+    // bounds sit far above any mb=1 actual: both must prune.
+    let mut grid = base_grid();
+    grid.pp = vec![1, 2];
+    grid.micro_batches = vec![1, 32];
+    let r = check_grid("pipeline", &grid, Objective::IterTime);
+    assert!(
+        r.evaluated.iter().all(|e| e.scenario.micro_batches == 1),
+        "mb=32 leaves must never be evaluated"
+    );
+}
+
+#[test]
+fn optimizer_by_strategy_grid() {
+    let mut grid = base_grid();
+    grid.optims = vec![OptimKind::Muon, OptimKind::Shampoo];
+    grid.strategies = vec![DpStrategy::Sc, DpStrategy::LbAsc];
+    check_grid("optims x strategies", &grid, Objective::OptimizerLatency);
+}
+
+#[test]
+fn memory_objective_grid() {
+    // SC replicates the full SOAP state on every rank; its bound alone
+    // (matrix state, ignoring element-wise) exceeds LB-ASC's actual
+    // per-rank share, so the search must settle after one evaluation.
+    let mut grid = base_grid();
+    grid.optims = vec![OptimKind::Soap];
+    grid.strategies = vec![DpStrategy::Sc, DpStrategy::LbAsc];
+    let r = check_grid("memory", &grid, Objective::Memory);
+    assert_eq!(r.evaluated.len(), 1, "SC must be pruned outright");
+    assert_eq!(r.evaluated[0].scenario.strategy, DpStrategy::LbAsc);
+}
+
+#[test]
+fn tie_breaks_to_smallest_grid_index() {
+    // ASC ignores α entirely, so the two α leaves produce bit-identical
+    // breakdowns: the winner must be the smaller grid index, and —
+    // because pruning is strict — the equal-bound tied leaf must still
+    // be evaluated, while the mb=32 leaves prune.
+    let mut grid = base_grid();
+    grid.strategies = vec![DpStrategy::Asc];
+    grid.alphas = vec![0.5, 1.0];
+    grid.micro_batches = vec![1, 32];
+    // Axis order: micro-batches varies slower than α, so the expansion
+    // is (mb=1,α=.5), (mb=1,α=1), (mb=32,α=.5), (mb=32,α=1).
+    let r = check_grid("alpha tie", &grid, Objective::IterTime);
+    assert_eq!(r.evaluated[r.winner].grid_index, 0, "tie must break to index 0");
+    let evaluated: Vec<usize> = r.evaluated.iter().map(|e| e.grid_index).collect();
+    assert_eq!(evaluated, vec![0, 1], "both tied leaves evaluated, mb=32 pruned");
+    assert_bits_eq(
+        "alpha-invariant ASC",
+        &r.evaluated[0].breakdown,
+        &r.evaluated[1].breakdown,
+    );
+}
+
+#[test]
+fn exhaustive_mode_frontier_is_pareto_exact() {
+    let mut grid = base_grid();
+    grid.strategies = vec![
+        DpStrategy::Sc,
+        DpStrategy::NvLayerwise,
+        DpStrategy::Asc,
+        DpStrategy::LbAsc,
+    ];
+    grid.optims = vec![OptimKind::Muon, OptimKind::Shampoo];
+    let engine = SweepEngine::new(2);
+    let opts = OptimizeOptions {
+        objective: Objective::IterTime,
+        prune: false,
+        batch: 1,
+        ..OptimizeOptions::default()
+    };
+    let r = optimize(&engine, &grid, &opts).unwrap();
+    assert_eq!(r.evaluated.len(), r.space, "exhaustive mode evaluates everything");
+    assert_eq!(r.pruned, 0);
+    assert!(!r.frontier.is_empty());
+    assert!(r.frontier.contains(&r.winner));
+
+    let metric = |b: &Breakdown| {
+        let mem = b.dp_loads_state.iter().cloned().fold(0.0, f64::max);
+        let bub = if b.fwd_bwd_s > 0.0 { b.bubble_s / b.fwd_bwd_s } else { 0.0 };
+        [b.total_s, mem, bub]
+    };
+    let dominates = |a: &[f64; 3], b: &[f64; 3]| {
+        a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+    };
+    let ms: Vec<[f64; 3]> = r.evaluated.iter().map(|e| metric(&e.breakdown)).collect();
+    // Frontier members are non-dominated (the winner is force-included
+    // and may only be dominated by an objective-tied leaf).
+    for &i in &r.frontier {
+        for (j, mj) in ms.iter().enumerate() {
+            if j != i && dominates(mj, &ms[i]) {
+                assert_eq!(i, r.winner, "frontier #{i} dominated by #{j}");
+                assert_eq!(
+                    r.evaluated[j].value.to_bits(),
+                    r.evaluated[i].value.to_bits(),
+                    "only an objective tie can dominate the winner"
+                );
+            }
+        }
+    }
+    // Every excluded leaf is dominated or a duplicate of a kept one.
+    for i in 0..ms.len() {
+        if r.frontier.contains(&i) {
+            continue;
+        }
+        let excluded_ok = ms
+            .iter()
+            .enumerate()
+            .any(|(j, mj)| (j != i && dominates(mj, &ms[i])) || (j < i && *mj == ms[i]));
+        assert!(excluded_ok, "leaf #{i} excluded from the frontier but undominated");
+    }
+}
+
+#[test]
+fn pruned_mode_frontier_is_subset_and_internally_consistent() {
+    let mut grid = base_grid();
+    grid.pp = vec![1, 2];
+    grid.micro_batches = vec![1, 32];
+    grid.strategies = vec![DpStrategy::NvLayerwise, DpStrategy::LbAsc];
+    let engine = SweepEngine::new(2);
+    let opts = OptimizeOptions {
+        objective: Objective::IterTime,
+        batch: 1,
+        ..OptimizeOptions::default()
+    };
+    let r = optimize(&engine, &grid, &opts).unwrap();
+    assert!(r.frontier.iter().all(|&i| i < r.evaluated.len()));
+    assert!(r.frontier.contains(&r.winner));
+    assert!(r.frontier.windows(2).all(|w| w[0] < w[1]), "frontier sorted");
+}
