@@ -293,6 +293,73 @@ fn main() {
         st.timeline_tasks, st.scratch_reuses, st.order_hits,
     );
 
+    // --- batched SoA evaluation: lanes/s vs the scalar loop -------------
+    // One shared plan fingerprint, N lanes varying only continuous knobs
+    // (bandwidth, C_max): the batch path hoists the stage table, shard
+    // geometry and gradient volume once and streams the per-lane
+    // schedule algebra through fixed-width chunks. The scalar loop
+    // re-reads the same cached plans per call — bit-identical results
+    // (tests/batch_differential.rs), so the delta is pure dispatch +
+    // hoist overhead. Target: O(10M) lane-evals/s warm on one core.
+    // Paste the printed rows into CHANGES.md from a toolchain-equipped
+    // run.
+    println!("\n# Batched SoA evaluation (shared fingerprint, warm cache)\n");
+    {
+        use canzona::sim::{
+            simulate_batch_into, BreakdownBatch, LaneKnobs, ScenarioBatch,
+        };
+        let base = Scenario::new(Qwen3Size::S8B, 16, 4, 1, OptimKind::Muon, DpStrategy::LbAsc);
+        const LANES: usize = 1024;
+        let mut batch = ScenarioBatch::new(base.clone()).unwrap();
+        let mut scalar_scens = Vec::with_capacity(LANES);
+        for lane in 0..LANES {
+            let mut k = LaneKnobs::from_scenario(&base);
+            k.ib_bw *= 0.5 + lane as f64 / LANES as f64; // [0.5x, 1.5x)
+            if lane % 4 == 0 {
+                k.c_max_bytes = None;
+            }
+            batch.push(k).unwrap();
+            let mut s = base.clone();
+            s.hw.ib_bw = k.ib_bw;
+            s.c_max_bytes = k.c_max_bytes;
+            scalar_scens.push(s);
+        }
+        let cache = PlanCache::unbounded();
+        let mut soa = BreakdownBatch::new();
+        simulate_batch_into(&batch, &cache, &mut soa); // cold: solve plans
+        simulate_batch_into(&batch, &cache, &mut soa); // settle capacity
+        const PASSES: usize = 20;
+        let t = Instant::now();
+        for _ in 0..PASSES {
+            simulate_batch_into(&batch, &cache, &mut soa);
+        }
+        black_box(soa.total_s[LANES - 1]);
+        let batch_s = t.elapsed().as_secs_f64();
+        let mut out = canzona::sim::Breakdown::default();
+        canzona::sim::simulate_iteration_into(&scalar_scens[0], &cache, &mut out); // warm scratch
+        let t = Instant::now();
+        for _ in 0..PASSES {
+            for s in &scalar_scens {
+                canzona::sim::simulate_iteration_into(s, &cache, &mut out);
+            }
+        }
+        black_box(out.total_s);
+        let scalar_s = t.elapsed().as_secs_f64();
+        let evals = (LANES * PASSES) as f64;
+        println!(
+            "scalar loop  ({LANES} lanes x {PASSES} passes): {scalar_s:>7.3}s \
+             ({:>9.0} evals/s)",
+            evals / scalar_s.max(1e-12),
+        );
+        println!(
+            "batched SoA  ({LANES} lanes x {PASSES} passes): {batch_s:>7.3}s \
+             ({:>9.0} evals/s, {:.2}x; {} batched evals counted)",
+            evals / batch_s.max(1e-12),
+            scalar_s / batch_s.max(1e-12),
+            cache.stats().batched_evals,
+        );
+    }
+
     // --- branch-and-bound optimize: pruning ratio -----------------------
     // The search must beat exhaustive enumeration on evaluations, not
     // just match its winner (tests/optimize_differential.rs pins the

@@ -45,12 +45,14 @@ USAGE:
                      [--micro-batches 1,8] [--schedule 1f1b,gpipe] [--straggler 1.0,1.5]
                      [--optims muon,shampoo,soap,adamw] [--strategies sc,asc,lb-asc]
                      [--alphas 0.5,1.0] [--c-max-mb 512,none] [--metric numel]
-                     [--threads N] [--cache-budget-mb 256] [--json out.json] [--csv]
+                     [--threads N] [--cache-budget-mb 256] [--no-batch]
+                     [--json out.json] [--csv]
                      [--baseline prior.json] [--regress-pct 2.0]
   canzona optimize   [sweep grid axes, as above]
                      [--objective iter-time|optimizer-latency|memory] [--gpus 256]
                      [--batch N] [--exhaustive] [--threads N] [--cache-budget-mb 256]
-                     [--json out.json] [--csv] [--baseline prior.json] [--regress-pct 2.0]
+                     [--no-batch] [--json out.json] [--csv]
+                     [--baseline prior.json] [--regress-pct 2.0]
   canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|fig_optimize|planning|all>
                      [--threads N]
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
@@ -60,7 +62,7 @@ USAGE:
 
 /// CLI entry point.
 pub fn run_cli(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["verbose", "csv", "exhaustive"])?;
+    let args = Args::parse(argv, &["verbose", "csv", "exhaustive", "no-batch"])?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "plan" => cmd_plan(&args),
@@ -116,6 +118,11 @@ fn parse_scenario(args: &Args) -> Result<Scenario> {
     if !s.straggler.is_finite() || s.straggler < 1.0 {
         bail!("--straggler expects a finite factor >= 1.0, got {}", s.straggler);
     }
+    // Catch everything the per-flag checks above don't (alpha range,
+    // C_max sign, hardware knobs) with one named `invalid scenario:`
+    // error — NaN/inf rows must never enter a sweep (the total_cmp
+    // sort paths would rank them instead of crashing).
+    s.validate()?;
     Ok(s)
 }
 
@@ -157,12 +164,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a sweep engine from `--threads` / `--cache-budget-mb` (shared
-/// by `sweep` and `optimize`); returns the thread count alongside for
-/// the summary lines.
+/// Build a sweep engine from `--threads` / `--cache-budget-mb` /
+/// `--no-batch` (shared by `sweep` and `optimize`); returns the thread
+/// count alongside for the summary lines.
 fn engine_from_args(args: &Args) -> Result<(SweepEngine, usize)> {
     let threads = args.get_usize("threads", pool::default_threads())?.max(1);
-    let engine = match args.get("cache-budget-mb") {
+    let mut engine = match args.get("cache-budget-mb") {
         None => SweepEngine::new(threads),
         Some(raw) => {
             let mb: f64 = raw
@@ -174,6 +181,9 @@ fn engine_from_args(args: &Args) -> Result<(SweepEngine, usize)> {
             SweepEngine::with_budget(threads, budget)
         }
     };
+    // Rows are bit-identical either way (tests/batch_differential.rs);
+    // the flag exists for A/B timing and for bisecting regressions.
+    engine.set_batching(!args.flag("no-batch"));
     Ok((engine, threads))
 }
 
@@ -229,6 +239,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             stats.timeline_tasks as f64 / wall_s.max(1e-9),
             stats.scratch_reuses,
             stats.order_hits,
+        );
+    }
+    if stats.batched_evals > 0 {
+        println!(
+            "batch tier: {} scenarios evaluated batched ({:.0} evals/s)",
+            stats.batched_evals,
+            stats.batched_evals as f64 / wall_s.max(1e-9),
         );
     }
     if let Some(path) = args.get("baseline") {

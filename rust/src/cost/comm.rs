@@ -76,8 +76,7 @@ impl CommModel {
         if r <= 1 {
             return 0.0;
         }
-        let total: f64 = shard_bytes.iter().sum();
-        let min_shard = shard_bytes.iter().cloned().fold(f64::INFINITY, f64::min);
+        let (total, min_shard) = shard_parts(shard_bytes);
         self.collective_parts(kind, total, min_shard, r, link)
     }
 
@@ -128,6 +127,13 @@ impl CommModel {
 
     /// Communication volume in bytes actually crossing the wire per GPU.
     pub fn volume(&self, kind: CollectiveKind, bytes: f64, r: usize) -> f64 {
+        Self::volume_static(kind, bytes, r)
+    }
+
+    /// [`CommModel::volume`] without a model instance — the formula is
+    /// hardware-free (pure bytes arithmetic), so batch evaluation hoists
+    /// it out of per-lane loops.
+    pub fn volume_static(kind: CollectiveKind, bytes: f64, r: usize) -> f64 {
         if r <= 1 {
             return 0.0;
         }
@@ -140,6 +146,18 @@ impl CommModel {
             CollectiveKind::Broadcast => bytes,
         }
     }
+}
+
+/// The `(total, min_shard)` reduction of a variable-size collective's
+/// shard vector — the lane-invariant half of [`CommModel::collective_v`],
+/// exposed so batched evaluation ([`crate::sim::batch`]) can hoist it
+/// once per bucket and price only [`CommModel::collective_parts`] per
+/// lane. Kept here (and used by `collective_v` itself) so the two
+/// computations cannot drift: bit-identical results are a test contract.
+pub fn shard_parts(shard_bytes: &[f64]) -> (f64, f64) {
+    let total: f64 = shard_bytes.iter().sum();
+    let min_shard = shard_bytes.iter().cloned().fold(f64::INFINITY, f64::min);
+    (total, min_shard)
 }
 
 #[cfg(test)]

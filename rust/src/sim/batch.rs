@@ -1,0 +1,789 @@
+//! Batched structure-of-arrays scenario evaluation (the closed-form arm).
+//!
+//! A sweep or `canzona optimize` search evaluates thousands of leaves
+//! that share one plan fingerprint — same model/DP/TP/strategy/metric,
+//! hence the same cached [`StageTable`] — and differ only in continuous
+//! knobs: the fusion capacity `C_max`, link bandwidths, network
+//! latencies, and a straggler derate. The scalar path re-derives the
+//! whole closed form per leaf; this module evaluates N such *lanes* in
+//! one call over structure-of-arrays buffers:
+//!
+//! * [`ScenarioBatch`] — one base [`Scenario`] (must satisfy the
+//!   closed-form dispatch rule: `pp == 1`, `micro_batches == 1`,
+//!   `straggler == 1.0`) plus per-lane [`LaneKnobs`] columns.
+//! * [`BreakdownBatch`] — a caller-owned SoA output block: one column
+//!   per [`Breakdown`] scalar, reused across calls with capacity
+//!   retained (the warm batch path is zero-allocation, enforced by
+//!   `tests/warm_alloc.rs`).
+//! * [`simulate_batch_into`] — the evaluator: fixed-width chunks
+//!   ([`BATCH_CHUNK`] lanes) of plain `f64` recurrences, std-only, no
+//!   `unsafe`, shaped so the auto-vectorizer can keep the stream
+//!   recurrences in registers.
+//!
+//! # Bit-for-bit contract
+//!
+//! For every lane, the batch path must produce **exactly** the bits the
+//! scalar closed form produces for a `Scenario` carrying that lane's
+//! knobs (`hw` = the lane hardware, `c_max_bytes` = the lane capacity)
+//! — every [`Breakdown`] field except `planning_s`, which is wall-clock
+//! plumbing. `tests/batch_differential.rs` pins this across all
+//! strategies × optimizers × sizes × fusion modes with randomized knob
+//! vectors and ragged tails. The implementation strategy makes the
+//! contract structural rather than numerical:
+//!
+//! * Work that is *lane-invariant* (the stage-table fetch, the bucket
+//!   shard reductions via [`shard_parts`], gradient wire volume) is
+//!   hoisted once per batch — computing it once yields the same bits as
+//!   computing it per lane because the inputs are identical.
+//! * Work that is *per-lane* runs the **same functions** the scalar
+//!   path runs ([`stage_times`], [`CommModel::collective`] /
+//!   [`CommModel::collective_parts`], [`optimizer_step_knobs`]), in the
+//!   same per-lane operation order; the chunked loops replicate
+//!   [`Stream`](super::stream::Stream)'s `schedule` algebra
+//!   (`start = ready.max(free); free = start + dur`) verbatim.
+//!
+//! # Straggler semantics
+//!
+//! A lane's `straggler` derates its compute/HBM throughput
+//! ([`Hardware::derate`]) and leaves the fabric untouched — at `pp = 1`
+//! there is only one stage, so "the last stage is slower" and "the
+//! whole lane is slower" coincide, which is what lets the batch tier
+//! model straggler sweeps without the timeline engine. `derate(1.0)` is
+//! bit-exact (pinned in `cost::hardware`), so lanes built from plain
+//! closed-form scenarios reproduce the scalar path's bits.
+
+#![warn(missing_docs)]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::bail;
+use crate::cost::comm::{shard_parts, CollectiveKind, CommModel};
+use crate::cost::hardware::{Hardware, LinkKind};
+use crate::schedule::microgroup::TpPlan;
+use crate::sweep::cache::{PlanCache, StageKey};
+use crate::util::error::Result;
+
+use super::iteration::{
+    closed_form_path, fill_loads, optimizer_step_knobs, stage_grad_bytes, stage_times,
+    uses_all_reduce, with_batch_scratch, Breakdown, StageTable, ADAMW_BYTES_PER_ELEM,
+};
+use super::scenario::Scenario;
+
+/// Lanes per inner-loop chunk. Wide enough to fill a 512-bit vector
+/// unit with `f64`s, small enough that the per-chunk stream state
+/// (six `[f64; BATCH_CHUNK]` arrays) stays in registers.
+pub const BATCH_CHUNK: usize = 8;
+
+/// One lane's continuous knobs: everything a batch member may vary
+/// against the shared plan fingerprint.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneKnobs {
+    /// Micro-group fusion capacity in bytes; `None` = No-Fuse.
+    pub c_max_bytes: Option<f64>,
+    /// Dense-matmul throughput (FLOP/s), pre-derate.
+    pub gpu_flops: f64,
+    /// HBM bandwidth (bytes/s), pre-derate.
+    pub hbm_bw: f64,
+    /// Intra-node (NVLink) algorithm bandwidth (bytes/s).
+    pub nvlink_bw: f64,
+    /// Inter-node (InfiniBand) algorithm bandwidth (bytes/s).
+    pub ib_bw: f64,
+    /// Intra-node per-collective base latency (s).
+    pub nvlink_lat: f64,
+    /// Inter-node per-collective base latency (s).
+    pub ib_lat: f64,
+    /// Kernel-launch / per-message fixed overhead (s).
+    pub launch_overhead: f64,
+    /// Compute/HBM derate factor (`1.0` = none; see the module docs).
+    pub straggler: f64,
+}
+
+impl LaneKnobs {
+    /// The lane that reproduces `s` exactly: its hardware profile,
+    /// capacity, and straggler. Pushing this onto a batch whose base
+    /// shares `s`'s fingerprint yields the scalar path's bits.
+    pub fn from_scenario(s: &Scenario) -> LaneKnobs {
+        LaneKnobs {
+            c_max_bytes: s.c_max_bytes,
+            gpu_flops: s.hw.gpu_flops,
+            hbm_bw: s.hw.hbm_bw,
+            nvlink_bw: s.hw.nvlink_bw,
+            ib_bw: s.hw.ib_bw,
+            nvlink_lat: s.hw.nvlink_lat,
+            ib_lat: s.hw.ib_lat,
+            launch_overhead: s.hw.launch_overhead,
+            straggler: s.straggler,
+        }
+    }
+
+    /// Same validation contract as [`Scenario::validate`] — reject
+    /// knobs that would divide or multiply to `inf`/`NaN` downstream,
+    /// with the same greppable `invalid scenario:` prefix.
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("gpu_flops", self.gpu_flops),
+            ("hbm_bw", self.hbm_bw),
+            ("nvlink_bw", self.nvlink_bw),
+            ("ib_bw", self.ib_bw),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("invalid scenario: lane {name} must be finite and > 0, got {v}");
+            }
+        }
+        for (name, v) in [
+            ("nvlink_lat", self.nvlink_lat),
+            ("ib_lat", self.ib_lat),
+            ("launch_overhead", self.launch_overhead),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                bail!("invalid scenario: lane {name} must be finite and >= 0, got {v}");
+            }
+        }
+        if !self.straggler.is_finite() || self.straggler < 1.0 {
+            bail!(
+                "invalid scenario: lane straggler expects a finite factor >= 1.0, got {}",
+                self.straggler
+            );
+        }
+        if let Some(cb) = self.c_max_bytes {
+            if !cb.is_finite() || cb <= 0.0 {
+                bail!(
+                    "invalid scenario: lane c_max_bytes must be finite and > 0 \
+                     (use None for No-Fuse), got {cb}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The lane's effective hardware profile: the knob fields over the
+    /// base profile's identity (name, GPUs per node), derated by the
+    /// lane straggler.
+    fn hardware(&self, base: &Hardware) -> Hardware {
+        Hardware {
+            gpu_flops: self.gpu_flops,
+            hbm_bw: self.hbm_bw,
+            nvlink_bw: self.nvlink_bw,
+            ib_bw: self.ib_bw,
+            nvlink_lat: self.nvlink_lat,
+            ib_lat: self.ib_lat,
+            launch_overhead: self.launch_overhead,
+            ..base.clone()
+        }
+        .derate(self.straggler)
+    }
+}
+
+/// N scenarios sharing one plan fingerprint (the base [`Scenario`]) and
+/// varying only [`LaneKnobs`]. Construction validates eligibility
+/// (closed-form arm) and every lane's knobs, so the evaluator itself
+/// never has to.
+pub struct ScenarioBatch {
+    base: Scenario,
+    lanes: Vec<LaneKnobs>,
+}
+
+impl ScenarioBatch {
+    /// Start a batch over `base`'s fingerprint. Errors if `base` fails
+    /// [`Scenario::validate`] or is not closed-form eligible (the batch
+    /// tier only replaces the closed-form arm; `pp > 1` /
+    /// `micro_batches > 1` scenarios route through the timeline engine
+    /// one at a time).
+    pub fn new(base: Scenario) -> Result<ScenarioBatch> {
+        base.validate()?;
+        if !closed_form_path(&base) {
+            bail!(
+                "scenario batch requires the closed-form arm \
+                 (pp == 1, micro_batches == 1, straggler == 1.0); \
+                 got pp={} micro_batches={} straggler={}",
+                base.pp, base.micro_batches, base.straggler
+            );
+        }
+        Ok(ScenarioBatch { base, lanes: Vec::new() })
+    }
+
+    /// The shared-fingerprint scenario the lanes perturb.
+    pub fn base(&self) -> &Scenario {
+        &self.base
+    }
+
+    /// Append a lane (validated — see [`LaneKnobs::validate`]).
+    pub fn push(&mut self, knobs: LaneKnobs) -> Result<()> {
+        knobs.validate()?;
+        self.lanes.push(knobs);
+        Ok(())
+    }
+
+    /// Append the lane reproducing `s` ([`LaneKnobs::from_scenario`]).
+    /// The caller is responsible for `s` sharing the base fingerprint
+    /// (the sweep engine groups by it); only the knobs are captured.
+    pub fn push_scenario(&mut self, s: &Scenario) -> Result<()> {
+        self.push(LaneKnobs::from_scenario(s))
+    }
+
+    /// Number of lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Is the batch empty?
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// The lane knob columns.
+    pub fn lanes(&self) -> &[LaneKnobs] {
+        &self.lanes
+    }
+}
+
+/// Caller-owned SoA output block: one column per [`Breakdown`] scalar,
+/// indexed by lane. Reuse one across [`simulate_batch_into`] calls —
+/// columns are cleared and refilled in place, so a batch no larger than
+/// a previous one performs zero heap allocations.
+#[derive(Default)]
+pub struct BreakdownBatch {
+    /// Forward+backward wall time (s) per lane.
+    pub fwd_bwd_s: Vec<f64>,
+    /// Optimizer step wall time (s) per lane.
+    pub optimizer_s: Vec<f64>,
+    /// End-to-end iteration (s) per lane.
+    pub total_s: Vec<f64>,
+    /// AdamW reference time (s) per lane.
+    pub adamw_ref_s: Vec<f64>,
+    /// Exposed gradient-path communication (s) per lane.
+    pub exposed_comm_s: Vec<f64>,
+    /// Schedule idle time (s) per lane (== exposed comm at `pp = 1`).
+    pub bubble_s: Vec<f64>,
+    /// Gradient-path wire bytes per GPU per lane.
+    pub grad_comm_bytes: Vec<f64>,
+    /// Planning latency (s) per lane (stage fetch + TP solves; excluded
+    /// from the bit-for-bit contract — it is wall-clock measurement).
+    pub planning_s: Vec<f64>,
+    /// Micro groups built (worst DP rank) per lane.
+    pub n_micro_groups: Vec<usize>,
+    /// Per lane: the worst rank's TP plan (feeds the TP load vectors on
+    /// [`BreakdownBatch::write_into`]); `None` off the Atomic arm.
+    worst_tplans: Vec<Option<Arc<TpPlan>>>,
+    /// The batch's shared stage table (for load scatter).
+    table: Option<Arc<StageTable>>,
+    len: usize,
+}
+
+impl BreakdownBatch {
+    /// An empty block (columns grow on first use).
+    pub fn new() -> BreakdownBatch {
+        BreakdownBatch::default()
+    }
+
+    /// Lanes held by the last evaluation.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the block empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop the Arc'd plan/table references (releasing cache pins) while
+    /// keeping column capacity for the next batch.
+    pub fn clear(&mut self) {
+        self.reset(0);
+    }
+
+    /// Size every column to `n` lanes in place.
+    fn reset(&mut self, n: usize) {
+        fn fill(v: &mut Vec<f64>, n: usize) {
+            v.clear();
+            v.resize(n, 0.0);
+        }
+        fill(&mut self.fwd_bwd_s, n);
+        fill(&mut self.optimizer_s, n);
+        fill(&mut self.total_s, n);
+        fill(&mut self.adamw_ref_s, n);
+        fill(&mut self.exposed_comm_s, n);
+        fill(&mut self.bubble_s, n);
+        fill(&mut self.grad_comm_bytes, n);
+        fill(&mut self.planning_s, n);
+        self.n_micro_groups.clear();
+        self.n_micro_groups.resize(n, 0);
+        self.worst_tplans.clear();
+        self.worst_tplans.resize(n, None);
+        self.table = None;
+        self.len = n;
+    }
+
+    /// Scatter lane `lane` into a scalar [`Breakdown`] (vector capacity
+    /// reused — allocation-free once `out` has been sized). The result
+    /// is bit-identical to the scalar closed form evaluated with that
+    /// lane's knobs, `planning_s` excepted.
+    pub fn write_into(&self, batch: &ScenarioBatch, lane: usize, out: &mut Breakdown) {
+        out.reset();
+        let table = self
+            .table
+            .as_ref()
+            .expect("BreakdownBatch::write_into before simulate_batch_into");
+        out.fwd_bwd_s = self.fwd_bwd_s[lane];
+        out.optimizer_s = self.optimizer_s[lane];
+        out.exposed_comm_s = self.exposed_comm_s[lane];
+        out.n_micro_groups = self.n_micro_groups[lane];
+        out.grad_comm_bytes = self.grad_comm_bytes[lane];
+        out.adamw_ref_s = self.adamw_ref_s[lane];
+        fill_loads(out, batch.base(), table, self.worst_tplans[lane].as_deref());
+        out.planning_s = self.planning_s[lane];
+        out.total_s = self.total_s[lane];
+        out.bubble_s = self.bubble_s[lane];
+    }
+}
+
+/// The per-worker reusable workspace of the batch tier, living inside
+/// the thread's `SimScratch` (see `iteration::with_batch_scratch`): the
+/// engine tier's SoA output block plus the hoisted lane-invariant
+/// columns of the chunked loops. Capacity is retained across batches,
+/// bounded by the largest (lane count, bucket count) shape the thread
+/// has seen.
+pub(crate) struct BatchScratch {
+    /// Engine-tier per-worker output block (`simulate_batch_scatter`).
+    out: BreakdownBatch,
+    /// Per-lane comm models (stack-only `Hardware` payloads).
+    comms: Vec<CommModel>,
+    /// Per-lane forward compute time (s).
+    fwd_t: Vec<f64>,
+    /// Per-lane backward compute time (s).
+    bwd_t: Vec<f64>,
+    /// Per-lane TP activation All-Reduce block (s).
+    tp_ar: Vec<f64>,
+    /// Per-bucket shard totals ([`shard_parts`], ASC/LB-ASC only).
+    shard_total: Vec<f64>,
+    /// Per-bucket minimum shards.
+    shard_min: Vec<f64>,
+    /// Per-bucket shard counts (ranks).
+    shard_ranks: Vec<usize>,
+}
+
+impl BatchScratch {
+    pub(crate) fn new() -> BatchScratch {
+        BatchScratch {
+            out: BreakdownBatch::new(),
+            comms: Vec::new(),
+            fwd_t: Vec::new(),
+            bwd_t: Vec::new(),
+            tp_ar: Vec::new(),
+            shard_total: Vec::new(),
+            shard_min: Vec::new(),
+            shard_ranks: Vec::new(),
+        }
+    }
+}
+
+/// Evaluate every lane of `batch` into the caller-owned `out` block.
+///
+/// One stage-table fetch covers the whole batch; per-lane work is the
+/// chunked closed form (see the module docs for the bit-for-bit
+/// contract). Warm caches + previously-sized buffers ⇒ zero heap
+/// allocations. Rides the `batched_evals` cache counter.
+pub fn simulate_batch_into(batch: &ScenarioBatch, cache: &PlanCache, out: &mut BreakdownBatch) {
+    with_batch_scratch(|scratch| {
+        simulate_batch_core(batch, cache, scratch, out);
+    });
+}
+
+/// The engine tier's entry: evaluate `batch` through this worker's
+/// scratch-resident [`BreakdownBatch`] and scatter lane `i` into
+/// `outs[i]`. `outs.len()` must equal `batch.len()`.
+pub(crate) fn simulate_batch_scatter(
+    batch: &ScenarioBatch,
+    cache: &PlanCache,
+    outs: &mut [Breakdown],
+) {
+    assert_eq!(outs.len(), batch.len(), "one output Breakdown per lane");
+    with_batch_scratch(|scratch| {
+        // Split-borrow: the SoA block and the hoist columns are
+        // disjoint scratch fields.
+        let BatchScratch { out, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks } =
+            scratch;
+        batch_core_split(
+            batch, cache, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks, out,
+        );
+        for (lane, b) in outs.iter_mut().enumerate() {
+            out.write_into(batch, lane, b);
+        }
+        // Release the Arc'd cache pins; capacity stays for the next group.
+        out.clear();
+    });
+}
+
+/// [`simulate_batch_into`]'s body once the thread scratch is borrowed.
+fn simulate_batch_core(
+    batch: &ScenarioBatch,
+    cache: &PlanCache,
+    scratch: &mut BatchScratch,
+    out: &mut BreakdownBatch,
+) {
+    let BatchScratch { out: _, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks } =
+        scratch;
+    batch_core_split(
+        batch, cache, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks, out,
+    );
+}
+
+/// The evaluator proper, over explicitly split scratch columns.
+#[allow(clippy::too_many_arguments)]
+fn batch_core_split(
+    batch: &ScenarioBatch,
+    cache: &PlanCache,
+    comms: &mut Vec<CommModel>,
+    fwd_t: &mut Vec<f64>,
+    bwd_t: &mut Vec<f64>,
+    tp_ar: &mut Vec<f64>,
+    shard_total: &mut Vec<f64>,
+    shard_min: &mut Vec<f64>,
+    shard_ranks: &mut Vec<usize>,
+    out: &mut BreakdownBatch,
+) {
+    let s = batch.base();
+    let n = batch.len();
+    out.reset(n);
+    if n == 0 {
+        return;
+    }
+
+    // One stage-table fetch for the whole batch (the fetch latency is
+    // the warm proxy for offline planning time, as on the scalar path).
+    let t_fetch = Instant::now();
+    let key = StageKey::for_scenario(s, 0);
+    let table = cache.stage_table(&key, || StageTable::build(s, 0, cache));
+    let stage_planning_s = t_fetch.elapsed().as_secs_f64();
+
+    // --- lane-invariant hoists --------------------------------------
+    // Gradient wire volume is hardware-free, so one lane's answer is
+    // every lane's answer (bit-identical: same function, same inputs).
+    let base_comm = CommModel::new(s.hw.clone());
+    let grad_bytes = stage_grad_bytes(s, &base_comm, &table);
+    let adamw_elems = table.total_elems / s.dp as f64;
+    let nb = table.bucket_bytes.len();
+    let dp = s.dp;
+    let ar = uses_all_reduce(s);
+
+    // Bucket shard reductions: `collective_v` = `shard_parts` (lane-
+    // invariant) + `collective_parts` (per-lane) — hoist the first half.
+    shard_total.clear();
+    shard_min.clear();
+    shard_ranks.clear();
+    if let Some(shards) = &table.shard_bytes {
+        for sb in shards {
+            let (total, min) = shard_parts(sb);
+            shard_total.push(total);
+            shard_min.push(min);
+            shard_ranks.push(sb.len());
+        }
+    }
+    let has_shards = table.shard_bytes.is_some();
+
+    // --- per-lane derived scalars ------------------------------------
+    comms.clear();
+    fwd_t.clear();
+    bwd_t.clear();
+    tp_ar.clear();
+    for knobs in batch.lanes() {
+        let comm = CommModel::new(knobs.hardware(&s.hw));
+        let (f, b, ar_t, _act) = stage_times(s, &comm.hw, &comm, &table);
+        fwd_t.push(f);
+        bwd_t.push(b);
+        tp_ar.push(ar_t);
+        comms.push(comm);
+    }
+
+    // --- chunked stream recurrences ----------------------------------
+    // Replicates `fwd_bwd_time`'s schedule algebra per lane:
+    //   Stream::schedule(ready, dur): start = ready.max(free);
+    //                                 free = start + dur; -> free
+    // with the per-chunk stream state held in fixed-width stack arrays.
+    let mut c0 = 0usize; // chunk base lane
+    while c0 < n {
+        let m = (n - c0).min(BATCH_CHUNK);
+
+        // Backward: bucket grad collectives overlap later buckets.
+        let mut compute = [0.0f64; BATCH_CHUNK];
+        let mut comm_free = [0.0f64; BATCH_CHUNK];
+        let mut bwd_end = [0.0f64; BATCH_CHUNK];
+        let mut t_comm = [0.0f64; BATCH_CHUNK];
+        for b in 0..nb {
+            let frac = table.bucket_frac[b];
+            bucket_comm_lanes(
+                &comms[c0..c0 + m],
+                GradOrAg::Grad,
+                dp,
+                ar,
+                has_shards,
+                table.bucket_bytes[b],
+                shard_total.get(b).copied().unwrap_or(0.0),
+                shard_min.get(b).copied().unwrap_or(0.0),
+                shard_ranks.get(b).copied().unwrap_or(0),
+                &mut t_comm[..m],
+            );
+            for l in 0..m {
+                // grads_ready = compute.schedule(0.0, bwd_t * frac)
+                let start = 0.0f64.max(compute[l]);
+                compute[l] = start + bwd_t[c0 + l] * frac;
+                let grads_ready = compute[l];
+                // bwd_end = comm.schedule(grads_ready, t_comm).max(grads_ready)
+                let cstart = grads_ready.max(comm_free[l]);
+                comm_free[l] = cstart + t_comm[l];
+                bwd_end[l] = comm_free[l].max(grads_ready);
+            }
+        }
+        for l in 0..m {
+            // bwd_end = bwd_end.max(compute.free_at())
+            bwd_end[l] = bwd_end[l].max(compute[l]);
+        }
+
+        // Forward: ZeRO-1 parameter All-Gathers gate bucket compute.
+        let mut f_compute = [0.0f64; BATCH_CHUNK];
+        let mut f_comm = [0.0f64; BATCH_CHUNK];
+        for b in 0..nb {
+            let frac = table.bucket_frac[b];
+            bucket_comm_lanes(
+                &comms[c0..c0 + m],
+                GradOrAg::Ag,
+                dp,
+                ar,
+                has_shards,
+                table.bucket_bytes[b],
+                shard_total.get(b).copied().unwrap_or(0.0),
+                shard_min.get(b).copied().unwrap_or(0.0),
+                shard_ranks.get(b).copied().unwrap_or(0),
+                &mut t_comm[..m],
+            );
+            for l in 0..m {
+                // params_ready = fwd_comm.schedule(0.0, t_ag)
+                let cstart = 0.0f64.max(f_comm[l]);
+                f_comm[l] = cstart + t_comm[l];
+                let params_ready = f_comm[l];
+                // fwd_end = fwd_compute.schedule(params_ready, fwd_t * frac)
+                let start = params_ready.max(f_compute[l]);
+                f_compute[l] = start + fwd_t[c0 + l] * frac;
+            }
+        }
+
+        for l in 0..m {
+            let i = c0 + l;
+            let fwd_end = f_compute[l];
+            // total = bwd_end + fwd_end + tp_ar;
+            // exposed = (bwd_end - bwd_t) + (fwd_end - fwd_t)
+            out.fwd_bwd_s[i] = bwd_end[l] + fwd_end + tp_ar[i];
+            out.exposed_comm_s[i] = (bwd_end[l] - bwd_t[i]) + (fwd_end - fwd_t[i]);
+            out.bubble_s[i] = out.exposed_comm_s[i];
+            out.grad_comm_bytes[i] = grad_bytes;
+        }
+        c0 += m;
+    }
+
+    // --- optimizer step + reference, per lane ------------------------
+    // The step is dominated by cached per-rank plan lookups over the
+    // shared table; each lane calls the scalar path's own function with
+    // its knobs, which makes bit-equality structural.
+    for (i, comm) in comms.iter().enumerate() {
+        let opt = optimizer_step_knobs(
+            s,
+            &comm.hw,
+            comm,
+            &table,
+            0,
+            cache,
+            batch.lanes()[i].c_max_bytes,
+        );
+        out.optimizer_s[i] = opt.time_s;
+        out.n_micro_groups[i] = opt.n_micro_groups;
+        out.adamw_ref_s[i] = comm.hw.memory_time(adamw_elems * ADAMW_BYTES_PER_ELEM);
+        out.planning_s[i] = stage_planning_s + opt.planning_s;
+        out.total_s[i] = out.fwd_bwd_s[i] + out.optimizer_s[i];
+        out.worst_tplans[i] = opt.worst_tplan;
+    }
+
+    out.table = Some(table);
+    cache.note_batched_evals(n as u64);
+}
+
+/// Which bucket collective a lane column prices.
+#[derive(Clone, Copy)]
+enum GradOrAg {
+    /// The backward gradient path (`bucket_grad_time`).
+    Grad,
+    /// The forward ZeRO-1 parameter All-Gather (`bucket_ag_time`).
+    Ag,
+}
+
+/// Fill `t_out[l]` with the bucket collective time for each lane in
+/// `comms` — the per-lane half of `bucket_grad_time` / `bucket_ag_time`
+/// with the shard reduction pre-hoisted. Matches those functions
+/// branch-for-branch so the results are bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn bucket_comm_lanes(
+    comms: &[CommModel],
+    which: GradOrAg,
+    dp: usize,
+    ar: bool,
+    has_shards: bool,
+    bucket_bytes: f64,
+    total: f64,
+    min: f64,
+    ranks: usize,
+    t_out: &mut [f64],
+) {
+    match which {
+        GradOrAg::Grad => {
+            if dp <= 1 {
+                t_out.fill(0.0);
+            } else if ar {
+                for (t, c) in t_out.iter_mut().zip(comms) {
+                    *t = c.collective(
+                        CollectiveKind::AllReduce,
+                        bucket_bytes,
+                        dp,
+                        LinkKind::InterNode,
+                    );
+                }
+            } else if has_shards {
+                if ranks <= 1 {
+                    // collective_v's r <= 1 early return.
+                    t_out.fill(0.0);
+                } else {
+                    for (t, c) in t_out.iter_mut().zip(comms) {
+                        *t = c.collective_parts(
+                            CollectiveKind::ReduceScatter,
+                            total,
+                            min,
+                            ranks,
+                            LinkKind::InterNode,
+                        );
+                    }
+                }
+            } else {
+                for (t, c) in t_out.iter_mut().zip(comms) {
+                    *t = c.collective(
+                        CollectiveKind::ReduceScatter,
+                        bucket_bytes,
+                        dp,
+                        LinkKind::InterNode,
+                    );
+                }
+            }
+        }
+        GradOrAg::Ag => {
+            if dp <= 1 || ar {
+                t_out.fill(0.0);
+            } else if has_shards {
+                if ranks <= 1 {
+                    t_out.fill(0.0);
+                } else {
+                    for (t, c) in t_out.iter_mut().zip(comms) {
+                        *t = c.collective_parts(
+                            CollectiveKind::AllGather,
+                            total,
+                            min,
+                            ranks,
+                            LinkKind::InterNode,
+                        );
+                    }
+                }
+            } else {
+                for (t, c) in t_out.iter_mut().zip(comms) {
+                    *t = c.collective(
+                        CollectiveKind::AllGather,
+                        bucket_bytes,
+                        dp,
+                        LinkKind::InterNode,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optim::OptimKind;
+    use crate::model::qwen3::Qwen3Size;
+    use crate::partition::DpStrategy;
+    use crate::sim::simulate_iteration_cached;
+
+    fn base() -> Scenario {
+        Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, DpStrategy::LbAsc)
+    }
+
+    #[test]
+    fn rejects_non_closed_form_base() {
+        let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 2, OptimKind::Muon, DpStrategy::LbAsc);
+        let e = ScenarioBatch::new(s).expect_err("pp=2 must be rejected").to_string();
+        assert!(e.contains("closed-form"), "{e}");
+        let s = base().with_micro_batches(4);
+        assert!(ScenarioBatch::new(s).is_err());
+        let s = base().with_straggler(1.5);
+        assert!(ScenarioBatch::new(s).is_err());
+    }
+
+    #[test]
+    fn rejects_poisoned_lanes() {
+        let mut b = ScenarioBatch::new(base()).unwrap();
+        let mut k = LaneKnobs::from_scenario(&base());
+        k.ib_bw = 0.0;
+        let e = b.push(k).expect_err("zero bandwidth").to_string();
+        assert!(e.contains("invalid scenario"), "{e}");
+        let mut k = LaneKnobs::from_scenario(&base());
+        k.straggler = 0.5;
+        assert!(b.push(k).is_err());
+        let mut k = LaneKnobs::from_scenario(&base());
+        k.c_max_bytes = Some(-1.0);
+        assert!(b.push(k).is_err());
+        assert!(b.is_empty());
+        assert!(b.push(LaneKnobs::from_scenario(&base())).is_ok());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn single_lane_matches_scalar_bits() {
+        // The module-level smoke version of tests/batch_differential.rs:
+        // one default lane == the scalar closed form, every field.
+        let cache = PlanCache::new();
+        let s = base();
+        let scalar = simulate_iteration_cached(&s, &cache);
+        let mut batch = ScenarioBatch::new(s.clone()).unwrap();
+        batch.push_scenario(&s).unwrap();
+        let mut out = BreakdownBatch::new();
+        simulate_batch_into(&batch, &cache, &mut out);
+        assert_eq!(out.len(), 1);
+        let mut got = Breakdown::default();
+        out.write_into(&batch, 0, &mut got);
+        assert_eq!(got.fwd_bwd_s.to_bits(), scalar.fwd_bwd_s.to_bits());
+        assert_eq!(got.optimizer_s.to_bits(), scalar.optimizer_s.to_bits());
+        assert_eq!(got.total_s.to_bits(), scalar.total_s.to_bits());
+        assert_eq!(got.adamw_ref_s.to_bits(), scalar.adamw_ref_s.to_bits());
+        assert_eq!(got.exposed_comm_s.to_bits(), scalar.exposed_comm_s.to_bits());
+        assert_eq!(got.bubble_s.to_bits(), scalar.bubble_s.to_bits());
+        assert_eq!(got.grad_comm_bytes.to_bits(), scalar.grad_comm_bytes.to_bits());
+        assert_eq!(got.n_micro_groups, scalar.n_micro_groups);
+        assert_eq!(got.dp_loads_flops, scalar.dp_loads_flops);
+        assert_eq!(got.dp_loads_state, scalar.dp_loads_state);
+        assert_eq!(got.tp_loads_flops, scalar.tp_loads_flops);
+        assert_eq!(got.tp_loads_state, scalar.tp_loads_state);
+    }
+
+    #[test]
+    fn batched_evals_counter_rides_the_cache() {
+        let cache = PlanCache::new();
+        let s = base();
+        let mut batch = ScenarioBatch::new(s.clone()).unwrap();
+        for _ in 0..5 {
+            batch.push_scenario(&s).unwrap();
+        }
+        let mut out = BreakdownBatch::new();
+        simulate_batch_into(&batch, &cache, &mut out);
+        assert_eq!(cache.stats().batched_evals, 5);
+        simulate_batch_into(&batch, &cache, &mut out);
+        assert_eq!(cache.stats().batched_evals, 10);
+    }
+}

@@ -90,10 +90,10 @@ use super::timeline::{
 };
 
 /// Bytes per gradient / parameter element on the wire (bf16).
-const WIRE_BYTES: f64 = 2.0;
+pub(crate) const WIRE_BYTES: f64 = 2.0;
 /// Bytes of HBM traffic per element for an element-wise optimizer pass
 /// (read w/g/m/v + write w/m/v, fp32 states, bf16 param+grad).
-const ADAMW_BYTES_PER_ELEM: f64 = 26.0;
+pub(crate) const ADAMW_BYTES_PER_ELEM: f64 = 26.0;
 
 /// Simulation output for one scenario.
 #[derive(Clone, Debug, Default)]
@@ -133,7 +133,7 @@ pub struct Breakdown {
 impl Breakdown {
     /// Clear for reuse, keeping vector capacity — the warm path's
     /// zero-allocation guarantee depends on refilling in place.
-    fn reset(&mut self) {
+    pub(crate) fn reset(&mut self) {
         self.fwd_bwd_s = 0.0;
         self.optimizer_s = 0.0;
         self.total_s = 0.0;
@@ -237,7 +237,7 @@ pub(crate) fn local_view(stage: &[Param], tp: usize) -> Vec<LocalParam> {
 }
 
 /// Per-strategy optimizer-step tables of one stage (see [`StageTable`]).
-enum StrategyTable {
+pub(crate) enum StrategyTable {
     /// SC: every GPU all-gathers and redundantly updates everything.
     Sc {
         /// Per fragmented matrix tensor: full-shape wire bytes.
@@ -295,23 +295,23 @@ enum StrategyTable {
 /// without allocating.
 pub struct StageTable {
     /// Transformer layers hosted by the stage.
-    n_layers: f64,
+    pub(crate) n_layers: f64,
     /// Hidden size proxy (attn-norm numel) for attention FLOPs.
-    hidden: f64,
+    pub(crate) hidden: f64,
     /// Sum of TP-local matrix numels (dense fwd FLOPs term).
-    matrix_numel: f64,
+    pub(crate) matrix_numel: f64,
     /// Flat-buffer total elements.
-    total_elems: f64,
+    pub(crate) total_elems: f64,
     /// Stage parameter bytes on the wire (NV-layerwise Broadcast).
-    param_bytes: f64,
+    pub(crate) param_bytes: f64,
     /// Per bucket: gradient bytes.
-    bucket_bytes: Vec<f64>,
+    pub(crate) bucket_bytes: Vec<f64>,
     /// Per bucket: fraction of the stage's elements.
-    bucket_frac: Vec<f64>,
+    pub(crate) bucket_frac: Vec<f64>,
     /// Per bucket, per DP rank: shard wire bytes (ASC/LB-ASC only).
-    shard_bytes: Option<Vec<Vec<f64>>>,
+    pub(crate) shard_bytes: Option<Vec<Vec<f64>>>,
     /// Per-strategy optimizer-step tables.
-    strat: StrategyTable,
+    pub(crate) strat: StrategyTable,
 }
 
 impl StageTable {
@@ -358,7 +358,7 @@ impl StageTable {
     /// Build the stage table (cold path): stage census, TP-local view,
     /// flat buffer, DP plan (memoized in `cache`), and the per-strategy
     /// aggregates the warm path reads.
-    fn build(s: &Scenario, si: usize, cache: &PlanCache) -> StageTable {
+    pub(crate) fn build(s: &Scenario, si: usize, cache: &PlanCache) -> StageTable {
         let stages = stage_census(&s.census, s.pp);
         let locals = local_view(&stages[si], s.tp);
         let local_census: Vec<Param> = locals.iter().map(|lp| lp.local.clone()).collect();
@@ -637,11 +637,11 @@ fn tp_pipeline(plan: &TpPlan, comm: &CommModel, gpu_flops: f64) -> f64 {
 /// vectors live in the [`StageTable`] / worst [`TpPlan`] and are copied
 /// into the output only for the pacing stage (see [`fill_loads`]).
 #[derive(Clone)]
-struct OptScalars {
-    time_s: f64,
-    planning_s: f64,
-    n_micro_groups: usize,
-    worst_tplan: Option<Arc<TpPlan>>,
+pub(crate) struct OptScalars {
+    pub(crate) time_s: f64,
+    pub(crate) planning_s: f64,
+    pub(crate) n_micro_groups: usize,
+    pub(crate) worst_tplan: Option<Arc<TpPlan>>,
 }
 
 /// The optimizer step of one PP stage under the scenario's strategy —
@@ -649,13 +649,31 @@ struct OptScalars {
 /// (cache misses) allocate. `hw` is the stage's (possibly
 /// straggler-derated) compute profile; collectives always price against
 /// the shared fabric in `comm`.
-fn optimizer_step(
+pub(crate) fn optimizer_step(
     s: &Scenario,
     hw: &Hardware,
     comm: &CommModel,
     table: &StageTable,
     stage: usize,
     cache: &PlanCache,
+) -> OptScalars {
+    optimizer_step_knobs(s, hw, comm, table, stage, cache, s.c_max_bytes)
+}
+
+/// [`optimizer_step`] with the fusion capacity supplied by the caller
+/// instead of read off the scenario — the batch tier's per-lane entry
+/// ([`crate::sim::batch`]), where N lanes share one `StageTable` but
+/// carry their own `C_max`. Passing `s.c_max_bytes` is bit-identical to
+/// [`optimizer_step`]: the TP-plan key below is constructed exactly as
+/// [`TpKey::for_scenario`] does.
+pub(crate) fn optimizer_step_knobs(
+    s: &Scenario,
+    hw: &Hardware,
+    comm: &CommModel,
+    table: &StageTable,
+    stage: usize,
+    cache: &PlanCache,
+    c_max_bytes: Option<f64>,
 ) -> OptScalars {
     let gpu = hw.gpu_flops;
     let tp = s.tp;
@@ -728,11 +746,16 @@ fn optimizer_step(
             for d in 0..s.dp {
                 let tp_time = if tp > 1 && !rank_tasks[d].is_empty() {
                     let t_tp = Instant::now();
-                    let key = TpKey::for_scenario(s, stage, d);
+                    let key = TpKey {
+                        dp_key: DpKey::for_scenario(s, stage),
+                        rank: d,
+                        c_max_bits: c_max_bytes.map(f64::to_bits),
+                        optim: s.optim,
+                    };
                     let tplan = cache.tp_plan(&key, || {
                         let census = rank_census(tasks, symbols, &rank_tasks[d]);
                         if lb {
-                            match s.c_max_bytes {
+                            match c_max_bytes {
                                 // No-Fuse (Fig. 14 baseline): one collective
                                 // per tensor, hosts still load-balanced.
                                 None => unfused_plan(census, tp),
@@ -744,7 +767,7 @@ fn optimizer_step(
                                 }
                             }
                         } else {
-                            naive_tp_plan(census, tp, s.c_max_bytes)
+                            naive_tp_plan(census, tp, c_max_bytes)
                         }
                     });
                     tp_planning_s += t_tp.elapsed().as_secs_f64();
@@ -772,7 +795,7 @@ fn optimizer_step(
 
 /// Copy the pacing stage's per-rank load vectors into `out`, reusing its
 /// capacity (no allocation once the vectors have been sized).
-fn fill_loads(out: &mut Breakdown, s: &Scenario, table: &StageTable, worst: Option<&TpPlan>) {
+pub(crate) fn fill_loads(out: &mut Breakdown, s: &Scenario, table: &StageTable, worst: Option<&TpPlan>) {
     fn set(dst: &mut Vec<f64>, src: &[f64]) {
         dst.clear();
         dst.extend_from_slice(src);
@@ -882,7 +905,7 @@ fn naive_tp_plan(tasks: Vec<TpTask>, tp: usize, c_max_bytes: Option<f64>) -> TpP
 /// time, backward compute time, the TP activation All-Reduce block, and
 /// the boundary activation bytes (for PP point-to-point transfers).
 /// `hw` is the stage's (possibly straggler-derated) compute profile.
-fn stage_times(s: &Scenario, hw: &Hardware, comm: &CommModel, t: &StageTable) -> (f64, f64, f64, f64) {
+pub(crate) fn stage_times(s: &Scenario, hw: &Hardware, comm: &CommModel, t: &StageTable) -> (f64, f64, f64, f64) {
     let tokens = s.tokens() as f64;
     let seq = s.seq_len as f64;
     let tp = s.tp as f64;
@@ -917,13 +940,13 @@ fn comm_model(s: &Scenario) -> CommModel {
 
 /// Does the strategy's gradient path use All-Reduce (full parameter
 /// copies) rather than the ZeRO-1 Reduce-Scatter / All-Gather pair?
-fn uses_all_reduce(s: &Scenario) -> bool {
+pub(crate) fn uses_all_reduce(s: &Scenario) -> bool {
     matches!(s.strategy, DpStrategy::Sc | DpStrategy::NvLayerwise)
 }
 
 /// Gradient collective time for bucket `b` (Reduce-Scatter with the DP
 /// plan's variable shard sizes, or All-Reduce for SC/NV-layerwise).
-fn bucket_grad_time(s: &Scenario, comm: &CommModel, t: &StageTable, b: usize) -> f64 {
+pub(crate) fn bucket_grad_time(s: &Scenario, comm: &CommModel, t: &StageTable, b: usize) -> f64 {
     if s.dp <= 1 {
         return 0.0;
     }
@@ -939,7 +962,7 @@ fn bucket_grad_time(s: &Scenario, comm: &CommModel, t: &StageTable, b: usize) ->
 
 /// ZeRO-1 parameter All-Gather time for bucket `b` (0 for strategies
 /// holding full parameter copies).
-fn bucket_ag_time(s: &Scenario, comm: &CommModel, t: &StageTable, b: usize) -> f64 {
+pub(crate) fn bucket_ag_time(s: &Scenario, comm: &CommModel, t: &StageTable, b: usize) -> f64 {
     if s.dp <= 1 || uses_all_reduce(s) {
         return 0.0;
     }
@@ -951,7 +974,7 @@ fn bucket_ag_time(s: &Scenario, comm: &CommModel, t: &StageTable, b: usize) -> f
 }
 
 /// Gradient-path wire bytes per GPU across the stage's buckets.
-fn stage_grad_bytes(s: &Scenario, comm: &CommModel, t: &StageTable) -> f64 {
+pub(crate) fn stage_grad_bytes(s: &Scenario, comm: &CommModel, t: &StageTable) -> f64 {
     let kind = if uses_all_reduce(s) {
         CollectiveKind::AllReduce
     } else {
@@ -1148,6 +1171,12 @@ struct SimScratch {
     /// Has this scratch served a playback before? (feeds the
     /// `scratch_reuses` counter).
     used: bool,
+    /// The batch tier's per-worker buffers ([`crate::sim::batch`]): the
+    /// SoA output block engine workers reuse across shared-plan groups
+    /// plus the hoisted per-bucket columns of the chunked loops. Lives
+    /// here so it rides the same persistent-worker warm-up story as the
+    /// timeline scratch.
+    batch: crate::sim::batch::BatchScratch,
 }
 
 impl SimScratch {
@@ -1163,6 +1192,7 @@ impl SimScratch {
             opt_ends: Vec::new(),
             dbuf: Vec::new(),
             used: false,
+            batch: crate::sim::batch::BatchScratch::new(),
         }
     }
 }
@@ -1171,6 +1201,16 @@ thread_local! {
     /// One [`SimScratch`] per thread — pool workers and direct callers
     /// alike (see the struct docs for the ownership rules).
     static SIM_SCRATCH: RefCell<SimScratch> = RefCell::new(SimScratch::new());
+}
+
+/// Borrow this thread's batch-tier scratch ([`crate::sim::batch`]'s
+/// per-worker buffers, co-located with the timeline scratch so
+/// persistent pool workers keep both warm). The batch evaluator never
+/// re-enters the simulator, so the `RefCell` borrow cannot nest.
+pub(crate) fn with_batch_scratch<R>(
+    f: impl FnOnce(&mut crate::sim::batch::BatchScratch) -> R,
+) -> R {
+    SIM_SCRATCH.with(|sc| f(&mut sc.borrow_mut().batch))
 }
 
 /// The timeline playback entry: borrow this thread's scratch and run

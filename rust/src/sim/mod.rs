@@ -21,12 +21,16 @@
 //! * [`bounds`] — admissible closed-form lower bounds on the playback's
 //!   objectives, for the `canzona optimize` branch-and-bound search.
 
+pub mod batch;
 pub mod bounds;
 pub mod iteration;
 pub mod scenario;
 pub mod stream;
 pub mod timeline;
 
+pub use batch::{
+    simulate_batch_into, BreakdownBatch, LaneKnobs, ScenarioBatch, BATCH_CHUNK,
+};
 pub use bounds::ScenarioBounds;
 pub use iteration::{
     simulate_iteration, simulate_iteration_cached, simulate_iteration_into,

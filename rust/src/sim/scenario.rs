@@ -1,10 +1,12 @@
 //! Simulation scenario: everything a paper experiment varies.
 
+use crate::bail;
 use crate::cost::hardware::Hardware;
 use crate::cost::optim::{CostMetric, OptimKind};
 use crate::model::qwen3::{qwen3, Qwen3Size};
 use crate::model::shapes::Param;
 use crate::partition::DpStrategy;
+use crate::util::error::Result;
 
 use super::timeline::PipelineSchedule;
 
@@ -148,6 +150,73 @@ impl Scenario {
         self.straggler = if f.is_finite() { f.max(1.0) } else { 1.0 };
         self
     }
+
+    /// Reject knob combinations that would poison the arithmetic
+    /// downstream: a zero bandwidth or zero `gpu_flops` divides to
+    /// `inf`, a non-positive straggler multiplies to `inf`/`NaN`, and
+    /// the `total_cmp`-hardened sort paths then rank such rows instead
+    /// of crashing — garbage ordered confidently. Every parse-time
+    /// entry (the `simulate`/`plan` CLI, `SweepGrid::parse`, batch-lane
+    /// construction) calls this so invalid knobs never enter a grid;
+    /// library callers mutating the pub fields directly can call it
+    /// themselves. Errors are prefixed `invalid scenario:` so the named
+    /// failure is greppable at any entry point.
+    pub fn validate(&self) -> Result<()> {
+        if self.dp < 1 || self.tp < 1 || self.pp < 1 {
+            bail!(
+                "invalid scenario: dp/tp/pp must be >= 1 (got dp={} tp={} pp={})",
+                self.dp, self.tp, self.pp
+            );
+        }
+        if self.micro_batches < 1 {
+            bail!("invalid scenario: micro_batches must be >= 1");
+        }
+        if self.seq_len < 1 || self.batch_per_dp < 1 || self.bucket_elems < 1 {
+            bail!(
+                "invalid scenario: seq_len/batch_per_dp/bucket_elems must be >= 1 \
+                 (got {}/{}/{})",
+                self.seq_len, self.batch_per_dp, self.bucket_elems
+            );
+        }
+        if !self.straggler.is_finite() || self.straggler < 1.0 {
+            bail!(
+                "invalid scenario: straggler expects a finite factor >= 1.0, got {}",
+                self.straggler
+            );
+        }
+        if !self.alpha.is_finite() || !(0.0..=1.0).contains(&self.alpha) {
+            bail!("invalid scenario: alpha must be in [0, 1], got {}", self.alpha);
+        }
+        if let Some(cb) = self.c_max_bytes {
+            if !cb.is_finite() || cb <= 0.0 {
+                bail!(
+                    "invalid scenario: c_max_bytes must be finite and > 0 \
+                     (use None for No-Fuse), got {cb}"
+                );
+            }
+        }
+        let hw = &self.hw;
+        for (name, v) in [
+            ("gpu_flops", hw.gpu_flops),
+            ("hbm_bw", hw.hbm_bw),
+            ("nvlink_bw", hw.nvlink_bw),
+            ("ib_bw", hw.ib_bw),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("invalid scenario: hardware {name} must be finite and > 0, got {v}");
+            }
+        }
+        for (name, v) in [
+            ("nvlink_lat", hw.nvlink_lat),
+            ("ib_lat", hw.ib_lat),
+            ("launch_overhead", hw.launch_overhead),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                bail!("invalid scenario: hardware {name} must be finite and >= 0, got {v}");
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -196,5 +265,73 @@ mod tests {
             Scenario::paper_default().with_straggler(f64::NAN).straggler,
             1.0,
         );
+    }
+
+    #[test]
+    fn validate_accepts_defaults_and_paper_knobs() {
+        assert!(Scenario::paper_default().validate().is_ok());
+        let s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Shampoo, DpStrategy::Sc)
+            .with_c_max(None)
+            .with_alpha(0.5)
+            .with_straggler(1.5)
+            .with_micro_batches(8);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_poisoned_knobs() {
+        // Each case would otherwise produce inf/NaN rows that the
+        // total_cmp-hardened sorts rank instead of crashing on.
+        let base = Scenario::paper_default;
+        let cases: Vec<(&str, Scenario)> = vec![
+            ("straggler", {
+                let mut s = base();
+                s.straggler = 0.0; // bypasses with_straggler's clamp
+                s
+            }),
+            ("straggler", {
+                let mut s = base();
+                s.straggler = -2.0;
+                s
+            }),
+            ("straggler", {
+                let mut s = base();
+                s.straggler = f64::NAN;
+                s
+            }),
+            ("gpu_flops", {
+                let mut s = base();
+                s.hw.gpu_flops = 0.0;
+                s
+            }),
+            ("nvlink_bw", {
+                let mut s = base();
+                s.hw.nvlink_bw = 0.0;
+                s
+            }),
+            ("ib_bw", {
+                let mut s = base();
+                s.hw.ib_bw = -1.0;
+                s
+            }),
+            ("hbm_bw", {
+                let mut s = base();
+                s.hw.hbm_bw = f64::INFINITY;
+                s
+            }),
+            ("c_max_bytes", base().with_c_max(Some(0.0))),
+            ("c_max_bytes", base().with_c_max(Some(f64::NAN))),
+            ("alpha", base().with_alpha(2.0)),
+            ("ib_lat", {
+                let mut s = base();
+                s.hw.ib_lat = f64::NAN;
+                s
+            }),
+        ];
+        for (what, s) in cases {
+            let e = s.validate().expect_err(what).to_string();
+            assert!(e.contains("invalid scenario"), "{what}: {e}");
+            assert!(e.contains(what), "{what} not named in: {e}");
+        }
     }
 }

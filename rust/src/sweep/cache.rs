@@ -313,6 +313,13 @@ pub struct CacheStats {
     /// cache instead of being re-derived (per-thread, like
     /// `scratch_reuses`).
     pub order_hits: u64,
+    /// Scenarios evaluated through the batched SoA closed-form tier
+    /// ([`crate::sim::batch`]) — one per lane, summed over every batch
+    /// run against this cache. `0` means every leaf took the scalar or
+    /// timeline arm (e.g. `--no-batch`, or no shared-fingerprint
+    /// groups). Row bytes are identical either way; this is the
+    /// diagnostic that says which arm did the work.
+    pub batched_evals: u64,
 }
 
 impl CacheStats {
@@ -335,6 +342,7 @@ impl CacheStats {
             ("timeline_tasks", Value::num(self.timeline_tasks as f64)),
             ("scratch_reuses", Value::num(self.scratch_reuses as f64)),
             ("order_hits", Value::num(self.order_hits as f64)),
+            ("batched_evals", Value::num(self.batched_evals as f64)),
         ])
     }
 
@@ -360,6 +368,7 @@ impl CacheStats {
             timeline_tasks: num("timeline_tasks"),
             scratch_reuses: num("scratch_reuses"),
             order_hits: num("order_hits"),
+            batched_evals: num("batched_evals"),
         }
     }
 }
@@ -650,6 +659,7 @@ pub struct PlanCache {
     timeline_tasks: AtomicU64,
     scratch_reuses: AtomicU64,
     order_hits: AtomicU64,
+    batched_evals: AtomicU64,
 }
 
 impl Default for PlanCache {
@@ -693,6 +703,7 @@ impl PlanCache {
             timeline_tasks: AtomicU64::new(0),
             scratch_reuses: AtomicU64::new(0),
             order_hits: AtomicU64::new(0),
+            batched_evals: AtomicU64::new(0),
         }
     }
 
@@ -976,6 +987,12 @@ impl PlanCache {
         self.order_hits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `n` lanes evaluated by one batched SoA closed-form run
+    /// ([`crate::sim::batch`]; allocation-free, called once per batch).
+    pub fn note_batched_evals(&self, n: u64) {
+        self.batched_evals.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Statistics snapshot (counters + byte ledger).
     pub fn stats(&self) -> CacheStats {
         let resident = self.maps.lock().unwrap().bytes as u64;
@@ -990,6 +1007,7 @@ impl PlanCache {
             timeline_tasks: self.timeline_tasks.load(Ordering::Relaxed),
             scratch_reuses: self.scratch_reuses.load(Ordering::Relaxed),
             order_hits: self.order_hits.load(Ordering::Relaxed),
+            batched_evals: self.batched_evals.load(Ordering::Relaxed),
         }
     }
 
@@ -1353,6 +1371,74 @@ mod tests {
             (parsed.timeline_tasks, parsed.scratch_reuses, parsed.order_hits),
             (0, 0, 0),
         );
+        assert_eq!(parsed.batched_evals, 0);
         assert_eq!(CacheStats::from_json(&Value::Null), CacheStats::default());
+    }
+
+    #[test]
+    fn every_counter_survives_emit_parse_and_zero_defaults() {
+        // Table over every CacheStats field: each (key, accessor) pair
+        // must (a) survive to_json -> from_json with a distinct value,
+        // and (b) zero-default when its key is stripped from the
+        // artifact — the `--baseline` join tolerance for artifacts
+        // written before that counter existed (e.g. pre-batch baselines
+        // lacking `batched_evals`). A new counter added to the struct
+        // without a row here fails the exhaustiveness check below.
+        let fields: Vec<(&str, fn(&CacheStats) -> u64)> = vec![
+            ("hits", |s| s.hits),
+            ("l1_hits", |s| s.l1_hits),
+            ("solves", |s| s.solves),
+            ("evictions", |s| s.evictions),
+            ("resident_bytes", |s| s.resident_bytes),
+            ("peak_bytes", |s| s.peak_bytes),
+            ("budget_bytes", |s| s.budget_bytes),
+            ("timeline_tasks", |s| s.timeline_tasks),
+            ("scratch_reuses", |s| s.scratch_reuses),
+            ("order_hits", |s| s.order_hits),
+            ("batched_evals", |s| s.batched_evals),
+        ];
+        let full = CacheStats {
+            hits: 1,
+            l1_hits: 2,
+            solves: 3,
+            evictions: 4,
+            resident_bytes: 5,
+            peak_bytes: 6,
+            budget_bytes: 7,
+            timeline_tasks: 8,
+            scratch_reuses: 9,
+            order_hits: 10,
+            batched_evals: 11,
+        };
+        // Exhaustiveness: the table covers every emitted key and every
+        // field value 1..=N appears exactly once.
+        let v = full.to_json();
+        assert_eq!(CacheStats::from_json(&v), full);
+        let mut seen: Vec<u64> = fields.iter().map(|(_, get)| get(&full)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (1..=fields.len() as u64).collect::<Vec<_>>());
+        for &(key, get) in &fields {
+            // (a) the emitted artifact carries the field's value.
+            assert_eq!(
+                v.get(key).unwrap().as_usize().unwrap() as u64,
+                get(&full),
+                "{key} lost in emit",
+            );
+            // (b) stripping the key zero-defaults only that field.
+            let stripped = Value::obj(
+                fields
+                    .iter()
+                    .filter(|(k, _)| *k != key)
+                    .map(|(k, g)| (*k, Value::num(g(&full) as f64)))
+                    .collect(),
+            );
+            let parsed = CacheStats::from_json(&stripped);
+            assert_eq!(get(&parsed), 0, "{key} must zero-default when absent");
+            for &(other, g) in &fields {
+                if other != key {
+                    assert_eq!(g(&parsed), g(&full), "{other} perturbed by dropping {key}");
+                }
+            }
+        }
     }
 }

@@ -17,8 +17,14 @@
 //! engine's cache, visible in [`SweepEngine::cache_stats`] alongside
 //! the plan-cache counters (including `l1_hits`, the lock-free share).
 
+use std::collections::HashMap;
 use std::sync::OnceLock;
 
+use crate::cost::optim::{CostMetric, OptimKind};
+use crate::model::qwen3::Qwen3Size;
+use crate::partition::DpStrategy;
+use crate::sim::batch::{simulate_batch_scatter, ScenarioBatch};
+use crate::sim::iteration::closed_form_path;
 use crate::sim::{simulate_iteration_cached, Breakdown, Scenario};
 use crate::util::json::Value;
 use crate::util::pool;
@@ -32,26 +38,46 @@ use super::grid::SweepGrid;
 pub struct SweepEngine {
     cache: PlanCache,
     threads: usize,
+    /// Route shared-fingerprint closed-form groups through the batched
+    /// SoA tier (`sim::batch`)? Default on; `--no-batch` turns it off.
+    /// Row bytes are identical either way (the batch tier is bit-exact,
+    /// pinned by `tests/batch_differential.rs`).
+    batching: bool,
 }
 
 impl SweepEngine {
     /// An engine with its own cold cache (byte budget from the
     /// environment — see [`crate::sweep::cache::budget_from_env`]).
     pub fn new(threads: usize) -> SweepEngine {
-        SweepEngine { cache: PlanCache::new(), threads: threads.max(1) }
+        SweepEngine { cache: PlanCache::new(), threads: threads.max(1), batching: true }
     }
 
     /// An engine whose cache has an explicit byte budget (0 = unbounded)
     /// — the `canzona sweep --cache-budget-mb` path.
     pub fn with_budget(threads: usize, budget_bytes: usize) -> SweepEngine {
-        SweepEngine { cache: PlanCache::with_budget(budget_bytes), threads: threads.max(1) }
+        SweepEngine {
+            cache: PlanCache::with_budget(budget_bytes),
+            threads: threads.max(1),
+            batching: true,
+        }
     }
 
     /// An engine over a caller-constructed cache (e.g. an L1-disabled
     /// `PlanCache::with_options(.., false)` for A/B read-path
     /// benchmarks).
     pub fn with_cache(threads: usize, cache: PlanCache) -> SweepEngine {
-        SweepEngine { cache, threads: threads.max(1) }
+        SweepEngine { cache, threads: threads.max(1), batching: true }
+    }
+
+    /// Enable or disable the batched evaluation tier (the CLI's
+    /// `--no-batch`; benchmarks A/B the two arms with this).
+    pub fn set_batching(&mut self, on: bool) {
+        self.batching = on;
+    }
+
+    /// Is the batched evaluation tier enabled?
+    pub fn batching(&self) -> bool {
+        self.batching
     }
 
     /// The shared process-wide engine (thread count from
@@ -82,10 +108,68 @@ impl SweepEngine {
     }
 
     /// Evaluate a scenario batch in parallel; results come back in input
-    /// order, independent of worker scheduling.
+    /// order, independent of worker scheduling (and of whether the
+    /// batched tier is on — results are bit-identical either way).
+    ///
+    /// Dispatch: closed-form scenarios sharing a plan fingerprint
+    /// (everything but `c_max_bytes` — see [`GroupKey`]) are grouped
+    /// and evaluated through the batched SoA tier
+    /// ([`crate::sim::batch`]), one `StageTable` fetch per group;
+    /// singletons and timeline-path scenarios take the scalar arm.
     pub fn eval(&self, scenarios: &[Scenario]) -> Vec<Breakdown> {
-        pool::parallel_map(scenarios, self.threads, |s| {
-            simulate_iteration_cached(s, &self.cache)
+        if !self.batching || scenarios.len() < 2 {
+            return pool::parallel_map(scenarios, self.threads, |s| {
+                simulate_iteration_cached(s, &self.cache)
+            });
+        }
+        let units = group_units(scenarios);
+        if units.len() == scenarios.len() {
+            // No multi-lane group formed: skip the scatter pass.
+            return pool::parallel_map(scenarios, self.threads, |s| {
+                simulate_iteration_cached(s, &self.cache)
+            });
+        }
+        let results = pool::parallel_map(&units, self.threads, |unit| match unit {
+            EvalUnit::Scalar(i) => {
+                vec![simulate_iteration_cached(&scenarios[*i], &self.cache)]
+            }
+            EvalUnit::Group(idxs) => self.eval_group(scenarios, idxs),
+        });
+        // Scatter unit results back to input order.
+        let mut out: Vec<Option<Breakdown>> = vec![None; scenarios.len()];
+        for (unit, res) in units.iter().zip(results) {
+            match unit {
+                EvalUnit::Scalar(i) => {
+                    out[*i] = res.into_iter().next();
+                }
+                EvalUnit::Group(idxs) => {
+                    for (&i, b) in idxs.iter().zip(res) {
+                        out[i] = Some(b);
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|b| b.expect("every scenario owned by exactly one unit")).collect()
+    }
+
+    /// Evaluate one shared-fingerprint group through the batch tier,
+    /// falling back to the scalar arm if batch construction refuses the
+    /// base (results are identical; the batch is an optimization, never
+    /// a semantic gate).
+    fn eval_group(&self, scenarios: &[Scenario], idxs: &[usize]) -> Vec<Breakdown> {
+        let build = || -> crate::util::error::Result<Vec<Breakdown>> {
+            let mut batch = ScenarioBatch::new(scenarios[idxs[0]].clone())?;
+            for &i in idxs {
+                batch.push_scenario(&scenarios[i])?;
+            }
+            let mut outs = vec![Breakdown::default(); idxs.len()];
+            simulate_batch_scatter(&batch, &self.cache, &mut outs);
+            Ok(outs)
+        };
+        build().unwrap_or_else(|_| {
+            idxs.iter()
+                .map(|&i| simulate_iteration_cached(&scenarios[i], &self.cache))
+                .collect()
         })
     }
 
@@ -95,6 +179,96 @@ impl SweepEngine {
         let breakdowns = self.eval(&scenarios);
         (scenarios, breakdowns)
     }
+}
+
+/// One work item of a grouped [`SweepEngine::eval`]: a scalar scenario
+/// (timeline-path, or a fingerprint singleton) or a shared-fingerprint
+/// group routed through the batch tier. Indices refer to the input
+/// slice; every input index appears in exactly one unit.
+enum EvalUnit {
+    Scalar(usize),
+    Group(Vec<usize>),
+}
+
+/// The batch grouping rule: everything the closed form reads *except*
+/// the per-lane knob (`c_max_bytes`). Two scenarios with equal keys
+/// share a `StageTable`/plan fingerprint, so one batched call covers
+/// both. Hardware is compared by exact bits — a derated or edited
+/// profile splits the group rather than risking a mismatched lane.
+#[derive(Hash, PartialEq, Eq)]
+struct GroupKey {
+    size: Qwen3Size,
+    dp: usize,
+    tp: usize,
+    optim: OptimKind,
+    strategy: DpStrategy,
+    metric: CostMetric,
+    alpha_bits: u64,
+    seq_len: usize,
+    batch_per_dp: usize,
+    bucket_elems: usize,
+    hw_name: &'static str,
+    gpus_per_node: usize,
+    hw_bits: [u64; 7],
+}
+
+impl GroupKey {
+    fn for_scenario(s: &Scenario) -> GroupKey {
+        GroupKey {
+            size: s.size,
+            dp: s.dp,
+            tp: s.tp,
+            optim: s.optim,
+            strategy: s.strategy,
+            metric: s.metric,
+            alpha_bits: s.alpha.to_bits(),
+            seq_len: s.seq_len,
+            batch_per_dp: s.batch_per_dp,
+            bucket_elems: s.bucket_elems,
+            hw_name: s.hw.name,
+            gpus_per_node: s.hw.gpus_per_node,
+            hw_bits: [
+                s.hw.gpu_flops.to_bits(),
+                s.hw.hbm_bw.to_bits(),
+                s.hw.nvlink_bw.to_bits(),
+                s.hw.ib_bw.to_bits(),
+                s.hw.nvlink_lat.to_bits(),
+                s.hw.ib_lat.to_bits(),
+                s.hw.launch_overhead.to_bits(),
+            ],
+        }
+    }
+}
+
+/// Partition `scenarios` into [`EvalUnit`]s: closed-form scenarios
+/// sharing a [`GroupKey`] form one `Group` (anchored at the first
+/// member's position, lanes in input order); everything else — timeline
+/// scenarios and fingerprint singletons — stays `Scalar`. Deterministic
+/// for a given input (no map-iteration order dependence).
+fn group_units(scenarios: &[Scenario]) -> Vec<EvalUnit> {
+    let mut members: HashMap<GroupKey, Vec<usize>> = HashMap::new();
+    for (i, s) in scenarios.iter().enumerate() {
+        if closed_form_path(s) {
+            members.entry(GroupKey::for_scenario(s)).or_default().push(i);
+        }
+    }
+    let mut units = Vec::new();
+    for (i, s) in scenarios.iter().enumerate() {
+        if !closed_form_path(s) {
+            units.push(EvalUnit::Scalar(i));
+            continue;
+        }
+        let group = &members[&GroupKey::for_scenario(s)];
+        if group[0] != i {
+            continue; // emitted at the first member's position
+        }
+        if group.len() >= 2 {
+            units.push(EvalUnit::Group(group.clone()));
+        } else {
+            units.push(EvalUnit::Scalar(i));
+        }
+    }
+    units
 }
 
 /// Render a sweep as one Markdown table, one row per scenario, in
@@ -238,5 +412,67 @@ mod tests {
     #[test]
     fn global_engine_is_shared() {
         assert!(std::ptr::eq(SweepEngine::global(), SweepEngine::global()));
+    }
+
+    /// A grid whose leaves share one fingerprint and vary only C_max —
+    /// the shape the batch tier exists for.
+    fn cmax_grid() -> SweepGrid {
+        SweepGrid {
+            c_max_mb: vec![None, Some(64.0), Some(128.0), Some(256.0), Some(512.0)],
+            ..small_grid()
+        }
+    }
+
+    #[test]
+    fn batching_on_off_renders_identical_artifacts() {
+        // The CLI-level guarantee behind `--no-batch` and the
+        // `--baseline --regress-pct 0` CI round-trip: both arms must
+        // produce byte-identical tables AND json, over a grid that
+        // exercises multi-lane groups, singletons, and timeline rows.
+        let mut grid = cmax_grid();
+        grid.pp = vec![1, 2]; // pp=2 rows take the timeline arm
+        let on = SweepEngine::new(4);
+        let mut off = SweepEngine::new(4);
+        off.set_batching(false);
+        assert!(on.batching() && !off.batching());
+        let (sa, ra) = on.run_grid(&grid);
+        let (sb, rb) = off.run_grid(&grid);
+        assert_eq!(render_table(&sa, &ra).render(), render_table(&sb, &rb).render());
+        assert_eq!(render_json(&sa, &ra).to_string(), render_json(&sb, &rb).to_string());
+        assert!(on.cache_stats().batched_evals > 0, "groups must take the batch tier");
+        assert_eq!(off.cache_stats().batched_evals, 0, "--no-batch must not batch");
+    }
+
+    #[test]
+    fn grouping_partitions_every_index_once() {
+        let mut grid = cmax_grid();
+        grid.pp = vec![1, 2];
+        let scens = grid.scenarios();
+        let units = group_units(&scens);
+        let mut seen = vec![0usize; scens.len()];
+        for u in &units {
+            match u {
+                EvalUnit::Scalar(i) => seen[*i] += 1,
+                EvalUnit::Group(idxs) => {
+                    assert!(idxs.len() >= 2, "groups of one must stay scalar");
+                    for &i in idxs {
+                        assert!(closed_form_path(&scens[i]), "timeline row in a group");
+                        seen[i] += 1;
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        // The c_max axis is the only lane knob here: every closed-form
+        // leaf lands in a 5-lane group, timeline leaves stay scalar.
+        let grouped: usize = units
+            .iter()
+            .map(|u| match u {
+                EvalUnit::Group(v) => v.len(),
+                EvalUnit::Scalar(_) => 0,
+            })
+            .sum();
+        let closed: usize = scens.iter().filter(|s| closed_form_path(s)).count();
+        assert_eq!(grouped, closed);
     }
 }

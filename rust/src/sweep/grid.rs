@@ -17,7 +17,7 @@ use crate::{bail, err};
 
 /// One sweep's axes. Empty axes are invalid; single-element axes pin a
 /// dimension.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SweepGrid {
     /// Model family members to sweep.
     pub models: Vec<Qwen3Size>,
@@ -89,6 +89,24 @@ fn parse_dim(s: &str) -> Option<usize> {
     s.parse::<usize>().ok().filter(|&n| n >= 1)
 }
 
+/// An integer axis list with inclusive range segments: each segment is
+/// either a positive integer or `a..b` (expanding to `a, a+1, …, b`).
+/// `--dp 1,4..6,16` ⇒ `[1, 4, 5, 6, 16]`. Empty segments, zeros,
+/// and reversed ranges (`6..4`) are errors, mirroring [`parse_list`].
+fn parse_dims(raw: &str, what: &str) -> Result<Vec<usize>> {
+    let lists = parse_list(raw, what, |seg| match seg.split_once("..") {
+        None => parse_dim(seg).map(|n| vec![n]),
+        Some((a, b)) => {
+            let (lo, hi) = (parse_dim(a.trim())?, parse_dim(b.trim())?);
+            if lo > hi {
+                return None;
+            }
+            Some((lo..=hi).collect())
+        }
+    })?;
+    Ok(lists.into_iter().flatten().collect())
+}
+
 impl SweepGrid {
     /// Parse grid axes from CLI options; absent options keep defaults.
     ///
@@ -101,16 +119,16 @@ impl SweepGrid {
             g.models = parse_list(raw, "models", Qwen3Size::parse)?;
         }
         if let Some(raw) = args.get("dp") {
-            g.dp = parse_list(raw, "dp", parse_dim)?;
+            g.dp = parse_dims(raw, "dp")?;
         }
         if let Some(raw) = args.get("tp") {
-            g.tp = parse_list(raw, "tp", parse_dim)?;
+            g.tp = parse_dims(raw, "tp")?;
         }
         if let Some(raw) = args.get("pp") {
-            g.pp = parse_list(raw, "pp", parse_dim)?;
+            g.pp = parse_dims(raw, "pp")?;
         }
         if let Some(raw) = args.get("micro-batches") {
-            g.micro_batches = parse_list(raw, "micro-batches", parse_dim)?;
+            g.micro_batches = parse_dims(raw, "micro-batches")?;
         }
         if let Some(raw) = args.get("schedule") {
             g.schedules = parse_list(raw, "schedule", PipelineSchedule::parse)?;
@@ -210,6 +228,52 @@ impl SweepGrid {
         }
         out
     }
+
+    /// Render the grid back to the CLI argument strings that reproduce
+    /// it: `SweepGrid::parse` of the result is `==` to `self` (the
+    /// round-trip `tests/grid_roundtrip.rs` pins). Every axis is
+    /// emitted explicitly (canonical form — no reliance on defaults),
+    /// as comma-joined lists; f64 values use Rust's shortest
+    /// round-trip `Display`, so re-parsing recovers identical bits.
+    pub fn to_cli_args(&self) -> Vec<String> {
+        fn join<T, F: Fn(&T) -> String>(items: &[T], f: F) -> String {
+            items.iter().map(f).collect::<Vec<_>>().join(",")
+        }
+        let metric = match self.metric {
+            CostMetric::Numel => "numel",
+            CostMetric::Flops => "flops",
+            CostMetric::StateBytes => "state",
+        };
+        vec![
+            "--models".into(),
+            join(&self.models, |m| m.label().to_ascii_lowercase()),
+            "--dp".into(),
+            join(&self.dp, usize::to_string),
+            "--tp".into(),
+            join(&self.tp, usize::to_string),
+            "--pp".into(),
+            join(&self.pp, usize::to_string),
+            "--micro-batches".into(),
+            join(&self.micro_batches, usize::to_string),
+            "--schedule".into(),
+            join(&self.schedules, |s| s.label().to_string()),
+            "--straggler".into(),
+            join(&self.stragglers, f64::to_string),
+            "--optims".into(),
+            join(&self.optims, |o| o.label().to_ascii_lowercase()),
+            "--strategies".into(),
+            join(&self.strategies, |s| s.label().to_ascii_lowercase()),
+            "--alphas".into(),
+            join(&self.alphas, f64::to_string),
+            "--c-max-mb".into(),
+            join(&self.c_max_mb, |c| match c {
+                None => "none".to_string(),
+                Some(mb) => mb.to_string(),
+            }),
+            "--metric".into(),
+            metric.to_string(),
+        ]
+    }
 }
 
 #[cfg(test)]
@@ -269,6 +333,46 @@ mod tests {
         assert!(SweepGrid::parse(&argv("--schedule zigzag")).is_err());
         assert!(SweepGrid::parse(&argv("--straggler 0.5")).is_err());
         assert!(SweepGrid::parse(&argv("--straggler nan")).is_err());
+    }
+
+    #[test]
+    fn integer_axes_accept_inclusive_ranges() {
+        let g = SweepGrid::parse(&argv("--dp 1,4..6,16 --tp 2..2 --pp 1..3")).unwrap();
+        assert_eq!(g.dp, vec![1, 4, 5, 6, 16]);
+        assert_eq!(g.tp, vec![2]);
+        assert_eq!(g.pp, vec![1, 2, 3]);
+        // Degenerate/reversed/zero-anchored ranges are errors, not
+        // silent empties — an empty axis would zero the cross product.
+        assert!(SweepGrid::parse(&argv("--dp 6..4")).is_err());
+        assert!(SweepGrid::parse(&argv("--dp 0..2")).is_err());
+        assert!(SweepGrid::parse(&argv("--dp 1..")).is_err());
+        assert!(SweepGrid::parse(&argv("--dp ..4")).is_err());
+        assert!(SweepGrid::parse(&argv("--micro-batches 1..2,,4")).is_err());
+    }
+
+    #[test]
+    fn cli_args_round_trip_is_identity() {
+        // The deterministic companion of tests/grid_roundtrip.rs's
+        // property sweep: a hand-built grid survives
+        // to_cli_args -> parse exactly (PartialEq, f64 bits included).
+        let g = SweepGrid {
+            models: vec![Qwen3Size::S1_7B, Qwen3Size::S32B],
+            dp: vec![4, 8, 32],
+            tp: vec![1, 8],
+            pp: vec![1, 2],
+            micro_batches: vec![1, 8],
+            schedules: vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe],
+            stragglers: vec![1.0, 1.25],
+            optims: vec![OptimKind::Muon, OptimKind::AdamW],
+            strategies: vec![DpStrategy::Sc, DpStrategy::NvLayerwise, DpStrategy::LbAsc],
+            alphas: vec![0.0, 0.5, 1.0],
+            c_max_mb: vec![None, Some(64.0), Some(512.5)],
+            metric: CostMetric::StateBytes,
+        };
+        let cli = g.to_cli_args();
+        let reparsed =
+            SweepGrid::parse(&Args::parse(cli.into_iter(), &[]).unwrap()).unwrap();
+        assert_eq!(reparsed, g);
     }
 
     #[test]

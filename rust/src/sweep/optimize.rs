@@ -9,7 +9,12 @@
 //! ([`SweepEngine::eval`] → `simulate_iteration_into` on the
 //! persistent `util::pool` workers, plan-cache L1 reads), and the
 //! search stops at the first leaf whose bound exceeds the incumbent —
-//! in bound order, every later leaf is pruned too.
+//! in bound order, every later leaf is pruned too. Each eval batch
+//! inherits the engine's batched SoA tier ([`crate::sim::batch`]):
+//! closed-form leaves in the batch that share a plan fingerprint and
+//! differ only in `C_max` are evaluated as one multi-lane call —
+//! bit-identical to the scalar arm, so the winner, frontier, and
+//! artifact bytes are unchanged by `--no-batch`.
 //!
 //! **Exactness.** Pruning is on strict `bound > incumbent`, and bounds
 //! never exceed true values, so a pruned leaf's value is `>` the final

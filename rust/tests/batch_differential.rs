@@ -1,0 +1,193 @@
+//! Differential oracle for the batched SoA evaluator: every lane of a
+//! [`ScenarioBatch`] must be **bit-for-bit** identical (every
+//! `Breakdown` field except `planning_s`, which is wall-clock cache
+//! latency) to the scalar `simulate_iteration_cached` run on the
+//! equivalent standalone [`Scenario`] — across every strategy ×
+//! optimizer × size × TP × fusion point in the oracle grid, with
+//! randomized per-lane knob vectors (bandwidths, latencies, launch
+//! overhead, straggler derate, C_max) and ragged batch lengths
+//! straddling the fixed-width chunk boundary (`1..=BATCH_CHUNK + 1`).
+//!
+//! The lane-knob → scalar-scenario equivalence is: the oracle scenario
+//! carries the lane's hardware profile *pre-derated* by the lane
+//! straggler and `straggler = 1.0`, because the batch path folds the
+//! lane straggler into its effective hardware while the scalar
+//! dispatcher would route `straggler != 1.0` to the timeline engine.
+
+mod common;
+
+use canzona::cost::hardware::Hardware;
+use canzona::sim::{
+    simulate_batch_into, simulate_iteration_cached, Breakdown, BreakdownBatch, LaneKnobs,
+    Scenario, ScenarioBatch, BATCH_CHUNK,
+};
+use canzona::sweep::PlanCache;
+use canzona::util::rng::Rng;
+use common::{assert_bits_eq, oracle_grid};
+
+/// The standalone scenario whose scalar evaluation the batch lane must
+/// reproduce bit-for-bit: lane knobs over the base hardware identity,
+/// derated by the lane straggler, with `straggler = 1.0` so the scalar
+/// dispatcher keeps it on the closed-form arm.
+fn oracle_scenario(base: &Scenario, k: &LaneKnobs) -> Scenario {
+    let mut s = base.clone();
+    s.c_max_bytes = k.c_max_bytes;
+    s.hw = Hardware {
+        gpu_flops: k.gpu_flops,
+        hbm_bw: k.hbm_bw,
+        nvlink_bw: k.nvlink_bw,
+        ib_bw: k.ib_bw,
+        nvlink_lat: k.nvlink_lat,
+        ib_lat: k.ib_lat,
+        launch_overhead: k.launch_overhead,
+        ..s.hw.clone()
+    }
+    .derate(k.straggler);
+    s.straggler = 1.0;
+    s
+}
+
+/// A random lane: every continuous knob perturbed away from the base
+/// profile, including a straggler derate and a fusion-capacity draw
+/// that crosses the None / Some boundary.
+fn perturbed_lane(rng: &mut Rng, base: &Scenario) -> LaneKnobs {
+    let mut k = LaneKnobs::from_scenario(base);
+    let scale = |rng: &mut Rng| 0.5 + 1.5 * rng.next_f64(); // [0.5, 2.0)
+    k.gpu_flops *= scale(rng);
+    k.hbm_bw *= scale(rng);
+    k.nvlink_bw *= scale(rng);
+    k.ib_bw *= scale(rng);
+    k.nvlink_lat *= 2.0 * rng.next_f64(); // [0, 2x) — zero latency is legal
+    k.ib_lat *= 2.0 * rng.next_f64();
+    k.launch_overhead *= 2.0 * rng.next_f64();
+    k.straggler = 1.0 + rng.next_f64(); // [1.0, 2.0)
+    k.c_max_bytes = match rng.index(3) {
+        0 => None,
+        1 => Some((64.0 + 448.0 * rng.next_f64()) * 1024.0 * 1024.0), // 64..512 MB
+        _ => k.c_max_bytes,
+    };
+    k
+}
+
+/// Evaluate `batch` and compare every lane's scattered `Breakdown`
+/// against the scalar oracle on the *same* cache (the engine's
+/// operating mode: plans and tables are shared Arcs either way).
+fn check_batch_against_scalar(label: &str, batch: &ScenarioBatch, cache: &PlanCache) {
+    let mut out = BreakdownBatch::new();
+    simulate_batch_into(batch, cache, &mut out);
+    assert_eq!(out.len(), batch.len(), "{label}: output length");
+    for (lane, knobs) in batch.lanes().iter().enumerate() {
+        let mut got = Breakdown::default();
+        out.write_into(batch, lane, &mut got);
+        let oracle = oracle_scenario(batch.base(), knobs);
+        let want = simulate_iteration_cached(&oracle, cache);
+        assert_bits_eq(&format!("{label} lane {lane}"), &want, &got);
+    }
+}
+
+#[test]
+fn batched_lanes_match_scalar_bits_across_oracle_grid() {
+    let cache = PlanCache::unbounded();
+    let mut rng = Rng::new(0xBA7C4_D1FF);
+    for (i, s) in oracle_grid().scenarios().into_iter().enumerate() {
+        let label = format!(
+            "{} tp{} {} {} c_max={:?}",
+            s.label,
+            s.tp,
+            s.optim.label(),
+            s.strategy.label(),
+            s.c_max_bytes,
+        );
+        let mut batch = ScenarioBatch::new(s.clone()).expect("oracle grid is closed-form");
+        // Lane 0 is the identity lane (the base scenario itself); the
+        // rest are random draws. Lengths cycle 1..=BATCH_CHUNK + 1 so
+        // every ragged tail (including the empty tail and a full chunk
+        // plus one) appears across the grid.
+        let lanes = 1 + i % (BATCH_CHUNK + 1);
+        batch.push_scenario(&s).expect("identity lane");
+        for _ in 1..lanes {
+            batch.push(perturbed_lane(&mut rng, &s)).expect("perturbed lane");
+        }
+        check_batch_against_scalar(&label, &batch, &cache);
+    }
+}
+
+#[test]
+fn every_ragged_tail_length_matches_scalar_bits() {
+    // One fixed base, every batch length 1..=2*BATCH_CHUNK + 1: the
+    // chunked inner loops must agree with the scalar path on full
+    // chunks, partial tails, and the one-past-a-chunk boundary alike.
+    let cache = PlanCache::unbounded();
+    let mut rng = Rng::new(0x7A11_5EED);
+    let grid = oracle_grid();
+    let base = grid.scenarios().into_iter().next().expect("non-empty grid");
+    for n in 1..=2 * BATCH_CHUNK + 1 {
+        let mut batch = ScenarioBatch::new(base.clone()).expect("closed-form base");
+        for lane in 0..n {
+            if lane == 0 {
+                batch.push_scenario(&base).expect("identity lane");
+            } else {
+                batch.push(perturbed_lane(&mut rng, &base)).expect("perturbed lane");
+            }
+        }
+        check_batch_against_scalar(&format!("len={n}"), &batch, &cache);
+    }
+}
+
+#[test]
+fn identity_lanes_match_scalar_bits_on_a_cold_cache() {
+    // Plans solved by the batch path and by the scalar path on separate
+    // caches must still agree bit-for-bit: the solves themselves are
+    // deterministic, not merely Arc-shared.
+    let grid = oracle_grid();
+    for s in grid.scenarios().into_iter().take(8) {
+        let mut batch = ScenarioBatch::new(s.clone()).expect("closed-form base");
+        batch.push_scenario(&s).expect("identity lane");
+        let batch_cache = PlanCache::unbounded();
+        let mut out = BreakdownBatch::new();
+        simulate_batch_into(&batch, &batch_cache, &mut out);
+        let mut got = Breakdown::default();
+        out.write_into(&batch, 0, &mut got);
+        let scalar_cache = PlanCache::unbounded();
+        let want = simulate_iteration_cached(&s, &scalar_cache);
+        assert_bits_eq(&format!("cold {}", s.label), &want, &got);
+    }
+}
+
+#[test]
+fn non_closed_form_bases_are_rejected_at_construction() {
+    let grid = oracle_grid();
+    let base = grid.scenarios().into_iter().next().expect("non-empty grid");
+    let mut pp2 = base.clone();
+    pp2.pp = 2;
+    for (what, s) in [
+        ("pp=2", pp2),
+        ("micro_batches=4", base.clone().with_micro_batches(4)),
+        ("straggler=1.5", base.clone().with_straggler(1.5)),
+    ] {
+        let err = ScenarioBatch::new(s).expect_err(what).to_string();
+        assert!(err.contains("closed-form"), "{what}: unexpected message {err:?}");
+    }
+}
+
+#[test]
+fn poisoned_lane_knobs_are_rejected_at_push() {
+    let grid = oracle_grid();
+    let base = grid.scenarios().into_iter().next().expect("non-empty grid");
+    let mut batch = ScenarioBatch::new(base.clone()).expect("closed-form base");
+    let poison: &[(&str, fn(&mut LaneKnobs))] = &[
+        ("zero ib_bw", |k| k.ib_bw = 0.0),
+        ("nan hbm_bw", |k| k.hbm_bw = f64::NAN),
+        ("negative latency", |k| k.nvlink_lat = -1e-6),
+        ("sub-unit straggler", |k| k.straggler = 0.5),
+        ("zero c_max", |k| k.c_max_bytes = Some(0.0)),
+        ("inf c_max", |k| k.c_max_bytes = Some(f64::INFINITY)),
+    ];
+    for &(what, poison) in poison {
+        let mut k = LaneKnobs::from_scenario(&base);
+        poison(&mut k);
+        let err = batch.push(k).expect_err(what).to_string();
+        assert!(err.contains("invalid scenario:"), "{what}: unexpected message {err:?}");
+    }
+    assert!(batch.is_empty(), "rejected lanes must not be admitted");
+}

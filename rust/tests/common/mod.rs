@@ -1,0 +1,160 @@
+//! Shared test support: the scenario/grid builders and Breakdown
+//! comparators previously copy-pasted across the integration suites
+//! (`sweep_determinism.rs`, `timeline_differential.rs`,
+//! `optimize_differential.rs`, `batch_differential.rs`). Each suite
+//! pulls this in with `mod common;` — keep everything here suite-
+//! agnostic (no `#[test]`s, no suite-specific constants).
+
+// Each integration-test binary compiles its own copy of this module and
+// typically uses a subset of it.
+#![allow(dead_code)]
+
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::{Breakdown, PipelineSchedule};
+use canzona::sweep::SweepGrid;
+
+/// Relative-or-absolute closeness: timings are ~1e-3..1e1 s, so 1e-9
+/// relative; the absolute floor absorbs exact-zero fields (bubble at
+/// full overlap) where two derivations differ only in summation order.
+pub fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()) + 1e-12
+}
+
+/// Assert two breakdowns agree within [`close`] on every timing field,
+/// and exactly on the load vectors / plan statistics (which come from
+/// the same cached tables on both paths).
+pub fn assert_breakdowns_match(label: &str, closed: &Breakdown, event: &Breakdown) {
+    for (field, a, b) in [
+        ("fwd_bwd_s", closed.fwd_bwd_s, event.fwd_bwd_s),
+        ("optimizer_s", closed.optimizer_s, event.optimizer_s),
+        ("total_s", closed.total_s, event.total_s),
+        ("exposed_comm_s", closed.exposed_comm_s, event.exposed_comm_s),
+        ("bubble_s", closed.bubble_s, event.bubble_s),
+        ("adamw_ref_s", closed.adamw_ref_s, event.adamw_ref_s),
+        ("grad_comm_bytes", closed.grad_comm_bytes, event.grad_comm_bytes),
+    ] {
+        assert!(
+            close(a, b),
+            "{label}: {field} diverged: closed={a:.17e} event={b:.17e} \
+             (rel {:.3e})",
+            (a - b).abs() / a.abs().max(b.abs()).max(1e-300),
+        );
+    }
+    assert_eq!(closed.n_micro_groups, event.n_micro_groups, "{label}");
+    assert_eq!(closed.dp_loads_flops, event.dp_loads_flops, "{label}");
+    assert_eq!(closed.dp_loads_state, event.dp_loads_state, "{label}");
+    assert_eq!(closed.tp_loads_flops, event.tp_loads_flops, "{label}");
+    assert_eq!(closed.tp_loads_state, event.tp_loads_state, "{label}");
+}
+
+/// Bit-level Breakdown equality over every field except `planning_s`
+/// (wall-clock cache-fetch latency — not a simulation output, so it is
+/// the one field no differential oracle can pin).
+pub fn assert_bits_eq(label: &str, a: &Breakdown, b: &Breakdown) {
+    for (field, x, y) in [
+        ("fwd_bwd_s", a.fwd_bwd_s, b.fwd_bwd_s),
+        ("optimizer_s", a.optimizer_s, b.optimizer_s),
+        ("total_s", a.total_s, b.total_s),
+        ("adamw_ref_s", a.adamw_ref_s, b.adamw_ref_s),
+        ("exposed_comm_s", a.exposed_comm_s, b.exposed_comm_s),
+        ("grad_comm_bytes", a.grad_comm_bytes, b.grad_comm_bytes),
+        ("bubble_s", a.bubble_s, b.bubble_s),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: {field} {x} vs {y}");
+    }
+    for (field, xs, ys) in [
+        ("dp_loads_flops", &a.dp_loads_flops, &b.dp_loads_flops),
+        ("dp_loads_state", &a.dp_loads_state, &b.dp_loads_state),
+        ("tp_loads_flops", &a.tp_loads_flops, &b.tp_loads_flops),
+        ("tp_loads_state", &a.tp_loads_state, &b.tp_loads_state),
+    ] {
+        assert_eq!(xs.len(), ys.len(), "{label}: {field} length");
+        for (i, (x, y)) in xs.iter().zip(ys.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: {field}[{i}] {x} vs {y}");
+        }
+    }
+    assert_eq!(a.n_micro_groups, b.n_micro_groups, "{label}: n_micro_groups");
+}
+
+/// Small two-model sweep grid exercising the closed-form path (pp = 1)
+/// across DP strategies — `sweep_determinism.rs`'s workhorse.
+pub fn test_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B, Qwen3Size::S4B],
+        dp: vec![8],
+        tp: vec![2, 4],
+        pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    }
+}
+
+/// A pp>1 grid exercising the timeline engine through the sweep stack
+/// (schedules × stragglers × micro-batches).
+pub fn pp_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![4],
+        tp: vec![2],
+        pp: vec![1, 2, 4],
+        micro_batches: vec![1, 4],
+        schedules: vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe],
+        stragglers: vec![1.0, 1.5],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    }
+}
+
+/// Every strategy × optimizer × size × TP × fusion at pp = 1 — the
+/// differential oracles' coverage grid.
+pub fn oracle_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B, Qwen3Size::S4B],
+        dp: vec![8],
+        tp: vec![1, 4],
+        pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap, OptimKind::AdamW],
+        strategies: vec![
+            DpStrategy::Sc,
+            DpStrategy::NvLayerwise,
+            DpStrategy::Asc,
+            DpStrategy::LbAsc,
+        ],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0), None],
+        metric: CostMetric::Numel,
+    }
+}
+
+/// A 1-point Qwen3-1.7B grid tests override axes on (struct-update
+/// syntax) — `optimize_differential.rs`'s base.
+pub fn base_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![4],
+        tp: vec![2],
+        pp: vec![1],
+        micro_batches: vec![1],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::LbAsc],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
+    }
+}

@@ -7,61 +7,17 @@
 //! pruned, because pruning is on strict `bound > incumbent`) and the
 //! Pareto-frontier contract in exhaustive mode.
 
+mod common;
+
 use std::cmp::Ordering;
 
-use canzona::cost::optim::{CostMetric, OptimKind};
-use canzona::model::qwen3::Qwen3Size;
+use canzona::cost::optim::OptimKind;
 use canzona::partition::DpStrategy;
-use canzona::sim::{Breakdown, PipelineSchedule};
+use canzona::sim::Breakdown;
 use canzona::sweep::{
     optimize, Objective, OptimizeOptions, OptimizeResult, SweepEngine, SweepGrid,
 };
-
-/// A 1-point Qwen3-1.7B grid the tests override axes on.
-fn base_grid() -> SweepGrid {
-    SweepGrid {
-        models: vec![Qwen3Size::S1_7B],
-        dp: vec![4],
-        tp: vec![2],
-        pp: vec![1],
-        micro_batches: vec![1],
-        schedules: vec![PipelineSchedule::OneFOneB],
-        stragglers: vec![1.0],
-        optims: vec![OptimKind::Muon],
-        strategies: vec![DpStrategy::LbAsc],
-        alphas: vec![1.0],
-        c_max_mb: vec![Some(256.0)],
-        metric: CostMetric::Numel,
-    }
-}
-
-/// Bit-level Breakdown equality over every field except `planning_s`
-/// (wall-clock cache-fetch latency — not a simulation output).
-fn assert_bits_eq(label: &str, a: &Breakdown, b: &Breakdown) {
-    for (field, x, y) in [
-        ("fwd_bwd_s", a.fwd_bwd_s, b.fwd_bwd_s),
-        ("optimizer_s", a.optimizer_s, b.optimizer_s),
-        ("total_s", a.total_s, b.total_s),
-        ("adamw_ref_s", a.adamw_ref_s, b.adamw_ref_s),
-        ("exposed_comm_s", a.exposed_comm_s, b.exposed_comm_s),
-        ("grad_comm_bytes", a.grad_comm_bytes, b.grad_comm_bytes),
-        ("bubble_s", a.bubble_s, b.bubble_s),
-    ] {
-        assert_eq!(x.to_bits(), y.to_bits(), "{label}: {field} {x} vs {y}");
-    }
-    for (field, xs, ys) in [
-        ("dp_loads_flops", &a.dp_loads_flops, &b.dp_loads_flops),
-        ("dp_loads_state", &a.dp_loads_state, &b.dp_loads_state),
-        ("tp_loads_flops", &a.tp_loads_flops, &b.tp_loads_flops),
-        ("tp_loads_state", &a.tp_loads_state, &b.tp_loads_state),
-    ] {
-        assert_eq!(xs.len(), ys.len(), "{label}: {field} length");
-        for (i, (x, y)) in xs.iter().zip(ys.iter()).enumerate() {
-            assert_eq!(x.to_bits(), y.to_bits(), "{label}: {field}[{i}] {x} vs {y}");
-        }
-    }
-    assert_eq!(a.n_micro_groups, b.n_micro_groups, "{label}: n_micro_groups");
-}
+use common::{assert_bits_eq, base_grid};
 
 /// The oracle: evaluate the whole grid, argmin by (value, grid index).
 fn exhaustive_argmin(grid: &SweepGrid, obj: Objective) -> (usize, Breakdown) {

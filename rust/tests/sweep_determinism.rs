@@ -7,47 +7,15 @@
 //!   statistics counters);
 //! * `experiments::run("all")` on the shared engine is render-stable.
 
+mod common;
+
 use canzona::buffer::FlatBuffer;
-use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::cost::optim::OptimKind;
 use canzona::model::qwen3::{qwen3, Qwen3Size};
 use canzona::partition::{alpha_balanced, DpStrategy};
-use canzona::sim::{simulate_iteration_cached, PipelineSchedule, Scenario};
-use canzona::sweep::{render_json, render_table, DpKey, PlanCache, SweepEngine, SweepGrid};
-
-fn test_grid() -> SweepGrid {
-    SweepGrid {
-        models: vec![Qwen3Size::S1_7B, Qwen3Size::S4B],
-        dp: vec![8],
-        tp: vec![2, 4],
-        pp: vec![1],
-        micro_batches: vec![1],
-        schedules: vec![PipelineSchedule::OneFOneB],
-        stragglers: vec![1.0],
-        optims: vec![OptimKind::Muon],
-        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
-        alphas: vec![1.0],
-        c_max_mb: vec![Some(256.0)],
-        metric: CostMetric::Numel,
-    }
-}
-
-/// A pp>1 grid exercising the timeline engine through the sweep stack.
-fn pp_grid() -> SweepGrid {
-    SweepGrid {
-        models: vec![Qwen3Size::S1_7B],
-        dp: vec![4],
-        tp: vec![2],
-        pp: vec![1, 2, 4],
-        micro_batches: vec![1, 4],
-        schedules: vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe],
-        stragglers: vec![1.0, 1.5],
-        optims: vec![OptimKind::Muon],
-        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
-        alphas: vec![1.0],
-        c_max_mb: vec![Some(256.0)],
-        metric: CostMetric::Numel,
-    }
-}
+use canzona::sim::{simulate_iteration_cached, Scenario};
+use canzona::sweep::{render_json, render_table, DpKey, PlanCache, SweepEngine};
+use common::{pp_grid, test_grid};
 
 #[test]
 fn parallel_sweep_is_byte_identical_to_single_thread() {

@@ -10,70 +10,16 @@
 //! `simulate_iteration*` entry points are bit-identical to calling the
 //! timeline engine directly.
 
+mod common;
+
 use canzona::cost::optim::{CostMetric, OptimKind};
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
 use canzona::sim::{
-    simulate_iteration_cached, simulate_iteration_timeline, Breakdown, PipelineSchedule,
-    Scenario,
+    simulate_iteration_cached, simulate_iteration_timeline, PipelineSchedule, Scenario,
 };
 use canzona::sweep::{PlanCache, SweepGrid};
-
-/// Relative-or-absolute closeness: timings are ~1e-3..1e1 s, so 1e-9
-/// relative; the absolute floor absorbs exact-zero fields (bubble at
-/// full overlap) where the two paths differ only in summation order.
-fn close(a: f64, b: f64) -> bool {
-    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()) + 1e-12
-}
-
-fn assert_breakdowns_match(label: &str, closed: &Breakdown, event: &Breakdown) {
-    for (field, a, b) in [
-        ("fwd_bwd_s", closed.fwd_bwd_s, event.fwd_bwd_s),
-        ("optimizer_s", closed.optimizer_s, event.optimizer_s),
-        ("total_s", closed.total_s, event.total_s),
-        ("exposed_comm_s", closed.exposed_comm_s, event.exposed_comm_s),
-        ("bubble_s", closed.bubble_s, event.bubble_s),
-        ("adamw_ref_s", closed.adamw_ref_s, event.adamw_ref_s),
-        ("grad_comm_bytes", closed.grad_comm_bytes, event.grad_comm_bytes),
-    ] {
-        assert!(
-            close(a, b),
-            "{label}: {field} diverged: closed={a:.17e} event={b:.17e} \
-             (rel {:.3e})",
-            (a - b).abs() / a.abs().max(b.abs()).max(1e-300),
-        );
-    }
-    // Load vectors and plan statistics come from the same cached tables:
-    // exact equality.
-    assert_eq!(closed.n_micro_groups, event.n_micro_groups, "{label}");
-    assert_eq!(closed.dp_loads_flops, event.dp_loads_flops, "{label}");
-    assert_eq!(closed.dp_loads_state, event.dp_loads_state, "{label}");
-    assert_eq!(closed.tp_loads_flops, event.tp_loads_flops, "{label}");
-    assert_eq!(closed.tp_loads_state, event.tp_loads_state, "{label}");
-}
-
-/// Every strategy × optimizer × size × TP × fusion at pp = 1.
-fn oracle_grid() -> SweepGrid {
-    SweepGrid {
-        models: vec![Qwen3Size::S1_7B, Qwen3Size::S4B],
-        dp: vec![8],
-        tp: vec![1, 4],
-        pp: vec![1],
-        micro_batches: vec![1],
-        schedules: vec![PipelineSchedule::OneFOneB],
-        stragglers: vec![1.0],
-        optims: vec![OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap, OptimKind::AdamW],
-        strategies: vec![
-            DpStrategy::Sc,
-            DpStrategy::NvLayerwise,
-            DpStrategy::Asc,
-            DpStrategy::LbAsc,
-        ],
-        alphas: vec![1.0],
-        c_max_mb: vec![Some(256.0), None],
-        metric: CostMetric::Numel,
-    }
-}
+use common::{assert_breakdowns_match, oracle_grid};
 
 #[test]
 fn timeline_reproduces_closed_form_at_pp1() {

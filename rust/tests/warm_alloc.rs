@@ -20,7 +20,8 @@ use canzona::cost::optim::OptimKind;
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
 use canzona::sim::{
-    simulate_iteration_into, Breakdown, PipelineSchedule, Scenario,
+    simulate_batch_into, simulate_iteration_into, Breakdown, BreakdownBatch, LaneKnobs,
+    PipelineSchedule, Scenario, ScenarioBatch, BATCH_CHUNK,
 };
 use canzona::sweep::PlanCache;
 use canzona::util::alloc::count_allocations;
@@ -161,6 +162,42 @@ fn warm_path_is_allocation_free_on_persistent_pool_workers() {
             "pp={pp}: warm calls on pool workers allocated: {counts:?}",
         );
     }
+}
+
+#[test]
+fn warm_batch_evaluation_is_allocation_free() {
+    // The batched SoA path shares the scalar warm-path contract: after
+    // two priming calls (first builds the cached tables / plans and
+    // grows the per-thread batch scratch, second settles the SoA
+    // columns' capacity), a third `simulate_batch_into` on the same
+    // batch shape must not touch the heap — including a ragged tail
+    // that leaves the last fixed-width chunk partially filled.
+    let cache = PlanCache::unbounded();
+    let base = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, DpStrategy::LbAsc);
+    let mut batch = ScenarioBatch::new(base.clone()).expect("closed-form base");
+    for lane in 0..BATCH_CHUNK + 3 {
+        let mut k = LaneKnobs::from_scenario(&base);
+        k.ib_bw *= 1.0 + lane as f64 * 0.125; // distinct lanes, same fingerprint
+        k.c_max_bytes = if lane % 2 == 0 { k.c_max_bytes } else { None };
+        batch.push(k).expect("valid lane");
+    }
+    let mut out = BreakdownBatch::new();
+    simulate_batch_into(&batch, &cache, &mut out); // cold: builds tables
+    simulate_batch_into(&batch, &cache, &mut out); // warm: sizes capacity
+    let before = out.total_s[0];
+    let evals = cache.stats().batched_evals;
+    let (allocs, _) = count_allocations(|| simulate_batch_into(&batch, &cache, &mut out));
+    assert_eq!(
+        allocs, 0,
+        "warm simulate_batch_into performed {allocs} heap allocations",
+    );
+    assert_eq!(out.len(), batch.len());
+    assert_eq!(out.total_s[0].to_bits(), before.to_bits(), "warm batch result drifted");
+    assert_eq!(
+        cache.stats().batched_evals,
+        evals + batch.len() as u64,
+        "batched_evals must count every lane of the warm call",
+    );
 }
 
 #[test]
