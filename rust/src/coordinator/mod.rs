@@ -43,7 +43,8 @@ USAGE:
                      [--optim muon] [--strategy lb-asc]
   canzona sweep      [--models 1.7b,8b,32b] [--dp 16,32] [--tp 1,2,4,8] [--pp 1,2,4,8]
                      [--micro-batches 1,8] [--schedule 1f1b,gpipe] [--straggler 1.0,1.5]
-                     [--optims muon,shampoo,soap,adamw] [--strategies sc,asc,lb-asc]
+                     [--optims muon,shampoo,soap,adamw]
+                     [--strategies sc,nv-layerwise,asc,lb-asc,matrix-fsdp,dmuon,dion]
                      [--alphas 0.5,1.0] [--c-max-mb 512,none] [--metric numel]
                      [--threads N] [--cache-budget-mb 256] [--no-batch]
                      [--json out.json] [--csv]
@@ -53,7 +54,7 @@ USAGE:
                      [--batch N] [--exhaustive] [--threads N] [--cache-budget-mb 256]
                      [--no-batch] [--json out.json] [--csv]
                      [--baseline prior.json] [--regress-pct 2.0]
-  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|fig_optimize|planning|all>
+  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|fig_optimize|fig_rivals|planning|all>
                      [--threads N]
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
                      [--seed 42] [--artifacts artifacts] [--log-every 10]
@@ -89,7 +90,9 @@ fn parse_scenario(args: &Args) -> Result<Scenario> {
     let size = Qwen3Size::parse(model)
         .ok_or_else(|| err!("unknown model {model:?} (1.7b/4b/8b/14b/32b)"))?;
     let strategy = DpStrategy::parse(args.get_or("strategy", "lb-asc"))
-        .ok_or_else(|| err!("unknown strategy (sc/nv-layerwise/asc/lb-asc)"))?;
+        .ok_or_else(|| {
+            err!("unknown strategy (sc/nv-layerwise/asc/lb-asc/matrix-fsdp/dmuon/dion)")
+        })?;
     let optim = OptimKind::parse(args.get_or("optim", "muon"))
         .ok_or_else(|| err!("unknown optimizer (muon/shampoo/soap/adamw)"))?;
     let (dp, tp, pp) = (
@@ -428,4 +431,31 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("wrote loss curve to {path} ({n} steps)");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_covers_every_strategy_and_experiment() {
+        // The CLI-docs half of the DpStrategy exhaustiveness pin: every
+        // variant's lowercase label must be a valid `--strategies` token
+        // *and* appear in the usage text, so a new strategy cannot land
+        // undocumented. Same for experiment ids.
+        // Hyphen-insensitive: the label "MatrixFSDP" is documented as
+        // the token "matrix-fsdp" (both parse).
+        let usage_squashed = USAGE.to_ascii_lowercase().replace('-', "");
+        for s in DpStrategy::ALL {
+            let token = s.label().to_ascii_lowercase();
+            assert_eq!(DpStrategy::parse(&token), Some(s));
+            assert!(
+                usage_squashed.contains(&token.replace('-', "")),
+                "{token} missing from USAGE"
+            );
+        }
+        for (id, _) in experiments::list() {
+            assert!(USAGE.contains(id), "experiment {id} missing from USAGE");
+        }
+    }
 }

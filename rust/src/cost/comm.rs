@@ -8,7 +8,14 @@
 //! | Reduce-Scatter    | B·(R-1)/R              | R-1    |
 //! | All-Gather        | B·(R-1)/R              | R-1    |
 //! | All-to-All        | B·(R-1)/R              | R-1    |
+//! | Gather (to root)  | B·(R-1)/R              | R-1    |
+//! | Scatter (from root)| B·(R-1)/R             | R-1    |
 //! | Broadcast (tree)  | B                      | log2 R |
+//!
+//! Gather/Scatter are the rooted halves of All-Gather: the root
+//! receives (or sends) everyone else's shard, so the root link — the
+//! busiest — moves `B (R-1)/R` bytes, identical to the ring formulas
+//! above. They price DMuon's momentum-shard ownership pattern.
 //!
 //! The *variable-size* variants model the paper's non-uniform shards: a
 //! ring step is paced by the largest shard it moves, so imbalanced cuts
@@ -23,6 +30,13 @@ pub enum CollectiveKind {
     ReduceScatter,
     AllGather,
     AllToAll,
+    /// Rooted gather: every rank sends its shard to one owner rank
+    /// (DMuon's momentum collection). Root-link paced, so it prices
+    /// like one All-Gather step pattern: `B·(R-1)/R` at the root.
+    Gather,
+    /// Rooted scatter: the owner rank sends each rank its update shard
+    /// back (DMuon's return path). Mirror of [`CollectiveKind::Gather`].
+    Scatter,
     Broadcast,
 }
 
@@ -50,7 +64,11 @@ impl CommModel {
             CollectiveKind::AllReduce => {
                 2.0 * bytes * (rf - 1.0) / rf / bw + 2.0 * (rf - 1.0) * lat
             }
-            CollectiveKind::ReduceScatter | CollectiveKind::AllGather | CollectiveKind::AllToAll => {
+            CollectiveKind::ReduceScatter
+            | CollectiveKind::AllGather
+            | CollectiveKind::AllToAll
+            | CollectiveKind::Gather
+            | CollectiveKind::Scatter => {
                 bytes * (rf - 1.0) / rf / bw + (rf - 1.0) * lat
             }
             CollectiveKind::Broadcast => bytes / bw + (rf as f64).log2().ceil() * lat,
@@ -142,7 +160,9 @@ impl CommModel {
             CollectiveKind::AllReduce => 2.0 * bytes * (rf - 1.0) / rf,
             CollectiveKind::ReduceScatter
             | CollectiveKind::AllGather
-            | CollectiveKind::AllToAll => bytes * (rf - 1.0) / rf,
+            | CollectiveKind::AllToAll
+            | CollectiveKind::Gather
+            | CollectiveKind::Scatter => bytes * (rf - 1.0) / rf,
             CollectiveKind::Broadcast => bytes,
         }
     }
@@ -228,6 +248,27 @@ mod tests {
         let scattered = m.per_message(&sizes, 8, LinkKind::IntraNode,
                                       CollectiveKind::AllToAll);
         assert!(scattered > 10.0 * fused, "{scattered} vs {fused}");
+    }
+
+    #[test]
+    fn gather_scatter_price_like_all_gather() {
+        // The rooted halves share the root-link-paced formula with the
+        // ring All-Gather — in both time and wire volume — and stay
+        // free at a single rank.
+        let m = model();
+        for r in [2usize, 8, 32] {
+            let ag = m.collective(CollectiveKind::AllGather, 3e8, r, LinkKind::InterNode);
+            let g = m.collective(CollectiveKind::Gather, 3e8, r, LinkKind::InterNode);
+            let s = m.collective(CollectiveKind::Scatter, 3e8, r, LinkKind::InterNode);
+            assert_eq!(ag.to_bits(), g.to_bits());
+            assert_eq!(g.to_bits(), s.to_bits());
+            assert_eq!(
+                CommModel::volume_static(CollectiveKind::Gather, 3e8, r),
+                CommModel::volume_static(CollectiveKind::AllGather, 3e8, r)
+            );
+        }
+        assert_eq!(m.collective(CollectiveKind::Gather, 3e8, 1, LinkKind::InterNode), 0.0);
+        assert_eq!(CommModel::volume_static(CollectiveKind::Scatter, 3e8, 1), 0.0);
     }
 
     #[test]

@@ -157,6 +157,59 @@ fn soap_flops(m: f64, n: f64) -> f64 {
     stats + eig + rotations + 12.0 * m * n
 }
 
+/// The element-linear (per-matrix-element) coefficient of each
+/// optimizer's FLOPs model — the `c` in the `c·m·n` term that each of
+/// [`muon_flops`] (4), [`shampoo_flops`] (2), [`soap_flops`] (12) and
+/// the AdamW fallback (12) contains. This is the only part of the
+/// update that partitions exactly under MatrixFSDP's row sharding (the
+/// preconditioner terms are recomputed redundantly per rank), so both
+/// the simulator's `StrategyTable::Fsdp` arm and the MatrixFSDP
+/// optimizer-latency bound (`sim::bounds`) price against it.
+pub fn linear_flops_coeff(kind: OptimKind) -> f64 {
+    match kind {
+        OptimKind::Muon => 4.0,
+        OptimKind::Shampoo => 2.0,
+        OptimKind::Soap => 12.0,
+        OptimKind::AdamW => 12.0,
+    }
+}
+
+/// Dion's rank fraction: the low-rank dimension is
+/// `ceil(frac · min(m, n))` of each matrix. The simulator evaluates at
+/// this fixed fraction; the helpers below stay fraction-parameterized
+/// so `tests/rivals_props.rs` can sweep the axis.
+pub const DION_RANK_FRACTION: f64 = 0.25;
+
+/// Dion low-rank dimension for an `(m, n)` matrix at rank fraction
+/// `frac`, floored at 1.
+pub fn dion_rank(m: f64, n: f64, frac: f64) -> f64 {
+    (frac * m.min(n)).ceil().max(1.0)
+}
+
+/// Low-rank factor elements for one `(m, n)` matrix: `P (m×r)` and
+/// `Q (n×r)`.
+pub fn dion_factor_elems(m: f64, n: f64, frac: f64) -> f64 {
+    dion_rank(m, n, frac) * (m + n)
+}
+
+/// Per-GPU Dion update FLOPs for one `(m, n)` matrix with the momentum
+/// / error-feedback buffer ZeRO-sharded across `dp` ranks: the two
+/// rank-`r` sketch GEMMs and the error-feedback update stream over the
+/// local `m·n/dp` shard (`6·m·n·r/dp`), while the `r`-sided
+/// orthonormalization work (`2·r²·(m+n)`) is replicated on every rank.
+pub fn dion_flops(m: f64, n: f64, frac: f64, dp: usize) -> f64 {
+    let r = dion_rank(m, n, frac);
+    6.0 * m * n * r / dp as f64 + 2.0 * r * r * (m + n)
+}
+
+/// Per-DP-rank Dion optimizer state bytes for one `(m, n)` matrix: the
+/// bf16 error-feedback buffer is ZeRO-sharded across `dp`; the fp32
+/// low-rank factors are replicated (they are what the fused All-Reduce
+/// synchronizes).
+pub fn dion_state_bytes(m: f64, n: f64, frac: f64, dp: usize) -> f64 {
+    2.0 * m * n / dp as f64 + 4.0 * dion_factor_elems(m, n, frac)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +265,46 @@ mod tests {
         let sh = TensorShape::matrix(64, 64);
         assert_eq!(c.cost(&sh, CostMetric::Numel), 4096.0);
         assert!(c.cost(&sh, CostMetric::Flops) > c.cost(&sh, CostMetric::Numel));
+    }
+
+    #[test]
+    fn linear_coeff_is_the_flops_models_linear_term() {
+        // flops(m, n) - c·m·n must be the (non-negative) superlinear
+        // remainder for every matrix optimizer; for AdamW it is exactly
+        // zero (the model *is* the linear term).
+        for (kind, flops_fn) in [
+            (OptimKind::Muon, muon_flops as fn(f64, f64) -> f64),
+            (OptimKind::Shampoo, shampoo_flops),
+            (OptimKind::Soap, soap_flops),
+        ] {
+            let c = linear_flops_coeff(kind);
+            for (m, n) in [(64.0, 64.0), (256.0, 8192.0), (4096.0, 1024.0)] {
+                let rem = flops_fn(m, n) - c * m * n;
+                assert!(rem > 0.0, "{kind:?} ({m},{n}): remainder {rem}");
+            }
+        }
+        assert_eq!(
+            adamw_flops(4096) - linear_flops_coeff(OptimKind::AdamW) * 4096.0,
+            0.0
+        );
+    }
+
+    #[test]
+    fn dion_low_rank_state_below_full_rank() {
+        // The factor split only pays off below full rank; at frac = 1.0
+        // it degenerates to ≥ the momentum it replaces.
+        let (m, n) = (4096.0, 1024.0);
+        let quarter = dion_state_bytes(m, n, DION_RANK_FRACTION, 1);
+        let full = dion_state_bytes(m, n, 1.0, 1);
+        assert!(quarter < full);
+        assert_eq!(dion_rank(m, n, 1.0), n);
+        // r floors at 1 even for tiny fractions.
+        assert_eq!(dion_rank(m, n, 1e-9), 1.0);
+        // Sharding the EF buffer strictly reduces per-rank state.
+        assert!(dion_state_bytes(m, n, 0.25, 8) < dion_state_bytes(m, n, 0.25, 1));
+        // FLOPs: the m·n term shards, the factor term does not.
+        assert!(dion_flops(m, n, 0.25, 8) < dion_flops(m, n, 0.25, 1));
+        assert!(dion_flops(m, n, 0.25, 8) > 2.0 * dion_rank(m, n, 0.25).powi(2) * (m + n));
     }
 
     #[test]

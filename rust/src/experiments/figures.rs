@@ -516,9 +516,101 @@ pub fn fig_optimize() -> Vec<Table> {
     vec![t]
 }
 
+/// Rivals head-to-head — all seven strategies (Canzona's ladder plus
+/// MatrixFSDP, DMuon, Dion) on the paper's 256-GPU cluster. Table 1
+/// runs the closed-form arm across the Qwen3 family (DP=32, TP=8) and
+/// derives per-strategy optimizer speedup vs LB-ASC and the pacing
+/// stage's max per-DP-rank optimizer state; table 2 runs the same
+/// strategy zoo through the 1F1B timeline engine (DP=8, TP=8, PP=4,
+/// mb=8, Qwen3-32B) for the pipelined bubble comparison — both dispatch
+/// arms, one harness.
+pub fn fig_rivals() -> Vec<Table> {
+    let mut head = Table::new(
+        "Rivals — strategy zoo head-to-head (Qwen3 family, DP=32, TP=8, Muon)",
+        &["model", "strategy", "fwd-bwd", "optimizer", "vs LB-ASC", "max DP state"],
+    );
+    let sizes = [Qwen3Size::S1_7B, Qwen3Size::S8B, Qwen3Size::S32B];
+    let strats = DpStrategy::ALL;
+    let scens: Vec<Scenario> = sizes
+        .iter()
+        .flat_map(|&size| {
+            strats
+                .iter()
+                .map(move |&strat| Scenario::new(size, 32, 8, 1, OptimKind::Muon, strat))
+        })
+        .collect();
+    let res = eval(&scens);
+    for (i, size) in sizes.iter().enumerate() {
+        let block = &res[i * strats.len()..(i + 1) * strats.len()];
+        let lb = &block[DpStrategy::LbAsc.ordinal()];
+        for (strat, b) in strats.iter().zip(block) {
+            let state = b.dp_loads_state.iter().cloned().fold(0.0, f64::max);
+            head.row(vec![
+                size.label().into(),
+                strat.label().into(),
+                secs(b.fwd_bwd_s),
+                secs(b.optimizer_s),
+                ratio(b.optimizer_s / lb.optimizer_s.max(1e-12)),
+                format!("{:.2} GB", state / 1e9),
+            ]);
+        }
+    }
+
+    let mut pipe = Table::new(
+        "Rivals — pipelined (Qwen3-32B, DP=8, TP=8, PP=4, mb=8, Muon)",
+        &["strategy", "fwd-bwd", "optimizer", "total", "bubble", "bubble %"],
+    );
+    let scens_pp: Vec<Scenario> = strats
+        .iter()
+        .map(|&strat| {
+            Scenario::new(Qwen3Size::S32B, 8, 8, 4, OptimKind::Muon, strat)
+                .with_micro_batches(8)
+        })
+        .collect();
+    let res_pp = eval(&scens_pp);
+    for (strat, b) in strats.iter().zip(&res_pp) {
+        pipe.row(vec![
+            strat.label().into(),
+            secs(b.fwd_bwd_s),
+            secs(b.optimizer_s),
+            secs(b.total_s),
+            secs(b.bubble_s),
+            format!("{:.1}%", 100.0 * b.bubble_s / b.fwd_bwd_s.max(1e-12)),
+        ]);
+    }
+    vec![head, pipe]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fig_rivals_covers_the_zoo_and_pins_directions() {
+        let tables = fig_rivals();
+        let head = tables[0].render();
+        // Every strategy appears in the head-to-head table.
+        for strat in DpStrategy::ALL {
+            assert!(head.contains(strat.label()), "{} missing:\n{head}", strat.label());
+        }
+        // Direction pins at Qwen3-32B: LB-ASC beats MatrixFSDP (redundant
+        // preconditioners) and SC (fully redundant update) on the
+        // optimizer step. Parse the CSV for the 32B block.
+        let csv = tables[0].to_csv();
+        let opt = |strategy: &str| -> f64 {
+            csv.lines()
+                .skip(1)
+                .map(|l| l.split(',').collect::<Vec<_>>())
+                .find(|c| c[0] == "Qwen3-32B" && c[1] == strategy)
+                .map(|c| c[3].trim_end_matches('s').parse().unwrap())
+                .unwrap()
+        };
+        assert!(opt("LB-ASC") < opt("MatrixFSDP"), "{csv}");
+        assert!(opt("LB-ASC") < opt("SC"), "{csv}");
+        // The pipelined table exercises the timeline arm for all seven.
+        let pipe = tables[1].to_csv();
+        assert_eq!(pipe.lines().count(), 1 + DpStrategy::ALL.len());
+    }
 
     #[test]
     fn fig_optimize_search_derived_speedups_exceed_one() {

@@ -24,6 +24,8 @@ pub fn catalog() -> Vec<(&'static str, &'static str, fn() -> Vec<Table>)> {
         ("fig_pp", "PP sweep on the 1F1B timeline engine", figures::fig_pp),
         ("fig_optimize", "Search-derived best 256-GPU configs + headline speedups",
          figures::fig_optimize),
+        ("fig_rivals", "Strategy zoo head-to-head: ladder vs MatrixFSDP/DMuon/Dion",
+         figures::fig_rivals),
         ("planning", "Appendix D.1 offline planning latency", figures::planning_latency),
     ]
 }
@@ -70,7 +72,8 @@ mod tests {
         let ids: Vec<&str> = list().iter().map(|(i, _)| *i).collect();
         for required in ["fig3a", "fig3bc", "fig4", "fig6", "fig7", "fig8",
                          "fig9", "fig10-11", "fig12", "fig13", "fig14",
-                         "fig16", "fig_pp", "fig_optimize", "planning"] {
+                         "fig16", "fig_pp", "fig_optimize", "fig_rivals",
+                         "planning"] {
             assert!(ids.contains(&required), "{required} missing");
         }
     }

@@ -1,6 +1,6 @@
-//! DP-plane partitioners (paper Section 3).
+//! DP-plane partitioners (paper Section 3) and the strategy zoo.
 //!
-//! Four strategies over the same `FlatBuffer` geometry:
+//! Canzona's own ladder over the same `FlatBuffer` geometry:
 //!
 //! * [`equal_chunk`] — standard ZeRO-1 uniform slicing (violates
 //!   atomicity; only valid for element-wise optimizers).
@@ -11,12 +11,23 @@
 //! * [`layerwise`] — the NV-layerwise baseline: global LPT over layers,
 //!   which breaks the ZeRO-1 geometric constraint and forces the
 //!   All-Reduce + Broadcast communication path (paper Appendix D.2).
+//!
+//! Plus the rival sharding rules from the related work ([`rivals`]):
+//!
+//! * [`rivals::zero3_rows`] — MatrixFSDP's ZeRO-3 contiguous row
+//!   sharding (communication-free update, redundant preconditioners).
+//! * [`rivals::lpt_owners`] — DMuon's whole-tensor DP ownership
+//!   (gather/orthogonalize/scatter of momentum shards).
+//! * Dion's low-rank factor split lives in
+//!   [`crate::cost::optim::dion_rank`] (cost-model-side: the factor
+//!   shapes, not the buffer geometry, define its plan).
 
 pub mod alpha_balanced;
 pub mod equal_chunk;
 pub mod layerwise;
 pub mod naive_atomic;
 pub mod plan;
+pub mod rivals;
 
 pub use alpha_balanced::alpha_balanced;
 pub use equal_chunk::equal_chunk;
@@ -24,7 +35,9 @@ pub use layerwise::{layerwise, LayerwisePlan};
 pub use naive_atomic::{naive_atomic, naive_atomic_per_bucket};
 pub use plan::{Atomicity, DpPlan};
 
-/// The DP strategies the experiments compare.
+/// The DP strategies the experiments compare: Canzona's ladder
+/// (SC → NV-layerwise → ASC → LB-ASC) plus the rival sharding
+/// strategies from the related work.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DpStrategy {
     /// Synchronous/redundant compute (DDP — every rank updates everything).
@@ -35,15 +48,60 @@ pub enum DpStrategy {
     Asc,
     /// α-balanced atomic static partition (Canzona).
     LbAsc,
+    /// ZeRO-3 row-sharded matrix optimizer, communication-free update.
+    MatrixFsdp,
+    /// Distributed Muon: whole-tensor DP ownership with overlapped
+    /// Gather/Scatter of momentum shards.
+    DMuon,
+    /// Low-rank factor updates with DP-sharded error feedback.
+    Dion,
 }
 
 impl DpStrategy {
+    /// Every variant, in declaration order — the sweep axes' and test
+    /// grids' canonical enumeration. [`ordinal`] (an exhaustive match)
+    /// forces a compile error when a variant lands without being added
+    /// here, and `tests::parse_label_round_trip_is_exhaustive` pins the
+    /// parse/label round-trip over exactly this list.
+    ///
+    /// [`ordinal`]: DpStrategy::ordinal
+    pub const ALL: [DpStrategy; 7] = [
+        DpStrategy::Sc,
+        DpStrategy::NvLayerwise,
+        DpStrategy::Asc,
+        DpStrategy::LbAsc,
+        DpStrategy::MatrixFsdp,
+        DpStrategy::DMuon,
+        DpStrategy::Dion,
+    ];
+
+    /// Declaration-order index of the variant. The match is exhaustive
+    /// on purpose: adding a variant without extending [`ALL`] (and the
+    /// parse/label arms, which the round-trip test then covers) fails
+    /// to compile here instead of silently missing the sweep axes.
+    ///
+    /// [`ALL`]: DpStrategy::ALL
+    pub fn ordinal(&self) -> usize {
+        match self {
+            DpStrategy::Sc => 0,
+            DpStrategy::NvLayerwise => 1,
+            DpStrategy::Asc => 2,
+            DpStrategy::LbAsc => 3,
+            DpStrategy::MatrixFsdp => 4,
+            DpStrategy::DMuon => 5,
+            DpStrategy::Dion => 6,
+        }
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             DpStrategy::Sc => "SC",
             DpStrategy::NvLayerwise => "NV-layerwise",
             DpStrategy::Asc => "ASC",
             DpStrategy::LbAsc => "LB-ASC",
+            DpStrategy::MatrixFsdp => "MatrixFSDP",
+            DpStrategy::DMuon => "DMuon",
+            DpStrategy::Dion => "Dion",
         }
     }
 
@@ -53,7 +111,50 @@ impl DpStrategy {
             "nv-layerwise" | "layerwise" | "nv" => Some(DpStrategy::NvLayerwise),
             "asc" => Some(DpStrategy::Asc),
             "lb-asc" | "lbasc" | "canzona" => Some(DpStrategy::LbAsc),
+            "matrix-fsdp" | "matrixfsdp" | "fsdp" => Some(DpStrategy::MatrixFsdp),
+            "dmuon" | "d-muon" => Some(DpStrategy::DMuon),
+            "dion" => Some(DpStrategy::Dion),
             _ => None,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::DpStrategy;
+
+    #[test]
+    fn parse_label_round_trip_is_exhaustive() {
+        // The PR 7 `CacheStats` pattern: `ordinal`'s exhaustive match
+        // breaks the build when a variant is added; this test then
+        // fails until ALL / label / parse cover it too.
+        assert_eq!(DpStrategy::ALL.len(), 7);
+        for (i, s) in DpStrategy::ALL.iter().enumerate() {
+            assert_eq!(s.ordinal(), i, "ALL must list variants in declaration order");
+            // label() must re-parse both verbatim and lowercased — the
+            // latter is what `SweepGrid::to_cli_args` emits.
+            assert_eq!(DpStrategy::parse(s.label()), Some(*s), "{s:?}");
+            assert_eq!(
+                DpStrategy::parse(&s.label().to_ascii_lowercase()),
+                Some(*s),
+                "{s:?}: lowercase label must round-trip (CLI emission)"
+            );
+        }
+        // Labels (and therefore CLI tokens) must be pairwise distinct.
+        for a in DpStrategy::ALL {
+            for b in DpStrategy::ALL {
+                if a != b {
+                    assert_ne!(a.label(), b.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(DpStrategy::parse("canzona"), Some(DpStrategy::LbAsc));
+        assert_eq!(DpStrategy::parse("fsdp"), Some(DpStrategy::MatrixFsdp));
+        assert_eq!(DpStrategy::parse("d-muon"), Some(DpStrategy::DMuon));
+        assert_eq!(DpStrategy::parse("warp"), None);
     }
 }

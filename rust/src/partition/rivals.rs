@@ -1,0 +1,114 @@
+//! Partition rules for the rival sharding strategies (ROADMAP item 3).
+//!
+//! Canzona's own partitioners slice a `FlatBuffer`; the rivals shard at
+//! tensor granularity, so their rules are plain functions over shapes:
+//!
+//! * [`zero3_rows`] — **MatrixFSDP**: each TP-local matrix is split
+//!   into contiguous row blocks of `ceil(rows / dp)`, rank `d` owning
+//!   block `d` (trailing ranks may own nothing). The optimizer update
+//!   is communication-free: the preconditioner is recomputed per rank
+//!   from the parameter All-Gather already in flight for FSDP compute,
+//!   and only the element-linear update pass is sharded.
+//! * [`lpt_owners`] — **DMuon**: whole tensors are assigned to DP
+//!   owner ranks by greedy LPT over their update FLOPs; each owner
+//!   gathers the momentum shards, orthogonalizes, and scatters the
+//!   update back (overlapped, see `sim::iteration`).
+//!
+//! Dion has no buffer-geometry rule — its split is in factor space
+//! (see `cost::optim::dion_rank`).
+
+/// Number of rows of a `rows`-row matrix owned by `rank` under ZeRO-3
+/// contiguous row sharding across `dp` ranks: blocks of
+/// `ceil(rows / dp)`, overflow clamped, so trailing ranks may own zero
+/// rows. The blocks tile the matrix exactly — `Σ_d zero3_rows(r, dp, d)
+/// == r` — which is what the state-conservation property pins.
+pub fn zero3_rows(rows: usize, dp: usize, rank: usize) -> usize {
+    debug_assert!(dp > 0 && rank < dp);
+    let per = rows.div_ceil(dp);
+    let lo = (rank * per).min(rows);
+    let hi = (lo + per).min(rows);
+    hi - lo
+}
+
+/// Greedy LPT assignment of whole tensors to `dp` owner ranks:
+/// heaviest cost first, each onto the currently least-loaded rank.
+/// Deterministic — cost ties keep input order, load ties pick the
+/// lowest rank — so repeated builds of the same stage table are
+/// bit-identical. Returns one owner rank per input tensor.
+pub fn lpt_owners(costs: &[f64], dp: usize) -> Vec<usize> {
+    debug_assert!(dp > 0);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    // Stable sort: equal costs keep declaration order.
+    order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]));
+    let mut loads = vec![0.0f64; dp];
+    let mut owners = vec![0usize; costs.len()];
+    for i in order {
+        let mut best = 0usize;
+        for d in 1..dp {
+            if loads[d] < loads[best] {
+                best = d;
+            }
+        }
+        owners[i] = best;
+        loads[best] += costs[i];
+    }
+    owners
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero3_rows_tile_exactly() {
+        for rows in [1usize, 2, 7, 8, 64, 151, 4096] {
+            for dp in [1usize, 2, 3, 8, 32, 200] {
+                let total: usize = (0..dp).map(|d| zero3_rows(rows, dp, d)).sum();
+                assert_eq!(total, rows, "rows={rows} dp={dp}");
+                // Rank 0 always owns the (joint-)largest block.
+                let r0 = zero3_rows(rows, dp, 0);
+                for d in 1..dp {
+                    assert!(zero3_rows(rows, dp, d) <= r0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero3_rows_overflow_ranks_own_nothing() {
+        // 5 rows over 4 ranks: blocks of 2 → [2, 2, 1, 0].
+        assert_eq!(
+            (0..4).map(|d| zero3_rows(5, 4, d)).collect::<Vec<_>>(),
+            vec![2, 2, 1, 0]
+        );
+    }
+
+    #[test]
+    fn lpt_owners_balances_and_covers() {
+        let costs = [8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        let owners = lpt_owners(&costs, 2);
+        assert_eq!(owners.len(), costs.len());
+        let mut loads = [0.0f64; 2];
+        for (i, &d) in owners.iter().enumerate() {
+            assert!(d < 2);
+            loads[d] += costs[i];
+        }
+        // Classic LPT on this instance is perfectly balanced.
+        assert_eq!(loads[0], loads[1]);
+    }
+
+    #[test]
+    fn lpt_owners_is_deterministic_under_ties() {
+        let costs = [1.0, 1.0, 1.0, 1.0];
+        assert_eq!(lpt_owners(&costs, 4), lpt_owners(&costs, 4));
+        // Equal costs fall heaviest-first in declaration order onto
+        // ranks 0, 1, 2, 3.
+        assert_eq!(lpt_owners(&costs, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn lpt_owners_more_ranks_than_tensors() {
+        let owners = lpt_owners(&[3.0, 1.0], 8);
+        assert_eq!(owners, vec![0, 1]);
+    }
+}

@@ -31,6 +31,16 @@
 //!   serially runs every group's `max_rank_flops ≥ group_flops/tp`
 //!   (`≥ F/(dp*tp*gpu)`). Fragmented tensors only ever *repeat* on
 //!   ranks, so per-rank sums are ≥ an exact partition's.
+//!   The rivals: MatrixFSDP's per-rank work is the full redundant
+//!   preconditioner sum plus its row shard's linear pass, and rank 0
+//!   always owns the (joint-)largest shard, so with `F_loc` the
+//!   TP-local-shape matrix FLOPs, `M_loc` the TP-local matrix numel and
+//!   `c` the optimizer's linear FLOPs coefficient,
+//!   `max_rank ≥ (F_loc - c·M_loc)/gpu + c·M_loc/(dp·gpu)`. DMuon's LPT
+//!   partitions the full-shape FLOPs exactly and its pipeline's compute
+//!   stream runs the owned items serially (`≥ F/(dp·gpu)`). Dion's
+//!   sketch pass streams `6·m·n·r/dp` FLOPs with `r ≥ 1`
+//!   (`≥ 6·M_loc/(dp·gpu)`).
 //! * **Optimizer-state memory** (`max` of `dp_loads_state`). The loads
 //!   come from the pacing stage, unknown before simulating, so the
 //!   bound takes the *min over stages*. Per stage, every matrix
@@ -38,7 +48,10 @@
 //!   element-wise element land on some DP rank (SC replicates the full
 //!   amount on every rank; `rank_state`/`dp_state` partition it), so
 //!   the per-stage max is at least `state/1` (SC) or `(state + 8*ew)/dp`
-//!   (all others).
+//!   (all others). MatrixFSDP shards *TP-local* state row-wise (per-rank
+//!   bytes sum exactly to the local census), so its floor is
+//!   `(state_local + 8*ew)/dp`; Dion holds at least the DP-sharded bf16
+//!   error-feedback buffer, `(2*matrix_numel_local + 8*ew)/dp`.
 //!
 //! Tightness is *not* required — only admissibility. The differential
 //! suite (`tests/optimize_differential.rs`) checks both: winners are
@@ -49,7 +62,7 @@
 
 use std::collections::HashMap;
 
-use crate::cost::optim::{OptimCost, OptimKind};
+use crate::cost::optim::{linear_flops_coeff, OptimCost, OptimKind};
 use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
 use crate::sim::iteration::{closed_form_path, local_view, stage_census, stage_layer_count};
@@ -66,8 +79,17 @@ struct BoundAgg {
     matrix_numel: f64,
     /// Full-census matrix-optimizer FLOPs at full shapes.
     flops_total: f64,
+    /// Matrix-optimizer FLOPs at TP-*local* shapes (MatrixFSDP works on
+    /// the local shards directly; no TP reconstruction).
+    flops_local: f64,
+    /// Matrix-optimizer elements at TP-local shapes.
+    matrix_opt_local: f64,
     /// Per stage: matrix optimizer state bytes at full shapes.
     stage_state: Vec<f64>,
+    /// Per stage: matrix optimizer state bytes at TP-local shapes.
+    stage_state_local: Vec<f64>,
+    /// Per stage: matrix-optimizer elements at TP-local shapes.
+    stage_matrix_opt_local: Vec<f64>,
     /// Per stage: element-wise (AdamW-routed) elements.
     stage_ew: Vec<f64>,
 }
@@ -82,7 +104,11 @@ impl BoundAgg {
             nl_hidden: 0.0,
             matrix_numel: 0.0,
             flops_total: 0.0,
+            flops_local: 0.0,
+            matrix_opt_local: 0.0,
             stage_state: Vec::with_capacity(stages.len()),
+            stage_state_local: Vec::with_capacity(stages.len()),
+            stage_matrix_opt_local: Vec::with_capacity(stages.len()),
             stage_ew: Vec::with_capacity(stages.len()),
         };
         for (si, stage) in stages.iter().enumerate() {
@@ -95,6 +121,8 @@ impl BoundAgg {
                 .unwrap_or(0.0);
             agg.nl_hidden += n_layers * hidden;
             let mut state = 0.0;
+            let mut state_local = 0.0;
+            let mut matrix_opt_local = 0.0;
             let mut ew = 0.0;
             for lp in &locals {
                 if lp.local.shape.is_matrix() {
@@ -102,12 +130,18 @@ impl BoundAgg {
                 }
                 if lp.local.is_matrix_opt() {
                     agg.flops_total += optim.flops(&lp.full_shape);
+                    agg.flops_local += optim.flops(&lp.local.shape);
+                    matrix_opt_local += lp.local.numel() as f64;
                     state += optim.state_bytes(&lp.full_shape);
+                    state_local += optim.state_bytes(&lp.local.shape);
                 } else {
                     ew += lp.local.numel() as f64;
                 }
             }
+            agg.matrix_opt_local += matrix_opt_local;
             agg.stage_state.push(state);
+            agg.stage_state_local.push(state_local);
+            agg.stage_matrix_opt_local.push(matrix_opt_local);
             agg.stage_ew.push(ew);
         }
         agg
@@ -159,11 +193,27 @@ impl ScenarioBounds {
         }
         let gpu = s.hw.gpu_flops;
         let (dp, tp) = (s.dp as f64, s.tp as f64);
-        let f = self.agg(s).flops_total;
+        let a = self.agg(s);
+        let f = a.flops_total;
         match s.strategy {
             DpStrategy::Sc => f / gpu,
             DpStrategy::NvLayerwise => f / (dp * gpu),
             DpStrategy::Asc | DpStrategy::LbAsc => f / (dp * tp * gpu),
+            // Redundant preconditioners (paid in full by rank 0, which
+            // always owns the largest row shard) + its ≥ average linear
+            // pass. `flops_local - c·M_loc ≥ 0` for every model: each
+            // FLOPs expression contains exactly the `c·m·n` linear term.
+            DpStrategy::MatrixFsdp => {
+                let c = linear_flops_coeff(s.optim);
+                (a.flops_local - c * a.matrix_opt_local) / gpu
+                    + c * a.matrix_opt_local / (dp * gpu)
+            }
+            // LPT partitions the full-shape FLOPs exactly across DP, and
+            // the owner's compute stream runs its items serially.
+            DpStrategy::DMuon => f / (dp * gpu),
+            // The sketch pass streams ≥ 6·m·n·1/dp FLOPs per matrix
+            // (r ≥ 1); factor-side work and the All-Reduce only add.
+            DpStrategy::Dion => 6.0 * a.matrix_opt_local / (dp * gpu),
         }
     }
 
@@ -171,12 +221,26 @@ impl ScenarioBounds {
     /// stage's per-DP-rank optimizer state).
     pub fn memory(&mut self, s: &Scenario) -> f64 {
         let dp = s.dp as f64;
-        let sc = s.strategy == DpStrategy::Sc;
+        let strategy = s.strategy;
         let a = self.agg(s);
-        a.stage_state
-            .iter()
-            .zip(&a.stage_ew)
-            .map(|(&state, &ew)| if sc { state } else { (state + 8.0 * ew) / dp })
+        (0..a.stage_state.len())
+            .map(|i| {
+                let ew = a.stage_ew[i];
+                match strategy {
+                    DpStrategy::Sc => a.stage_state[i],
+                    // Row-prorated TP-local state sums exactly to the
+                    // local census, so the max is ≥ the average.
+                    DpStrategy::MatrixFsdp => {
+                        (a.stage_state_local[i] + 8.0 * ew) / dp
+                    }
+                    // At least the DP-sharded bf16 error-feedback
+                    // buffer; the replicated factors only add.
+                    DpStrategy::Dion => {
+                        (2.0 * a.stage_matrix_opt_local[i] + 8.0 * ew) / dp
+                    }
+                    _ => (a.stage_state[i] + 8.0 * ew) / dp,
+                }
+            })
             .fold(f64::INFINITY, f64::min)
     }
 }
@@ -190,13 +254,8 @@ mod tests {
     fn scenarios() -> Vec<Scenario> {
         use crate::model::qwen3::Qwen3Size::S1_7B;
         let mut out = Vec::new();
-        for strategy in [
-            DpStrategy::Sc,
-            DpStrategy::NvLayerwise,
-            DpStrategy::Asc,
-            DpStrategy::LbAsc,
-        ] {
-            for optim in [OptimKind::Muon, OptimKind::Shampoo] {
+        for strategy in DpStrategy::ALL {
+            for optim in [OptimKind::Muon, OptimKind::Shampoo, OptimKind::AdamW] {
                 out.push(Scenario::new(S1_7B, 4, 2, 1, optim, strategy));
                 out.push(
                     Scenario::new(S1_7B, 2, 2, 2, optim, strategy).with_micro_batches(4),

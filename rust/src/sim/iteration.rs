@@ -12,7 +12,12 @@
 //!   NV-layerwise: layer-granular DP ownership (redundant TP compute) +
 //!   an exposed DP Broadcast of updated parameters;
 //!   ASC: atomic static DP partition + unfused, round-robin TP pipeline;
-//!   LB-ASC: α-balanced DP partition + micro-group TP pipeline.
+//!   LB-ASC: α-balanced DP partition + micro-group TP pipeline;
+//!   MatrixFSDP: ZeRO-3 row sharding, communication-free update
+//!   (redundant per-matrix preconditioners, sharded linear pass);
+//!   DMuon: whole-tensor DP ownership with overlapped Gather /
+//!   orthogonalize / Scatter of momentum shards;
+//!   Dion: low-rank factor updates + one fused low-rank All-Reduce.
 //!
 //! # Closed form vs. timeline engine
 //!
@@ -76,9 +81,13 @@ use std::time::Instant;
 use crate::buffer::FlatBuffer;
 use crate::cost::comm::{CollectiveKind, CommModel};
 use crate::cost::hardware::{Hardware, LinkKind};
-use crate::cost::optim::{CostMetric, OptimCost};
+use crate::cost::optim::{
+    dion_factor_elems, dion_flops, dion_state_bytes, linear_flops_coeff, CostMetric, OptimCost,
+    DION_RANK_FRACTION,
+};
 use crate::model::shapes::{Param, TensorShape};
 use crate::model::tp::tp_split;
+use crate::partition::rivals::{lpt_owners, zero3_rows};
 use crate::partition::{alpha_balanced, layerwise, naive_atomic_per_bucket, DpPlan, DpStrategy};
 use crate::schedule::microgroup::{build_micro_groups, MicroGroup, Symbols, TaskMeta, TpPlan, TpTask};
 use crate::sweep::cache::{DpKey, PlanCache, StageKey, TpKey};
@@ -281,6 +290,53 @@ pub(crate) enum StrategyTable {
         /// reports the Breakdown's TP loads), if any.
         worst_rank: Option<usize>,
     },
+    /// MatrixFSDP: ZeRO-3 contiguous row sharding of every TP-local
+    /// matrix across DP. The update is communication-free — each rank
+    /// recomputes the matrix-level preconditioner from the parameter
+    /// All-Gather already in flight for FSDP compute (redundant work),
+    /// and only the element-linear update pass is sharded.
+    Fsdp {
+        /// Per DP rank: redundant preconditioner + owned-row FLOPs.
+        rank_flops: Vec<f64>,
+        /// Per DP rank: row-prorated optimizer state bytes (matrix +
+        /// element-wise); sums exactly to the unsharded census.
+        rank_state: Vec<f64>,
+        /// Element-wise (AdamW-routed) elements of the whole stage.
+        ew_all: f64,
+    },
+    /// DMuon: whole-tensor DP ownership by greedy LPT over update
+    /// FLOPs; each owner gathers the momentum shards over the DP
+    /// fabric, orthogonalizes, and scatters the update back, with the
+    /// comm stream running ahead of compute.
+    DMuon {
+        /// Per DP rank, per owned matrix tensor: full-shape wire bytes.
+        rank_sizes: Vec<Vec<f64>>,
+        /// Per DP rank, per owned matrix tensor: update FLOPs
+        /// (parallel to `rank_sizes`).
+        rank_item_flops: Vec<Vec<f64>>,
+        /// Per DP rank: owned matrix update FLOPs (row sums of
+        /// `rank_item_flops`).
+        rank_flops: Vec<f64>,
+        /// Per DP rank: ZeRO-1-sharded optimizer state bytes.
+        rank_state: Vec<f64>,
+        /// Element-wise elements of the whole stage.
+        ew_all: f64,
+    },
+    /// Dion: rank-fraction low-rank factor updates with DP-sharded
+    /// error feedback and one fused low-rank All-Reduce per step.
+    /// Uniform across ranks by construction, so scalars suffice.
+    Dion {
+        /// Per-GPU low-rank update FLOPs (the m·n-sized passes are
+        /// DP-sharded; the factor-side work is replicated).
+        flops_per_gpu: f64,
+        /// Fused All-Reduce payload: Σ wire · r·(m+n) over matrices.
+        factor_bytes: f64,
+        /// Per DP rank: state bytes (sharded error feedback +
+        /// replicated factors + sharded element-wise).
+        state_per_rank: f64,
+        /// Element-wise elements of the whole stage.
+        ew_all: f64,
+    },
 }
 
 /// Everything `simulate_iteration` derives from a scenario's census for
@@ -351,6 +407,22 @@ impl StageTable {
                     + f64s(dp_state)
                     + f64s(ew_loads)
             }
+            StrategyTable::Fsdp { rank_flops, rank_state, .. } => {
+                f64s(rank_flops) + f64s(rank_state)
+            }
+            StrategyTable::DMuon {
+                rank_sizes,
+                rank_item_flops,
+                rank_flops,
+                rank_state,
+                ..
+            } => {
+                nested(rank_sizes)
+                    + nested(rank_item_flops)
+                    + f64s(rank_flops)
+                    + f64s(rank_state)
+            }
+            StrategyTable::Dion { .. } => 0,
         };
         bytes
     }
@@ -549,6 +621,112 @@ impl StageTable {
                     dp_state,
                     ew_loads,
                     worst_rank: worst.1,
+                }
+            }
+            DpStrategy::MatrixFsdp => {
+                // ZeRO-3 contiguous row sharding of every TP-local matrix.
+                // The preconditioner (Newton-Schulz / Gram / eigen work) is
+                // recomputed redundantly by every rank holding a shard —
+                // that is what makes the update communication-free — and
+                // only the element-linear pass (the `coeff·numel` term of
+                // each FLOPs model) shards with the rows. State is
+                // row-prorated, so per-rank bytes sum exactly to the
+                // unsharded census (pinned by `tests/rivals_props.rs`).
+                let coeff = linear_flops_coeff(s.optim);
+                let mut rank_flops = vec![0.0; s.dp];
+                let mut rank_state = vec![0.0; s.dp];
+                let mut ew_all = 0.0;
+                for lp in &locals {
+                    if !lp.local.is_matrix_opt() {
+                        ew_all += lp.local.numel() as f64;
+                        continue;
+                    }
+                    let rows = lp.local.shape.rows();
+                    let cols = lp.local.shape.cols() as f64;
+                    let numel = lp.local.numel() as f64;
+                    let precond = optim.flops(&lp.local.shape) - coeff * numel;
+                    let state = optim.state_bytes(&lp.local.shape);
+                    for (d, rf) in rank_flops.iter_mut().enumerate() {
+                        let owned = zero3_rows(rows, s.dp, d) as f64;
+                        if owned == 0.0 {
+                            continue; // no shard -> no redundant precond
+                        }
+                        *rf += precond + coeff * owned * cols;
+                        rank_state[d] += state * (owned * cols / numel);
+                    }
+                }
+                for st in rank_state.iter_mut() {
+                    *st += 8.0 * ew_all / s.dp as f64;
+                }
+                StrategyTable::Fsdp { rank_flops, rank_state, ew_all }
+            }
+            DpStrategy::DMuon => {
+                // Whole-tensor DP ownership: greedy LPT over full-shape
+                // update FLOPs (deterministic, see `partition::rivals`).
+                // Momentum lives ZeRO-1-sharded across DP; owners gather
+                // shards, orthogonalize, scatter updates back.
+                let all_indices: Vec<usize> = (0..locals.len()).collect();
+                let matrix_indices: Vec<usize> = all_indices
+                    .iter()
+                    .cloned()
+                    .filter(|&i| locals[i].local.is_matrix_opt())
+                    .collect();
+                let costs: Vec<f64> = matrix_indices
+                    .iter()
+                    .map(|&i| optim.flops(&locals[i].full_shape))
+                    .collect();
+                let owners = lpt_owners(&costs, s.dp);
+                let mut rank_sizes: Vec<Vec<f64>> = vec![Vec::new(); s.dp];
+                let mut rank_item_flops: Vec<Vec<f64>> = vec![Vec::new(); s.dp];
+                let mut rank_flops = vec![0.0; s.dp];
+                for (k, &i) in matrix_indices.iter().enumerate() {
+                    let d = owners[k];
+                    rank_sizes[d].push(WIRE_BYTES * locals[i].full_shape.numel() as f64);
+                    rank_item_flops[d].push(costs[k]);
+                    rank_flops[d] += costs[k];
+                }
+                let state_total: f64 = matrix_indices
+                    .iter()
+                    .map(|&i| optim.state_bytes(&locals[i].full_shape))
+                    .sum();
+                let ew_all = ew_elems(&all_indices);
+                let rank_state =
+                    vec![(state_total + 8.0 * ew_all) / s.dp as f64; s.dp];
+                StrategyTable::DMuon {
+                    rank_sizes,
+                    rank_item_flops,
+                    rank_flops,
+                    rank_state,
+                    ew_all,
+                }
+            }
+            DpStrategy::Dion => {
+                // Low-rank factor updates at rank fraction
+                // `DION_RANK_FRACTION`: the m·n-sized sketch/error-feedback
+                // passes stream over the DP-sharded buffer, the factor-side
+                // work and factors themselves are replicated, and one fused
+                // All-Reduce of the concatenated factors synchronizes ranks.
+                let all_indices: Vec<usize> = (0..locals.len()).collect();
+                let mut flops_per_gpu = 0.0;
+                let mut factor_elems = 0.0;
+                let mut state_per_rank = 0.0;
+                for lp in &locals {
+                    if !lp.local.is_matrix_opt() {
+                        continue;
+                    }
+                    let m = lp.local.shape.rows() as f64;
+                    let n = lp.local.shape.cols() as f64;
+                    flops_per_gpu += dion_flops(m, n, DION_RANK_FRACTION, s.dp);
+                    factor_elems += dion_factor_elems(m, n, DION_RANK_FRACTION);
+                    state_per_rank += dion_state_bytes(m, n, DION_RANK_FRACTION, s.dp);
+                }
+                let ew_all = ew_elems(&all_indices);
+                state_per_rank += 8.0 * ew_all / s.dp as f64;
+                StrategyTable::Dion {
+                    flops_per_gpu,
+                    factor_bytes: WIRE_BYTES * factor_elems,
+                    state_per_rank,
+                    ew_all,
                 }
             }
         };
@@ -790,6 +968,79 @@ pub(crate) fn optimizer_step_knobs(
                 worst_tplan,
             }
         }
+        StrategyTable::Fsdp { rank_flops, rank_state: _, ew_all } => {
+            // Communication-free: every rank recomputes the matrix-level
+            // preconditioners for the matrices it holds rows of (the
+            // parameters are already materialized by FSDP's compute-path
+            // All-Gather) and applies the update to its own rows; the
+            // element-wise tail is ZeRO-3-sharded too.
+            let max_flops = rank_flops.iter().cloned().fold(0.0, f64::max);
+            OptScalars {
+                time_s: max_flops / gpu + ew_time(*ew_all / s.dp as f64),
+                planning_s: 0.0,
+                n_micro_groups: 0,
+                worst_tplan: None,
+            }
+        }
+        StrategyTable::DMuon { rank_sizes, rank_item_flops, rank_flops: _, rank_state: _, ew_all } => {
+            // Per owner rank: gather each owned tensor's momentum shards
+            // over the DP fabric, orthogonalize, scatter the update
+            // shards back — the comm stream runs ahead of compute
+            // (gather i+1 overlaps orthogonalization i), mirroring
+            // `tp_pipeline` at whole-tensor granularity on the
+            // inter-node link.
+            let ew = ew_time(*ew_all / s.dp as f64);
+            let mut max_time = 0.0f64;
+            for d in 0..s.dp {
+                let mut comm_stream = Stream::new();
+                let mut compute_stream = Stream::new();
+                let mut end = 0.0f64;
+                for (k, &bytes) in rank_sizes[d].iter().enumerate() {
+                    let t_move = comm.hw.launch_overhead
+                        + comm.collective(
+                            CollectiveKind::Gather,
+                            bytes,
+                            s.dp,
+                            LinkKind::InterNode,
+                        );
+                    let t_compute = rank_item_flops[d][k] / gpu;
+                    let gather_done = comm_stream.schedule(0.0, t_move);
+                    let compute_done = compute_stream.schedule(gather_done, t_compute);
+                    // Scatter returns the same volume (CollectiveKind::
+                    // Scatter prices identically to Gather).
+                    end = comm_stream.schedule(compute_done, t_move);
+                }
+                max_time = max_time.max(end + ew);
+            }
+            OptScalars {
+                time_s: max_time,
+                planning_s: 0.0,
+                n_micro_groups: 0,
+                worst_tplan: None,
+            }
+        }
+        StrategyTable::Dion { flops_per_gpu, factor_bytes, state_per_rank: _, ew_all } => {
+            // One fused All-Reduce of the concatenated low-rank factors,
+            // then the (replicated) factor update and the DP-sharded
+            // error-feedback / element-wise pass.
+            let comm_t = if s.dp > 1 {
+                comm.hw.launch_overhead
+                    + comm.collective(
+                        CollectiveKind::AllReduce,
+                        *factor_bytes,
+                        s.dp,
+                        LinkKind::InterNode,
+                    )
+            } else {
+                0.0
+            };
+            OptScalars {
+                time_s: comm_t + flops_per_gpu / gpu + ew_time(*ew_all / s.dp as f64),
+                planning_s: 0.0,
+                n_micro_groups: 0,
+                worst_tplan: None,
+            }
+        }
     }
 }
 
@@ -831,6 +1082,24 @@ pub(crate) fn fill_loads(out: &mut Breakdown, s: &Scenario, table: &StageTable, 
                     fill(&mut out.tp_loads_state, s.tp, 0.0);
                 }
             }
+        }
+        StrategyTable::Fsdp { rank_flops, rank_state, .. }
+        | StrategyTable::DMuon { rank_flops, rank_state, .. } => {
+            // Like NV-layerwise: DP is the load-bearing plane; TP ranks
+            // replicate the pacing rank's compute and hold no extra state.
+            set(&mut out.dp_loads_flops, rank_flops);
+            set(&mut out.dp_loads_state, rank_state);
+            let max_flops = rank_flops.iter().cloned().fold(0.0, f64::max);
+            fill(&mut out.tp_loads_flops, s.tp, max_flops);
+            fill(&mut out.tp_loads_state, s.tp, 0.0);
+        }
+        StrategyTable::Dion { flops_per_gpu, state_per_rank, .. } => {
+            // Uniform by construction: every rank runs the same low-rank
+            // update over its shard.
+            fill(&mut out.dp_loads_flops, s.dp, *flops_per_gpu);
+            fill(&mut out.dp_loads_state, s.dp, *state_per_rank);
+            fill(&mut out.tp_loads_flops, s.tp, *flops_per_gpu);
+            fill(&mut out.tp_loads_state, s.tp, 0.0);
         }
     }
 }
@@ -1632,8 +1901,7 @@ mod tests {
                 b.n_micro_groups,
             )
         }
-        for strategy in [DpStrategy::Sc, DpStrategy::NvLayerwise,
-                         DpStrategy::Asc, DpStrategy::LbAsc] {
+        for strategy in DpStrategy::ALL {
             let s = scen(strategy);
             // Unbounded: an env budget override must not evict mid-test.
             let cache = PlanCache::unbounded();

@@ -413,12 +413,7 @@ mod tests {
             schedules: vec![PipelineSchedule::OneFOneB],
             stragglers: vec![1.0],
             optims: vec![OptimKind::Muon],
-            strategies: vec![
-                DpStrategy::Sc,
-                DpStrategy::NvLayerwise,
-                DpStrategy::Asc,
-                DpStrategy::LbAsc,
-            ],
+            strategies: DpStrategy::ALL.to_vec(),
             alphas: vec![1.0],
             c_max_mb: vec![Some(256.0)],
             metric: CostMetric::Numel,
@@ -454,8 +449,8 @@ mod tests {
             ..OptimizeOptions::default()
         };
         let r = optimize(&engine, &small_grid(), &opts).unwrap();
-        assert_eq!(r.grid_len, 4);
-        assert_eq!(r.space, 4);
+        assert_eq!(r.grid_len, DpStrategy::ALL.len());
+        assert_eq!(r.space, DpStrategy::ALL.len());
         assert_eq!(r.evaluated.len() + r.pruned, r.space);
         assert!(r.frontier.contains(&r.winner));
         let w = &r.evaluated[r.winner];
@@ -476,8 +471,8 @@ mod tests {
         let opts =
             OptimizeOptions { gpus: Some(8), batch: 1, ..OptimizeOptions::default() };
         let r = optimize(&engine, &grid, &opts).unwrap();
-        assert_eq!(r.grid_len, 8);
-        assert_eq!(r.space, 4);
+        assert_eq!(r.grid_len, 2 * DpStrategy::ALL.len());
+        assert_eq!(r.space, DpStrategy::ALL.len());
         assert!(r.evaluated.iter().all(|e| e.scenario.gpus() == 8));
         let bad = OptimizeOptions { gpus: Some(7), ..OptimizeOptions::default() };
         assert!(optimize(&engine, &grid, &bad).is_err());

@@ -104,9 +104,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         DpStrategy::Asc => Some(Arc::new(naive_atomic(&fb, cfg.ranks))),
         DpStrategy::LbAsc => Some(Arc::new(alpha_balanced(
             &fb, cfg.ranks, cfg.alpha, false, |p| p.numel() as f64))),
-        DpStrategy::NvLayerwise => {
-            return Err(err!("numeric trainer supports sc/asc/lb-asc strategies"))
-        }
+        // NV-layerwise and the rival sharding strategies (MatrixFSDP,
+        // DMuon, Dion) are cost-model citizens only — the numeric
+        // trainer's update executables run Canzona's own ladder.
+        _ => return Err(err!("numeric trainer supports sc/asc/lb-asc strategies")),
     };
     if let Some(p) = &plan {
         assert_eq!(p.atomicity, Atomicity::Strict);

@@ -90,7 +90,13 @@ pub fn test_grid() -> SweepGrid {
         schedules: vec![PipelineSchedule::OneFOneB],
         stragglers: vec![1.0],
         optims: vec![OptimKind::Muon],
-        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+        strategies: vec![
+            DpStrategy::Asc,
+            DpStrategy::LbAsc,
+            DpStrategy::MatrixFsdp,
+            DpStrategy::DMuon,
+            DpStrategy::Dion,
+        ],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
         metric: CostMetric::Numel,
@@ -109,7 +115,7 @@ pub fn pp_grid() -> SweepGrid {
         schedules: vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe],
         stragglers: vec![1.0, 1.5],
         optims: vec![OptimKind::Muon],
-        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
+        strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc, DpStrategy::MatrixFsdp],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
         metric: CostMetric::Numel,
@@ -117,7 +123,10 @@ pub fn pp_grid() -> SweepGrid {
 }
 
 /// Every strategy × optimizer × size × TP × fusion at pp = 1 — the
-/// differential oracles' coverage grid.
+/// differential oracles' coverage grid. Spans the full strategy zoo
+/// (`DpStrategy::ALL`): the ladder plus MatrixFSDP / DMuon / Dion, so
+/// no strategy arm can land without passing the timeline, batch, and
+/// optimize oracles.
 pub fn oracle_grid() -> SweepGrid {
     SweepGrid {
         models: vec![Qwen3Size::S1_7B, Qwen3Size::S4B],
@@ -128,12 +137,7 @@ pub fn oracle_grid() -> SweepGrid {
         schedules: vec![PipelineSchedule::OneFOneB],
         stragglers: vec![1.0],
         optims: vec![OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap, OptimKind::AdamW],
-        strategies: vec![
-            DpStrategy::Sc,
-            DpStrategy::NvLayerwise,
-            DpStrategy::Asc,
-            DpStrategy::LbAsc,
-        ],
+        strategies: DpStrategy::ALL.to_vec(),
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0), None],
         metric: CostMetric::Numel,

@@ -1,6 +1,7 @@
 //! Golden-table regression tests: the rendered Markdown for `fig3a`,
-//! `fig4` and `planning` is pinned under `tests/goldens/` so refactors
-//! cannot silently drift the paper's numbers.
+//! `fig4`, `fig_pp`, `fig_rivals` and `planning` is pinned under
+//! `tests/goldens/` so refactors cannot silently drift the paper's
+//! numbers.
 //!
 //! * Missing golden files are bootstrapped from the current output on
 //!   first run (and the test passes with a notice) — the repo's build
@@ -109,6 +110,14 @@ fn golden_fig_pp() {
     // The timeline engine's pp sweep: every cell is simulated (not
     // wall-clock) time, so the snapshot is fully deterministic.
     check_golden("fig_pp");
+}
+
+#[test]
+fn golden_fig_rivals() {
+    // The strategy-zoo head-to-head (ladder vs MatrixFSDP / DMuon /
+    // Dion) on both dispatch arms: every cell is simulated time or a
+    // simulated load, so the snapshot is fully deterministic.
+    check_golden("fig_rivals");
 }
 
 #[test]

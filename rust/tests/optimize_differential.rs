@@ -73,14 +73,10 @@ fn check_grid(label: &str, grid: &SweepGrid, obj: Objective) -> OptimizeResult {
 #[test]
 fn strategy_grid_optimizer_latency() {
     // SC's bound (full redundant matrix update, ~F/gpu) dwarfs LB-ASC's
-    // actual step, so the strategy axis must prune.
+    // actual step, so the strategy axis must prune — across the full
+    // zoo including the MatrixFSDP / DMuon / Dion rivals.
     let mut grid = base_grid();
-    grid.strategies = vec![
-        DpStrategy::Sc,
-        DpStrategy::NvLayerwise,
-        DpStrategy::Asc,
-        DpStrategy::LbAsc,
-    ];
+    grid.strategies = DpStrategy::ALL.to_vec();
     check_grid("strategies", &grid, Objective::OptimizerLatency);
 }
 
@@ -145,12 +141,7 @@ fn tie_breaks_to_smallest_grid_index() {
 #[test]
 fn exhaustive_mode_frontier_is_pareto_exact() {
     let mut grid = base_grid();
-    grid.strategies = vec![
-        DpStrategy::Sc,
-        DpStrategy::NvLayerwise,
-        DpStrategy::Asc,
-        DpStrategy::LbAsc,
-    ];
+    grid.strategies = DpStrategy::ALL.to_vec();
     grid.optims = vec![OptimKind::Muon, OptimKind::Shampoo];
     let engine = SweepEngine::new(2);
     let opts = OptimizeOptions {

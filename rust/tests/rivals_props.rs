@@ -1,0 +1,211 @@
+//! Property pins for the rival sharding strategies (MatrixFSDP, DMuon,
+//! Dion) — the invariants that make each rival's cost model *mean*
+//! something, beyond the differential oracles' cross-path agreement:
+//!
+//! * MatrixFSDP's ZeRO-3 row sharding conserves optimizer state exactly:
+//!   per-rank bytes sum to the unsharded TP-local census, for every
+//!   optimizer and TP degree.
+//! * DMuon's LPT tensor assignment respects the greedy makespan bound
+//!   (avg + largest item) and gathers every matrix tensor exactly once.
+//! * Dion's low-rank state is monotone in the rank fraction and never
+//!   exceeds the full-rank (frac = 1) configuration.
+//! * The paper's headline ordering survives the zoo: LB-ASC beats
+//!   MatrixFSDP on optimizer latency at the 256-GPU Qwen3-32B point.
+//! * The user-facing docs (README, docs/CLI.md) list every strategy
+//!   token the CLI parses.
+
+mod common;
+
+use canzona::cost::optim::{
+    dion_state_bytes, OptimCost, OptimKind, DION_RANK_FRACTION,
+};
+use canzona::model::{qwen3, tp_split, Qwen3Size};
+use canzona::partition::rivals::{lpt_owners, zero3_rows};
+use canzona::partition::DpStrategy;
+use canzona::sim::{simulate_iteration_into, Breakdown, Scenario};
+use canzona::sweep::PlanCache;
+use common::close;
+
+fn simulate(s: &Scenario) -> Breakdown {
+    let cache = PlanCache::unbounded();
+    let mut out = Breakdown::default();
+    simulate_iteration_into(s, &cache, &mut out);
+    out
+}
+
+/// The unsharded TP-local optimizer-state census: matrix shards under
+/// the matrix optimizer's model, everything else AdamW (8 bytes/elem) —
+/// the same routing `sim::iteration`'s stage tables use.
+fn census_state_bytes(size: Qwen3Size, tp: usize, optim: OptimKind) -> f64 {
+    let cost = OptimCost::new(optim);
+    tp_split(&qwen3(size), tp)
+        .iter()
+        .map(|sh| {
+            if sh.param.is_matrix_opt() {
+                cost.state_bytes(&sh.shard_shape)
+            } else {
+                8.0 * sh.shard_numel as f64
+            }
+        })
+        .sum()
+}
+
+#[test]
+fn matrix_fsdp_state_conservation_is_exact() {
+    // ZeRO-3 row prorating must neither lose nor duplicate state: the
+    // per-DP-rank state loads sum to the unsharded census for every
+    // optimizer (matrix and element-wise alike) and TP degree.
+    for tp in [1usize, 4] {
+        for optim in
+            [OptimKind::Muon, OptimKind::Shampoo, OptimKind::Soap, OptimKind::AdamW]
+        {
+            let s = Scenario::new(
+                Qwen3Size::S1_7B, 8, tp, 1, optim, DpStrategy::MatrixFsdp,
+            );
+            let b = simulate(&s);
+            assert_eq!(b.dp_loads_state.len(), s.dp);
+            let sharded: f64 = b.dp_loads_state.iter().sum();
+            let unsharded = census_state_bytes(Qwen3Size::S1_7B, tp, optim);
+            assert!(
+                close(sharded, unsharded),
+                "tp={tp} {optim:?}: sharded state {sharded:.6e} != census {unsharded:.6e}",
+            );
+            // And every rank holds strictly less than the whole census.
+            for (d, st) in b.dp_loads_state.iter().enumerate() {
+                assert!(*st > 0.0 && *st < unsharded, "rank {d}: {st}");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero3_rows_tile_exactly_for_awkward_shapes() {
+    // Integer tiling with no gaps/overlap even when dp doesn't divide
+    // rows — the substrate of the conservation property above.
+    for (rows, dp) in [(5usize, 4usize), (1, 8), (7, 3), (4096, 32), (9, 9)] {
+        let total: usize = (0..dp).map(|d| zero3_rows(rows, dp, d)).sum();
+        assert_eq!(total, rows, "rows={rows} dp={dp}");
+        // Prefix ranks own the (joint-)largest blocks.
+        let first = zero3_rows(rows, dp, 0);
+        for d in 0..dp {
+            assert!(zero3_rows(rows, dp, d) <= first, "rows={rows} dp={dp} d={d}");
+        }
+    }
+}
+
+#[test]
+fn dmuon_lpt_load_respects_the_greedy_makespan_bound() {
+    // LPT over full-shape update FLOPs: the pacing rank may exceed the
+    // mean only by less than one largest tensor (the classic greedy
+    // bound), and every matrix tensor is gathered by exactly one owner.
+    let dp = 8usize;
+    let cost = OptimCost::new(OptimKind::Muon);
+    for size in [Qwen3Size::S1_7B, Qwen3Size::S4B] {
+        for tp in [1usize, 4] {
+            let flops: Vec<f64> = tp_split(&qwen3(size), tp)
+                .iter()
+                .filter(|sh| sh.param.is_matrix_opt())
+                .map(|sh| cost.flops(&sh.param.shape))
+                .collect();
+            let owners = lpt_owners(&flops, dp);
+            assert_eq!(owners.len(), flops.len());
+            assert!(owners.iter().all(|&d| d < dp));
+            let mut loads = vec![0.0f64; dp];
+            for (k, &d) in owners.iter().enumerate() {
+                loads[d] += flops[k];
+            }
+            let total: f64 = flops.iter().sum();
+            let largest = flops.iter().cloned().fold(0.0, f64::max);
+            let max_load = loads.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                max_load <= total / dp as f64 + largest + 1e-6,
+                "{size:?}/tp{tp}: LPT makespan {max_load:.3e} breaks avg+max bound",
+            );
+            // The simulated DP flops loads agree with the local replay.
+            let s = Scenario::new(size, dp, tp, 1, OptimKind::Muon, DpStrategy::DMuon);
+            let b = simulate(&s);
+            let sim_max = b.dp_loads_flops.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                close(sim_max, max_load),
+                "{size:?}/tp{tp}: simulated pacing load {sim_max:.6e} != LPT {max_load:.6e}",
+            );
+        }
+    }
+}
+
+#[test]
+fn dion_state_is_monotone_in_rank_fraction_and_below_full_rank() {
+    // For every matrix shape in the census: state grows with the rank
+    // fraction and the default low-rank point stays at or below the
+    // frac = 1 full-rank configuration — the memory story that justifies
+    // Dion in the first place.
+    let dp = 8usize;
+    for sh in tp_split(&qwen3(Qwen3Size::S4B), 4) {
+        if !sh.param.is_matrix_opt() {
+            continue;
+        }
+        let (m, n) = (sh.shard_shape.rows() as f64, sh.shard_shape.cols() as f64);
+        let full = dion_state_bytes(m, n, 1.0, dp);
+        let mut prev = 0.0;
+        for frac in [0.01, 0.1, DION_RANK_FRACTION, 0.5, 0.75, 1.0] {
+            let st = dion_state_bytes(m, n, frac, dp);
+            assert!(st >= prev, "{}: state not monotone at frac {frac}", sh.param.name);
+            assert!(st <= full + 1e-9, "{}: frac {frac} above full rank", sh.param.name);
+            prev = st;
+        }
+    }
+}
+
+#[test]
+fn lb_asc_beats_matrix_fsdp_at_the_papers_256_gpu_point() {
+    // The headline direction pin: at the paper's main-results
+    // configuration (Qwen3-32B, DP=32 x TP=8, Muon), the ladder's
+    // LB-ASC optimizer step must beat MatrixFSDP's redundant
+    // preconditioner recomputation by a wide margin — and SC, which
+    // replicates everything, must trail both.
+    let lb = simulate(&Scenario::paper_default());
+    let fsdp = simulate(&Scenario::new(
+        Qwen3Size::S32B, 32, 8, 1, OptimKind::Muon, DpStrategy::MatrixFsdp,
+    ));
+    let sc = simulate(&Scenario::new(
+        Qwen3Size::S32B, 32, 8, 1, OptimKind::Muon, DpStrategy::Sc,
+    ));
+    assert!(
+        lb.optimizer_s * 2.0 < fsdp.optimizer_s,
+        "LB-ASC {:.4e}s must be at least 2x faster than MatrixFSDP {:.4e}s",
+        lb.optimizer_s,
+        fsdp.optimizer_s,
+    );
+    assert!(
+        fsdp.optimizer_s < sc.optimizer_s,
+        "MatrixFSDP {:.4e}s must still beat fully-replicated SC {:.4e}s",
+        fsdp.optimizer_s,
+        sc.optimizer_s,
+    );
+}
+
+#[test]
+fn docs_list_every_cli_strategy_token() {
+    // README and docs/CLI.md must document the whole zoo: each CLI
+    // token parses, the tokens cover DpStrategy::ALL exactly, and both
+    // documents mention every token.
+    let tokens =
+        ["sc", "nv-layerwise", "asc", "lb-asc", "matrix-fsdp", "dmuon", "dion"];
+    let mut parsed: Vec<DpStrategy> = tokens
+        .iter()
+        .map(|t| DpStrategy::parse(t).unwrap_or_else(|| panic!("token {t} must parse")))
+        .collect();
+    parsed.sort_by_key(|s| s.ordinal());
+    parsed.dedup();
+    assert_eq!(parsed.len(), DpStrategy::ALL.len(), "tokens must cover the zoo");
+
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+    for doc in ["README.md", "docs/CLI.md"] {
+        let text = std::fs::read_to_string(format!("{root}/{doc}"))
+            .unwrap_or_else(|e| panic!("{doc}: {e}"))
+            .to_ascii_lowercase();
+        for t in tokens {
+            assert!(text.contains(t), "{doc} does not mention strategy token {t:?}");
+        }
+    }
+}

@@ -47,12 +47,9 @@ fn assert_warm_alloc_free(s: &Scenario, label: &str) {
 
 #[test]
 fn warm_simulate_is_allocation_free_for_every_strategy() {
-    for strategy in [
-        DpStrategy::Sc,
-        DpStrategy::NvLayerwise,
-        DpStrategy::Asc,
-        DpStrategy::LbAsc,
-    ] {
+    // The whole strategy zoo: the ladder plus the MatrixFSDP / DMuon /
+    // Dion rivals — no strategy arm may allocate on the warm path.
+    for strategy in DpStrategy::ALL {
         let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 1, OptimKind::Muon, strategy);
         assert_warm_alloc_free(&s, &format!("{strategy:?}"));
     }
@@ -102,9 +99,17 @@ fn warm_timeline_is_allocation_free_across_the_pp_grid() {
 #[test]
 fn warm_timeline_is_allocation_free_for_other_strategies_and_straggler_pp1() {
     // The AR-path strategies exercise different emitter branches (no
-    // parameter All-Gather gating), and straggler != 1.0 forces the
-    // timeline arm even at pp = 1.
-    for strategy in [DpStrategy::Sc, DpStrategy::NvLayerwise, DpStrategy::Asc] {
+    // parameter All-Gather gating), the rivals exercise the planless
+    // stage-table arms, and straggler != 1.0 forces the timeline arm
+    // even at pp = 1.
+    for strategy in [
+        DpStrategy::Sc,
+        DpStrategy::NvLayerwise,
+        DpStrategy::Asc,
+        DpStrategy::MatrixFsdp,
+        DpStrategy::DMuon,
+        DpStrategy::Dion,
+    ] {
         let s = Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, strategy)
             .with_micro_batches(8);
         assert_warm_alloc_free(&s, &format!("timeline {strategy:?}"));
