@@ -360,6 +360,87 @@ fn main() {
         );
     }
 
+    // --- batched timeline playback: schedule tape vs scalar replay ------
+    // The timeline half of the batch tier: one cached tape per
+    // (schedule, pp, mb, bucket-shape) key, N lanes replayed over SoA
+    // duration columns. The scalar loop re-emits the full task graph
+    // per call; the tape replays only the `free_at`/`ends` algebra —
+    // bit-identical results (tests/batch_differential.rs). The cold
+    // first call prices tape recording; its cost amortizes across every
+    // later lane of the same shape. Paste the printed rows into
+    // CHANGES.md from a toolchain-equipped run.
+    println!("\n# Batched timeline playback (schedule tape, warm cache)\n");
+    {
+        use canzona::sim::{
+            simulate_timeline_batch_into, BreakdownBatch, LaneKnobs, ScenarioBatch,
+        };
+        for pp in [2usize, 8] {
+            let base =
+                Scenario::new(Qwen3Size::S8B, 8, 4, pp, OptimKind::Muon, DpStrategy::LbAsc)
+                    .with_micro_batches(8);
+            const LANES: usize = 1024;
+            let mut batch = ScenarioBatch::new(base.clone()).unwrap();
+            let mut scalar_scens = Vec::with_capacity(LANES);
+            for lane in 0..LANES {
+                let mut k = LaneKnobs::from_scenario(&base);
+                k.ib_bw *= 0.5 + lane as f64 / LANES as f64; // [0.5x, 1.5x)
+                k.straggler = 1.0 + (lane % 8) as f64 * 0.05; // last-stage derate
+                if lane % 4 == 0 {
+                    k.c_max_bytes = None;
+                }
+                batch.push(k).unwrap();
+                let mut s = base.clone();
+                s.hw.ib_bw = k.ib_bw;
+                s.straggler = k.straggler;
+                s.c_max_bytes = k.c_max_bytes;
+                scalar_scens.push(s);
+            }
+            let cache = PlanCache::unbounded();
+            let mut soa = BreakdownBatch::new();
+            let t = Instant::now();
+            simulate_timeline_batch_into(&batch, &cache, &mut soa); // cold: plans + tape
+            let tape_cold_s = t.elapsed().as_secs_f64();
+            simulate_timeline_batch_into(&batch, &cache, &mut soa); // settle capacity
+            const PASSES: usize = 20;
+            let t = Instant::now();
+            for _ in 0..PASSES {
+                simulate_timeline_batch_into(&batch, &cache, &mut soa);
+            }
+            black_box(soa.total_s[LANES - 1]);
+            let batch_s = t.elapsed().as_secs_f64();
+            let mut out = canzona::sim::Breakdown::default();
+            canzona::sim::simulate_iteration_into(&scalar_scens[0], &cache, &mut out);
+            let t = Instant::now();
+            for _ in 0..PASSES {
+                for s in &scalar_scens {
+                    canzona::sim::simulate_iteration_into(s, &cache, &mut out);
+                }
+            }
+            black_box(out.total_s);
+            let scalar_s = t.elapsed().as_secs_f64();
+            let evals = (LANES * PASSES) as f64;
+            println!(
+                "pp={pp} scalar replay ({LANES} lanes x {PASSES} passes): {scalar_s:>7.3}s \
+                 ({:>9.0} evals/s)",
+                evals / scalar_s.max(1e-12),
+            );
+            println!(
+                "pp={pp} schedule tape ({LANES} lanes x {PASSES} passes): {batch_s:>7.3}s \
+                 ({:>9.0} evals/s, {:.2}x; {} timeline lanes counted)",
+                evals / batch_s.max(1e-12),
+                scalar_s / batch_s.max(1e-12),
+                cache.stats().batched_timeline_evals,
+            );
+            println!(
+                "pp={pp} tape-build amortization: cold first call {:.1} us vs \
+                 {:.3} us/lane warm ({:.0} lanes to break even on one scalar eval)",
+                tape_cold_s * 1e6,
+                batch_s * 1e6 / evals,
+                tape_cold_s / (scalar_s / evals).max(1e-12),
+            );
+        }
+    }
+
     // --- branch-and-bound optimize: pruning ratio -----------------------
     // The search must beat exhaustive enumeration on evaluations, not
     // just match its winner (tests/optimize_differential.rs pins the
@@ -392,6 +473,42 @@ fn main() {
         let search_s = t.elapsed().as_secs_f64();
         println!(
             "{:>17}: {:>3} of {:>3} leaves evaluated ({:>4.1}% pruned), \
+             search {search_s:>6.3}s vs exhaustive {grid_s:>6.3}s ({:.2}x)",
+            objective.label(),
+            r.evaluated.len(),
+            r.space,
+            100.0 * r.pruned as f64 / r.space.max(1) as f64,
+            grid_s / search_s.max(1e-12),
+        );
+    }
+
+    // --- deep-pipeline optimize: the PR 9 timeline-arm bound ------------
+    // Every leaf below is on the timeline arm; before the schedule-tape
+    // PR the optimizer-latency bound claimed 0 here (degenerating that
+    // search to exhaustive enumeration) and the iter-time bound lacked
+    // its optimizer term, so the pruning ratios printed now are the
+    // bound-tightening deltas. Paste the printed rows into CHANGES.md
+    // from a toolchain-equipped run.
+    println!("\n# Deep-pipeline optimize (pp grid, timeline-arm bounds)\n");
+    let deep_grid = SweepGrid {
+        pp: vec![2, 4, 8],
+        micro_batches: vec![4, 8],
+        schedules: vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe],
+        stragglers: vec![1.0, 1.3],
+        ..search_grid.clone()
+    };
+    for objective in [Objective::IterTime, Objective::OptimizerLatency] {
+        let engine = SweepEngine::new(pool::default_threads());
+        let t = Instant::now();
+        black_box(engine.run_grid(&deep_grid));
+        let grid_s = t.elapsed().as_secs_f64();
+        let engine = SweepEngine::new(pool::default_threads());
+        let opts = OptimizeOptions { objective, ..OptimizeOptions::default() };
+        let t = Instant::now();
+        let r = optimize(&engine, &deep_grid, &opts).unwrap();
+        let search_s = t.elapsed().as_secs_f64();
+        println!(
+            "{:>17}: {:>4} of {:>4} timeline leaves evaluated ({:>4.1}% pruned), \
              search {search_s:>6.3}s vs exhaustive {grid_s:>6.3}s ({:.2}x)",
             objective.label(),
             r.evaluated.len(),

@@ -244,11 +244,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             stats.order_hits,
         );
     }
-    if stats.batched_evals > 0 {
+    if stats.batched_evals + stats.batched_timeline_evals > 0 {
         println!(
-            "batch tier: {} scenarios evaluated batched ({:.0} evals/s)",
+            "batch tier: {} scenarios evaluated batched \
+             ({} closed-form + {} timeline, {:.0} evals/s)",
+            stats.batched_evals + stats.batched_timeline_evals,
             stats.batched_evals,
-            stats.batched_evals as f64 / wall_s.max(1e-9),
+            stats.batched_timeline_evals,
+            (stats.batched_evals + stats.batched_timeline_evals) as f64 / wall_s.max(1e-9),
         );
     }
     if let Some(path) = args.get("baseline") {

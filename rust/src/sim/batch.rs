@@ -1,20 +1,22 @@
-//! Batched structure-of-arrays scenario evaluation (the closed-form arm).
+//! Batched structure-of-arrays scenario evaluation — both dispatch arms.
 //!
 //! A sweep or `canzona optimize` search evaluates thousands of leaves
 //! that share one plan fingerprint — same model/DP/TP/strategy/metric,
-//! hence the same cached [`StageTable`] — and differ only in continuous
-//! knobs: the fusion capacity `C_max`, link bandwidths, network
-//! latencies, and a straggler derate. The scalar path re-derives the
-//! whole closed form per leaf; this module evaluates N such *lanes* in
-//! one call over structure-of-arrays buffers:
+//! hence the same cached [`StageTable`]s — and differ only in
+//! continuous knobs: the fusion capacity `C_max`, link bandwidths,
+//! network latencies, and a straggler derate. The scalar path
+//! re-derives everything per leaf; this module evaluates N such *lanes*
+//! in one call over structure-of-arrays buffers:
 //!
-//! * [`ScenarioBatch`] — one base [`Scenario`] (must satisfy the
-//!   closed-form dispatch rule: `pp == 1`, `micro_batches == 1`,
-//!   `straggler == 1.0`) plus per-lane [`LaneKnobs`] columns.
+//! * [`ScenarioBatch`] — one base [`Scenario`] plus per-lane
+//!   [`LaneKnobs`] columns. The base's dispatch arm (the
+//!   `closed_form_path` rule) picks the evaluator: the closed-form SoA
+//!   recurrences for `pp == 1, micro_batches == 1, straggler == 1.0`
+//!   bases, the schedule-tape timeline replay for everything else.
 //! * [`BreakdownBatch`] — a caller-owned SoA output block: one column
 //!   per [`Breakdown`] scalar, reused across calls with capacity
-//!   retained (the warm batch path is zero-allocation, enforced by
-//!   `tests/warm_alloc.rs`).
+//!   retained (the warm batch path is zero-allocation on both arms,
+//!   enforced by `tests/warm_alloc.rs`).
 //! * [`simulate_batch_into`] — the evaluator: fixed-width chunks
 //!   ([`BATCH_CHUNK`] lanes) of plain `f64` recurrences, std-only, no
 //!   `unsafe`, shaped so the auto-vectorizer can keep the stream
@@ -23,34 +25,60 @@
 //! # Bit-for-bit contract
 //!
 //! For every lane, the batch path must produce **exactly** the bits the
-//! scalar closed form produces for a `Scenario` carrying that lane's
-//! knobs (`hw` = the lane hardware, `c_max_bytes` = the lane capacity)
-//! — every [`Breakdown`] field except `planning_s`, which is wall-clock
-//! plumbing. `tests/batch_differential.rs` pins this across all
-//! strategies × optimizers × sizes × fusion modes with randomized knob
-//! vectors and ragged tails. The implementation strategy makes the
+//! scalar dispatcher produces for a `Scenario` carrying that lane's
+//! knobs (`hw` = the lane hardware, `c_max_bytes` = the lane capacity,
+//! `straggler` = the lane derate) — every [`Breakdown`] field except
+//! `planning_s`, which is wall-clock plumbing.
+//! `tests/batch_differential.rs` pins this across all strategies ×
+//! optimizers × sizes × fusion modes (closed-form arm) and pp ×
+//! schedule × micro-batches × straggler (timeline arm) with randomized
+//! knob vectors and ragged tails. The implementation strategy makes the
 //! contract structural rather than numerical:
 //!
-//! * Work that is *lane-invariant* (the stage-table fetch, the bucket
-//!   shard reductions via [`shard_parts`], gradient wire volume) is
-//!   hoisted once per batch — computing it once yields the same bits as
-//!   computing it per lane because the inputs are identical.
+//! * Work that is *lane-invariant* (stage-table fetches, the bucket
+//!   shard reductions via [`shard_parts`], gradient wire volume, and on
+//!   the timeline arm the whole task DAG — see the schedule tape below)
+//!   is hoisted once per batch — computing it once yields the same bits
+//!   as computing it per lane because the inputs are identical.
 //! * Work that is *per-lane* runs the **same functions** the scalar
 //!   path runs ([`stage_times`], [`CommModel::collective`] /
-//!   [`CommModel::collective_parts`], [`optimizer_step_knobs`]), in the
-//!   same per-lane operation order; the chunked loops replicate
-//!   [`Stream`](super::stream::Stream)'s `schedule` algebra
-//!   (`start = ready.max(free); free = start + dur`) verbatim.
+//!   [`CommModel::collective_parts`], [`optimizer_step_knobs`],
+//!   [`bucket_ag_time`] / [`bucket_grad_time`]), in the same per-lane
+//!   operation order; the chunked loops replicate the scalar scheduling
+//!   algebra (`Stream::schedule` on the closed-form arm,
+//!   [`Timeline::task`] on the timeline arm:
+//!   `ready = free.max(deps…); end = ready + dur`) verbatim.
+//!
+//! # The schedule tape (timeline arm)
+//!
+//! For a fixed plan fingerprint × `(schedule, pp, micro_batches)`
+//! shape, the task DAG the timeline engine replays is **lane-invariant**:
+//! the emission order, stream assignments, dependency edges, and the
+//! formula each task's duration comes from are all decided by the
+//! schedule shape and the cached stage census — never by the hardware
+//! knobs. Only the duration *values* vary per lane. [`Tape::record`]
+//! runs the scalar emitter's exact branch structure once (zero
+//! durations) and stores, per task, the stream index, the resolved
+//! dependency task indices (≤ 2 by construction), and a *duration slot*
+//! — an index into a per-stage program of scalars (`fwd_t`, `bwd_t`,
+//! per-bucket collective times, …). Replay then runs the identical
+//! `free_at`/`ends` recurrence over SoA duration columns for
+//! [`BATCH_CHUNK`] lanes at a time. Tapes are interned per worker in a
+//! [`TapeCache`] keyed by `(schedule, pp, m, has_ag, per-stage bucket
+//! counts)`; a tape is a pure function of its key, so there is no
+//! invalidation — matching the schedule-order cache it subsumes.
 //!
 //! # Straggler semantics
 //!
-//! A lane's `straggler` derates its compute/HBM throughput
-//! ([`Hardware::derate`]) and leaves the fabric untouched — at `pp = 1`
-//! there is only one stage, so "the last stage is slower" and "the
-//! whole lane is slower" coincide, which is what lets the batch tier
-//! model straggler sweeps without the timeline engine. `derate(1.0)` is
-//! bit-exact (pinned in `cost::hardware`), so lanes built from plain
-//! closed-form scenarios reproduce the scalar path's bits.
+//! On the closed-form arm a lane's `straggler` derates the whole lane's
+//! compute/HBM throughput ([`Hardware::derate`]) — at `pp = 1` there is
+//! only one stage, so "the last stage is slower" and "the whole lane is
+//! slower" coincide. On the timeline arm the lane straggler derates
+//! only the **last pipeline stage**, exactly as the scalar timeline
+//! dispatcher does, while collectives keep pricing against the lane's
+//! un-derated fabric. `derate(1.0)` is bit-exact (pinned in
+//! `cost::hardware`), so lanes built from plain scenarios reproduce the
+//! scalar path's bits on either arm.
 
 #![warn(missing_docs)]
 
@@ -61,14 +89,19 @@ use crate::bail;
 use crate::cost::comm::{shard_parts, CollectiveKind, CommModel};
 use crate::cost::hardware::{Hardware, LinkKind};
 use crate::schedule::microgroup::TpPlan;
-use crate::sweep::cache::{PlanCache, StageKey};
+use crate::sweep::cache::{canonical_stage, PlanCache, StageKey};
 use crate::util::error::Result;
 
 use super::iteration::{
-    closed_form_path, fill_loads, optimizer_step_knobs, stage_grad_bytes, stage_times,
-    uses_all_reduce, with_batch_scratch, Breakdown, StageTable, ADAMW_BYTES_PER_ELEM,
+    bucket_ag_time, bucket_grad_time, closed_form_path, fill_loads, optimizer_step_knobs,
+    stage_grad_bytes, stage_times, uses_all_reduce, with_batch_scratch, Breakdown, StageTable,
+    ADAMW_BYTES_PER_ELEM,
 };
 use super::scenario::Scenario;
+use super::timeline::{
+    drive_pipeline_flat, schedule_order_iter, PipeScratch, PipeSlot, PipelineSchedule, StreamId,
+    TaskId, TaskKind, Timeline,
+};
 
 /// Lanes per inner-loop chunk. Wide enough to fill a 512-bit vector
 /// unit with `f64`s, small enough that the per-chunk stream state
@@ -157,10 +190,12 @@ impl LaneKnobs {
         Ok(())
     }
 
-    /// The lane's effective hardware profile: the knob fields over the
-    /// base profile's identity (name, GPUs per node), derated by the
-    /// lane straggler.
-    fn hardware(&self, base: &Hardware) -> Hardware {
+    /// The lane's raw hardware profile: the knob fields over the base
+    /// profile's identity (name, GPUs per node), **not** derated — what
+    /// a scalar `Scenario` carrying this lane's knobs would hold in
+    /// `hw`. The timeline arm prices its fabric and non-last stages
+    /// against this, deratings the last stage separately.
+    fn base_hardware(&self, base: &Hardware) -> Hardware {
         Hardware {
             gpu_flops: self.gpu_flops,
             hbm_bw: self.hbm_bw,
@@ -171,14 +206,22 @@ impl LaneKnobs {
             launch_overhead: self.launch_overhead,
             ..base.clone()
         }
-        .derate(self.straggler)
+    }
+
+    /// The lane's effective single-stage profile (closed-form arm):
+    /// [`LaneKnobs::base_hardware`] derated by the lane straggler.
+    fn hardware(&self, base: &Hardware) -> Hardware {
+        self.base_hardware(base).derate(self.straggler)
     }
 }
 
 /// N scenarios sharing one plan fingerprint (the base [`Scenario`]) and
-/// varying only [`LaneKnobs`]. Construction validates eligibility
-/// (closed-form arm) and every lane's knobs, so the evaluator itself
-/// never has to.
+/// varying only [`LaneKnobs`]. Construction validates the base and
+/// every lane's knobs, so the evaluator itself never has to. The base's
+/// dispatch arm selects the evaluator (see the module docs) — callers
+/// batching lanes whose equivalent scalar scenarios take the *other*
+/// arm than the base must not mix them (the sweep engine's group key
+/// includes the arm bit exactly for this).
 pub struct ScenarioBatch {
     base: Scenario,
     lanes: Vec<LaneKnobs>,
@@ -186,20 +229,12 @@ pub struct ScenarioBatch {
 
 impl ScenarioBatch {
     /// Start a batch over `base`'s fingerprint. Errors if `base` fails
-    /// [`Scenario::validate`] or is not closed-form eligible (the batch
-    /// tier only replaces the closed-form arm; `pp > 1` /
-    /// `micro_batches > 1` scenarios route through the timeline engine
-    /// one at a time).
+    /// [`Scenario::validate`]. Both dispatch arms are eligible: the
+    /// closed-form SoA recurrences serve `pp == 1, micro_batches == 1,
+    /// straggler == 1.0` bases, the schedule-tape timeline replay
+    /// serves everything else.
     pub fn new(base: Scenario) -> Result<ScenarioBatch> {
         base.validate()?;
-        if !closed_form_path(&base) {
-            bail!(
-                "scenario batch requires the closed-form arm \
-                 (pp == 1, micro_batches == 1, straggler == 1.0); \
-                 got pp={} micro_batches={} straggler={}",
-                base.pp, base.micro_batches, base.straggler
-            );
-        }
         Ok(ScenarioBatch { base, lanes: Vec::new() })
     }
 
@@ -266,8 +301,12 @@ pub struct BreakdownBatch {
     /// Per lane: the worst rank's TP plan (feeds the TP load vectors on
     /// [`BreakdownBatch::write_into`]); `None` off the Atomic arm.
     worst_tplans: Vec<Option<Arc<TpPlan>>>,
-    /// The batch's shared stage table (for load scatter).
+    /// The batch's shared stage table (closed-form arm load scatter).
     table: Option<Arc<StageTable>>,
+    /// Per lane: the pacing stage's table (timeline arm load scatter —
+    /// each lane may pace on a different stage); `None` on the
+    /// closed-form arm, where `table` covers every lane.
+    lane_tables: Vec<Option<Arc<StageTable>>>,
     len: usize,
 }
 
@@ -311,6 +350,8 @@ impl BreakdownBatch {
         self.n_micro_groups.resize(n, 0);
         self.worst_tplans.clear();
         self.worst_tplans.resize(n, None);
+        self.lane_tables.clear();
+        self.lane_tables.resize(n, None);
         self.table = None;
         self.len = n;
     }
@@ -322,8 +363,9 @@ impl BreakdownBatch {
     pub fn write_into(&self, batch: &ScenarioBatch, lane: usize, out: &mut Breakdown) {
         out.reset();
         let table = self
-            .table
+            .lane_tables[lane]
             .as_ref()
+            .or(self.table.as_ref())
             .expect("BreakdownBatch::write_into before simulate_batch_into");
         out.fwd_bwd_s = self.fwd_bwd_s[lane];
         out.optimizer_s = self.optimizer_s[lane];
@@ -361,6 +403,8 @@ pub(crate) struct BatchScratch {
     shard_min: Vec<f64>,
     /// Per-bucket shard counts (ranks).
     shard_ranks: Vec<usize>,
+    /// The timeline arm's tape cache + SoA replay columns.
+    tline: TimelineScratch,
 }
 
 impl BatchScratch {
@@ -374,19 +418,38 @@ impl BatchScratch {
             shard_total: Vec::new(),
             shard_min: Vec::new(),
             shard_ranks: Vec::new(),
+            tline: TimelineScratch::new(),
         }
     }
 }
 
-/// Evaluate every lane of `batch` into the caller-owned `out` block.
+/// Evaluate every lane of `batch` into the caller-owned `out` block,
+/// dispatching on the base scenario's arm (see the module docs).
 ///
-/// One stage-table fetch covers the whole batch; per-lane work is the
-/// chunked closed form (see the module docs for the bit-for-bit
-/// contract). Warm caches + previously-sized buffers ⇒ zero heap
-/// allocations. Rides the `batched_evals` cache counter.
+/// Closed-form arm: one stage-table fetch covers the whole batch and
+/// per-lane work is the chunked closed form. Timeline arm: one schedule
+/// tape covers the whole batch and per-lane work is the chunked replay
+/// ([`simulate_timeline_batch_into`] is the explicit-arm twin). Warm
+/// caches + previously-sized buffers ⇒ zero heap allocations. Rides the
+/// `batched_evals` / `batched_timeline_evals` cache counters.
 pub fn simulate_batch_into(batch: &ScenarioBatch, cache: &PlanCache, out: &mut BreakdownBatch) {
     with_batch_scratch(|scratch| {
         simulate_batch_core(batch, cache, scratch, out);
+    });
+}
+
+/// Evaluate every lane of `batch` through the schedule-tape timeline
+/// replay regardless of the base's arm — the entry the timeline
+/// differential tests exercise directly (the dispatching
+/// [`simulate_batch_into`] routes non-closed-form bases here
+/// automatically).
+pub fn simulate_timeline_batch_into(
+    batch: &ScenarioBatch,
+    cache: &PlanCache,
+    out: &mut BreakdownBatch,
+) {
+    with_batch_scratch(|scratch| {
+        timeline_core_split(batch, cache, &mut scratch.tline, out);
     });
 }
 
@@ -402,11 +465,24 @@ pub(crate) fn simulate_batch_scatter(
     with_batch_scratch(|scratch| {
         // Split-borrow: the SoA block and the hoist columns are
         // disjoint scratch fields.
-        let BatchScratch { out, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks } =
-            scratch;
-        batch_core_split(
-            batch, cache, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks, out,
-        );
+        let BatchScratch {
+            out,
+            comms,
+            fwd_t,
+            bwd_t,
+            tp_ar,
+            shard_total,
+            shard_min,
+            shard_ranks,
+            tline,
+        } = scratch;
+        if closed_form_path(batch.base()) {
+            batch_core_split(
+                batch, cache, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks, out,
+            );
+        } else {
+            timeline_core_split(batch, cache, tline, out);
+        }
         for (lane, b) in outs.iter_mut().enumerate() {
             out.write_into(batch, lane, b);
         }
@@ -422,11 +498,24 @@ fn simulate_batch_core(
     scratch: &mut BatchScratch,
     out: &mut BreakdownBatch,
 ) {
-    let BatchScratch { out: _, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks } =
-        scratch;
-    batch_core_split(
-        batch, cache, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks, out,
-    );
+    let BatchScratch {
+        out: _,
+        comms,
+        fwd_t,
+        bwd_t,
+        tp_ar,
+        shard_total,
+        shard_min,
+        shard_ranks,
+        tline,
+    } = scratch;
+    if closed_form_path(batch.base()) {
+        batch_core_split(
+            batch, cache, comms, fwd_t, bwd_t, tp_ar, shard_total, shard_min, shard_ranks, out,
+        );
+    } else {
+        timeline_core_split(batch, cache, tline, out);
+    }
 }
 
 /// The evaluator proper, over explicitly split scratch columns.
@@ -703,6 +792,607 @@ fn bucket_comm_lanes(
     }
 }
 
+// ---------------------------------------------------------------------
+// Schedule tape: the timeline arm of the batch tier (module docs).
+// ---------------------------------------------------------------------
+
+/// Sentinel for "no task" in the tape's `u32` task-index fields.
+const NONE: u32 = u32::MAX;
+
+/// Fixed per-stage duration-slot offsets (relative to the stage's
+/// `slot_base`; bucket-indexed slots follow from [`SLOT_BUCKETS`]).
+const SLOT_FWD: usize = 0;
+/// Full backward compute time.
+const SLOT_BWD: usize = 1;
+/// Boundary-activation p2p transfer time.
+const SLOT_ACT: usize = 2;
+/// The per-stage TP All-Reduce tail block (`m * tp_ar`).
+const SLOT_TP: usize = 3;
+/// The stage's optimizer step time.
+const SLOT_OPT: usize = 4;
+/// First bucket-indexed slot: `ag[b]`, then `grad[b]`, then
+/// `fwd_t * frac[b]`, then `bwd_t * frac[b]` (`nb` each).
+const SLOT_BUCKETS: usize = 5;
+
+/// One replayed task: its stream, its duration slot, and its (≤ 2,
+/// already-resolved) dependency task indices. The emitter never passes
+/// more than two dependencies to [`Timeline::task`], which is what lets
+/// the tape store them inline.
+#[derive(Clone, Copy, Debug)]
+struct TapeTask {
+    stream: u32,
+    slot: u32,
+    deps: [u32; 2],
+    n_deps: u8,
+}
+
+/// The `ready0` sample point of one stage's first-micro-batch
+/// All-Gather block: just before task `at_task` runs, sample
+/// `free[compute(stage)].max(end[gate])` — the scalar emitter's
+/// pre-block snapshot that anchors the `ag_stretch` readout.
+#[derive(Clone, Copy, Debug)]
+struct AgMarker {
+    at_task: u32,
+    stage: u32,
+    gate: u32,
+}
+
+/// The lane-invariant structure of one timeline playback for a fixed
+/// `(schedule, pp, micro_batches, has_ag, per-stage bucket counts)`
+/// shape: every task in emission order plus the readout anchors. See
+/// the module docs for why this is lane-invariant.
+struct Tape {
+    n_streams: usize,
+    /// Total duration slots (`Σ_i 5 + 4·nb[i]`).
+    n_slots: usize,
+    /// Per-stage first slot index.
+    slot_base: Vec<u32>,
+    /// Per-stage bucket count.
+    nb: Vec<u32>,
+    /// Every task, in the exact scalar emission order (task index ==
+    /// scalar [`TaskId`]).
+    tasks: Vec<TapeTask>,
+    /// `ready0` sample points, ascending by `at_task`.
+    markers: Vec<AgMarker>,
+    /// Per-stage last forward of the AG block ([`NONE`] if no block).
+    ag_last: Vec<u32>,
+    /// Per-stage last backward compute task ([`NONE`] if `nb == 0` and
+    /// the stage somehow never ran a backward — never in practice).
+    last_bwd: Vec<u32>,
+    /// Per-stage last gradient-collective task ([`NONE`] off ZeRO).
+    last_rs: Vec<u32>,
+    /// Per-stage TP tail task.
+    tp_task: Vec<u32>,
+    /// Per-stage optimizer task.
+    opt_task: Vec<u32>,
+}
+
+/// Push one task onto the tape *and* mirror it into the recording
+/// timeline (zero duration — only the ids and the dependency resolution
+/// matter), so [`drive_pipeline_flat`]'s completion-id tables stay
+/// consistent with tape indices.
+fn rec(tape: &mut Tape, tl: &mut Timeline, stream: StreamId, slot: usize, deps: &[TaskId]) -> TaskId {
+    debug_assert!(deps.len() <= 2, "tape tasks carry at most two deps");
+    let mut d = [NONE; 2];
+    for (k, dep) in deps.iter().enumerate() {
+        d[k] = dep.0;
+    }
+    tape.tasks.push(TapeTask {
+        stream: stream.0,
+        slot: slot as u32,
+        deps: d,
+        n_deps: deps.len() as u8,
+    });
+    let id = tl.task(stream, TaskKind::Forward, 0.0, deps);
+    debug_assert_eq!(id.0 as usize + 1, tape.tasks.len(), "tape index == TaskId");
+    id
+}
+
+impl Tape {
+    /// Record one playback's structure by running the scalar emitter's
+    /// exact branch structure (`simulate_timeline_scratch`'s closure —
+    /// kept in lockstep by the batch differential oracle) over a
+    /// throwaway zero-duration timeline. Pure function of the
+    /// arguments; cold-path allocations only.
+    fn record(sched: PipelineSchedule, pp: usize, m: usize, has_ag: bool, nbs: &[u32]) -> Tape {
+        let mut slot_base = Vec::with_capacity(pp);
+        let mut n_slots = 0u32;
+        for &nb in nbs {
+            slot_base.push(n_slots);
+            n_slots += (SLOT_BUCKETS as u32) + 4 * nb;
+        }
+        let mut tape = Tape {
+            n_streams: 5 * pp,
+            n_slots: n_slots as usize,
+            slot_base,
+            nb: nbs.to_vec(),
+            tasks: Vec::new(),
+            markers: Vec::new(),
+            ag_last: vec![NONE; pp],
+            last_bwd: vec![NONE; pp],
+            last_rs: vec![NONE; pp],
+            tp_task: vec![NONE; pp],
+            opt_task: vec![NONE; pp],
+        };
+
+        // Streams in the scalar creation order: compute / optimizer /
+        // DP-collective / forward p2p / backward p2p, pp of each.
+        let mut tl = Timeline::new();
+        for _ in 0..5 * pp {
+            tl.stream();
+        }
+        let compute = |i: usize| StreamId(i as u32);
+        let opt_stream = |i: usize| StreamId((pp + i) as u32);
+        let dpc = |i: usize| StreamId((2 * pp + i) as u32);
+        let p2p_f = |i: usize| StreamId((3 * pp + i) as u32);
+        let p2p_b = |i: usize| StreamId((4 * pp + i) as u32);
+
+        // Stage-major slot table — the same construction OrderCache
+        // interns for the scalar path.
+        let mut slots = Vec::with_capacity(pp * 2 * m);
+        for stage in 0..pp {
+            slots.extend(schedule_order_iter(sched, pp, stage, m));
+        }
+        let mut pipe = PipeScratch::new();
+        let mut dbuf: Vec<TaskId> = Vec::new();
+        drive_pipeline_flat(&mut tl, &slots, pp, m, &mut pipe, |tl, i, slot, deps| {
+            let nb = nbs[i] as usize;
+            let sb = tape.slot_base[i] as usize;
+            match slot {
+                PipeSlot::Fwd(j) => {
+                    let gate = (i > 0).then(|| {
+                        let up = tape.slot_base[i - 1] as usize;
+                        rec(&mut tape, tl, p2p_f(i - 1), up + SLOT_ACT, deps)
+                    });
+                    if j == 0 && has_ag && nb > 0 {
+                        tape.markers.push(AgMarker {
+                            at_task: tape.tasks.len() as u32,
+                            stage: i as u32,
+                            gate: gate.map(|g| g.0).unwrap_or(NONE),
+                        });
+                        let mut last = None;
+                        for b in 0..nb {
+                            let ag = rec(&mut tape, tl, dpc(i), sb + SLOT_BUCKETS + b, &[]);
+                            dbuf.clear();
+                            dbuf.push(ag);
+                            if b == 0 {
+                                if let Some(g) = gate {
+                                    dbuf.push(g);
+                                }
+                            }
+                            last = Some(rec(
+                                &mut tape,
+                                tl,
+                                compute(i),
+                                sb + SLOT_BUCKETS + 2 * nb + b,
+                                dbuf.as_slice(),
+                            ));
+                        }
+                        let last = last.expect("nb > 0");
+                        tape.ag_last[i] = last.0;
+                        last
+                    } else {
+                        dbuf.clear();
+                        if let Some(g) = gate {
+                            dbuf.push(g);
+                        }
+                        rec(&mut tape, tl, compute(i), sb + SLOT_FWD, dbuf.as_slice())
+                    }
+                }
+                PipeSlot::Bwd(j) => {
+                    let gate = (i + 1 < pp)
+                        .then(|| rec(&mut tape, tl, p2p_b(i + 1), sb + SLOT_ACT, &[deps[1]]));
+                    if j == m - 1 && nb > 0 {
+                        let mut last_c = None;
+                        for b in 0..nb {
+                            dbuf.clear();
+                            if b == 0 {
+                                dbuf.push(deps[0]);
+                                if let Some(g) = gate {
+                                    dbuf.push(g);
+                                }
+                            }
+                            let c = rec(
+                                &mut tape,
+                                tl,
+                                compute(i),
+                                sb + SLOT_BUCKETS + 3 * nb + b,
+                                dbuf.as_slice(),
+                            );
+                            let r = rec(&mut tape, tl, dpc(i), sb + SLOT_BUCKETS + nb + b, &[c]);
+                            last_c = Some(c);
+                            tape.last_rs[i] = r.0;
+                        }
+                        let last_c = last_c.expect("nb > 0");
+                        tape.last_bwd[i] = last_c.0;
+                        last_c
+                    } else {
+                        dbuf.clear();
+                        dbuf.push(deps[0]);
+                        if let Some(g) = gate {
+                            dbuf.push(g);
+                        }
+                        let c = rec(&mut tape, tl, compute(i), sb + SLOT_BWD, dbuf.as_slice());
+                        if j == m - 1 {
+                            tape.last_bwd[i] = c.0;
+                        }
+                        c
+                    }
+                }
+            }
+        });
+
+        // Per-stage tail: the TP All-Reduce block, then the optimizer.
+        for i in 0..pp {
+            let sb = tape.slot_base[i] as usize;
+            dbuf.clear();
+            if tape.last_bwd[i] != NONE {
+                dbuf.push(TaskId(tape.last_bwd[i]));
+            }
+            if tape.last_rs[i] != NONE {
+                dbuf.push(TaskId(tape.last_rs[i]));
+            }
+            let tp = rec(&mut tape, &mut tl, compute(i), sb + SLOT_TP, dbuf.as_slice());
+            tape.tp_task[i] = tp.0;
+            let opt = rec(&mut tape, &mut tl, opt_stream(i), sb + SLOT_OPT, &[tp]);
+            tape.opt_task[i] = opt.0;
+        }
+        tape
+    }
+}
+
+/// Interned tapes, keyed by `(schedule, pp, m, has_ag, per-stage bucket
+/// counts)`. Like [`super::timeline::OrderCache`] this is a linear scan
+/// over the handful of shapes a sweep visits, never allocates on a hit,
+/// and needs no invalidation: a tape is a pure function of its key (the
+/// bucket counts stand in for the census shape, and everything else the
+/// durations depend on is per-lane by construction).
+#[derive(Default)]
+pub(crate) struct TapeCache {
+    entries: Vec<TapeEntry>,
+}
+
+struct TapeEntry {
+    sched: PipelineSchedule,
+    pp: usize,
+    m: usize,
+    has_ag: bool,
+    nbs: Vec<u32>,
+    tape: Tape,
+}
+
+impl TapeCache {
+    /// The tape for the shape, recording it on first sighting.
+    fn get(
+        &mut self,
+        sched: PipelineSchedule,
+        pp: usize,
+        m: usize,
+        has_ag: bool,
+        nbs: &[u32],
+    ) -> &Tape {
+        if let Some(i) = self.entries.iter().position(|e| {
+            e.sched == sched && e.pp == pp && e.m == m && e.has_ag == has_ag && e.nbs == nbs
+        }) {
+            return &self.entries[i].tape;
+        }
+        let tape = Tape::record(sched, pp, m, has_ag, nbs);
+        self.entries.push(TapeEntry { sched, pp, m, has_ag, nbs: nbs.to_vec(), tape });
+        &self.entries.last().expect("just pushed").tape
+    }
+}
+
+/// The timeline arm's per-worker workspace: the interned tapes plus
+/// every SoA column of the chunked replay. Capacity is retained across
+/// batches, bounded by the largest `(pp, tasks, slots)` shape the
+/// thread has seen; Arc'd refs are dropped at the end of every batch so
+/// the scratch never pins evicted cache entries.
+pub(crate) struct TimelineScratch {
+    tapes: TapeCache,
+    /// Per-stage cached tables (cleared after each batch).
+    tables: Vec<Arc<StageTable>>,
+    /// Per-stage bucket counts (the tape-key suffix).
+    nbs: Vec<u32>,
+    /// Per-stage gradient wire bytes (hardware-free ⇒ lane-invariant).
+    grad_bytes: Vec<f64>,
+    /// Per-stage AdamW-reference element counts (lane-invariant).
+    adamw_elems: Vec<f64>,
+    /// Duration columns: `slot * BATCH_CHUNK + lane`.
+    durs: Vec<f64>,
+    /// Completion columns: `task * BATCH_CHUNK + lane`.
+    ends: Vec<f64>,
+    /// Stream-free columns: `stream * BATCH_CHUNK + lane`.
+    free: Vec<f64>,
+    /// Compute-stream busy columns: `stage * BATCH_CHUNK + lane`.
+    busy: Vec<f64>,
+    /// AG-block `ready0` samples: `stage * BATCH_CHUNK + lane`.
+    ready0: Vec<f64>,
+    /// Per-(stage, lane) micro-group counts (pacing-stage readout).
+    groups: Vec<usize>,
+    /// Per-(stage, lane) worst-rank TP plans (cleared after each batch).
+    tplans: Vec<Option<Arc<TpPlan>>>,
+}
+
+impl TimelineScratch {
+    fn new() -> TimelineScratch {
+        TimelineScratch {
+            tapes: TapeCache::default(),
+            tables: Vec::new(),
+            nbs: Vec::new(),
+            grad_bytes: Vec::new(),
+            adamw_elems: Vec::new(),
+            durs: Vec::new(),
+            ends: Vec::new(),
+            free: Vec::new(),
+            busy: Vec::new(),
+            ready0: Vec::new(),
+            groups: Vec::new(),
+            tplans: Vec::new(),
+        }
+    }
+}
+
+/// The timeline-arm evaluator: fill per-lane duration columns with the
+/// scalar path's own formulas, replay the tape's `free`/`ends` algebra
+/// over [`BATCH_CHUNK`]-lane chunks, then read each lane's
+/// [`Breakdown`] off the columns exactly as the scalar readout does.
+fn timeline_core_split(
+    batch: &ScenarioBatch,
+    cache: &PlanCache,
+    tls: &mut TimelineScratch,
+    out: &mut BreakdownBatch,
+) {
+    let TimelineScratch {
+        tapes,
+        tables,
+        nbs,
+        grad_bytes,
+        adamw_elems,
+        durs,
+        ends,
+        free,
+        busy,
+        ready0,
+        groups,
+        tplans,
+    } = tls;
+    let s = batch.base();
+    let n = batch.len();
+    out.reset(n);
+    if n == 0 {
+        return;
+    }
+    let pp = s.pp.max(1);
+    let m = s.micro_batches.max(1);
+    const C: usize = BATCH_CHUNK;
+
+    // --- lane-invariant hoists: per-stage tables + census scalars ----
+    // Canonical-equal stages share one fetch, as on the scalar path;
+    // gradient wire volume and the AdamW element count are
+    // hardware-free, so one lane's answer is every lane's answer.
+    let t_fetch = Instant::now();
+    let base_comm = CommModel::new(s.hw.clone());
+    tables.clear();
+    nbs.clear();
+    grad_bytes.clear();
+    adamw_elems.clear();
+    for si in 0..pp {
+        let canon = canonical_stage(s, si);
+        if canon < si {
+            let shared = tables[canon].clone();
+            nbs.push(nbs[canon]);
+            grad_bytes.push(grad_bytes[canon]);
+            adamw_elems.push(adamw_elems[canon]);
+            tables.push(shared);
+            continue;
+        }
+        let key = StageKey::for_scenario(s, si);
+        let table = cache.stage_table(&key, || StageTable::build(s, si, cache));
+        nbs.push(table.bucket_bytes.len() as u32);
+        grad_bytes.push(stage_grad_bytes(s, &base_comm, &table));
+        adamw_elems.push(table.total_elems / s.dp as f64);
+        tables.push(table);
+    }
+    let stage_planning_s = t_fetch.elapsed().as_secs_f64();
+    let has_ag = s.dp > 1 && !uses_all_reduce(s);
+
+    let tape = tapes.get(s.schedule, pp, m, has_ag, nbs);
+    let n_tasks = tape.tasks.len();
+
+    groups.clear();
+    groups.resize(pp * C, 0);
+    tplans.clear();
+    tplans.resize(pp * C, None);
+
+    let mut c0 = 0usize;
+    while c0 < n {
+        let mch = (n - c0).min(C);
+
+        // --- per-lane duration fill ----------------------------------
+        // Each lane runs the scalar emitter's own duration formulas —
+        // same functions, same arguments, same order — over its knob
+        // hardware; canonical-equal stages copy the canonical block,
+        // mirroring the scalar StagePlayback clone.
+        durs.clear();
+        durs.resize(tape.n_slots * C, 0.0);
+        for l in 0..mch {
+            let knobs = &batch.lanes()[c0 + l];
+            let lane_hw = knobs.base_hardware(&s.hw);
+            let comm = CommModel::new(lane_hw.clone());
+            let mut planning = stage_planning_s;
+            for si in 0..pp {
+                let sb = tape.slot_base[si] as usize;
+                let nb = tape.nb[si] as usize;
+                let canon = canonical_stage(s, si);
+                if canon < si {
+                    let cb = tape.slot_base[canon] as usize;
+                    for k in 0..SLOT_BUCKETS + 4 * nb {
+                        durs[(sb + k) * C + l] = durs[(cb + k) * C + l];
+                    }
+                    groups[si * C + l] = groups[canon * C + l];
+                    tplans[si * C + l] = tplans[canon * C + l].clone();
+                    continue;
+                }
+                let table = &tables[si];
+                // The lane straggler derates the *last* stage's
+                // compute/HBM; the fabric stays un-derated.
+                let stage_hw =
+                    if si == pp - 1 { lane_hw.derate(knobs.straggler) } else { lane_hw.clone() };
+                let (fwd_t, bwd_t, tp_ar, act_bytes) = stage_times(s, &stage_hw, &comm, table);
+                let act_p2p =
+                    if pp > 1 { comm.p2p(act_bytes, LinkKind::InterNode) } else { 0.0 };
+                let opt =
+                    optimizer_step_knobs(s, &stage_hw, &comm, table, si, cache, knobs.c_max_bytes);
+                planning += opt.planning_s;
+                durs[(sb + SLOT_FWD) * C + l] = fwd_t;
+                durs[(sb + SLOT_BWD) * C + l] = bwd_t;
+                durs[(sb + SLOT_ACT) * C + l] = act_p2p;
+                durs[(sb + SLOT_TP) * C + l] = m as f64 * tp_ar;
+                durs[(sb + SLOT_OPT) * C + l] = opt.time_s;
+                for b in 0..nb {
+                    durs[(sb + SLOT_BUCKETS + b) * C + l] = bucket_ag_time(s, &comm, table, b);
+                    durs[(sb + SLOT_BUCKETS + nb + b) * C + l] =
+                        bucket_grad_time(s, &comm, table, b);
+                    durs[(sb + SLOT_BUCKETS + 2 * nb + b) * C + l] =
+                        fwd_t * table.bucket_frac[b];
+                    durs[(sb + SLOT_BUCKETS + 3 * nb + b) * C + l] =
+                        bwd_t * table.bucket_frac[b];
+                }
+                groups[si * C + l] = opt.n_micro_groups;
+                tplans[si * C + l] = opt.worst_tplan;
+            }
+            out.planning_s[c0 + l] = planning;
+        }
+
+        // --- chunked tape replay -------------------------------------
+        // Per task, per lane: the exact Timeline::task algebra —
+        // `ready = free[stream].max(ends[dep]…); end = ready + dur` —
+        // with busy tracked for the compute streams the readout uses.
+        ends.clear();
+        ends.resize(n_tasks * C, 0.0);
+        free.clear();
+        free.resize(tape.n_streams * C, 0.0);
+        busy.clear();
+        busy.resize(pp * C, 0.0);
+        ready0.clear();
+        ready0.resize(pp * C, 0.0);
+        let mut mk = 0usize;
+        for (ti, t) in tape.tasks.iter().enumerate() {
+            while mk < tape.markers.len() && tape.markers[mk].at_task == ti as u32 {
+                // Sample ready0 before the AG block's first task, as
+                // the scalar emitter does (compute stream == stage id).
+                let mark = &tape.markers[mk];
+                let st = mark.stage as usize;
+                for l in 0..mch {
+                    let gate_end =
+                        if mark.gate != NONE { ends[mark.gate as usize * C + l] } else { 0.0 };
+                    ready0[st * C + l] = free[st * C + l].max(gate_end);
+                }
+                mk += 1;
+            }
+            let fs = t.stream as usize * C;
+            let ds = t.slot as usize * C;
+            let es = ti * C;
+            match t.n_deps {
+                0 => {
+                    for l in 0..mch {
+                        let end = free[fs + l] + durs[ds + l];
+                        free[fs + l] = end;
+                        ends[es + l] = end;
+                    }
+                }
+                1 => {
+                    let d0 = t.deps[0] as usize * C;
+                    for l in 0..mch {
+                        let ready = free[fs + l].max(ends[d0 + l]);
+                        let end = ready + durs[ds + l];
+                        free[fs + l] = end;
+                        ends[es + l] = end;
+                    }
+                }
+                _ => {
+                    let d0 = t.deps[0] as usize * C;
+                    let d1 = t.deps[1] as usize * C;
+                    for l in 0..mch {
+                        let ready = free[fs + l].max(ends[d0 + l]).max(ends[d1 + l]);
+                        let end = ready + durs[ds + l];
+                        free[fs + l] = end;
+                        ends[es + l] = end;
+                    }
+                }
+            }
+            if (t.stream as usize) < pp {
+                for l in 0..mch {
+                    busy[fs + l] += durs[ds + l];
+                }
+            }
+        }
+
+        // --- per-lane readout (the scalar readout, columnized) -------
+        for l in 0..mch {
+            let i = c0 + l;
+            let knobs = &batch.lanes()[i];
+            let mut pacing = 0usize;
+            for st in 1..pp {
+                if ends[tape.opt_task[st] as usize * C + l]
+                    > ends[tape.opt_task[pacing] as usize * C + l]
+                {
+                    pacing = st;
+                }
+            }
+            let mut fwd_bwd_end = 0.0f64;
+            for st in 0..pp {
+                fwd_bwd_end = fwd_bwd_end.max(ends[tape.tp_task[st] as usize * C + l]);
+            }
+            out.fwd_bwd_s[i] = fwd_bwd_end;
+            out.total_s[i] = ends[tape.opt_task[pacing] as usize * C + l].max(fwd_bwd_end);
+            out.optimizer_s[i] = out.total_s[i] - out.fwd_bwd_s[i];
+            let rs_tail = if tape.last_rs[pacing] != NONE && tape.last_bwd[pacing] != NONE {
+                (ends[tape.last_rs[pacing] as usize * C + l]
+                    - ends[tape.last_bwd[pacing] as usize * C + l])
+                    .max(0.0)
+            } else {
+                0.0
+            };
+            let ag_stretch = if tape.ag_last[pacing] != NONE {
+                let full_fwd = durs[(tape.slot_base[pacing] as usize + SLOT_FWD) * C + l];
+                (ends[tape.ag_last[pacing] as usize * C + l] - ready0[pacing * C + l] - full_fwd)
+                    .max(0.0)
+            } else {
+                0.0
+            };
+            out.exposed_comm_s[i] = ag_stretch + rs_tail;
+            let mut max_busy = 0.0f64;
+            for st in 0..pp {
+                max_busy = max_busy.max(busy[st * C + l]);
+            }
+            out.bubble_s[i] = (out.fwd_bwd_s[i] - max_busy).max(0.0);
+            out.n_micro_groups[i] = groups[pacing * C + l];
+            out.grad_comm_bytes[i] = grad_bytes[pacing];
+            // The pacing stage's hardware, rebuilt as the scalar path
+            // built it (pure function ⇒ bit-identical).
+            let pacing_hw = if pacing == pp - 1 {
+                knobs.base_hardware(&s.hw).derate(knobs.straggler)
+            } else {
+                knobs.base_hardware(&s.hw)
+            };
+            out.adamw_ref_s[i] = pacing_hw.memory_time(adamw_elems[pacing] * ADAMW_BYTES_PER_ELEM);
+            out.worst_tplans[i] = tplans[pacing * C + l].clone();
+            out.lane_tables[i] = Some(tables[pacing].clone());
+        }
+        c0 += mch;
+    }
+
+    // Release the scratch's Arc pins now (out keeps its own refs until
+    // the caller clears it), so the scratch never outlives evictions.
+    tables.clear();
+    for t in tplans.iter_mut() {
+        *t = None;
+    }
+    cache.note_timeline_tasks((n_tasks * n) as u64);
+    cache.note_batched_timeline_evals(n as u64);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -716,14 +1406,37 @@ mod tests {
     }
 
     #[test]
-    fn rejects_non_closed_form_base() {
-        let s = Scenario::new(Qwen3Size::S1_7B, 8, 4, 2, OptimKind::Muon, DpStrategy::LbAsc);
-        let e = ScenarioBatch::new(s).expect_err("pp=2 must be rejected").to_string();
-        assert!(e.contains("closed-form"), "{e}");
-        let s = base().with_micro_batches(4);
-        assert!(ScenarioBatch::new(s).is_err());
-        let s = base().with_straggler(1.5);
-        assert!(ScenarioBatch::new(s).is_err());
+    fn accepts_both_arms_and_dispatches_timeline_lanes_bit_exact() {
+        // Non-closed-form bases are first-class since the schedule tape
+        // landed: pp > 1, micro-batched, and straggler bases all build,
+        // and the dispatching entry routes them through the timeline
+        // replay with scalar-identical bits (the module-level smoke of
+        // tests/batch_differential.rs's timeline oracle).
+        for s in [
+            Scenario::new(Qwen3Size::S1_7B, 8, 4, 2, OptimKind::Muon, DpStrategy::LbAsc)
+                .with_micro_batches(4),
+            base().with_micro_batches(4),
+            base().with_straggler(1.5),
+        ] {
+            let cache = PlanCache::new();
+            let scalar = simulate_iteration_cached(&s, &cache);
+            let mut batch = ScenarioBatch::new(s.clone()).unwrap();
+            batch.push_scenario(&s).unwrap();
+            let mut out = BreakdownBatch::new();
+            simulate_batch_into(&batch, &cache, &mut out);
+            let mut got = Breakdown::default();
+            out.write_into(&batch, 0, &mut got);
+            assert_eq!(got.total_s.to_bits(), scalar.total_s.to_bits(), "{s:?}");
+            assert_eq!(got.fwd_bwd_s.to_bits(), scalar.fwd_bwd_s.to_bits(), "{s:?}");
+            assert_eq!(got.bubble_s.to_bits(), scalar.bubble_s.to_bits(), "{s:?}");
+            assert_eq!(
+                got.exposed_comm_s.to_bits(),
+                scalar.exposed_comm_s.to_bits(),
+                "{s:?}"
+            );
+            assert_eq!(cache.stats().batched_timeline_evals, 1, "{s:?}");
+            assert_eq!(cache.stats().batched_evals, 0, "{s:?}");
+        }
     }
 
     #[test]
@@ -785,5 +1498,26 @@ mod tests {
         assert_eq!(cache.stats().batched_evals, 5);
         simulate_batch_into(&batch, &cache, &mut out);
         assert_eq!(cache.stats().batched_evals, 10);
+        // The closed-form arm never rides the timeline counter.
+        assert_eq!(cache.stats().batched_timeline_evals, 0);
+    }
+
+    #[test]
+    fn batched_timeline_evals_counter_rides_the_cache() {
+        let cache = PlanCache::new();
+        let s = base().with_micro_batches(4).with_straggler(1.3);
+        let mut batch = ScenarioBatch::new(s.clone()).unwrap();
+        for _ in 0..3 {
+            batch.push_scenario(&s).unwrap();
+        }
+        let mut out = BreakdownBatch::new();
+        simulate_batch_into(&batch, &cache, &mut out);
+        assert_eq!(cache.stats().batched_timeline_evals, 3);
+        assert_eq!(cache.stats().batched_evals, 0);
+        // The explicit-arm entry reports through the same counter.
+        simulate_timeline_batch_into(&batch, &cache, &mut out);
+        assert_eq!(cache.stats().batched_timeline_evals, 6);
+        // And the replay contributes to the timeline task census.
+        assert!(cache.stats().timeline_tasks > 0);
     }
 }

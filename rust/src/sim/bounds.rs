@@ -19,12 +19,13 @@
 //!   The straggler factor only *derates* a stage's throughput, so
 //!   pricing at the undegraded `gpu_flops` stays below. On the
 //!   closed-form arm (`fwd_bwd = bwd_end + fwd_end + tp_ar ≥ 3 fwd_t`)
-//!   the same expression applies with `mb = pp = 1`, and the optimizer
-//!   bound below adds on (closed form: `total = fwd_bwd + optimizer`).
-//! * **Optimizer latency.** Only claimed on the closed-form arm
-//!   ([`closed_form_path`]); the timeline overlaps the optimizer with
-//!   other streams, so its exposed contribution can be zero. With `F =`
-//!   full-census matrix-update FLOPs: SC updates everything redundantly
+//!   the same expression applies with `mb = pp = 1`. The optimizer
+//!   bound below adds on for both arms: closed form by `total =
+//!   fwd_bwd + optimizer`, the timeline by `total ≥ fwd_bwd + min_i
+//!   opt_i` (derived under **Optimizer latency**) with `fwd_bwd ≥`
+//!   every stage's compute-busy sum `≥` the stage average.
+//! * **Optimizer latency.** Claimed on *both* arms since PR 9. With
+//!   `F =` matrix-update FLOPs: SC updates everything redundantly
 //!   (`≥ F/gpu`); NV-layerwise partitions `F` over DP ranks and takes
 //!   the max (`≥ F/(dp*gpu)`); ASC/LB-ASC additionally spread each DP
 //!   rank's tasks over TP hosts, and the TP pipeline's compute stream
@@ -41,6 +42,20 @@
 //!   stream runs the owned items serially (`≥ F/(dp·gpu)`). Dion's
 //!   sketch pass streams `6·m·n·r/dp` FLOPs with `r ≥ 1`
 //!   (`≥ 6·M_loc/(dp·gpu)`).
+//!   On the closed-form arm `F` is the full census and `total = fwd_bwd
+//!   + optimizer` pays the whole step. On the timeline arm each stage
+//!   `i` runs one `Optimizer` task on its otherwise-empty opt stream,
+//!   starting at its `TpComm` end: `opt_end_i = tp_end_i + opt_i`. The
+//!   readout takes `fwd_bwd = max_i tp_end_i` and `total =
+//!   max(max_i opt_end_i, fwd_bwd)`, so with `i* = argmax tp_end`,
+//!   `optimizer = total - fwd_bwd ≥ opt_{i*} ≥ min_i opt_i` — the
+//!   schedule can hide every stage's step *except the last to finish*,
+//!   never all of them. Hence the bound: the **min over stages** of the
+//!   per-stage strategy floor above (the stage census partitions the
+//!   full census; pricing at the undegraded `gpu_flops` under-counts
+//!   the straggler stage, which only loosens downward). At `pp = 1` the
+//!   single stage *is* the census, so both arms evaluate the identical
+//!   expression — bit-for-bit the pre-PR-9 closed-form bound.
 //! * **Optimizer-state memory** (`max` of `dp_loads_state`). The loads
 //!   come from the pacing stage, unknown before simulating, so the
 //!   bound takes the *min over stages*. Per stage, every matrix
@@ -65,7 +80,7 @@ use std::collections::HashMap;
 use crate::cost::optim::{linear_flops_coeff, OptimCost, OptimKind};
 use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
-use crate::sim::iteration::{closed_form_path, local_view, stage_census, stage_layer_count};
+use crate::sim::iteration::{local_view, stage_census, stage_layer_count};
 use crate::sim::scenario::Scenario;
 
 /// Census aggregates shared by every scenario with the same
@@ -77,13 +92,14 @@ struct BoundAgg {
     nl_hidden: f64,
     /// `Σ_stages` TP-local matrix numels (dense-FLOPs term).
     matrix_numel: f64,
-    /// Full-census matrix-optimizer FLOPs at full shapes.
-    flops_total: f64,
-    /// Matrix-optimizer FLOPs at TP-*local* shapes (MatrixFSDP works on
-    /// the local shards directly; no TP reconstruction).
-    flops_local: f64,
-    /// Matrix-optimizer elements at TP-local shapes.
-    matrix_opt_local: f64,
+    /// Per stage: matrix-optimizer FLOPs at full shapes. Stage sums
+    /// partition the census — at `pp = 1`, entry 0 *is* the full-census
+    /// total (identical accumulation order).
+    stage_flops: Vec<f64>,
+    /// Per stage: matrix-optimizer FLOPs at TP-*local* shapes
+    /// (MatrixFSDP works on the local shards directly; no TP
+    /// reconstruction).
+    stage_flops_local: Vec<f64>,
     /// Per stage: matrix optimizer state bytes at full shapes.
     stage_state: Vec<f64>,
     /// Per stage: matrix optimizer state bytes at TP-local shapes.
@@ -103,9 +119,8 @@ impl BoundAgg {
         let mut agg = BoundAgg {
             nl_hidden: 0.0,
             matrix_numel: 0.0,
-            flops_total: 0.0,
-            flops_local: 0.0,
-            matrix_opt_local: 0.0,
+            stage_flops: Vec::with_capacity(stages.len()),
+            stage_flops_local: Vec::with_capacity(stages.len()),
             stage_state: Vec::with_capacity(stages.len()),
             stage_state_local: Vec::with_capacity(stages.len()),
             stage_matrix_opt_local: Vec::with_capacity(stages.len()),
@@ -120,6 +135,8 @@ impl BoundAgg {
                 .map(|p| p.local.numel() as f64)
                 .unwrap_or(0.0);
             agg.nl_hidden += n_layers * hidden;
+            let mut flops = 0.0;
+            let mut flops_local = 0.0;
             let mut state = 0.0;
             let mut state_local = 0.0;
             let mut matrix_opt_local = 0.0;
@@ -129,8 +146,8 @@ impl BoundAgg {
                     agg.matrix_numel += lp.local.numel() as f64;
                 }
                 if lp.local.is_matrix_opt() {
-                    agg.flops_total += optim.flops(&lp.full_shape);
-                    agg.flops_local += optim.flops(&lp.local.shape);
+                    flops += optim.flops(&lp.full_shape);
+                    flops_local += optim.flops(&lp.local.shape);
                     matrix_opt_local += lp.local.numel() as f64;
                     state += optim.state_bytes(&lp.full_shape);
                     state_local += optim.state_bytes(&lp.local.shape);
@@ -138,7 +155,8 @@ impl BoundAgg {
                     ew += lp.local.numel() as f64;
                 }
             }
-            agg.matrix_opt_local += matrix_opt_local;
+            agg.stage_flops.push(flops);
+            agg.stage_flops_local.push(flops_local);
             agg.stage_state.push(state);
             agg.stage_state_local.push(state_local);
             agg.stage_matrix_opt_local.push(matrix_opt_local);
@@ -185,36 +203,48 @@ impl ScenarioBounds {
         mb * 3.0 * fwd_total / (s.pp.max(1) as f64 * s.hw.gpu_flops) + opt_lb
     }
 
-    /// Lower bound on `Breakdown::optimizer_s`. Zero off the
-    /// closed-form arm, where the timeline may fully overlap the step.
+    /// Lower bound on `Breakdown::optimizer_s`, both arms: the min over
+    /// stages of the per-stage strategy floor (see the module docs —
+    /// the schedule can hide every stage's step except the last to
+    /// finish). At `pp = 1` the min is over the single full-census
+    /// stage, reproducing the closed-form bound bit-for-bit.
     pub fn optimizer_latency(&mut self, s: &Scenario) -> f64 {
-        if !closed_form_path(s) {
-            return 0.0;
-        }
         let gpu = s.hw.gpu_flops;
         let (dp, tp) = (s.dp as f64, s.tp as f64);
+        let strategy = s.strategy;
+        let optim = s.optim;
         let a = self.agg(s);
-        let f = a.flops_total;
-        match s.strategy {
-            DpStrategy::Sc => f / gpu,
-            DpStrategy::NvLayerwise => f / (dp * gpu),
-            DpStrategy::Asc | DpStrategy::LbAsc => f / (dp * tp * gpu),
-            // Redundant preconditioners (paid in full by rank 0, which
-            // always owns the largest row shard) + its ≥ average linear
-            // pass. `flops_local - c·M_loc ≥ 0` for every model: each
-            // FLOPs expression contains exactly the `c·m·n` linear term.
-            DpStrategy::MatrixFsdp => {
-                let c = linear_flops_coeff(s.optim);
-                (a.flops_local - c * a.matrix_opt_local) / gpu
-                    + c * a.matrix_opt_local / (dp * gpu)
-            }
-            // LPT partitions the full-shape FLOPs exactly across DP, and
-            // the owner's compute stream runs its items serially.
-            DpStrategy::DMuon => f / (dp * gpu),
-            // The sketch pass streams ≥ 6·m·n·1/dp FLOPs per matrix
-            // (r ≥ 1); factor-side work and the All-Reduce only add.
-            DpStrategy::Dion => 6.0 * a.matrix_opt_local / (dp * gpu),
-        }
+        (0..a.stage_flops.len())
+            .map(|i| {
+                let f = a.stage_flops[i];
+                match strategy {
+                    DpStrategy::Sc => f / gpu,
+                    DpStrategy::NvLayerwise => f / (dp * gpu),
+                    DpStrategy::Asc | DpStrategy::LbAsc => f / (dp * tp * gpu),
+                    // Redundant preconditioners (paid in full by rank 0,
+                    // which always owns the largest row shard) + its ≥
+                    // average linear pass. `flops_local - c·M_loc ≥ 0`
+                    // for every model: each FLOPs expression contains
+                    // exactly the `c·m·n` linear term.
+                    DpStrategy::MatrixFsdp => {
+                        let c = linear_flops_coeff(optim);
+                        let m_loc = a.stage_matrix_opt_local[i];
+                        (a.stage_flops_local[i] - c * m_loc) / gpu
+                            + c * m_loc / (dp * gpu)
+                    }
+                    // LPT partitions the full-shape FLOPs exactly across
+                    // DP, and the owner's compute stream runs its items
+                    // serially.
+                    DpStrategy::DMuon => f / (dp * gpu),
+                    // The sketch pass streams ≥ 6·m·n·1/dp FLOPs per
+                    // matrix (r ≥ 1); factor-side work and the
+                    // All-Reduce only add.
+                    DpStrategy::Dion => {
+                        6.0 * a.stage_matrix_opt_local[i] / (dp * gpu)
+                    }
+                }
+            })
+            .fold(f64::INFINITY, f64::min)
     }
 
     /// Lower bound on `max(Breakdown::dp_loads_state)` (the pacing
@@ -307,10 +337,28 @@ mod tests {
     }
 
     #[test]
-    fn timeline_arm_claims_no_optimizer_bound() {
-        let s = Scenario::paper_default().with_micro_batches(2);
+    fn timeline_arm_claims_positive_optimizer_bound() {
+        // Pre-PR-9 the timeline arm claimed 0 here (documented caveat);
+        // the min-over-stages floor is now positive on every arm, and
+        // at pp = 1 it is bit-identical to the closed-form expression.
         let mut bounds = ScenarioBounds::new();
-        assert_eq!(bounds.optimizer_latency(&s), 0.0);
-        assert!(bounds.iter_time(&s) > 0.0);
+        let mb = Scenario::paper_default().with_micro_batches(2);
+        assert!(bounds.optimizer_latency(&mb) > 0.0);
+        assert!(bounds.iter_time(&mb) > 0.0);
+        let pp = Scenario::new(
+            crate::model::qwen3::Qwen3Size::S1_7B,
+            2,
+            2,
+            4,
+            OptimKind::Muon,
+            DpStrategy::LbAsc,
+        )
+        .with_micro_batches(8);
+        let o_lb = bounds.optimizer_latency(&pp);
+        assert!(o_lb > 0.0, "deep-pipeline optimizer bound must not be vacuous");
+        // The mb > 1 / straggler variants share the (size, tp, pp,
+        // optim) aggregate with the straggler-free leaf — same bound.
+        let strag = pp.clone().with_straggler(1.5);
+        assert_eq!(o_lb.to_bits(), bounds.optimizer_latency(&strag).to_bits());
     }
 }

@@ -18,6 +18,10 @@
 //!   gradient communication + the per-strategy optimizer step, with a
 //!   closed-form `pp = 1` fast path and the timeline engine for
 //!   everything else.
+//! * [`batch`] — structure-of-arrays evaluation of N knob-varying lanes
+//!   sharing one plan fingerprint, on both dispatch arms (chunked
+//!   closed-form recurrences, and schedule-tape timeline replay for
+//!   `pp > 1` / micro-batched / straggler shapes).
 //! * [`bounds`] — admissible closed-form lower bounds on the playback's
 //!   objectives, for the `canzona optimize` branch-and-bound search.
 
@@ -29,7 +33,8 @@ pub mod stream;
 pub mod timeline;
 
 pub use batch::{
-    simulate_batch_into, BreakdownBatch, LaneKnobs, ScenarioBatch, BATCH_CHUNK,
+    simulate_batch_into, simulate_timeline_batch_into, BreakdownBatch, LaneKnobs, ScenarioBatch,
+    BATCH_CHUNK,
 };
 pub use bounds::ScenarioBounds;
 pub use iteration::{

@@ -320,6 +320,13 @@ pub struct CacheStats {
     /// groups). Row bytes are identical either way; this is the
     /// diagnostic that says which arm did the work.
     pub batched_evals: u64,
+    /// Scenarios evaluated through the batched timeline tier — lanes
+    /// replayed over a cached schedule tape ([`crate::sim::batch`]
+    /// again, pp>1 / micro-batched / straggler arm), one per lane,
+    /// summed over every batch run against this cache. Split from
+    /// `batched_evals` so the summary line can say which *arm* the
+    /// batch tier accelerated; the same byte-identity caveats apply.
+    pub batched_timeline_evals: u64,
 }
 
 impl CacheStats {
@@ -343,6 +350,10 @@ impl CacheStats {
             ("scratch_reuses", Value::num(self.scratch_reuses as f64)),
             ("order_hits", Value::num(self.order_hits as f64)),
             ("batched_evals", Value::num(self.batched_evals as f64)),
+            (
+                "batched_timeline_evals",
+                Value::num(self.batched_timeline_evals as f64),
+            ),
         ])
     }
 
@@ -369,6 +380,7 @@ impl CacheStats {
             scratch_reuses: num("scratch_reuses"),
             order_hits: num("order_hits"),
             batched_evals: num("batched_evals"),
+            batched_timeline_evals: num("batched_timeline_evals"),
         }
     }
 }
@@ -660,6 +672,7 @@ pub struct PlanCache {
     scratch_reuses: AtomicU64,
     order_hits: AtomicU64,
     batched_evals: AtomicU64,
+    batched_timeline_evals: AtomicU64,
 }
 
 impl Default for PlanCache {
@@ -704,6 +717,7 @@ impl PlanCache {
             scratch_reuses: AtomicU64::new(0),
             order_hits: AtomicU64::new(0),
             batched_evals: AtomicU64::new(0),
+            batched_timeline_evals: AtomicU64::new(0),
         }
     }
 
@@ -993,6 +1007,13 @@ impl PlanCache {
         self.batched_evals.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record `n` lanes evaluated by one batched timeline (schedule
+    /// tape) run ([`crate::sim::batch`]; allocation-free, called once
+    /// per batch).
+    pub fn note_batched_timeline_evals(&self, n: u64) {
+        self.batched_timeline_evals.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Statistics snapshot (counters + byte ledger).
     pub fn stats(&self) -> CacheStats {
         let resident = self.maps.lock().unwrap().bytes as u64;
@@ -1008,6 +1029,7 @@ impl PlanCache {
             scratch_reuses: self.scratch_reuses.load(Ordering::Relaxed),
             order_hits: self.order_hits.load(Ordering::Relaxed),
             batched_evals: self.batched_evals.load(Ordering::Relaxed),
+            batched_timeline_evals: self.batched_timeline_evals.load(Ordering::Relaxed),
         }
     }
 
@@ -1372,6 +1394,7 @@ mod tests {
             (0, 0, 0),
         );
         assert_eq!(parsed.batched_evals, 0);
+        assert_eq!(parsed.batched_timeline_evals, 0);
         assert_eq!(CacheStats::from_json(&Value::Null), CacheStats::default());
     }
 
@@ -1396,6 +1419,7 @@ mod tests {
             ("scratch_reuses", |s| s.scratch_reuses),
             ("order_hits", |s| s.order_hits),
             ("batched_evals", |s| s.batched_evals),
+            ("batched_timeline_evals", |s| s.batched_timeline_evals),
         ];
         let full = CacheStats {
             hits: 1,
@@ -1409,6 +1433,7 @@ mod tests {
             scratch_reuses: 9,
             order_hits: 10,
             batched_evals: 11,
+            batched_timeline_evals: 12,
         };
         // Exhaustiveness: the table covers every emitted key and every
         // field value 1..=N appears exactly once.

@@ -25,7 +25,7 @@ use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
 use crate::sim::batch::{simulate_batch_scatter, ScenarioBatch};
 use crate::sim::iteration::closed_form_path;
-use crate::sim::{simulate_iteration_cached, Breakdown, Scenario};
+use crate::sim::{simulate_iteration_cached, Breakdown, PipelineSchedule, Scenario};
 use crate::util::json::Value;
 use crate::util::pool;
 use crate::util::stats::load_balance_ratio;
@@ -38,10 +38,11 @@ use super::grid::SweepGrid;
 pub struct SweepEngine {
     cache: PlanCache,
     threads: usize,
-    /// Route shared-fingerprint closed-form groups through the batched
-    /// SoA tier (`sim::batch`)? Default on; `--no-batch` turns it off.
-    /// Row bytes are identical either way (the batch tier is bit-exact,
-    /// pinned by `tests/batch_differential.rs`).
+    /// Route shared-fingerprint groups through the batched SoA tier
+    /// (`sim::batch`) — both the closed-form arm and the schedule-tape
+    /// timeline arm? Default on; `--no-batch` turns it off. Row bytes
+    /// are identical either way (the batch tier is bit-exact, pinned by
+    /// `tests/batch_differential.rs`).
     batching: bool,
 }
 
@@ -111,11 +112,13 @@ impl SweepEngine {
     /// order, independent of worker scheduling (and of whether the
     /// batched tier is on — results are bit-identical either way).
     ///
-    /// Dispatch: closed-form scenarios sharing a plan fingerprint
-    /// (everything but `c_max_bytes` — see [`GroupKey`]) are grouped
-    /// and evaluated through the batched SoA tier
-    /// ([`crate::sim::batch`]), one `StageTable` fetch per group;
-    /// singletons and timeline-path scenarios take the scalar arm.
+    /// Dispatch: scenarios sharing a plan fingerprint × schedule shape
+    /// (everything but the per-lane hardware knobs — see [`GroupKey`])
+    /// are grouped and evaluated through the batched SoA tier
+    /// ([`crate::sim::batch`]): chunked closed-form recurrences on the
+    /// `pp = 1` arm, schedule-tape timeline replay on the `pp > 1` /
+    /// micro-batched / straggler arm. Fingerprint singletons take the
+    /// scalar arm.
     pub fn eval(&self, scenarios: &[Scenario]) -> Vec<Breakdown> {
         if !self.batching || scenarios.len() < 2 {
             return pool::parallel_map(scenarios, self.threads, |s| {
@@ -182,24 +185,35 @@ impl SweepEngine {
 }
 
 /// One work item of a grouped [`SweepEngine::eval`]: a scalar scenario
-/// (timeline-path, or a fingerprint singleton) or a shared-fingerprint
-/// group routed through the batch tier. Indices refer to the input
+/// (a fingerprint singleton) or a shared-fingerprint group routed
+/// through the batch tier (either arm). Indices refer to the input
 /// slice; every input index appears in exactly one unit.
 enum EvalUnit {
     Scalar(usize),
     Group(Vec<usize>),
 }
 
-/// The batch grouping rule: everything the closed form reads *except*
-/// the per-lane knob (`c_max_bytes`). Two scenarios with equal keys
-/// share a `StageTable`/plan fingerprint, so one batched call covers
-/// both. Hardware is compared by exact bits — a derated or edited
-/// profile splits the group rather than risking a mismatched lane.
+/// The batch grouping rule: everything the evaluators read *except*
+/// the per-lane knobs (`c_max_bytes`, `straggler`). Two scenarios with
+/// equal keys share a `StageTable`/plan fingerprint *and* — since PR 9
+/// — a schedule shape (`schedule`, `pp`, `micro_batches`), so one
+/// batched call covers both: closed-form recurrences or one schedule
+/// tape, selected by the `closed` arm bit. The arm bit is required
+/// precisely because `straggler` is a lane knob: at `pp = 1,
+/// micro_batches = 1` a straggler-free leaf takes the closed form while
+/// its `straggler > 1` sibling takes the timeline, and the two arms
+/// must never share a batch. Hardware is compared by exact bits — a
+/// derated or edited profile splits the group rather than risking a
+/// mismatched lane.
 #[derive(Hash, PartialEq, Eq)]
 struct GroupKey {
     size: Qwen3Size,
     dp: usize,
     tp: usize,
+    pp: usize,
+    micro_batches: usize,
+    schedule: PipelineSchedule,
+    closed: bool,
     optim: OptimKind,
     strategy: DpStrategy,
     metric: CostMetric,
@@ -218,6 +232,10 @@ impl GroupKey {
             size: s.size,
             dp: s.dp,
             tp: s.tp,
+            pp: s.pp,
+            micro_batches: s.micro_batches,
+            schedule: s.schedule,
+            closed: closed_form_path(s),
             optim: s.optim,
             strategy: s.strategy,
             metric: s.metric,
@@ -240,24 +258,18 @@ impl GroupKey {
     }
 }
 
-/// Partition `scenarios` into [`EvalUnit`]s: closed-form scenarios
-/// sharing a [`GroupKey`] form one `Group` (anchored at the first
-/// member's position, lanes in input order); everything else — timeline
-/// scenarios and fingerprint singletons — stays `Scalar`. Deterministic
-/// for a given input (no map-iteration order dependence).
+/// Partition `scenarios` into [`EvalUnit`]s: scenarios sharing a
+/// [`GroupKey`] form one `Group` (anchored at the first member's
+/// position, lanes in input order), on both dispatch arms; fingerprint
+/// singletons stay `Scalar`. Deterministic for a given input (no
+/// map-iteration order dependence).
 fn group_units(scenarios: &[Scenario]) -> Vec<EvalUnit> {
     let mut members: HashMap<GroupKey, Vec<usize>> = HashMap::new();
     for (i, s) in scenarios.iter().enumerate() {
-        if closed_form_path(s) {
-            members.entry(GroupKey::for_scenario(s)).or_default().push(i);
-        }
+        members.entry(GroupKey::for_scenario(s)).or_default().push(i);
     }
     let mut units = Vec::new();
     for (i, s) in scenarios.iter().enumerate() {
-        if !closed_form_path(s) {
-            units.push(EvalUnit::Scalar(i));
-            continue;
-        }
         let group = &members[&GroupKey::for_scenario(s)];
         if group[0] != i {
             continue; // emitted at the first member's position
@@ -428,9 +440,12 @@ mod tests {
         // The CLI-level guarantee behind `--no-batch` and the
         // `--baseline --regress-pct 0` CI round-trip: both arms must
         // produce byte-identical tables AND json, over a grid that
-        // exercises multi-lane groups, singletons, and timeline rows.
+        // exercises multi-lane groups on both dispatch arms (pp=2 ×
+        // mb=4 × straggler rows take the schedule-tape timeline tier).
         let mut grid = cmax_grid();
-        grid.pp = vec![1, 2]; // pp=2 rows take the timeline arm
+        grid.pp = vec![1, 2];
+        grid.micro_batches = vec![1, 4];
+        grid.stragglers = vec![1.0, 1.3];
         let on = SweepEngine::new(4);
         let mut off = SweepEngine::new(4);
         off.set_batching(false);
@@ -439,14 +454,23 @@ mod tests {
         let (sb, rb) = off.run_grid(&grid);
         assert_eq!(render_table(&sa, &ra).render(), render_table(&sb, &rb).render());
         assert_eq!(render_json(&sa, &ra).to_string(), render_json(&sb, &rb).to_string());
-        assert!(on.cache_stats().batched_evals > 0, "groups must take the batch tier");
-        assert_eq!(off.cache_stats().batched_evals, 0, "--no-batch must not batch");
+        let on_stats = on.cache_stats();
+        assert!(on_stats.batched_evals > 0, "closed-form groups must take the batch tier");
+        assert!(
+            on_stats.batched_timeline_evals > 0,
+            "timeline groups must take the schedule-tape tier"
+        );
+        let off_stats = off.cache_stats();
+        assert_eq!(off_stats.batched_evals, 0, "--no-batch must not batch");
+        assert_eq!(off_stats.batched_timeline_evals, 0, "--no-batch must not tape");
     }
 
     #[test]
     fn grouping_partitions_every_index_once() {
         let mut grid = cmax_grid();
         grid.pp = vec![1, 2];
+        grid.micro_batches = vec![1, 4];
+        grid.stragglers = vec![1.0, 1.3];
         let scens = grid.scenarios();
         let units = group_units(&scens);
         let mut seen = vec![0usize; scens.len()];
@@ -455,16 +479,24 @@ mod tests {
                 EvalUnit::Scalar(i) => seen[*i] += 1,
                 EvalUnit::Group(idxs) => {
                     assert!(idxs.len() >= 2, "groups of one must stay scalar");
+                    // One dispatch arm per group: the base's arm decides
+                    // the evaluator, so every member must share it.
+                    let arm = closed_form_path(&scens[idxs[0]]);
                     for &i in idxs {
-                        assert!(closed_form_path(&scens[i]), "timeline row in a group");
+                        assert_eq!(
+                            closed_form_path(&scens[i]),
+                            arm,
+                            "mixed-arm group at index {i}"
+                        );
                         seen[i] += 1;
                     }
                 }
             }
         }
         assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
-        // The c_max axis is the only lane knob here: every closed-form
-        // leaf lands in a 5-lane group, timeline leaves stay scalar.
+        // straggler and c_max are the lane knobs: every leaf shares its
+        // (schedule shape × fingerprint × arm) key with at least the
+        // other c_max choices, so nothing stays scalar on this grid.
         let grouped: usize = units
             .iter()
             .map(|u| match u {
@@ -472,7 +504,6 @@ mod tests {
                 EvalUnit::Scalar(_) => 0,
             })
             .sum();
-        let closed: usize = scens.iter().filter(|s| closed_form_path(s)).count();
-        assert_eq!(grouped, closed);
+        assert_eq!(grouped, scens.len());
     }
 }

@@ -10,11 +10,16 @@
 //! persistent `util::pool` workers, plan-cache L1 reads), and the
 //! search stops at the first leaf whose bound exceeds the incumbent —
 //! in bound order, every later leaf is pruned too. Each eval batch
-//! inherits the engine's batched SoA tier ([`crate::sim::batch`]):
-//! closed-form leaves in the batch that share a plan fingerprint and
-//! differ only in `C_max` are evaluated as one multi-lane call —
-//! bit-identical to the scalar arm, so the winner, frontier, and
-//! artifact bytes are unchanged by `--no-batch`.
+//! inherits the engine's batched SoA tier ([`crate::sim::batch`]),
+//! both arms: leaves that share a plan fingerprint × schedule shape
+//! and differ only in the lane knobs (`C_max`, `straggler`) are
+//! evaluated as one multi-lane call — closed-form recurrences at
+//! `pp = 1`, schedule-tape timeline replay on the `pp > 1` /
+//! micro-batched / straggler arm — bit-identical to the scalar arm, so
+//! the winner, frontier, and artifact bytes are unchanged by
+//! `--no-batch`. Since PR 9 the timeline arm also carries a positive
+//! optimizer-latency bound (min-over-stages step floor), so
+//! deep-pipeline grids prune instead of degenerating to exhaustion.
 //!
 //! **Exactness.** Pruning is on strict `bound > incumbent`, and bounds
 //! never exceed true values, so a pruned leaf's value is `>` the final

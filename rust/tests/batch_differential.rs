@@ -8,20 +8,29 @@
 //! overhead, straggler derate, C_max) and ragged batch lengths
 //! straddling the fixed-width chunk boundary (`1..=BATCH_CHUNK + 1`).
 //!
-//! The lane-knob → scalar-scenario equivalence is: the oracle scenario
-//! carries the lane's hardware profile *pre-derated* by the lane
-//! straggler and `straggler = 1.0`, because the batch path folds the
-//! lane straggler into its effective hardware while the scalar
-//! dispatcher would route `straggler != 1.0` to the timeline engine.
+//! The lane-knob → scalar-scenario equivalence differs per arm. On the
+//! **closed-form** arm the oracle scenario carries the lane's hardware
+//! profile *pre-derated* by the lane straggler and `straggler = 1.0`,
+//! because the batch path folds the lane straggler into its effective
+//! hardware while the scalar dispatcher would route `straggler != 1.0`
+//! to the timeline engine. On the **timeline** (schedule-tape) arm the
+//! oracle carries the raw lane profile and `straggler = k.straggler`
+//! verbatim — the scalar timeline derates only the last stage and
+//! prices the fabric un-derated, and the tape replay must reproduce
+//! exactly that (pp ∈ {2,4,8} × {1f1b, gpipe} × micro-batches ×
+//! straggler, rivals included).
 
 mod common;
 
 use canzona::cost::hardware::Hardware;
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
 use canzona::sim::{
-    simulate_batch_into, simulate_iteration_cached, Breakdown, BreakdownBatch, LaneKnobs,
-    Scenario, ScenarioBatch, BATCH_CHUNK,
+    simulate_batch_into, simulate_iteration_cached, simulate_timeline_batch_into, Breakdown,
+    BreakdownBatch, LaneKnobs, PipelineSchedule, Scenario, ScenarioBatch, BATCH_CHUNK,
 };
-use canzona::sweep::PlanCache;
+use canzona::sweep::{PlanCache, SweepGrid};
 use canzona::util::rng::Rng;
 use common::{assert_bits_eq, oracle_grid};
 
@@ -69,6 +78,28 @@ fn perturbed_lane(rng: &mut Rng, base: &Scenario) -> LaneKnobs {
     k
 }
 
+/// The timeline arm's standalone-scenario equivalence: the *raw* lane
+/// profile (not derated) with the lane straggler carried verbatim —
+/// the scalar timeline dispatcher derates only the last stage and
+/// prices collectives against the un-derated fabric, exactly as the
+/// tape replay does.
+fn timeline_oracle_scenario(base: &Scenario, k: &LaneKnobs) -> Scenario {
+    let mut s = base.clone();
+    s.c_max_bytes = k.c_max_bytes;
+    s.hw = Hardware {
+        gpu_flops: k.gpu_flops,
+        hbm_bw: k.hbm_bw,
+        nvlink_bw: k.nvlink_bw,
+        ib_bw: k.ib_bw,
+        nvlink_lat: k.nvlink_lat,
+        ib_lat: k.ib_lat,
+        launch_overhead: k.launch_overhead,
+        ..s.hw.clone()
+    };
+    s.straggler = k.straggler;
+    s
+}
+
 /// Evaluate `batch` and compare every lane's scattered `Breakdown`
 /// against the scalar oracle on the *same* cache (the engine's
 /// operating mode: plans and tables are shared Arcs either way).
@@ -82,6 +113,43 @@ fn check_batch_against_scalar(label: &str, batch: &ScenarioBatch, cache: &PlanCa
         let oracle = oracle_scenario(batch.base(), knobs);
         let want = simulate_iteration_cached(&oracle, cache);
         assert_bits_eq(&format!("{label} lane {lane}"), &want, &got);
+    }
+}
+
+/// Timeline-arm counterpart of [`check_batch_against_scalar`]: drives
+/// the schedule-tape entry point directly and compares against the
+/// scalar timeline playback of each lane's equivalent scenario.
+fn check_timeline_batch_against_scalar(label: &str, batch: &ScenarioBatch, cache: &PlanCache) {
+    let mut out = BreakdownBatch::new();
+    simulate_timeline_batch_into(batch, cache, &mut out);
+    assert_eq!(out.len(), batch.len(), "{label}: output length");
+    for (lane, knobs) in batch.lanes().iter().enumerate() {
+        let mut got = Breakdown::default();
+        out.write_into(batch, lane, &mut got);
+        let oracle = timeline_oracle_scenario(batch.base(), knobs);
+        let want = simulate_iteration_cached(&oracle, cache);
+        assert_bits_eq(&format!("{label} lane {lane}"), &want, &got);
+    }
+}
+
+/// The timeline-arm coverage grid: every pipeline depth the tape's
+/// stage machinery branches on (2 / interior-stage 4 / deep 8), both
+/// schedules, micro-batching on and off, a straggling last stage, and
+/// the full strategy zoo (rivals included).
+fn timeline_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![4],
+        tp: vec![2],
+        pp: vec![2, 4, 8],
+        micro_batches: vec![1, 4],
+        schedules: vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe],
+        stragglers: vec![1.0, 1.3],
+        optims: vec![OptimKind::Muon],
+        strategies: DpStrategy::ALL.to_vec(),
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        metric: CostMetric::Numel,
     }
 }
 
@@ -155,7 +223,85 @@ fn identity_lanes_match_scalar_bits_on_a_cold_cache() {
 }
 
 #[test]
-fn non_closed_form_bases_are_rejected_at_construction() {
+fn timeline_lanes_match_scalar_bits_across_pp_schedule_grid() {
+    // The PR 9 oracle: every schedule-tape lane bit-identical to the
+    // scalar timeline playback across pp × schedule × micro-batches ×
+    // straggler × strategy (rivals included), with randomized lane
+    // knobs and ragged batch lengths straddling the chunk boundary.
+    let cache = PlanCache::unbounded();
+    let mut rng = Rng::new(0x7AE5_C0DE);
+    for (i, s) in timeline_grid().scenarios().into_iter().enumerate() {
+        let label = format!(
+            "{} pp{} mb{} {} strag{} {}",
+            s.label,
+            s.pp,
+            s.micro_batches,
+            s.schedule.label(),
+            s.straggler,
+            s.strategy.label(),
+        );
+        let mut batch = ScenarioBatch::new(s.clone()).expect("timeline base accepted");
+        let lanes = 1 + i % (BATCH_CHUNK + 1);
+        batch.push_scenario(&s).expect("identity lane");
+        for _ in 1..lanes {
+            batch.push(perturbed_lane(&mut rng, &s)).expect("perturbed lane");
+        }
+        check_timeline_batch_against_scalar(&label, &batch, &cache);
+    }
+}
+
+#[test]
+fn timeline_every_ragged_tail_length_matches_scalar_bits() {
+    // One deep-pipeline micro-batched base, every batch length
+    // 1..=2*BATCH_CHUNK + 1: full chunks, partial tails, and the
+    // one-past-a-chunk boundary must all replay identically.
+    let cache = PlanCache::unbounded();
+    let mut rng = Rng::new(0x7A11_7A9E);
+    let base = timeline_grid()
+        .scenarios()
+        .into_iter()
+        .find(|s| s.pp == 4 && s.micro_batches == 4 && s.straggler != 1.0)
+        .expect("grid has a pp=4 mb=4 straggler point");
+    for n in 1..=2 * BATCH_CHUNK + 1 {
+        let mut batch = ScenarioBatch::new(base.clone()).expect("timeline base accepted");
+        for lane in 0..n {
+            if lane == 0 {
+                batch.push_scenario(&base).expect("identity lane");
+            } else {
+                batch.push(perturbed_lane(&mut rng, &base)).expect("perturbed lane");
+            }
+        }
+        check_timeline_batch_against_scalar(&format!("len={n}"), &batch, &cache);
+    }
+}
+
+#[test]
+fn timeline_identity_lanes_match_scalar_bits_on_a_cold_cache() {
+    // Tapes recorded by the batch path and schedules emitted by the
+    // scalar path on separate cold caches must still agree bit-for-bit:
+    // the tape recording is deterministic, not merely state-shared.
+    for s in timeline_grid().scenarios().into_iter().step_by(17) {
+        let mut batch = ScenarioBatch::new(s.clone()).expect("timeline base accepted");
+        batch.push_scenario(&s).expect("identity lane");
+        let batch_cache = PlanCache::unbounded();
+        let mut out = BreakdownBatch::new();
+        simulate_timeline_batch_into(&batch, &batch_cache, &mut out);
+        let mut got = Breakdown::default();
+        out.write_into(&batch, 0, &mut got);
+        let scalar_cache = PlanCache::unbounded();
+        let want = simulate_iteration_cached(&s, &scalar_cache);
+        assert_bits_eq(
+            &format!("cold {} pp{} {}", s.label, s.pp, s.schedule.label()),
+            &want,
+            &got,
+        );
+    }
+}
+
+#[test]
+fn non_closed_form_bases_are_accepted_and_dispatched() {
+    // Pre-PR-9 these were construction errors; both arms are now
+    // eligible, and `simulate_batch_into` routes by the base's arm.
     let grid = oracle_grid();
     let base = grid.scenarios().into_iter().next().expect("non-empty grid");
     let mut pp2 = base.clone();
@@ -165,8 +311,11 @@ fn non_closed_form_bases_are_rejected_at_construction() {
         ("micro_batches=4", base.clone().with_micro_batches(4)),
         ("straggler=1.5", base.clone().with_straggler(1.5)),
     ] {
-        let err = ScenarioBatch::new(s).expect_err(what).to_string();
-        assert!(err.contains("closed-form"), "{what}: unexpected message {err:?}");
+        let mut batch = ScenarioBatch::new(s.clone()).expect(what);
+        batch.push_scenario(&s).expect(what);
+        let cache = PlanCache::unbounded();
+        check_timeline_batch_against_scalar(what, &batch, &cache);
+        assert_eq!(cache.stats().batched_timeline_evals, 1, "{what}: counter");
     }
 }
 

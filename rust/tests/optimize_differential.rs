@@ -13,7 +13,7 @@ use std::cmp::Ordering;
 
 use canzona::cost::optim::OptimKind;
 use canzona::partition::DpStrategy;
-use canzona::sim::Breakdown;
+use canzona::sim::{Breakdown, PipelineSchedule};
 use canzona::sweep::{
     optimize, Objective, OptimizeOptions, OptimizeResult, SweepEngine, SweepGrid,
 };
@@ -91,6 +91,27 @@ fn pipeline_grid_iter_time() {
     assert!(
         r.evaluated.iter().all(|e| e.scenario.micro_batches == 1),
         "mb=32 leaves must never be evaluated"
+    );
+}
+
+#[test]
+fn timeline_pp_grid_optimizer_latency_prunes() {
+    // Pre-PR-9 the timeline arm's optimizer-latency bound was 0, so a
+    // pp>1 grid degenerated to exhaustion (strict `bound > incumbent`
+    // never fires at bound 0). The min-over-stages floor now prices
+    // SC's redundant full update far above LB-ASC's actual exposed
+    // step (a ~dp*tp gap dwarfs the stage-split slack), so the
+    // schedule × micro-batch × strategy leaves must prune while the
+    // winner stays bit-identical to the exhaustive argmin.
+    let mut grid = base_grid();
+    grid.pp = vec![2];
+    grid.micro_batches = vec![4, 8];
+    grid.schedules = vec![PipelineSchedule::OneFOneB, PipelineSchedule::GPipe];
+    grid.strategies = vec![DpStrategy::Sc, DpStrategy::LbAsc];
+    let r = check_grid("timeline pp-grid", &grid, Objective::OptimizerLatency);
+    assert!(
+        r.evaluated.iter().all(|e| e.scenario.strategy == DpStrategy::LbAsc),
+        "every SC leaf must be pruned by the timeline-arm bound"
     );
 }
 

@@ -20,8 +20,8 @@ use canzona::cost::optim::OptimKind;
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
 use canzona::sim::{
-    simulate_batch_into, simulate_iteration_into, Breakdown, BreakdownBatch, LaneKnobs,
-    PipelineSchedule, Scenario, ScenarioBatch, BATCH_CHUNK,
+    simulate_batch_into, simulate_iteration_into, simulate_timeline_batch_into, Breakdown,
+    BreakdownBatch, LaneKnobs, PipelineSchedule, Scenario, ScenarioBatch, BATCH_CHUNK,
 };
 use canzona::sweep::PlanCache;
 use canzona::util::alloc::count_allocations;
@@ -202,6 +202,50 @@ fn warm_batch_evaluation_is_allocation_free() {
         cache.stats().batched_evals,
         evals + batch.len() as u64,
         "batched_evals must count every lane of the warm call",
+    );
+}
+
+#[test]
+fn warm_batched_timeline_is_allocation_free_on_persistent_pool_workers() {
+    // The schedule-tape tier's warm contract, proven where the sweep
+    // actually runs: each persistent worker primes its own thread's
+    // tape cache / SoA scratch (two calls), then a third replay of the
+    // same batch shape — ragged tail, straggling lanes, No-Fuse lanes
+    // included — must not touch the heap.
+    let cache = PlanCache::unbounded();
+    let base = Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, DpStrategy::LbAsc)
+        .with_micro_batches(4);
+    let mut batch = ScenarioBatch::new(base.clone()).expect("timeline base accepted");
+    for lane in 0..BATCH_CHUNK + 3 {
+        let mut k = LaneKnobs::from_scenario(&base);
+        k.ib_bw *= 1.0 + lane as f64 * 0.125; // distinct lanes, same fingerprint
+        k.straggler = 1.0 + lane as f64 * 0.05;
+        k.c_max_bytes = if lane % 2 == 0 { k.c_max_bytes } else { None };
+        batch.push(k).expect("valid lane");
+    }
+    let evals = cache.stats().batched_timeline_evals;
+    let jobs: Vec<usize> = (0..8).collect();
+    let counts = canzona::util::pool::parallel_map(&jobs, 4, |_| {
+        let mut out = BreakdownBatch::new();
+        simulate_timeline_batch_into(&batch, &cache, &mut out); // cold for this thread
+        simulate_timeline_batch_into(&batch, &cache, &mut out); // settles capacity
+        let before = out.total_s[0];
+        let (allocs, _) = canzona::util::alloc::count_allocations(|| {
+            simulate_timeline_batch_into(&batch, &cache, &mut out)
+        });
+        assert_eq!(out.len(), batch.len());
+        assert_eq!(out.total_s[0].to_bits(), before.to_bits(), "warm replay drifted");
+        assert!(out.total_s[0] > 0.0);
+        allocs
+    });
+    assert!(
+        counts.iter().all(|&n| n == 0),
+        "warm batched timeline replay on pool workers allocated: {counts:?}",
+    );
+    assert_eq!(
+        cache.stats().batched_timeline_evals,
+        evals + (3 * jobs.len() * batch.len()) as u64,
+        "batched_timeline_evals must count every lane of every call",
     );
 }
 
