@@ -33,7 +33,12 @@ fn main() {
         strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(512.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     let scens = grid.scenarios();
 
@@ -123,7 +128,12 @@ fn main() {
         strategies: vec![DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(512.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     let fam_scens = family.scenarios();
     for (label, budget) in [("unbounded", 0usize), ("64 MB", 64 << 20), ("4 MB", 4 << 20)] {
@@ -238,7 +248,12 @@ fn main() {
         strategies: vec![DpStrategy::NvLayerwise, DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(512.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     let pp_scens = pp_grid.scenarios();
     let engine = SweepEngine::new(pool::default_threads());
@@ -459,7 +474,12 @@ fn main() {
         strategies: vec![DpStrategy::Sc, DpStrategy::NvLayerwise, DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(512.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     for objective in [Objective::IterTime, Objective::OptimizerLatency, Objective::Memory] {
         let engine = SweepEngine::new(pool::default_threads());
@@ -516,5 +536,62 @@ fn main() {
             100.0 * r.pruned as f64 / r.space.max(1) as f64,
             grid_s / search_s.max(1e-12),
         );
+    }
+
+    // --- elastic fault layer: faulted vs clean evaluation ----------------
+    // Heterogeneity / failure knobs route every lane to the scalar
+    // timeline arm (faulted scenarios never batch — GroupKey carries the
+    // fault state and ScenarioBatch refuses the base) and add the
+    // cluster-profile + recovery arithmetic. The rows quantify that toll
+    // against the otherwise-identical clean grid. Paste the printed rows
+    // into CHANGES.md from a toolchain-equipped run.
+    println!("\n# Elastic fault layer: faulted vs clean evaluation\n");
+    {
+        let clean = SweepGrid {
+            models: vec![Qwen3Size::S8B],
+            dp: vec![16, 32],
+            tp: vec![4, 8],
+            pp: vec![1, 2],
+            micro_batches: vec![1, 8],
+            schedules: vec![PipelineSchedule::OneFOneB],
+            stragglers: vec![1.0],
+            optims: vec![OptimKind::Muon],
+            strategies: vec![DpStrategy::LbAsc, DpStrategy::MatrixFsdp],
+            alphas: vec![1.0],
+            c_max_mb: vec![Some(512.0)],
+            heteros: vec![canzona::sim::HeteroSpec::None],
+            fail_ranks: vec![None],
+            mttfs: vec![None],
+            ckpt_intervals: vec![1],
+            metric: CostMetric::Numel,
+            fault_seed: 0,
+        };
+        let faulted = SweepGrid {
+            heteros: vec![
+                canzona::sim::HeteroSpec::parse("slow:0.05:1.5+link:0.1:4").unwrap(),
+            ],
+            fail_ranks: vec![Some(canzona::sim::FailSpec { rank: 1, at: 0.5 })],
+            mttfs: vec![Some(1800.0)],
+            ckpt_intervals: vec![8],
+            fault_seed: 7,
+            ..clean.clone()
+        };
+        for (label, grid) in [("clean (batched)", &clean), ("faulted (scalar arm)", &faulted)] {
+            let engine = SweepEngine::new(pool::default_threads());
+            let scens = grid.scenarios();
+            black_box(engine.eval(&scens)); // cold: solve plans + tables
+            const PASSES: usize = 10;
+            let t = Instant::now();
+            for _ in 0..PASSES {
+                black_box(engine.eval(&scens));
+            }
+            let warm_s = t.elapsed().as_secs_f64();
+            println!(
+                "{label:>22}: {:>3} scenarios, warm {:>8.5}s/pass ({:>9.0} evals/s)",
+                scens.len(),
+                warm_s / PASSES as f64,
+                (scens.len() * PASSES) as f64 / warm_s.max(1e-12),
+            );
+        }
     }
 }

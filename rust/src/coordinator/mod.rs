@@ -40,12 +40,16 @@ USAGE:
   canzona plan       --model 32b --dp 32 --tp 8 [--alpha 1.0] [--strategy lb-asc]
   canzona simulate   --model 32b --dp 32 --tp 8 [--pp 1] [--micro-batches 1]
                      [--schedule 1f1b|gpipe] [--straggler 1.0]
-                     [--optim muon] [--strategy lb-asc]
+                     [--hetero none|last:F|slow:R:F|link:R:F|slow:R:F+link:R:F]
+                     [--fault-seed 0] [--fail-rank r@0.5] [--mttf seconds]
+                     [--ckpt-interval 1] [--optim muon] [--strategy lb-asc]
   canzona sweep      [--models 1.7b,8b,32b] [--dp 16,32] [--tp 1,2,4,8] [--pp 1,2,4,8]
                      [--micro-batches 1,8] [--schedule 1f1b,gpipe] [--straggler 1.0,1.5]
                      [--optims muon,shampoo,soap,adamw]
                      [--strategies sc,nv-layerwise,asc,lb-asc,matrix-fsdp,dmuon,dion]
                      [--alphas 0.5,1.0] [--c-max-mb 512,none] [--metric numel]
+                     [--hetero none,slow:0.05:1.5] [--fail-rank none,3@0.5]
+                     [--mttf none,1800] [--ckpt-interval 1,8] [--fault-seed 0]
                      [--threads N] [--cache-budget-mb 256] [--no-batch]
                      [--json out.json] [--csv]
                      [--baseline prior.json] [--regress-pct 2.0]
@@ -54,7 +58,7 @@ USAGE:
                      [--batch N] [--exhaustive] [--threads N] [--cache-budget-mb 256]
                      [--no-batch] [--json out.json] [--csv]
                      [--baseline prior.json] [--regress-pct 2.0]
-  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|fig_optimize|fig_rivals|planning|all>
+  canzona experiment <fig3a|fig3bc|fig4|fig6|fig7|fig8|fig9|fig10-11|fig12|fig13|fig14|fig16|fig_pp|fig_optimize|fig_rivals|fig_elastic|planning|all>
                      [--threads N]
   canzona train      [--preset e2e] [--ranks 4] [--steps 100] [--strategy lb-asc] [--alpha 1.0]
                      [--seed 42] [--artifacts artifacts] [--log-every 10]
@@ -121,6 +125,24 @@ fn parse_scenario(args: &Args) -> Result<Scenario> {
     if !s.straggler.is_finite() || s.straggler < 1.0 {
         bail!("--straggler expects a finite factor >= 1.0, got {}", s.straggler);
     }
+    if let Some(raw) = args.get("hetero") {
+        s.hetero = crate::sim::HeteroSpec::parse(raw)?;
+    }
+    s.fault_seed = args.get_usize("fault-seed", 0)? as u64;
+    if let Some(raw) = args.get("fail-rank") {
+        if !raw.eq_ignore_ascii_case("none") {
+            s.fail_rank = Some(crate::sim::FailSpec::parse(raw)?);
+        }
+    }
+    if let Some(raw) = args.get("mttf") {
+        if !raw.eq_ignore_ascii_case("none") {
+            let mttf: f64 = raw
+                .parse()
+                .map_err(|_| err!("--mttf expects seconds or none, got {raw:?}"))?;
+            s.mttf_s = Some(mttf);
+        }
+    }
+    s.ckpt_interval = args.get_usize("ckpt-interval", 1)?;
     // Catch everything the per-flag checks above don't (alpha range,
     // C_max sign, hardware knobs) with one named `invalid scenario:`
     // error — NaN/inf rows must never enter a sweep (the total_cmp
@@ -160,6 +182,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     t.row(vec!["fwd-bwd".into(), format!("{:.4}s", b.fwd_bwd_s)]);
     t.row(vec!["optimizer".into(), format!("{:.4}s", b.optimizer_s)]);
     t.row(vec!["total".into(), format!("{:.4}s", b.total_s)]);
+    t.row(vec!["recovery".into(), format!("{:.4}s", b.recovery_s)]);
     t.row(vec!["exposed comm".into(), format!("{:.4}s", b.exposed_comm_s)]);
     t.row(vec!["schedule bubble".into(), format!("{:.4}s", b.bubble_s)]);
     t.row(vec!["AdamW reference".into(), format!("{:.4}s", b.adamw_ref_s)]);

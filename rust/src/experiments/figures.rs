@@ -475,7 +475,12 @@ pub fn fig_optimize() -> Vec<Table> {
         strategies: vec![strategy],
         alphas: vec![1.0],
         c_max_mb: vec![Some(512.0)],
+        heteros: vec![crate::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     // batch = 1 pins the evaluated set; the winner is batch-invariant.
     let opts = OptimizeOptions {
@@ -581,6 +586,60 @@ pub fn fig_rivals() -> Vec<Table> {
     vec![head, pipe]
 }
 
+/// Elastic-cluster stress — all seven strategies on the paper's 256-GPU
+/// point (Qwen3-32B, DP=32, TP=8, Muon) under four cluster conditions:
+/// clean (the pre-fault baseline bytes), a 5% slow-node mix, a
+/// congested cluster (every node mildly derated, every inter-node link
+/// at 1/64 bandwidth), and a failing cluster (10-minute MTTF,
+/// checkpoint every 8 iterations). The strategy ordering *crosses over*
+/// between clean and congested: DMuon's gather/scatter optimizer rides
+/// the inter-node fabric (fastest when links are healthy), while
+/// MatrixFSDP's update is communication-free (redundant preconditioner
+/// compute, but immune to link degradation) — the direction pin in the
+/// tests below. Faulted conditions dispatch through the scalar timeline
+/// arm; `recovery` surfaces `Breakdown::recovery_s`.
+pub fn fig_elastic() -> Vec<Table> {
+    use crate::sim::HeteroSpec;
+    let mut t = Table::new(
+        "Elastic — strategy zoo under degraded clusters (Qwen3-32B, DP=32, TP=8, Muon)",
+        &["condition", "strategy", "fwd-bwd", "optimizer", "total", "recovery"],
+    );
+    let conditions: [(&str, &str, Option<f64>, usize); 4] = [
+        ("clean", "none", None, 1),
+        ("slow-5%", "slow:0.05:1.5", None, 1),
+        ("congested", "slow:1:1.25+link:1:64", None, 1),
+        ("failing", "slow:0.05:1.5", Some(600.0), 8),
+    ];
+    let strats = DpStrategy::ALL;
+    let scens: Vec<Scenario> = conditions
+        .iter()
+        .flat_map(|&(_, spec, mttf, ckpt)| {
+            strats.iter().map(move |&strat| {
+                Scenario::new(Qwen3Size::S32B, 32, 8, 1, OptimKind::Muon, strat)
+                    .with_hetero(HeteroSpec::parse(spec).expect("static spec"))
+                    .with_fault_seed(7)
+                    .with_mttf(mttf)
+                    .with_ckpt_interval(ckpt)
+            })
+        })
+        .collect();
+    let res = eval(&scens);
+    for (i, &(cond, ..)) in conditions.iter().enumerate() {
+        let block = &res[i * strats.len()..(i + 1) * strats.len()];
+        for (strat, b) in strats.iter().zip(block) {
+            t.row(vec![
+                cond.into(),
+                strat.label().into(),
+                secs(b.fwd_bwd_s),
+                secs(b.optimizer_s),
+                secs(b.total_s),
+                secs(b.recovery_s),
+            ]);
+        }
+    }
+    vec![t]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -610,6 +669,51 @@ mod tests {
         // The pipelined table exercises the timeline arm for all seven.
         let pipe = tables[1].to_csv();
         assert_eq!(pipe.lines().count(), 1 + DpStrategy::ALL.len());
+    }
+
+    #[test]
+    fn fig_elastic_pins_the_strategy_crossover() {
+        let tables = fig_elastic();
+        let csv = tables[0].to_csv();
+        let cell = |cond: &str, strategy: &str, col: usize| -> f64 {
+            csv.lines()
+                .skip(1)
+                .map(|l| l.split(',').collect::<Vec<_>>())
+                .find(|c| c[0] == cond && c[1] == strategy)
+                .map(|c| c[col].trim_end_matches('s').parse().unwrap())
+                .unwrap()
+        };
+        // The acceptance crossover: DMuon's inter-node gather/scatter
+        // beats MatrixFSDP's redundant preconditioners on a healthy
+        // fabric, and loses to it when every link runs at 1/64.
+        let total = 4;
+        assert!(cell("clean", "DMuon", total) < cell("clean", "MatrixFSDP", total), "{csv}");
+        assert!(
+            cell("congested", "DMuon", total) > cell("congested", "MatrixFSDP", total),
+            "{csv}"
+        );
+        // Degradation only adds: every strategy's congested total is
+        // strictly above its clean total.
+        for strat in DpStrategy::ALL {
+            assert!(
+                cell("congested", strat.label(), total) > cell("clean", strat.label(), total),
+                "{} got faster under congestion:\n{csv}",
+                strat.label()
+            );
+        }
+        // Recovery surfaces only on the failing condition, and pushes
+        // its total above the matching fault-free (slow-5%) rows.
+        let recovery = 5;
+        for strat in DpStrategy::ALL {
+            assert_eq!(cell("clean", strat.label(), recovery), 0.0);
+            assert!(cell("failing", strat.label(), recovery) > 0.0, "{csv}");
+            assert!(
+                cell("failing", strat.label(), total) > cell("slow-5%", strat.label(), total),
+                "{csv}"
+            );
+        }
+        // Full zoo coverage under every condition.
+        assert_eq!(csv.lines().count(), 1 + 4 * DpStrategy::ALL.len());
     }
 
     #[test]

@@ -26,6 +26,8 @@ pub fn catalog() -> Vec<(&'static str, &'static str, fn() -> Vec<Table>)> {
          figures::fig_optimize),
         ("fig_rivals", "Strategy zoo head-to-head: ladder vs MatrixFSDP/DMuon/Dion",
          figures::fig_rivals),
+        ("fig_elastic", "Strategy zoo under slow nodes, degraded links, and failures",
+         figures::fig_elastic),
         ("planning", "Appendix D.1 offline planning latency", figures::planning_latency),
     ]
 }
@@ -73,7 +75,7 @@ mod tests {
         for required in ["fig3a", "fig3bc", "fig4", "fig6", "fig7", "fig8",
                          "fig9", "fig10-11", "fig12", "fig13", "fig14",
                          "fig16", "fig_pp", "fig_optimize", "fig_rivals",
-                         "planning"] {
+                         "fig_elastic", "planning"] {
             assert!(ids.contains(&required), "{required} missing");
         }
     }

@@ -232,9 +232,22 @@ impl ScenarioBatch {
     /// [`Scenario::validate`]. Both dispatch arms are eligible: the
     /// closed-form SoA recurrences serve `pp == 1, micro_batches == 1,
     /// straggler == 1.0` bases, the schedule-tape timeline replay
-    /// serves everything else.
+    /// serves everything else. Faulted/heterogeneous bases
+    /// ([`Scenario::faulted`]) are rejected outright: the lane columns
+    /// carry no per-rank profile or recovery state, so such scenarios
+    /// take the sweep engine's existing push-rejection fallback to the
+    /// scalar timeline arm instead (graceful degradation — see
+    /// `SweepEngine::eval_group`).
     pub fn new(base: Scenario) -> Result<ScenarioBatch> {
         base.validate()?;
+        if base.faulted() {
+            bail!(
+                "invalid scenario: batch tier cannot evaluate faulted/heterogeneous \
+                 scenarios (hetero={}, fail_rank={:?}, mttf={:?}); use the scalar \
+                 timeline arm",
+                base.hetero, base.fail_rank, base.mttf_s
+            );
+        }
         Ok(ScenarioBatch { base, lanes: Vec::new() })
     }
 

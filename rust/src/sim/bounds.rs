@@ -68,9 +68,22 @@
 //!   `(state_local + 8*ew)/dp`; Dion holds at least the DP-sharded bf16
 //!   error-feedback buffer, `(2*matrix_numel_local + 8*ew)/dp`.
 //!
+//! * **Faults and heterogeneity** (PR 10) need no new terms. Every
+//!   bound prices the *undegraded* `gpu_flops` — per-rank hetero
+//!   derates ([`HeteroSpec`]) only slow stages down, exactly like the
+//!   straggler factor the derivations already cover. Elastic events
+//!   charge `Breakdown::recovery_s ≥ 0` *into* `total_s` and touch
+//!   nothing else, so every fault-free bound stays admissible on
+//!   faulted scenarios unchanged; the bound/value gap just widens by
+//!   the recovery cost. The dispatch rule stays shared with the
+//!   simulator via `closed_form_path`, so the arm agreement argument
+//!   is untouched.
+//!
 //! Tightness is *not* required — only admissibility. The differential
 //! suite (`tests/optimize_differential.rs`) checks both: winners are
 //! bit-identical to the exhaustive argmin, and the bounds prune.
+//!
+//! [`HeteroSpec`]: crate::sim::HeteroSpec
 //!
 //! [`Breakdown`]: crate::sim::Breakdown
 //! [`simulate_iteration_into`]: crate::sim::simulate_iteration_into
@@ -289,6 +302,24 @@ mod tests {
                 out.push(Scenario::new(S1_7B, 4, 2, 1, optim, strategy));
                 out.push(
                     Scenario::new(S1_7B, 2, 2, 2, optim, strategy).with_micro_batches(4),
+                );
+                // Faulted/heterogeneous scenarios: derates and recovery
+                // charges only ever add time, so the fault-free bounds
+                // must stay below.
+                out.push(
+                    Scenario::new(S1_7B, 4, 2, 1, optim, strategy)
+                        .with_hetero(
+                            crate::sim::HeteroSpec::parse("slow:0.5:2+link:0.5:8").unwrap(),
+                        )
+                        .with_fault_seed(7)
+                        .with_mttf(Some(600.0))
+                        .with_ckpt_interval(8),
+                );
+                out.push(
+                    Scenario::new(S1_7B, 2, 2, 2, optim, strategy)
+                        .with_micro_batches(4)
+                        .with_hetero(crate::sim::HeteroSpec::parse("last:1.5").unwrap())
+                        .with_fail_rank(Some(crate::sim::FailSpec { rank: 0, at: 0.5 })),
                 );
             }
         }

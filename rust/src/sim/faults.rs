@@ -1,0 +1,583 @@
+//! Elastic-cluster fault & heterogeneity model.
+//!
+//! The paper evaluates on a homogeneous, never-failing 256-GPU cluster;
+//! the only degradation knob the simulator carried until now was the
+//! single last-stage `--straggler` scalar. At that scale, real fleets
+//! mix GPU generations, carry flaky links, and lose ranks mid-run — and
+//! the strategy zoo reacts *differently* to each (MatrixFSDP's update
+//! is communication-free, DMuon's gather/scatter rides the inter-node
+//! fabric, the alpha-balanced partition re-solves cheaply for N−1
+//! ranks). This module is the general case the straggler scalar is a
+//! special case of:
+//!
+//! * [`HeteroSpec`] — a deterministic per-rank hardware profile spec
+//!   (seed-derived slow-node and degraded-link Bernoulli mixes, plus
+//!   the `last:<f>` deterministic form that reproduces `--straggler f`
+//!   bit-for-bit).
+//! * [`ClusterProfile`] — the allocation-free per-rank view the
+//!   timeline arm reads: each stage's compute is derated by the *max*
+//!   derate among its ranks, each stage's DP collectives price against
+//!   the slowest participating inter-node link.
+//! * [`FailSpec`] / `mttf` — elastic events. The timeline arm charges
+//!   detection timeout, checkpoint reload, the re-partition of the
+//!   surviving N−1 population (actually re-solved through the
+//!   [`PlanCache`], which memoizes both populations), and the lost
+//!   work since the last checkpoint, into [`Breakdown::recovery_s`].
+//!
+//! Determinism is load-bearing: every per-rank draw is a pure function
+//! of `(fault_seed, rank)` via the same SplitMix64/xoshiro256** stream
+//! the numeric trainer uses, so the same `--fault-seed` yields
+//! byte-identical artifacts on any thread count (pinned by
+//! `tests/elastic_differential.rs`).
+//!
+//! [`Breakdown::recovery_s`]: super::iteration::Breakdown::recovery_s
+//! [`PlanCache`]: crate::sweep::cache::PlanCache
+
+use std::fmt;
+use std::time::Instant;
+
+use crate::bail;
+use crate::sweep::cache::{PlanCache, StageKey};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::iteration::StageTable;
+use super::scenario::Scenario;
+
+/// Modeled failure-detection timeout (collective-watchdog scale, s).
+/// Every injected failure pays this before recovery can begin.
+pub const DETECT_TIMEOUT_S: f64 = 5.0;
+/// Coordinator-round base cost of re-solving the deployment for the
+/// surviving population (s) — the modeled (deterministic) counterpart
+/// of the measured re-solve charged to `planning_s`.
+pub const REPLAN_BASE_S: f64 = 0.25;
+/// Per-census-tensor term of the modeled re-partition charge (s).
+pub const REPLAN_PER_TENSOR_S: f64 = 1e-5;
+
+/// A per-rank hardware heterogeneity spec. Parsed from `--hetero`:
+///
+/// * `none` — homogeneous (the default; bit-identical to pre-fault
+///   artifacts).
+/// * `slow:<rate>:<factor>` — each rank is independently a slow node
+///   with probability `rate` (seed-derived), derating its compute/HBM
+///   throughput by `factor` (`1.5` = 50% slower).
+/// * `link:<rate>:<factor>` — each rank's inter-node link bandwidth is
+///   divided by `factor` with probability `rate`.
+/// * `slow:R:F+link:R:F` — both mixes at once.
+/// * `last:<factor>` — deterministically derate exactly the last PP
+///   stage's ranks by `factor`: the spec that reproduces
+///   `--straggler <factor>` bit-for-bit (the differential oracle).
+///
+/// Parsing canonicalizes inert terms (`rate == 0` or `factor == 1`)
+/// away, so `parse(x.to_string()) == x` holds for every parse product.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HeteroSpec {
+    /// Homogeneous cluster (the default).
+    None,
+    /// Deterministic last-stage derate — the straggler equivalence spec.
+    LastStage {
+        /// Compute/HBM derate factor for the last stage's ranks.
+        factor: f64,
+    },
+    /// Seed-derived Bernoulli mixes: slow nodes and degraded links.
+    Mix {
+        /// Probability a rank is a slow node (compute/HBM derated).
+        slow_rate: f64,
+        /// Compute/HBM derate factor of a slow node.
+        slow_factor: f64,
+        /// Probability a rank's inter-node link is degraded.
+        link_rate: f64,
+        /// Inter-node bandwidth divisor of a degraded link.
+        link_factor: f64,
+    },
+}
+
+impl HeteroSpec {
+    /// Parse a `--hetero` spec token (see the type docs for the forms).
+    pub fn parse(tok: &str) -> Result<HeteroSpec> {
+        if tok == "none" {
+            return Ok(HeteroSpec::None);
+        }
+        let mut slow: Option<(f64, f64)> = None;
+        let mut link: Option<(f64, f64)> = None;
+        let mut last: Option<f64> = None;
+        for term in tok.split('+') {
+            let parts: Vec<&str> = term.split(':').collect();
+            let num = |x: &str| -> Result<f64> {
+                x.parse::<f64>().map_err(|_| {
+                    crate::util::error::Error::msg(format!(
+                        "invalid hetero spec '{tok}': '{x}' is not a number"
+                    ))
+                })
+            };
+            match parts.as_slice() {
+                ["slow", r, f] if slow.is_none() => slow = Some((num(r)?, num(f)?)),
+                ["link", r, f] if link.is_none() => link = Some((num(r)?, num(f)?)),
+                ["last", f] if last.is_none() => last = Some(num(f)?),
+                ["slow", ..] | ["link", ..] | ["last", ..] => {
+                    bail!("invalid hetero spec '{tok}': duplicate or malformed term '{term}'")
+                }
+                _ => bail!(
+                    "invalid hetero spec '{tok}': expected none, last:<f>, slow:<r>:<f>, \
+                     link:<r>:<f>, or slow:..+link:.., got term '{term}'"
+                ),
+            }
+        }
+        if last.is_some() && (slow.is_some() || link.is_some()) {
+            bail!("invalid hetero spec '{tok}': last:<f> cannot be combined");
+        }
+        let spec = if let Some(f) = last {
+            if f == 1.0 { HeteroSpec::None } else { HeteroSpec::LastStage { factor: f } }
+        } else {
+            // Canonicalize inert terms so label() round-trips by value.
+            let norm = |t: Option<(f64, f64)>| match t {
+                Some((r, f)) if r != 0.0 && f != 1.0 => (r, f),
+                _ => (0.0, 1.0),
+            };
+            let (slow_rate, slow_factor) = norm(slow);
+            let (link_rate, link_factor) = norm(link);
+            if slow_rate == 0.0 && link_rate == 0.0 {
+                HeteroSpec::None
+            } else {
+                HeteroSpec::Mix { slow_rate, slow_factor, link_rate, link_factor }
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Named-field validation (`invalid scenario:`-prefixed like
+    /// [`Scenario::validate`]): rates in `[0, 1]`, factors finite and
+    /// `>= 1` — a derate below 1 would manufacture infinite throughput.
+    pub fn validate(&self) -> Result<()> {
+        let rate_ok = |v: f64| v.is_finite() && (0.0..=1.0).contains(&v);
+        let factor_ok = |v: f64| v.is_finite() && v >= 1.0;
+        match *self {
+            HeteroSpec::None => Ok(()),
+            HeteroSpec::LastStage { factor } => {
+                if !factor_ok(factor) {
+                    bail!(
+                        "invalid scenario: hetero last factor expects a finite \
+                         factor >= 1.0, got {factor}"
+                    );
+                }
+                Ok(())
+            }
+            HeteroSpec::Mix { slow_rate, slow_factor, link_rate, link_factor } => {
+                if !rate_ok(slow_rate) || !rate_ok(link_rate) {
+                    bail!(
+                        "invalid scenario: hetero rates must be finite and in [0, 1], \
+                         got slow={slow_rate} link={link_rate}"
+                    );
+                }
+                if !factor_ok(slow_factor) || !factor_ok(link_factor) {
+                    bail!(
+                        "invalid scenario: hetero factors must be finite and >= 1.0, \
+                         got slow={slow_factor} link={link_factor}"
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Hash/eq bits for sweep-engine group keys ([`f64::to_bits`] on
+    /// every term plus a variant tag): scenarios with different specs
+    /// must never share a batched group.
+    pub fn key_bits(&self) -> [u64; 5] {
+        match *self {
+            HeteroSpec::None => [0, 0, 0, 0, 0],
+            HeteroSpec::LastStage { factor } => [1, factor.to_bits(), 0, 0, 0],
+            HeteroSpec::Mix { slow_rate, slow_factor, link_rate, link_factor } => [
+                2,
+                slow_rate.to_bits(),
+                slow_factor.to_bits(),
+                link_rate.to_bits(),
+                link_factor.to_bits(),
+            ],
+        }
+    }
+}
+
+impl fmt::Display for HeteroSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            HeteroSpec::None => write!(f, "none"),
+            HeteroSpec::LastStage { factor } => write!(f, "last:{factor}"),
+            HeteroSpec::Mix { slow_rate, slow_factor, link_rate, link_factor } => {
+                let mut first = true;
+                if slow_rate != 0.0 {
+                    write!(f, "slow:{slow_rate}:{slow_factor}")?;
+                    first = false;
+                }
+                if link_rate != 0.0 {
+                    if !first {
+                        write!(f, "+")?;
+                    }
+                    write!(f, "link:{link_rate}:{link_factor}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A deterministic rank-failure injection: rank `rank` dies at fraction
+/// `at` of the iteration (`0.5` = mid-iteration). Parsed from
+/// `--fail-rank r@frac` (bare `r` defaults to `@0.5`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailSpec {
+    /// The failing global rank (stage-major layout; must be < gpus).
+    pub rank: usize,
+    /// Fractional position of the failure within the iteration, [0, 1).
+    pub at: f64,
+}
+
+impl FailSpec {
+    /// Parse `r@frac` or bare `r` (mid-iteration default).
+    pub fn parse(tok: &str) -> Result<FailSpec> {
+        let (r, at) = match tok.split_once('@') {
+            Some((r, a)) => {
+                let at = a.parse::<f64>().map_err(|_| {
+                    crate::util::error::Error::msg(format!(
+                        "invalid fail_rank '{tok}': '{a}' is not a number"
+                    ))
+                })?;
+                (r, at)
+            }
+            None => (tok, 0.5),
+        };
+        let rank = r.parse::<usize>().map_err(|_| {
+            crate::util::error::Error::msg(format!(
+                "invalid fail_rank '{tok}': '{r}' is not a rank index"
+            ))
+        })?;
+        let spec = FailSpec { rank, at };
+        spec.validate(usize::MAX)?;
+        Ok(spec)
+    }
+
+    /// Named-field validation; `gpus` bounds the rank index (callers
+    /// that don't know the deployment yet pass `usize::MAX`).
+    pub fn validate(&self, gpus: usize) -> Result<()> {
+        if !self.at.is_finite() || !(0.0..1.0).contains(&self.at) {
+            bail!(
+                "invalid scenario: fail_rank position expects a finite fraction \
+                 in [0, 1), got {}",
+                self.at
+            );
+        }
+        if self.rank >= gpus {
+            bail!(
+                "invalid scenario: fail_rank {} out of range for a {}-GPU deployment",
+                self.rank, gpus
+            );
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for FailSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.rank, self.at)
+    }
+}
+
+/// One rank's uniform draw in `[0, 1)`: a pure function of
+/// `(seed, salt, rank)`, independent of evaluation order or thread
+/// count. `salt` separates the compute-derate stream from the
+/// link-degradation stream.
+fn rank_u01(seed: u64, salt: u64, rank: usize) -> f64 {
+    Rng::new(seed.wrapping_add(salt.wrapping_mul(0xA076_1D64_78BD_642F)))
+        .fork(rank as u64)
+        .next_f64()
+}
+
+/// The allocation-free per-rank hardware view of a scenario: which
+/// ranks are slow, which links are degraded, and the per-stage
+/// aggregates the timeline arm prices against. Ranks are laid out
+/// stage-major: stage `s` owns ranks `[s·dp·tp, (s+1)·dp·tp)`.
+///
+/// Everything is computed on demand from `(spec, seed, rank)` — no
+/// heap, so the timeline playback's zero-allocation warm contract is
+/// untouched even on fault paths.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterProfile {
+    spec: HeteroSpec,
+    seed: u64,
+    dp: usize,
+    tp: usize,
+    pp: usize,
+}
+
+impl ClusterProfile {
+    /// The profile of a scenario's deployment.
+    pub fn for_scenario(s: &Scenario) -> ClusterProfile {
+        ClusterProfile {
+            spec: s.hetero,
+            seed: s.fault_seed,
+            dp: s.dp,
+            tp: s.tp,
+            pp: s.pp.max(1),
+        }
+    }
+
+    /// Homogeneous profile? (Every factor is exactly 1.0, so callers
+    /// may skip the per-rank scan entirely.)
+    pub fn is_trivial(&self) -> bool {
+        self.spec == HeteroSpec::None
+    }
+
+    /// The PP stage hosting global rank `r` (stage-major layout).
+    pub fn stage_of_rank(&self, r: usize) -> usize {
+        (r / (self.dp * self.tp)).min(self.pp - 1)
+    }
+
+    /// Compute/HBM derate factor of rank `r` (1.0 = healthy).
+    pub fn rank_derate(&self, r: usize) -> f64 {
+        match self.spec {
+            HeteroSpec::None => 1.0,
+            HeteroSpec::LastStage { factor } => {
+                if self.stage_of_rank(r) == self.pp - 1 { factor } else { 1.0 }
+            }
+            HeteroSpec::Mix { slow_rate, slow_factor, .. } => {
+                if slow_rate > 0.0 && rank_u01(self.seed, 0, r) < slow_rate {
+                    slow_factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Inter-node bandwidth divisor of rank `r`'s link (1.0 = healthy).
+    pub fn rank_link(&self, r: usize) -> f64 {
+        match self.spec {
+            // `last:` models slow *GPUs* (the straggler semantics) —
+            // the fabric stays healthy.
+            HeteroSpec::None | HeteroSpec::LastStage { .. } => 1.0,
+            HeteroSpec::Mix { link_rate, link_factor, .. } => {
+                if link_rate > 0.0 && rank_u01(self.seed, 1, r) < link_rate {
+                    link_factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Max compute derate among stage `si`'s ranks — bulk-synchronous
+    /// compute inside a stage paces on its slowest rank.
+    pub fn stage_derate(&self, si: usize) -> f64 {
+        self.stage_max(si, |p, r| p.rank_derate(r))
+    }
+
+    /// Max link divisor among stage `si`'s ranks — a collective is as
+    /// slow as its slowest participating link.
+    pub fn stage_link(&self, si: usize) -> f64 {
+        self.stage_max(si, |p, r| p.rank_link(r))
+    }
+
+    fn stage_max(&self, si: usize, f: impl Fn(&ClusterProfile, usize) -> f64) -> f64 {
+        if self.is_trivial() {
+            return 1.0;
+        }
+        let per = self.dp * self.tp;
+        let mut worst = 1.0f64;
+        for r in si * per..(si + 1) * per {
+            let v = f(self, r);
+            if v > worst {
+                worst = v;
+            }
+        }
+        worst
+    }
+}
+
+/// The deterministic recovery-cost model, charged into
+/// `Breakdown::recovery_s` by the timeline arm when an elastic event is
+/// configured. `span_s` is the fault-free iteration time,
+/// `state_bytes` the pacing stage's largest per-rank optimizer-state
+/// shard (the checkpoint reload volume).
+///
+/// Per event: detection timeout + checkpoint reload over the inter-node
+/// fabric + the modeled re-partition round + the work lost since the
+/// last checkpoint (`(k−1)/2` iterations in expectation at checkpoint
+/// interval `k`, plus the failed iteration's own progress). A
+/// `--fail-rank` charges one full event; `--mttf` charges the expected
+/// cost: `min(1, span/mttf)` events per iteration losing half an
+/// iteration each in expectation. Every term is `>= 0`, so the
+/// fault-free lower bounds in [`super::bounds`] stay admissible
+/// unchanged — and an injected failure *strictly* increases both
+/// `recovery_s` (by at least [`DETECT_TIMEOUT_S`]) and `total_s`.
+pub fn recovery_seconds(s: &Scenario, span_s: f64, state_bytes: f64) -> f64 {
+    let reload_s = state_bytes / s.hw.ib_bw + s.hw.ib_lat;
+    let replan_s = REPLAN_BASE_S + REPLAN_PER_TENSOR_S * s.census.len() as f64;
+    let redo_s = 0.5 * s.ckpt_interval.saturating_sub(1) as f64 * span_s;
+    let per_event = DETECT_TIMEOUT_S + reload_s + replan_s + redo_s;
+    let mut rec = 0.0;
+    if let Some(f) = s.fail_rank {
+        // The failed iteration's own progress up to the fault is redone.
+        rec += per_event + f.at * span_s;
+    }
+    if let Some(mttf) = s.mttf_s {
+        let p = (span_s / mttf).min(1.0);
+        rec += p * (per_event + 0.5 * span_s);
+    }
+    rec
+}
+
+/// Actually re-solve the deployment for the surviving N−1 population
+/// (`dp − 1`, the failed rank's DP group shrinks) through the plan
+/// cache — [`PlanCache`] memoizes both populations, so repeated
+/// evaluations of the same faulted scenario re-solve nothing. Returns
+/// the measured wall time, charged to `planning_s` (a wall-clock
+/// diagnostic that never enters artifacts, so byte-determinism holds).
+pub(crate) fn replan_for_failure(s: &Scenario, cache: &PlanCache) -> f64 {
+    if s.dp <= 1 {
+        return 0.0; // no surviving DP peers to re-balance across
+    }
+    let t0 = Instant::now();
+    let mut red = s.clone();
+    red.dp -= 1;
+    for si in 0..red.pp.max(1) {
+        let key = StageKey::for_scenario(&red, si);
+        let _ = cache.stage_table(&key, || StageTable::build(&red, si, cache));
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::optim::OptimKind;
+    use crate::model::qwen3::Qwen3Size;
+    use crate::partition::DpStrategy;
+
+    #[test]
+    fn spec_parse_round_trips_by_value() {
+        for tok in [
+            "none",
+            "last:1.5",
+            "slow:0.05:1.5",
+            "link:1:16",
+            "slow:0.1:2+link:0.25:4",
+        ] {
+            let spec = HeteroSpec::parse(tok).unwrap();
+            assert_eq!(HeteroSpec::parse(&spec.to_string()).unwrap(), spec, "{tok}");
+        }
+        // Inert terms canonicalize to None (so value round-trip holds).
+        assert_eq!(HeteroSpec::parse("slow:0:1.5").unwrap(), HeteroSpec::None);
+        assert_eq!(HeteroSpec::parse("link:0.5:1").unwrap(), HeteroSpec::None);
+        assert_eq!(HeteroSpec::parse("last:1").unwrap(), HeteroSpec::None);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_and_out_of_range() {
+        for bad in [
+            "bogus",
+            "slow:0.5",
+            "slow:x:2",
+            "last:0.5",          // factor < 1: infinite throughput
+            "slow:2:1.5",        // rate > 1
+            "slow:-0.1:1.5",     // rate < 0
+            "link:0.5:nan",      // non-finite factor
+            "slow:0.5:2+slow:0.5:2", // duplicate term
+            "last:2+slow:0.5:2", // last is exclusive
+        ] {
+            assert!(HeteroSpec::parse(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn fail_spec_parse_and_bounds() {
+        let f = FailSpec::parse("3@0.25").unwrap();
+        assert_eq!((f.rank, f.at), (3, 0.25));
+        assert_eq!(FailSpec::parse("7").unwrap().at, 0.5);
+        assert_eq!(FailSpec::parse(&f.to_string()).unwrap(), f);
+        assert!(FailSpec::parse("x@0.5").is_err());
+        assert!(FailSpec::parse("3@1.5").is_err()); // at >= 1
+        assert!(FailSpec::parse("3@-0.1").is_err());
+        assert!(FailSpec { rank: 8, at: 0.0 }.validate(8).is_err()); // out of range
+        assert!(FailSpec { rank: 7, at: 0.0 }.validate(8).is_ok());
+    }
+
+    fn scen(spec: &str, seed: u64) -> Scenario {
+        let mut s =
+            Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, DpStrategy::LbAsc);
+        s.hetero = HeteroSpec::parse(spec).unwrap();
+        s.fault_seed = seed;
+        s
+    }
+
+    #[test]
+    fn profile_is_deterministic_in_the_seed() {
+        let p1 = ClusterProfile::for_scenario(&scen("slow:0.3:2", 42));
+        let p2 = ClusterProfile::for_scenario(&scen("slow:0.3:2", 42));
+        let p3 = ClusterProfile::for_scenario(&scen("slow:0.3:2", 43));
+        let mut differs = false;
+        for r in 0..8 {
+            assert_eq!(p1.rank_derate(r).to_bits(), p2.rank_derate(r).to_bits());
+            differs |= p1.rank_derate(r) != p3.rank_derate(r);
+        }
+        assert!(differs, "different seeds should draw different slow sets");
+    }
+
+    #[test]
+    fn stage_aggregates_take_the_max() {
+        // Deterministic rate-1 mix: every rank slow, every link degraded.
+        let p = ClusterProfile::for_scenario(&scen("slow:1:1.5+link:1:8", 0));
+        for si in 0..2 {
+            assert_eq!(p.stage_derate(si), 1.5);
+            assert_eq!(p.stage_link(si), 8.0);
+        }
+        // last:f derates only the final stage, with healthy links —
+        // the straggler-equivalence spec.
+        let p = ClusterProfile::for_scenario(&scen("last:1.7", 0));
+        assert_eq!(p.stage_derate(0), 1.0);
+        assert_eq!(p.stage_derate(1), 1.7);
+        assert_eq!(p.stage_link(1), 1.0);
+        // Trivial profile: exactly 1.0 everywhere (bit-identity anchor).
+        let p = ClusterProfile::for_scenario(&scen("none", 9));
+        assert!(p.is_trivial());
+        assert_eq!(p.stage_derate(1).to_bits(), 1.0f64.to_bits());
+        assert_eq!(p.stage_link(0).to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn rank_layout_is_stage_major() {
+        let p = ClusterProfile::for_scenario(&scen("none", 0));
+        assert_eq!(p.stage_of_rank(0), 0);
+        assert_eq!(p.stage_of_rank(7), 0);
+        assert_eq!(p.stage_of_rank(8), 1);
+        assert_eq!(p.stage_of_rank(15), 1);
+    }
+
+    #[test]
+    fn recovery_is_positive_and_monotone() {
+        let mut s = scen("none", 0);
+        s.fail_rank = Some(FailSpec { rank: 0, at: 0.5 });
+        let base = recovery_seconds(&s, 10.0, 1e9);
+        assert!(base >= DETECT_TIMEOUT_S);
+        // Sparser checkpoints lose more work.
+        s.ckpt_interval = 8;
+        assert!(recovery_seconds(&s, 10.0, 1e9) > base);
+        // A failure rate adds expected cost on top.
+        s.mttf_s = Some(3600.0);
+        let with_rate = recovery_seconds(&s, 10.0, 1e9);
+        assert!(with_rate > recovery_seconds(&scen_fail(8, None), 10.0, 1e9));
+        // Shorter MTTF costs more.
+        s.mttf_s = Some(600.0);
+        assert!(recovery_seconds(&s, 10.0, 1e9) > with_rate);
+        // No events -> exactly zero.
+        assert_eq!(recovery_seconds(&scen("slow:0.3:2", 1), 10.0, 1e9), 0.0);
+    }
+
+    fn scen_fail(ckpt: usize, mttf: Option<f64>) -> Scenario {
+        let mut s = scen("none", 0);
+        s.fail_rank = Some(FailSpec { rank: 0, at: 0.5 });
+        s.ckpt_interval = ckpt;
+        s.mttf_s = mttf;
+        s
+    }
+}

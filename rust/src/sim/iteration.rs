@@ -92,6 +92,7 @@ use crate::partition::{alpha_balanced, layerwise, naive_atomic_per_bucket, DpPla
 use crate::schedule::microgroup::{build_micro_groups, MicroGroup, Symbols, TaskMeta, TpPlan, TpTask};
 use crate::sweep::cache::{DpKey, PlanCache, StageKey, TpKey};
 
+use super::faults::{self, ClusterProfile};
 use super::scenario::Scenario;
 use super::stream::Stream;
 use super::timeline::{
@@ -137,6 +138,12 @@ pub struct Breakdown {
     /// uniform stages); at `pp = 1` it reduces to the exposed
     /// communication time.
     pub bubble_s: f64,
+    /// Elastic-event recovery cost (s): detection timeout + checkpoint
+    /// reload + re-partition + redone work, charged by the timeline arm
+    /// when `--fail-rank` / `--mttf` are configured (see
+    /// [`crate::sim::faults::recovery_seconds`]). Included in
+    /// `total_s`; exactly `0.0` on fault-free scenarios.
+    pub recovery_s: f64,
 }
 
 impl Breakdown {
@@ -156,6 +163,7 @@ impl Breakdown {
         self.planning_s = 0.0;
         self.grad_comm_bytes = 0.0;
         self.bubble_s = 0.0;
+        self.recovery_s = 0.0;
     }
 }
 
@@ -1332,8 +1340,11 @@ pub fn simulate_iteration_into(s: &Scenario, cache: &PlanCache, out: &mut Breakd
 /// truth shared by [`simulate_iteration_into`] and the optimizer-search
 /// lower bounds ([`crate::sim::bounds`]), which are tighter on the
 /// closed-form arm and must agree exactly with the dispatcher.
+/// Fault/heterogeneity knobs ([`Scenario::faulted`]) route to the
+/// timeline arm, which owns per-stage derates, per-link pricing, and
+/// recovery charging.
 pub(crate) fn closed_form_path(s: &Scenario) -> bool {
-    s.pp <= 1 && s.micro_batches <= 1 && s.straggler == 1.0
+    s.pp <= 1 && s.micro_batches <= 1 && s.straggler == 1.0 && !s.faulted()
 }
 
 /// The closed-form single-stage playback (see the module docs) — the
@@ -1376,6 +1387,13 @@ fn simulate_closed_form_into(s: &Scenario, cache: &PlanCache, out: &mut Breakdow
 struct StagePlayback {
     table: Arc<StageTable>,
     hw: Hardware,
+    /// The stage's collective-pricing model: the shared fabric with the
+    /// inter-node bandwidth divided by the stage's worst link factor
+    /// ([`ClusterProfile::stage_link`]). On homogeneous profiles the
+    /// divisor is exactly 1.0, so this is bit-identical to the old
+    /// single shared `comm_model(s)` — `CommModel` owns no heap, so the
+    /// per-stage copy keeps the warm path allocation-free.
+    comm: CommModel,
     /// Forward compute per micro-batch (s).
     fwd_t: f64,
     /// Backward compute per micro-batch (s).
@@ -1506,9 +1524,9 @@ fn simulate_timeline_scratch(
     } else {
         scratch.used = true;
     }
-    let comm = comm_model(s);
     let pp = s.pp.max(1);
     let m = s.micro_batches.max(1);
+    let profile = ClusterProfile::for_scenario(s);
 
     // --- per-stage cached tables + playback scalars ---------------------
     // Canonical-equal interior stages (see `canonical_stage`) resolve to
@@ -1516,11 +1534,25 @@ fn simulate_timeline_scratch(
     // scalars are bit-identical — build once, clone for the rest (Arc
     // bumps + scalar copies, no heap). The straggler-derated last stage
     // canonicalizes to itself, and its hardware is derated exactly once
-    // per playback.
+    // per playback. Heterogeneous profiles can break the interior-stage
+    // symmetry (different ranks draw different derates), so sharing is
+    // additionally gated on equal per-stage factors; the *table* itself
+    // is hardware-independent and still shared through the cache.
+    //
+    // Per stage: the straggler factor derates the *last* stage and the
+    // profile's max rank derate the stage's own compute/HBM; DP
+    // collectives price against the stage's slowest inter-node link. On
+    // the homogeneous default every factor is exactly 1.0, and
+    // `derate(1.0)` / `/ 1.0` are bitwise no-ops — today's artifacts
+    // are reproduced bit-for-bit.
     scratch.stages.clear();
     for si in 0..pp {
         let canon = crate::sweep::cache::canonical_stage(s, si);
-        if canon < si {
+        if canon < si
+            && (profile.is_trivial()
+                || (profile.stage_derate(si) == profile.stage_derate(canon)
+                    && profile.stage_link(si) == profile.stage_link(canon)))
+        {
             let shared = scratch.stages[canon].clone();
             scratch.stages.push(shared);
             continue;
@@ -1529,9 +1561,11 @@ fn simulate_timeline_scratch(
         let key = StageKey::for_scenario(s, si);
         let table = cache.stage_table(&key, || StageTable::build(s, si, cache));
         out.planning_s += t_fetch.elapsed().as_secs_f64();
-        // The straggler factor derates the *last* stage's compute/HBM
-        // (the fabric is shared and stays unscaled).
-        let hw = if si == pp - 1 { s.hw.derate(s.straggler) } else { s.hw.clone() };
+        let straggler = if si == pp - 1 { s.straggler } else { 1.0 };
+        let hw = s.hw.derate(profile.stage_derate(si) * straggler);
+        let mut fabric = s.hw.clone();
+        fabric.ib_bw /= profile.stage_link(si);
+        let comm = CommModel::new(fabric);
         let (fwd_t, bwd_t, tp_ar, act_bytes) = stage_times(s, &hw, &comm, &table);
         let act_p2p = if pp > 1 { comm.p2p(act_bytes, LinkKind::InterNode) } else { 0.0 };
         let grad_bytes = stage_grad_bytes(s, &comm, &table);
@@ -1539,7 +1573,7 @@ fn simulate_timeline_scratch(
         out.planning_s += opt.planning_s;
         scratch
             .stages
-            .push(StagePlayback { table, hw, fwd_t, bwd_t, tp_ar, act_p2p, grad_bytes, opt });
+            .push(StagePlayback { table, hw, comm, fwd_t, bwd_t, tp_ar, act_p2p, grad_bytes, opt });
     }
 
     // Split-borrow the scratch: the emitter below mutates the per-stage
@@ -1606,7 +1640,7 @@ fn simulate_timeline_scratch(
                         let ag = tl.task(
                             dpc(i),
                             TaskKind::ParamComm,
-                            bucket_ag_time(s, &comm, &sp.table, b),
+                            bucket_ag_time(s, &sp.comm, &sp.table, b),
                             &[],
                         );
                         dbuf.clear();
@@ -1666,7 +1700,7 @@ fn simulate_timeline_scratch(
                         let r = tl.task(
                             dpc(i),
                             TaskKind::GradComm,
-                            bucket_grad_time(s, &comm, &sp.table, b),
+                            bucket_grad_time(s, &sp.comm, &sp.table, b),
                             &[c],
                         );
                         last_c = Some(c);
@@ -1738,6 +1772,21 @@ fn simulate_timeline_scratch(
     let adamw_elems = sp.table.total_elems / s.dp as f64;
     out.adamw_ref_s = sp.hw.memory_time(adamw_elems * ADAMW_BYTES_PER_ELEM);
     fill_loads(out, s, &sp.table, sp.opt.worst_tplan.as_deref());
+    // --- elastic events: recovery charge + the N−1 re-solve -------------
+    // A configured failure (deterministic `--fail-rank` or an expected
+    // `--mttf` rate) pays detection, checkpoint reload (the pacing
+    // stage's largest state shard over the inter-node fabric),
+    // re-partition, and redone work — and the surviving N−1 population's
+    // deployment is actually re-solved through the plan cache (which
+    // memoizes both populations), its wall time charged to `planning_s`.
+    // Every term is >= 0, so the fault-free bounds stay admissible, and
+    // an injected failure strictly increases `recovery_s` and `total_s`.
+    if s.fail_rank.is_some() || s.mttf_s.is_some() {
+        out.planning_s += faults::replan_for_failure(s, cache);
+        let state_bytes = out.dp_loads_state.iter().cloned().fold(0.0, f64::max);
+        out.recovery_s = faults::recovery_seconds(s, out.total_s, state_bytes);
+        out.total_s += out.recovery_s;
+    }
     // Drop the stage Arcs now rather than at the thread's next playback:
     // holding them would pin evicted StageTables/TpPlans past the plan
     // cache's byte budget. The buffer keeps its capacity (it is refilled

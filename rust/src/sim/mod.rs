@@ -24,9 +24,15 @@
 //!   `pp > 1` / micro-batched / straggler shapes).
 //! * [`bounds`] — admissible closed-form lower bounds on the playback's
 //!   objectives, for the `canzona optimize` branch-and-bound search.
+//! * [`faults`] — the elastic-cluster fault & heterogeneity model:
+//!   deterministic seed-derived per-rank hardware profiles, rank-failure
+//!   injection, and the recovery-cost charging rules the timeline arm
+//!   applies (the single straggler scalar is the `last:<f>` special
+//!   case).
 
 pub mod batch;
 pub mod bounds;
+pub mod faults;
 pub mod iteration;
 pub mod scenario;
 pub mod stream;
@@ -37,6 +43,7 @@ pub use batch::{
     BATCH_CHUNK,
 };
 pub use bounds::ScenarioBounds;
+pub use faults::{ClusterProfile, FailSpec, HeteroSpec};
 pub use iteration::{
     simulate_iteration, simulate_iteration_cached, simulate_iteration_into,
     simulate_iteration_timeline, Breakdown, StageTable,

@@ -8,6 +8,7 @@ use crate::model::shapes::Param;
 use crate::partition::DpStrategy;
 use crate::util::error::Result;
 
+use super::faults::{FailSpec, HeteroSpec};
 use super::timeline::PipelineSchedule;
 
 /// One simulated configuration (a single bar/point in a paper figure).
@@ -48,6 +49,23 @@ pub struct Scenario {
     /// `1.2` = that stage's GPUs are 20% slower). Values `!= 1.0` route
     /// through the timeline engine even at `pp == 1`.
     pub straggler: f64,
+    /// Per-rank hardware heterogeneity ([`HeteroSpec::None`] =
+    /// homogeneous, bit-identical to pre-fault artifacts). Anything
+    /// else routes through the timeline engine, which derates each
+    /// stage by the *max* derate among its ranks and prices DP
+    /// collectives against the slowest participating link.
+    pub hetero: HeteroSpec,
+    /// Seed of the per-rank fault/heterogeneity draws (deterministic:
+    /// the same seed yields byte-identical artifacts).
+    pub fault_seed: u64,
+    /// Deterministic rank-failure injection (`--fail-rank r@frac`).
+    pub fail_rank: Option<FailSpec>,
+    /// Mean time to failure (s); charges the *expected* per-iteration
+    /// recovery cost instead of a single injected event.
+    pub mttf_s: Option<f64>,
+    /// Checkpoint interval in iterations (`1` = every iteration); a
+    /// failure redoes the work since the last checkpoint.
+    pub ckpt_interval: usize,
     /// Transformer depth (highest census layer index + 1), cached at
     /// construction so plan-cache key builds never re-scan the census.
     /// Derived from `census`; don't set independently.
@@ -92,8 +110,22 @@ impl Scenario {
             micro_batches: 1,
             schedule: PipelineSchedule::OneFOneB,
             straggler: 1.0,
+            hetero: HeteroSpec::None,
+            fault_seed: 0,
+            fail_rank: None,
+            mttf_s: None,
+            ckpt_interval: 1,
             n_layers,
         }
+    }
+
+    /// Does any fault/heterogeneity knob deviate from the homogeneous,
+    /// never-failing default? Faulted scenarios route through the
+    /// timeline engine (and the batch tier rejects them — see
+    /// [`crate::sim::batch`]). `fault_seed` and `ckpt_interval` alone
+    /// are inert: without a spec or an event they change nothing.
+    pub fn faulted(&self) -> bool {
+        self.hetero != HeteroSpec::None || self.fail_rank.is_some() || self.mttf_s.is_some()
     }
 
     pub fn gpus(&self) -> usize {
@@ -151,6 +183,37 @@ impl Scenario {
         self
     }
 
+    /// Set the per-rank heterogeneity spec (see [`HeteroSpec`]).
+    pub fn with_hetero(mut self, h: HeteroSpec) -> Scenario {
+        self.hetero = h;
+        self
+    }
+
+    /// Set the fault/heterogeneity draw seed.
+    pub fn with_fault_seed(mut self, seed: u64) -> Scenario {
+        self.fault_seed = seed;
+        self
+    }
+
+    /// Inject a deterministic rank failure (see [`FailSpec`]).
+    pub fn with_fail_rank(mut self, f: Option<FailSpec>) -> Scenario {
+        self.fail_rank = f;
+        self
+    }
+
+    /// Set the mean-time-to-failure rate (s); `None` disables it.
+    pub fn with_mttf(mut self, mttf_s: Option<f64>) -> Scenario {
+        self.mttf_s = mttf_s;
+        self
+    }
+
+    /// Set the checkpoint interval (iterations), clamped to `>= 1`
+    /// like [`Scenario::with_micro_batches`].
+    pub fn with_ckpt_interval(mut self, k: usize) -> Scenario {
+        self.ckpt_interval = k.max(1);
+        self
+    }
+
     /// Reject knob combinations that would poison the arithmetic
     /// downstream: a zero bandwidth or zero `gpu_flops` divides to
     /// `inf`, a non-positive straggler multiplies to `inf`/`NaN`, and
@@ -182,6 +245,23 @@ impl Scenario {
             bail!(
                 "invalid scenario: straggler expects a finite factor >= 1.0, got {}",
                 self.straggler
+            );
+        }
+        // The fault/heterogeneity knobs, each with a named error
+        // (mirroring the batch tier's per-lane `LaneKnobs::validate`).
+        self.hetero.validate()?;
+        if let Some(f) = &self.fail_rank {
+            f.validate(self.gpus())?;
+        }
+        if let Some(mttf) = self.mttf_s {
+            if !mttf.is_finite() || mttf <= 0.0 {
+                bail!("invalid scenario: mttf expects a finite rate > 0 s, got {mttf}");
+            }
+        }
+        if self.ckpt_interval < 1 {
+            bail!(
+                "invalid scenario: ckpt_interval must be >= 1, got {}",
+                self.ckpt_interval
             );
         }
         if !self.alpha.is_finite() || !(0.0..=1.0).contains(&self.alpha) {
@@ -265,6 +345,26 @@ mod tests {
             Scenario::paper_default().with_straggler(f64::NAN).straggler,
             1.0,
         );
+        // Fault-layer builders and the `faulted()` dispatch predicate.
+        let d = Scenario::paper_default();
+        assert!(!d.faulted(), "defaults must keep the closed-form path");
+        assert!(!d.clone().with_fault_seed(7).with_ckpt_interval(4).faulted(),
+                "seed/ckpt alone are inert");
+        let f = d
+            .clone()
+            .with_hetero(HeteroSpec::LastStage { factor: 1.5 })
+            .with_fault_seed(7)
+            .with_fail_rank(Some(FailSpec { rank: 3, at: 0.25 }))
+            .with_mttf(Some(3600.0))
+            .with_ckpt_interval(0); // clamps like with_micro_batches
+        assert!(f.faulted());
+        assert_eq!(f.hetero, HeteroSpec::LastStage { factor: 1.5 });
+        assert_eq!(f.fault_seed, 7);
+        assert_eq!(f.fail_rank, Some(FailSpec { rank: 3, at: 0.25 }));
+        assert_eq!(f.mttf_s, Some(3600.0));
+        assert_eq!(f.ckpt_interval, 1);
+        assert!(d.clone().with_mttf(Some(600.0)).faulted());
+        assert!(d.with_fail_rank(Some(FailSpec { rank: 0, at: 0.5 })).faulted());
     }
 
     #[test]
@@ -276,6 +376,19 @@ mod tests {
             .with_straggler(1.5)
             .with_micro_batches(8);
         assert!(s.validate().is_ok());
+        // Faulted-but-well-formed knobs validate too.
+        let f = Scenario::paper_default()
+            .with_hetero(HeteroSpec::Mix {
+                slow_rate: 0.05,
+                slow_factor: 1.5,
+                link_rate: 0.1,
+                link_factor: 4.0,
+            })
+            .with_fault_seed(7)
+            .with_fail_rank(Some(FailSpec { rank: 255, at: 0.5 }))
+            .with_mttf(Some(1800.0))
+            .with_ckpt_interval(16);
+        assert!(f.validate().is_ok());
     }
 
     #[test]
@@ -325,6 +438,55 @@ mod tests {
             ("ib_lat", {
                 let mut s = base();
                 s.hw.ib_lat = f64::NAN;
+                s
+            }),
+            // --- fault/heterogeneity knobs (named like the rest) -----
+            ("hetero", {
+                let mut s = base();
+                s.hetero = HeteroSpec::LastStage { factor: 0.5 }; // < 1.0
+                s
+            }),
+            ("hetero", {
+                let mut s = base();
+                s.hetero = HeteroSpec::Mix {
+                    slow_rate: 2.0, // rate > 1
+                    slow_factor: 1.5,
+                    link_rate: 0.0,
+                    link_factor: 1.0,
+                };
+                s
+            }),
+            ("hetero", {
+                let mut s = base();
+                s.hetero = HeteroSpec::Mix {
+                    slow_rate: 0.5,
+                    slow_factor: f64::NAN,
+                    link_rate: 0.0,
+                    link_factor: 1.0,
+                };
+                s
+            }),
+            ("mttf", base().with_mttf(Some(0.0))),
+            ("mttf", base().with_mttf(Some(f64::NAN))),
+            ("mttf", base().with_mttf(Some(-60.0))),
+            ("fail_rank", {
+                let mut s = base();
+                s.fail_rank = Some(FailSpec { rank: 256, at: 0.5 }); // == gpus
+                s
+            }),
+            ("fail_rank", {
+                let mut s = base();
+                s.fail_rank = Some(FailSpec { rank: 0, at: 1.5 }); // at >= 1
+                s
+            }),
+            ("fail_rank", {
+                let mut s = base();
+                s.fail_rank = Some(FailSpec { rank: 0, at: f64::NAN });
+                s
+            }),
+            ("ckpt_interval", {
+                let mut s = base();
+                s.ckpt_interval = 0; // bypasses with_ckpt_interval's clamp
                 s
             }),
         ];

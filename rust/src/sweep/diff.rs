@@ -12,7 +12,9 @@
 //! sweep artifact a CI regression gate (see `.github/workflows/ci.yml`).
 //!
 //! Rows are joined on the full scenario fingerprint (model, DP/TP/PP,
-//! optimizer, strategy, α, `C_max`); baseline rows with no counterpart
+//! optimizer, strategy, α, `C_max`, and the fault/heterogeneity knobs,
+//! which zero-default so pre-fault artifacts still join); baseline rows
+//! with no counterpart
 //! in the current grid (and vice versa) are counted, reported, and
 //! excluded from the verdict.
 
@@ -83,7 +85,7 @@ pub struct SweepDiff {
 /// byte-for-byte.
 pub fn scenario_key(s: &Scenario) -> String {
     format!(
-        "{} dp{} tp{} pp{} mb{} {} x{} {} {} a={} c={}",
+        "{} dp{} tp{} pp{} mb{} {} x{} {} {} a={} c={} h={} fs={} fr={} mttf={} k={}",
         s.label,
         s.dp,
         s.tp,
@@ -98,12 +100,25 @@ pub fn scenario_key(s: &Scenario) -> String {
             None => "none".to_string(),
             Some(b) => format!("{b}"),
         },
+        s.hetero,
+        s.fault_seed,
+        match s.fail_rank {
+            None => "none".to_string(),
+            Some(f) => f.to_string(),
+        },
+        match s.mttf_s {
+            None => "none".to_string(),
+            Some(m) => format!("{m}"),
+        },
+        s.ckpt_interval,
     )
 }
 
 /// The join key of one baseline JSON row. Pipeline fields absent from
 /// pre-timeline baselines fall back to their defaults (`mb1 1f1b x1`),
-/// so old artifacts keep joining against default-grid sweeps.
+/// and fault fields absent from pre-fault baselines fall back to the
+/// homogeneous never-failing defaults (`h=none fs=0 fr=none mttf=none
+/// k=1`) — so old artifacts keep joining against default-grid sweeps.
 fn row_key(v: &Value) -> Result<String> {
     let c_max = match v.get("c_max_bytes")? {
         Value::Null => "none".to_string(),
@@ -121,8 +136,30 @@ fn row_key(v: &Value) -> Result<String> {
         Some(x) => x.as_f64()?,
         None => 1.0,
     };
+    let hetero = match v.opt("hetero") {
+        Some(x) => x.as_str()?.to_string(),
+        None => "none".to_string(),
+    };
+    let fault_seed = match v.opt("fault_seed") {
+        Some(x) => x.as_f64()?,
+        None => 0.0,
+    };
+    // Nullable fields: `Null` (written by fault-aware sweeps with the
+    // knob off) and absent (pre-fault artifacts) both mean "none".
+    let fail = match v.opt("fail_rank") {
+        Some(Value::Null) | None => "none".to_string(),
+        Some(x) => x.as_str()?.to_string(),
+    };
+    let mttf = match v.opt("mttf_s") {
+        Some(Value::Null) | None => "none".to_string(),
+        Some(x) => format!("{}", x.as_f64()?),
+    };
+    let ckpt = match v.opt("ckpt_interval") {
+        Some(x) => x.as_f64()?,
+        None => 1.0,
+    };
     Ok(format!(
-        "{} dp{} tp{} pp{} mb{} {} x{} {} {} a={} c={}",
+        "{} dp{} tp{} pp{} mb{} {} x{} {} {} a={} c={} h={} fs={} fr={} mttf={} k={}",
         v.get("model")?.as_str()?,
         v.get("dp")?.as_f64()?,
         v.get("tp")?.as_f64()?,
@@ -134,6 +171,11 @@ fn row_key(v: &Value) -> Result<String> {
         v.get("strategy")?.as_str()?,
         v.get("alpha")?.as_f64()?,
         c_max,
+        hetero,
+        fault_seed,
+        fail,
+        mttf,
+        ckpt,
     ))
 }
 
@@ -267,7 +309,12 @@ mod tests {
             strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
             alphas: vec![1.0],
             c_max_mb: vec![Some(256.0)],
+            heteros: vec![crate::sim::HeteroSpec::None],
+            fail_ranks: vec![None],
+            mttfs: vec![None],
+            ckpt_intervals: vec![1],
             metric: CostMetric::Numel,
+            fault_seed: 0,
         }
     }
 
@@ -322,6 +369,54 @@ mod tests {
         assert_eq!(diff.rows.len(), scens.len());
         assert_eq!(diff.missing_in_baseline + diff.extra_in_baseline, 0);
         diff.verdict().unwrap();
+    }
+
+    #[test]
+    fn pre_fault_baselines_still_join() {
+        // Artifacts written before the elastic fault model lack the
+        // hetero/fault_seed/fail_rank/mttf_s/ckpt_interval/recovery_s
+        // fields; they must still join against a fault-free sweep via
+        // the zero-defaults in `row_key`.
+        let engine = SweepEngine::new(1);
+        let (scens, res) = engine.run_grid(&grid());
+        let mut baseline = render_json(&scens, &res);
+        if let Value::Obj(m) = &mut baseline {
+            let Some(Value::Arr(rows)) = m.get_mut("scenarios") else { panic!() };
+            for row in rows {
+                if let Value::Obj(r) = row {
+                    r.remove("hetero");
+                    r.remove("fault_seed");
+                    r.remove("fail_rank");
+                    r.remove("mttf_s");
+                    r.remove("ckpt_interval");
+                    r.remove("recovery_s");
+                }
+            }
+        }
+        let diff = SweepDiff::compare(&baseline, &scens, &res, 0.0).unwrap();
+        assert_eq!(diff.rows.len(), scens.len());
+        assert_eq!(diff.missing_in_baseline + diff.extra_in_baseline, 0);
+        diff.verdict().unwrap();
+    }
+
+    #[test]
+    fn faulted_rows_join_only_their_own_kind() {
+        // A faulted scenario must never silently match a fault-free
+        // baseline row of the same shape — the fingerprints differ.
+        let engine = SweepEngine::new(1);
+        let (scens, res) = engine.run_grid(&grid());
+        let baseline = render_json(&scens, &res);
+        let mut faulted = grid();
+        faulted.heteros = vec![crate::sim::HeteroSpec::parse("slow:1:1.5").unwrap()];
+        let (scens2, res2) = engine.run_grid(&faulted);
+        let diff = SweepDiff::compare(&baseline, &scens2, &res2, 0.0).unwrap();
+        assert!(diff.rows.is_empty());
+        assert_eq!(diff.missing_in_baseline, scens2.len());
+        // And a faulted self-join is exact.
+        let fb = render_json(&scens2, &res2);
+        let self_diff = SweepDiff::compare(&fb, &scens2, &res2, 0.0).unwrap();
+        assert_eq!(self_diff.rows.len(), scens2.len());
+        self_diff.verdict().unwrap();
     }
 
     #[test]

@@ -224,6 +224,16 @@ struct GroupKey {
     hw_name: &'static str,
     gpus_per_node: usize,
     hw_bits: [u64; 7],
+    /// Fault/heterogeneity config (PR 10): a faulted base is rejected
+    /// by `ScenarioBatch::new` (lane columns carry no per-rank
+    /// profile), so mixed fault configs must never share a group —
+    /// a faulted lane under a fault-free base would silently evaluate
+    /// without its faults.
+    hetero_bits: [u64; 5],
+    fault_seed: u64,
+    fail_bits: (usize, u64),
+    mttf_bits: u64,
+    ckpt_interval: usize,
 }
 
 impl GroupKey {
@@ -254,6 +264,14 @@ impl GroupKey {
                 s.hw.ib_lat.to_bits(),
                 s.hw.launch_overhead.to_bits(),
             ],
+            hetero_bits: s.hetero.key_bits(),
+            fault_seed: s.fault_seed,
+            fail_bits: s
+                .fail_rank
+                .map(|f| (f.rank, f.at.to_bits()))
+                .unwrap_or((usize::MAX, u64::MAX)),
+            mttf_bits: s.mttf_s.map(f64::to_bits).unwrap_or(u64::MAX),
+            ckpt_interval: s.ckpt_interval,
         }
     }
 }
@@ -289,9 +307,9 @@ pub fn render_table(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Table {
     assert_eq!(scenarios.len(), breakdowns.len());
     let mut t = Table::new(
         &format!("Sweep — {} scenarios", scenarios.len()),
-        &["model", "DP", "TP", "PP", "mb", "sched", "strag", "optim", "strategy",
-          "alpha", "C_max", "fwd-bwd", "optimizer", "total", "bubble", "DP LB",
-          "TP LB", "groups"],
+        &["model", "DP", "TP", "PP", "mb", "sched", "strag", "hetero", "optim",
+          "strategy", "alpha", "C_max", "fwd-bwd", "optimizer", "total",
+          "recovery", "bubble", "DP LB", "TP LB", "groups"],
     );
     for (s, b) in scenarios.iter().zip(breakdowns) {
         t.row(vec![
@@ -302,6 +320,7 @@ pub fn render_table(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Table {
             s.micro_batches.to_string(),
             s.schedule.label().into(),
             format!("{:.2}", s.straggler),
+            s.hetero.to_string(),
             s.optim.label().into(),
             s.strategy.label().into(),
             format!("{:.2}", s.alpha),
@@ -312,6 +331,7 @@ pub fn render_table(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Table {
             secs(b.fwd_bwd_s),
             secs(b.optimizer_s),
             secs(b.total_s),
+            secs(b.recovery_s),
             secs(b.bubble_s),
             ratio(load_balance_ratio(&b.dp_loads_flops)),
             ratio(load_balance_ratio(&b.tp_loads_flops)),
@@ -334,6 +354,16 @@ pub fn render_json(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Value {
             ("micro_batches", Value::num(s.micro_batches as f64)),
             ("schedule", Value::str(s.schedule.label())),
             ("straggler", Value::num(s.straggler)),
+            ("hetero", Value::str(&s.hetero.to_string())),
+            ("fault_seed", Value::num(s.fault_seed as f64)),
+            (
+                "fail_rank",
+                s.fail_rank
+                    .map(|f| Value::str(&f.to_string()))
+                    .unwrap_or(Value::Null),
+            ),
+            ("mttf_s", s.mttf_s.map(Value::num).unwrap_or(Value::Null)),
+            ("ckpt_interval", Value::num(s.ckpt_interval as f64)),
             ("optim", Value::str(s.optim.label())),
             ("strategy", Value::str(s.strategy.label())),
             ("alpha", Value::num(s.alpha)),
@@ -341,6 +371,7 @@ pub fn render_json(scenarios: &[Scenario], breakdowns: &[Breakdown]) -> Value {
             ("fwd_bwd_s", Value::num(b.fwd_bwd_s)),
             ("optimizer_s", Value::num(b.optimizer_s)),
             ("total_s", Value::num(b.total_s)),
+            ("recovery_s", Value::num(b.recovery_s)),
             ("bubble_s", Value::num(b.bubble_s)),
             ("exposed_comm_s", Value::num(b.exposed_comm_s)),
             ("dp_lb_ratio", Value::num(load_balance_ratio(&b.dp_loads_flops))),
@@ -371,7 +402,12 @@ mod tests {
             strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc],
             alphas: vec![1.0],
             c_max_mb: vec![Some(256.0)],
+            heteros: vec![crate::sim::HeteroSpec::None],
+            fail_ranks: vec![None],
+            mttfs: vec![None],
+            ckpt_intervals: vec![1],
             metric: crate::cost::optim::CostMetric::Numel,
+            fault_seed: 0,
         }
     }
 

@@ -2,7 +2,8 @@
 //!
 //! A [`SweepGrid`] is the cross product of the axes a paper experiment
 //! varies (model × DP × TP × PP × micro-batches × schedule × straggler
-//! × optimizer × strategy × α × C_max). [`SweepGrid::scenarios`]
+//! × optimizer × strategy × α × C_max × hetero × fail-rank × mttf ×
+//! checkpoint interval). [`SweepGrid::scenarios`]
 //! expands it in a fixed axis order, so a grid always yields the same
 //! scenario sequence — the deterministic merge order of the parallel
 //! runner.
@@ -10,7 +11,7 @@
 use crate::cost::optim::{CostMetric, OptimKind};
 use crate::model::qwen3::Qwen3Size;
 use crate::partition::DpStrategy;
-use crate::sim::{PipelineSchedule, Scenario};
+use crate::sim::{FailSpec, HeteroSpec, PipelineSchedule, Scenario};
 use crate::util::cli::Args;
 use crate::util::error::Result;
 use crate::{bail, err};
@@ -41,8 +42,18 @@ pub struct SweepGrid {
     pub alphas: Vec<f64>,
     /// `C_max` values in MB; `None` entries mean No-Fuse.
     pub c_max_mb: Vec<Option<f64>>,
+    /// Per-rank heterogeneity specs (`HeteroSpec::None` = homogeneous).
+    pub heteros: Vec<HeteroSpec>,
+    /// Rank-failure injections; `None` entries mean no failure.
+    pub fail_ranks: Vec<Option<FailSpec>>,
+    /// Mean-time-to-failure rates (s); `None` entries disable the rate.
+    pub mttfs: Vec<Option<f64>>,
+    /// Checkpoint intervals in iterations (`1` = every iteration).
+    pub ckpt_intervals: Vec<usize>,
     /// Balancing cost metric (one per grid).
     pub metric: CostMetric,
+    /// Fault/heterogeneity draw seed (one per grid, like `metric`).
+    pub fault_seed: u64,
 }
 
 impl Default for SweepGrid {
@@ -60,7 +71,12 @@ impl Default for SweepGrid {
             strategies: vec![DpStrategy::LbAsc],
             alphas: vec![1.0],
             c_max_mb: vec![Some(512.0)],
+            heteros: vec![HeteroSpec::None],
+            fail_ranks: vec![None],
+            mttfs: vec![None],
+            ckpt_intervals: vec![1],
             metric: CostMetric::Numel,
+            fault_seed: 0,
         }
     }
 }
@@ -158,6 +174,35 @@ impl SweepGrid {
                 }
             })?;
         }
+        if let Some(raw) = args.get("hetero") {
+            g.heteros = parse_list(raw, "hetero", |s| HeteroSpec::parse(s).ok())?;
+        }
+        if let Some(raw) = args.get("fail-rank") {
+            g.fail_ranks = parse_list(raw, "fail-rank", |s| {
+                if s.eq_ignore_ascii_case("none") {
+                    Some(None)
+                } else {
+                    FailSpec::parse(s).ok().map(Some)
+                }
+            })?;
+        }
+        if let Some(raw) = args.get("mttf") {
+            g.mttfs = parse_list(raw, "mttf", |s| {
+                if s.eq_ignore_ascii_case("none") {
+                    Some(None)
+                } else {
+                    s.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0).map(Some)
+                }
+            })?;
+        }
+        if let Some(raw) = args.get("ckpt-interval") {
+            g.ckpt_intervals = parse_dims(raw, "ckpt-interval")?;
+        }
+        if let Some(raw) = args.get("fault-seed") {
+            g.fault_seed = raw
+                .parse::<u64>()
+                .map_err(|_| err!("invalid fault-seed value {raw:?}"))?;
+        }
         if let Some(raw) = args.get("metric") {
             g.metric = match raw.to_ascii_lowercase().as_str() {
                 "numel" => CostMetric::Numel,
@@ -182,6 +227,10 @@ impl SweepGrid {
             * self.strategies.len()
             * self.alphas.len()
             * self.c_max_mb.len()
+            * self.heteros.len()
+            * self.fail_ranks.len()
+            * self.mttfs.len()
+            * self.ckpt_intervals.len()
     }
 
     /// Whether the cross product is empty.
@@ -191,7 +240,9 @@ impl SweepGrid {
 
     /// Expand the grid in fixed axis order (model → dp → tp → pp →
     /// micro-batches → schedule → straggler → optim → strategy → α →
-    /// C_max).
+    /// C_max → hetero → fail-rank → mttf → ckpt-interval). The fault
+    /// axes are innermost and default to single neutral values, so
+    /// fault-free grids expand to exactly the pre-fault sequence.
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         for &model in &self.models {
@@ -205,7 +256,7 @@ impl SweepGrid {
                                         for &strategy in &self.strategies {
                                             for &alpha in &self.alphas {
                                                 for &c_mb in &self.c_max_mb {
-                                                    let s = Scenario::new(
+                                                    let base = Scenario::new(
                                                         model, dp, tp, pp, optim, strategy,
                                                     )
                                                     .with_alpha(alpha)
@@ -213,8 +264,9 @@ impl SweepGrid {
                                                     .with_metric(self.metric)
                                                     .with_micro_batches(mb)
                                                     .with_schedule(sched)
-                                                    .with_straggler(strag);
-                                                    out.push(s);
+                                                    .with_straggler(strag)
+                                                    .with_fault_seed(self.fault_seed);
+                                                    self.push_fault_axes(&base, &mut out);
                                                 }
                                             }
                                         }
@@ -227,6 +279,26 @@ impl SweepGrid {
             }
         }
         out
+    }
+
+    /// The innermost fault-axis expansion of [`SweepGrid::scenarios`],
+    /// split out to keep the nesting readable.
+    fn push_fault_axes(&self, base: &Scenario, out: &mut Vec<Scenario>) {
+        for &hetero in &self.heteros {
+            for &fail in &self.fail_ranks {
+                for &mttf in &self.mttfs {
+                    for &ckpt in &self.ckpt_intervals {
+                        out.push(
+                            base.clone()
+                                .with_hetero(hetero)
+                                .with_fail_rank(fail)
+                                .with_mttf(mttf)
+                                .with_ckpt_interval(ckpt),
+                        );
+                    }
+                }
+            }
+        }
     }
 
     /// Render the grid back to the CLI argument strings that reproduce
@@ -270,6 +342,22 @@ impl SweepGrid {
                 None => "none".to_string(),
                 Some(mb) => mb.to_string(),
             }),
+            "--hetero".into(),
+            join(&self.heteros, |h| h.to_string()),
+            "--fail-rank".into(),
+            join(&self.fail_ranks, |f| match f {
+                None => "none".to_string(),
+                Some(spec) => spec.to_string(),
+            }),
+            "--mttf".into(),
+            join(&self.mttfs, |m| match m {
+                None => "none".to_string(),
+                Some(s) => s.to_string(),
+            }),
+            "--ckpt-interval".into(),
+            join(&self.ckpt_intervals, usize::to_string),
+            "--fault-seed".into(),
+            self.fault_seed.to_string(),
             "--metric".into(),
             metric.to_string(),
         ]
@@ -333,6 +421,15 @@ mod tests {
         assert!(SweepGrid::parse(&argv("--schedule zigzag")).is_err());
         assert!(SweepGrid::parse(&argv("--straggler 0.5")).is_err());
         assert!(SweepGrid::parse(&argv("--straggler nan")).is_err());
+        // Fault axes reject malformed values the same way.
+        assert!(SweepGrid::parse(&argv("--hetero bogus")).is_err());
+        assert!(SweepGrid::parse(&argv("--hetero slow:2:1.5")).is_err());
+        assert!(SweepGrid::parse(&argv("--fail-rank 3@2")).is_err());
+        assert!(SweepGrid::parse(&argv("--fail-rank x")).is_err());
+        assert!(SweepGrid::parse(&argv("--mttf 0")).is_err());
+        assert!(SweepGrid::parse(&argv("--mttf nan")).is_err());
+        assert!(SweepGrid::parse(&argv("--ckpt-interval 0")).is_err());
+        assert!(SweepGrid::parse(&argv("--fault-seed abc")).is_err());
     }
 
     #[test]
@@ -367,7 +464,16 @@ mod tests {
             strategies: vec![DpStrategy::Sc, DpStrategy::NvLayerwise, DpStrategy::LbAsc],
             alphas: vec![0.0, 0.5, 1.0],
             c_max_mb: vec![None, Some(64.0), Some(512.5)],
+            heteros: vec![
+                HeteroSpec::None,
+                HeteroSpec::parse("last:1.25").unwrap(),
+                HeteroSpec::parse("slow:0.1:2+link:0.25:4").unwrap(),
+            ],
+            fail_ranks: vec![None, Some(FailSpec { rank: 3, at: 0.25 })],
+            mttfs: vec![None, Some(1800.0)],
+            ckpt_intervals: vec![1, 8],
             metric: CostMetric::StateBytes,
+            fault_seed: 7,
         };
         let cli = g.to_cli_args();
         let reparsed =

@@ -421,7 +421,12 @@ mod tests {
             strategies: DpStrategy::ALL.to_vec(),
             alphas: vec![1.0],
             c_max_mb: vec![Some(256.0)],
+            heteros: vec![crate::sim::HeteroSpec::None],
+            fail_ranks: vec![None],
+            mttfs: vec![None],
+            ckpt_intervals: vec![1],
             metric: CostMetric::Numel,
+            fault_seed: 0,
         }
     }
 
@@ -466,6 +471,37 @@ mod tests {
             );
             assert!(e.bound <= e.value + 1e-12, "inadmissible bound for #{}", e.grid_index);
         }
+    }
+
+    #[test]
+    fn fault_axes_search_stays_exact_and_admissible() {
+        // Failure rate and checkpoint interval as grid axes: fault
+        // costs are strictly >= 0, so the fault-free bounds stay
+        // admissible and the pruned search still finds the exhaustive
+        // argmin (which here is the clean, densely-checkpointed point).
+        let engine = SweepEngine::new(2);
+        let mut grid = small_grid();
+        grid.strategies = vec![DpStrategy::LbAsc];
+        grid.mttfs = vec![None, Some(3600.0), Some(600.0)];
+        grid.ckpt_intervals = vec![1, 8];
+        let opts = OptimizeOptions { batch: 1, ..OptimizeOptions::default() };
+        let pruned = optimize(&engine, &grid, &opts).unwrap();
+        let exhaustive = optimize(
+            &engine,
+            &grid,
+            &OptimizeOptions { prune: false, ..opts },
+        )
+        .unwrap();
+        assert_eq!(pruned.space, 6);
+        assert_eq!(
+            pruned.evaluated[pruned.winner].grid_index,
+            exhaustive.evaluated[exhaustive.winner].grid_index,
+        );
+        for e in &exhaustive.evaluated {
+            assert!(e.bound <= e.value + 1e-12, "inadmissible bound for #{}", e.grid_index);
+        }
+        let w = &exhaustive.evaluated[exhaustive.winner].scenario;
+        assert_eq!((w.mttf_s, w.ckpt_interval), (None, 1), "faults only add cost");
     }
 
     #[test]

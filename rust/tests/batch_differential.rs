@@ -149,7 +149,12 @@ fn timeline_grid() -> SweepGrid {
         strategies: DpStrategy::ALL.to_vec(),
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     }
 }
 

@@ -213,7 +213,12 @@ fn sweep_under_eviction_pressure_matches_with_l1_on_and_off() {
         strategies: vec![DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     let budget = 96 * 1024;
     let l1_engine = SweepEngine::with_cache(4, PlanCache::with_options(budget, true));

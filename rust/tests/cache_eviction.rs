@@ -199,7 +199,12 @@ fn bounded_family_sweep_evicts_but_matches_unbounded_results() {
         strategies: vec![DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     let unbounded = SweepEngine::with_budget(2, 0);
     let (scens_u, res_u) = unbounded.run_grid(&grid);

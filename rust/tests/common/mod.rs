@@ -12,7 +12,7 @@
 use canzona::cost::optim::{CostMetric, OptimKind};
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
-use canzona::sim::{Breakdown, PipelineSchedule};
+use canzona::sim::{Breakdown, HeteroSpec, PipelineSchedule};
 use canzona::sweep::SweepGrid;
 
 /// Relative-or-absolute closeness: timings are ~1e-3..1e1 s, so 1e-9
@@ -34,6 +34,7 @@ pub fn assert_breakdowns_match(label: &str, closed: &Breakdown, event: &Breakdow
         ("bubble_s", closed.bubble_s, event.bubble_s),
         ("adamw_ref_s", closed.adamw_ref_s, event.adamw_ref_s),
         ("grad_comm_bytes", closed.grad_comm_bytes, event.grad_comm_bytes),
+        ("recovery_s", closed.recovery_s, event.recovery_s),
     ] {
         assert!(
             close(a, b),
@@ -61,6 +62,7 @@ pub fn assert_bits_eq(label: &str, a: &Breakdown, b: &Breakdown) {
         ("exposed_comm_s", a.exposed_comm_s, b.exposed_comm_s),
         ("grad_comm_bytes", a.grad_comm_bytes, b.grad_comm_bytes),
         ("bubble_s", a.bubble_s, b.bubble_s),
+        ("recovery_s", a.recovery_s, b.recovery_s),
     ] {
         assert_eq!(x.to_bits(), y.to_bits(), "{label}: {field} {x} vs {y}");
     }
@@ -99,7 +101,12 @@ pub fn test_grid() -> SweepGrid {
         ],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
+        heteros: vec![HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     }
 }
 
@@ -118,7 +125,12 @@ pub fn pp_grid() -> SweepGrid {
         strategies: vec![DpStrategy::Asc, DpStrategy::LbAsc, DpStrategy::MatrixFsdp],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
+        heteros: vec![HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     }
 }
 
@@ -140,7 +152,12 @@ pub fn oracle_grid() -> SweepGrid {
         strategies: DpStrategy::ALL.to_vec(),
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0), None],
+        heteros: vec![HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     }
 }
 
@@ -159,6 +176,11 @@ pub fn base_grid() -> SweepGrid {
         strategies: vec![DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
+        heteros: vec![HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     }
 }

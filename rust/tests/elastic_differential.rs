@@ -1,0 +1,201 @@
+//! Differential oracles for the elastic-cluster fault model (PR 10):
+//!
+//! * the legacy `--straggler f` knob and the fault layer's `last:f`
+//!   heterogeneity spec are the *same* arithmetic — bit-for-bit equal
+//!   Breakdowns across pp, strategies, and factors;
+//! * inert fault knobs (`--fault-seed`, `--ckpt-interval` without an
+//!   event) leave fault-free results bit-identical — the PR's
+//!   "homogeneous default reproduces pre-fault artifacts" contract at
+//!   unit level;
+//! * the same `--fault-seed` reproduces sweep artifacts byte-for-byte,
+//!   parallel evaluation matches serial, and the batch-tier toggle is
+//!   invisible on grids that mix fault-free (batched) and faulted
+//!   (scalar-fallback) lanes;
+//! * an injected rank failure / MTTF rate strictly increases
+//!   `recovery_s` and `total_s`, and sparser checkpoints strictly
+//!   increase the recovery charge.
+
+mod common;
+
+use canzona::cost::optim::{CostMetric, OptimKind};
+use canzona::model::qwen3::Qwen3Size;
+use canzona::partition::DpStrategy;
+use canzona::sim::{
+    simulate_iteration_cached, FailSpec, HeteroSpec, PipelineSchedule, Scenario,
+};
+use canzona::sweep::{render_json, render_table, PlanCache, SweepEngine, SweepGrid};
+
+use common::assert_bits_eq;
+
+/// A grid mixing fault-free lanes (which take the batch tier) with
+/// heterogeneous, failing, and MTTF-rated lanes (scalar fallback).
+fn faulted_grid() -> SweepGrid {
+    SweepGrid {
+        models: vec![Qwen3Size::S1_7B],
+        dp: vec![4],
+        tp: vec![2],
+        pp: vec![1, 2],
+        micro_batches: vec![1, 2],
+        schedules: vec![PipelineSchedule::OneFOneB],
+        stragglers: vec![1.0],
+        optims: vec![OptimKind::Muon],
+        strategies: vec![DpStrategy::LbAsc, DpStrategy::MatrixFsdp, DpStrategy::DMuon],
+        alphas: vec![1.0],
+        c_max_mb: vec![Some(256.0)],
+        heteros: vec![
+            HeteroSpec::None,
+            HeteroSpec::parse("slow:0.5:2+link:0.5:8").unwrap(),
+        ],
+        fail_ranks: vec![None, Some(FailSpec { rank: 1, at: 0.25 })],
+        mttfs: vec![None, Some(1800.0)],
+        ckpt_intervals: vec![1, 4],
+        metric: CostMetric::Numel,
+        fault_seed: 7,
+    }
+}
+
+#[test]
+fn last_stage_hetero_is_bit_identical_to_the_straggler_knob() {
+    // `--straggler f` derates the last stage's hardware by `f`; so does
+    // `--hetero last:f`. Both route to the timeline arm, where the
+    // derate factors multiply (`f * 1.0 == 1.0 * f`), so the two
+    // spellings must agree on every output bit.
+    let cache = PlanCache::new();
+    for &(pp, mb) in &[(1usize, 1usize), (4, 4)] {
+        for &strat in &[
+            DpStrategy::Asc,
+            DpStrategy::LbAsc,
+            DpStrategy::MatrixFsdp,
+            DpStrategy::DMuon,
+        ] {
+            for &f in &[1.5f64, 2.0] {
+                let base = Scenario::new(Qwen3Size::S1_7B, 4, 2, pp, OptimKind::Muon, strat)
+                    .with_micro_batches(mb);
+                let straggled = base.clone().with_straggler(f);
+                let spec = HeteroSpec::parse(&format!("last:{f}")).unwrap();
+                let hetero = base.with_hetero(spec);
+                let a = simulate_iteration_cached(&straggled, &cache);
+                let b = simulate_iteration_cached(&hetero, &cache);
+                assert_bits_eq(&format!("pp{pp} {strat:?} f={f}"), &a, &b);
+            }
+        }
+    }
+}
+
+#[test]
+fn inert_fault_knobs_leave_clean_results_bit_identical() {
+    // `--fault-seed` only salts the profile derivation and
+    // `--ckpt-interval` only scales an event's recovery charge: with no
+    // heterogeneity and no event, both are inert and the scenario still
+    // takes the closed-form arm — pre-fault artifacts reproduce exactly.
+    let cache = PlanCache::new();
+    for &strat in DpStrategy::ALL.iter() {
+        let clean = Scenario::new(Qwen3Size::S1_7B, 8, 2, 1, OptimKind::Muon, strat);
+        let knobbed = clean.clone().with_fault_seed(123).with_ckpt_interval(8);
+        assert!(!knobbed.faulted(), "seed/ckpt alone must not count as a fault");
+        let a = simulate_iteration_cached(&clean, &cache);
+        let b = simulate_iteration_cached(&knobbed, &cache);
+        assert_bits_eq(&format!("{strat:?}"), &a, &b);
+        assert_eq!(a.recovery_s.to_bits(), 0.0f64.to_bits());
+    }
+}
+
+#[test]
+fn same_fault_seed_reproduces_artifacts_byte_for_byte() {
+    let grid = faulted_grid();
+    let (s1, b1) = SweepEngine::new(2).run_grid(&grid);
+    let (s2, b2) = SweepEngine::new(2).run_grid(&grid);
+    assert_eq!(
+        render_json(&s1, &b1).to_string(),
+        render_json(&s2, &b2).to_string(),
+        "same seed, same grid: JSON artifacts must be byte-identical",
+    );
+    assert_eq!(
+        render_table(&s1, &b1).render(),
+        render_table(&s2, &b2).render(),
+        "same seed, same grid: tables must be byte-identical",
+    );
+}
+
+#[test]
+fn parallel_and_serial_sweeps_agree_under_faults() {
+    let grid = faulted_grid();
+    let (ss, bs) = SweepEngine::new(1).run_grid(&grid);
+    let (sp, bp) = SweepEngine::new(4).run_grid(&grid);
+    assert_eq!(
+        render_json(&ss, &bs).to_string(),
+        render_json(&sp, &bp).to_string(),
+        "thread count changed faulted sweep artifacts",
+    );
+}
+
+#[test]
+fn batching_toggle_is_invisible_on_faulted_grids() {
+    // Faulted lanes take the scalar fallback inside the batch tier
+    // (`ScenarioBatch::new` refuses them); fault-free lanes batch. The
+    // artifact bytes must not depend on the toggle either way.
+    let grid = faulted_grid();
+    let on = SweepEngine::new(2);
+    let mut off = SweepEngine::new(2);
+    off.set_batching(false);
+    let (s_on, b_on) = on.run_grid(&grid);
+    let (s_off, b_off) = off.run_grid(&grid);
+    assert_eq!(
+        render_json(&s_on, &b_on).to_string(),
+        render_json(&s_off, &b_off).to_string(),
+        "--no-batch changed faulted sweep artifacts",
+    );
+    assert_eq!(off.cache_stats().batched_evals, 0, "--no-batch must not batch");
+}
+
+#[test]
+fn injected_failures_strictly_increase_recovery_and_total() {
+    let cache = PlanCache::new();
+    for &strat in DpStrategy::ALL.iter() {
+        let clean = Scenario::new(Qwen3Size::S1_7B, 8, 2, 1, OptimKind::Muon, strat);
+        let a = simulate_iteration_cached(&clean, &cache);
+        assert_eq!(a.recovery_s, 0.0, "{strat:?}: clean scenarios charge no recovery");
+
+        let failed = clean.clone().with_fail_rank(Some(FailSpec { rank: 3, at: 0.5 }));
+        let b = simulate_iteration_cached(&failed, &cache);
+        assert!(b.recovery_s > 0.0, "{strat:?}: a failure must charge recovery");
+        assert!(
+            b.total_s > a.total_s,
+            "{strat:?}: failure total {} must exceed clean {}",
+            b.total_s,
+            a.total_s,
+        );
+
+        let rated = clean.clone().with_mttf(Some(600.0));
+        let c = simulate_iteration_cached(&rated, &cache);
+        assert!(c.recovery_s > 0.0, "{strat:?}: an MTTF rate must charge recovery");
+        assert!(c.total_s > a.total_s, "{strat:?}");
+
+        // Sparser checkpoints mean more redone work per event.
+        let k1 = rated.clone().with_ckpt_interval(1);
+        let k8 = rated.with_ckpt_interval(8);
+        let r1 = simulate_iteration_cached(&k1, &cache);
+        let r8 = simulate_iteration_cached(&k8, &cache);
+        assert!(
+            r8.recovery_s > r1.recovery_s,
+            "{strat:?}: ckpt 8 recovery {} must exceed ckpt 1 {}",
+            r8.recovery_s,
+            r1.recovery_s,
+        );
+    }
+}
+
+#[test]
+fn failure_recovery_holds_on_pipelined_scenarios() {
+    // The fault block lives in the timeline arm's tail; make sure a
+    // pp > 1, micro-batched schedule charges it too.
+    let cache = PlanCache::new();
+    let clean = Scenario::new(Qwen3Size::S1_7B, 4, 2, 2, OptimKind::Muon, DpStrategy::LbAsc)
+        .with_micro_batches(4);
+    let failed = clean.clone().with_fail_rank(Some(FailSpec { rank: 2, at: 0.75 }));
+    let a = simulate_iteration_cached(&clean, &cache);
+    let b = simulate_iteration_cached(&failed, &cache);
+    assert_eq!(a.recovery_s, 0.0);
+    assert!(b.recovery_s > 0.0);
+    assert!(b.total_s > a.total_s);
+}

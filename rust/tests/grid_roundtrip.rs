@@ -9,7 +9,7 @@
 use canzona::cost::optim::{CostMetric, OptimKind};
 use canzona::model::qwen3::Qwen3Size;
 use canzona::partition::DpStrategy;
-use canzona::sim::PipelineSchedule;
+use canzona::sim::{FailSpec, HeteroSpec, PipelineSchedule};
 use canzona::sweep::SweepGrid;
 use canzona::util::cli::Args;
 use canzona::util::prop::check;
@@ -20,6 +20,36 @@ use canzona::util::rng::Rng;
 fn pick<T: Clone>(rng: &mut Rng, domain: &[T]) -> Vec<T> {
     let n = 1 + rng.index(domain.len());
     (0..n).map(|_| domain[rng.index(domain.len())].clone()).collect()
+}
+
+/// A random *canonical* hetero spec: rates are nonzero and factors
+/// exceed 1, so the generated value is exactly what `parse` would
+/// canonicalize its own `Display` to.
+fn random_hetero(rng: &mut Rng) -> HeteroSpec {
+    let rate = |rng: &mut Rng| (1 + rng.index(100)) as f64 / 100.0;
+    let factor = |rng: &mut Rng| 1.0 + (1 + rng.index(40)) as f64 / 8.0;
+    match rng.index(5) {
+        0 => HeteroSpec::None,
+        1 => HeteroSpec::LastStage { factor: factor(rng) },
+        2 => HeteroSpec::Mix {
+            slow_rate: rate(rng),
+            slow_factor: factor(rng),
+            link_rate: 0.0,
+            link_factor: 1.0,
+        },
+        3 => HeteroSpec::Mix {
+            slow_rate: 0.0,
+            slow_factor: 1.0,
+            link_rate: rate(rng),
+            link_factor: factor(rng),
+        },
+        _ => HeteroSpec::Mix {
+            slow_rate: rate(rng),
+            slow_factor: factor(rng),
+            link_rate: rate(rng),
+            link_factor: factor(rng),
+        },
+    }
 }
 
 fn random_grid(rng: &mut Rng) -> SweepGrid {
@@ -54,7 +84,24 @@ fn random_grid(rng: &mut Rng) -> SweepGrid {
                 }
             })
             .collect(),
+        heteros: (0..1 + rng.index(3)).map(|_| random_hetero(rng)).collect(),
+        fail_ranks: (0..1 + rng.index(3))
+            .map(|_| {
+                if rng.index(2) == 0 {
+                    None
+                } else {
+                    Some(FailSpec { rank: rng.index(256), at: rng.index(10) as f64 / 10.0 })
+                }
+            })
+            .collect(),
+        mttfs: (0..1 + rng.index(3))
+            .map(|_| {
+                if rng.index(2) == 0 { None } else { Some((1 + rng.index(7200)) as f64) }
+            })
+            .collect(),
+        ckpt_intervals: (0..1 + rng.index(3)).map(|_| 1 + rng.index(32)).collect(),
         metric: [CostMetric::Numel, CostMetric::Flops, CostMetric::StateBytes][rng.index(3)],
+        fault_seed: rng.range(0, 1_000_000),
     }
 }
 
@@ -121,6 +168,14 @@ fn malformed_axes_are_rejected_with_named_errors() {
         ("negative capacity", "--c-max-mb -3", "c-max-mb"),
         ("unknown metric", "--metric bytes", "metric"),
         ("unknown model", "--models 70b", "models"),
+        ("malformed hetero spec", "--hetero bogus", "hetero"),
+        ("out-of-range hetero rate", "--hetero slow:2:1.5", "hetero"),
+        ("out-of-range failure position", "--fail-rank 3@2", "fail-rank"),
+        ("non-numeric failure rank", "--fail-rank x@0.5", "fail-rank"),
+        ("zero mttf", "--mttf 0", "mttf"),
+        ("non-finite mttf", "--mttf nan", "mttf"),
+        ("zero checkpoint interval", "--ckpt-interval 0", "ckpt-interval"),
+        ("non-numeric fault seed", "--fault-seed abc", "fault-seed"),
     ] {
         let err = parse_cli(cli).expect_err(what);
         assert!(err.contains(needle), "{what}: error {err:?} should name {needle:?}");

@@ -90,7 +90,12 @@ fn pp_sweep_runs_end_to_end_with_deterministic_artifacts() {
         strategies: vec![DpStrategy::LbAsc],
         alphas: vec![1.0],
         c_max_mb: vec![Some(256.0)],
+        heteros: vec![canzona::sim::HeteroSpec::None],
+        fail_ranks: vec![None],
+        mttfs: vec![None],
+        ckpt_intervals: vec![1],
         metric: CostMetric::Numel,
+        fault_seed: 0,
     };
     let a = SweepEngine::new(2);
     let (scens_a, res_a) = a.run_grid(&grid);
